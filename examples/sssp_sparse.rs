@@ -1,0 +1,63 @@
+//! SSSP with sparse frontiers — the workload the paper's `skip()` design
+//! targets (§3.2, Tables 7–8).  Shows that per-superstep edge-stream reads
+//! track the frontier instead of |E|, and compares against the X-Stream
+//! baseline which must stream all edges every superstep.
+
+use graphd::baselines::{self, Algo};
+use graphd::bench::{run_graphd, scale_from_env, sssp_source, use_xla_from_env};
+use graphd::config::ClusterProfile;
+use graphd::graph::generator::Dataset;
+use graphd::util::human_secs;
+
+fn main() {
+    let scale = scale_from_env();
+    let g = Dataset::BtcS.generate_scaled(scale).with_unit_weights();
+    let src = sssp_source(&g);
+    println!(
+        "== SSSP (BFS) on btc-s: |V|={} |E|={} source deg {} ==",
+        g.num_vertices(),
+        g.num_edges(),
+        g.degree(src)
+    );
+    let profile = ClusterProfile::wpc();
+    let algo = Algo::Sssp { source: src };
+
+    let gd = run_graphd("example_sssp", &g, algo, &profile, use_xla_from_env()).expect("run");
+    println!(
+        "GraphD IO-Basic: {} supersteps, compute {}",
+        gd.basic_metrics.supersteps,
+        human_secs(gd.basic_compute)
+    );
+
+    // Per-superstep I/O: frontier-proportional reads, the rest skipped.
+    println!("\nstep  computed  items-read  items-skipped  seeks");
+    let mut agg = vec![(0u64, 0u64, 0u64, 0u64); gd.basic_metrics.supersteps as usize];
+    for m in &gd.basic_metrics.machines {
+        for s in &m.steps {
+            let a = &mut agg[s.step as usize];
+            a.0 += s.computed_vertices;
+            a.1 += s.edge_items_read;
+            a.2 += s.edge_items_skipped;
+            a.3 += s.seeks;
+        }
+    }
+    for (i, (c, r, sk, se)) in agg.iter().enumerate().take(12) {
+        println!("{i:>4}  {c:>8}  {r:>10}  {sk:>13}  {se:>5}");
+    }
+    if agg.len() > 12 {
+        println!("  ... ({} more)", agg.len() - 12);
+    }
+    let total_read: u64 = agg.iter().map(|a| a.1).sum();
+    let total_skip: u64 = agg.iter().map(|a| a.2).sum();
+    println!("\ntotal items read {total_read} vs skipped {total_skip}");
+
+    // X-Stream must stream everything, every superstep.
+    match baselines::xstream::run(&g, algo, &profile) {
+        Ok(xs) => println!(
+            "X-Stream compute: {} ({:.1}x GraphD IO-Basic)",
+            human_secs(xs.compute_secs),
+            xs.compute_secs / gd.basic_compute.max(1e-9)
+        ),
+        Err(e) => println!("X-Stream: {e}"),
+    }
+}

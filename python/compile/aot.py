@@ -1,0 +1,69 @@
+"""AOT compile path: lower the L2 graphs to HLO **text** artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per entry in ``model.ARTIFACTS`` plus a
+``MANIFEST`` (name, block size, input/output dtypes) the Rust runtime
+sanity-checks at load time.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import BLOCK, TILE
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str):
+    fn, args = model.ARTIFACTS[name]
+    return jax.jit(fn).lower(*args)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact names (default: all)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    names = args.only.split(",") if args.only else list(model.ARTIFACTS)
+    manifest_lines = [f"block={BLOCK}", f"tile={TILE}"]
+    for name in names:
+        lowered = lower_artifact(name)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        _, arg_specs = model.ARTIFACTS[name]
+        sig = ",".join(f"{s.dtype}[{'x'.join(map(str, s.shape))}]" for s in arg_specs)
+        manifest_lines.append(f"artifact={name} args={sig}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "MANIFEST"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out_dir, 'MANIFEST')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Layer-1 Pallas kernels for GraphD block vertex updates.
+
+The recoded-mode hot path of GraphD digests combined messages into dense
+per-machine arrays (A_r).  A superstep's numeric work is therefore a pure
+block update over contiguous arrays — exactly the shape Pallas wants.  The
+kernels here are lowered (inside the L2 jax functions in ``model.py``) to
+HLO text once at build time and executed from Rust via PJRT.
+
+All kernels run with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret-mode lowering produces plain HLO that is
+portable to any backend.
+
+Tiling: arrays are processed in blocks of ``BLOCK`` vertices, with a Pallas
+grid over ``TILE``-sized tiles.  TILE was swept in the perf pass
+(EXPERIMENTS.md §Perf): on CPU-PJRT the per-grid-step overhead of the
+interpret lowering dominates, so TILE == BLOCK (grid=1) is fastest; the
+VMEM footprint 3 x 65536 x 4 B = 0.75 MiB still sits far below a TPU's
+~16 MiB VMEM, so the same BlockSpec remains valid on real hardware (where
+smaller tiles + double buffering would be re-enabled).  See DESIGN.md
+`Hardware-Adaptation`.
+"""
+
+BLOCK = 65536  # vertices per AOT executable invocation (rust pads the tail)
+TILE = 65536  # == BLOCK: grid of 1 (see perf note above)
+
+from . import pagerank, minrelax, ref  # noqa: E402,F401

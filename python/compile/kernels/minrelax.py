@@ -1,0 +1,60 @@
+"""Pallas kernel: min-combine block vertex update (Hash-Min / SSSP).
+
+GraphD's recoded mode digests messages with a MIN combiner into A_r
+(identity element e0 = +inf / INT_MAX).  The per-superstep vertex update is
+
+    new     = min(cur, combined_msg)
+    changed = new < cur          (the vertex is reactivated and must send)
+
+used by both Hash-Min connected components (labels, i32) and SSSP
+(distances, f32).  Outgoing per-edge messages (new + w(u,v), or the label
+itself) are fanned out by Rust along the edge stream.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cur_ref, msg_ref, new_ref, chg_ref):
+    c = cur_ref[...]
+    m = msg_ref[...]
+    n = jnp.minimum(c, m)
+    new_ref[...] = n
+    chg_ref[...] = (n < c).astype(jnp.int32)
+
+
+def minrelax_block(cur: jax.Array, msg: jax.Array):
+    """Min-relax one block.
+
+    Args:
+      cur: [B] current values (f32 distances or i32 labels).
+      msg: [B] combined incoming minima (identity = +inf / INT_MAX).
+
+    Returns:
+      (new, changed): [B] updated values, i32[B] 0/1 change mask.
+    """
+    (b,) = cur.shape
+    from . import TILE
+
+    tile = min(TILE, b)
+    assert b % tile == 0, f"block size {b} must be a multiple of tile {tile}"
+    grid = (b // tile,)
+    out_shape = (
+        jax.ShapeDtypeStruct((b,), cur.dtype),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ),
+        out_shape=out_shape,
+        interpret=True,
+    )(cur, msg)

@@ -1,0 +1,68 @@
+"""Pallas kernel: PageRank block vertex update.
+
+Given, for one block of vertices on one machine,
+  * ``sums``  — combined incoming message values (A_r in the paper, with
+                identity element e0 = 0),
+  * ``deg``   — out-degrees d(v) as f32,
+  * ``inv_n`` — the scalar 1/|V| broadcast as a (1,) array,
+compute
+  * ``val``   — new PageRank value  0.15/|V| + 0.85 * sums,
+  * ``msg``   — outgoing message value val/d(v) (0 for sinks), which Rust
+                fans out along the edge stream S^E.
+
+This is the numeric body of a PageRank superstep in [12]'s formulation as
+used by GraphD; everything else (streams, combining, routing) is Layer-3.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(inv_n_ref, sums_ref, deg_ref, val_ref, msg_ref):
+    inv_n = inv_n_ref[0]
+    s = sums_ref[...]
+    d = deg_ref[...]
+    val = 0.15 * inv_n + 0.85 * s
+    val_ref[...] = val
+    # Sinks (d == 0) emit no mass; guard the divide so padding lanes with
+    # d = 0 stay finite.
+    msg_ref[...] = jnp.where(d > 0.0, val / jnp.maximum(d, 1.0), 0.0)
+
+
+def pagerank_block(sums: jax.Array, deg: jax.Array, inv_n: jax.Array):
+    """Run the PageRank update over one block.
+
+    Args:
+      sums:  f32[B] combined message sums.
+      deg:   f32[B] out-degrees.
+      inv_n: f32[1] scalar 1/|V|.
+
+    Returns:
+      (val, msg): f32[B] new values and f32[B] outgoing message values.
+    """
+    (b,) = sums.shape
+    from . import TILE
+
+    tile = min(TILE, b)
+    assert b % tile == 0, f"block size {b} must be a multiple of tile {tile}"
+    grid = (b // tile,)
+    out_shape = (
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),     # inv_n: same tiny block every step
+            pl.BlockSpec((tile,), lambda i: (i,)),  # sums tile
+            pl.BlockSpec((tile,), lambda i: (i,)),  # deg tile
+        ],
+        out_specs=(
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ),
+        out_shape=out_shape,
+        interpret=True,
+    )(inv_n, sums, deg)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+pytest (and hypothesis sweeps) assert the Pallas kernels match these bitwise
+(or to tight float tolerance) across shapes and dtypes.  The Rust scalar
+fallback in ``rust/src/runtime`` mirrors the same formulas so all three
+implementations can be cross-checked.
+"""
+
+import jax.numpy as jnp
+
+
+def pagerank_block_ref(sums, deg, inv_n):
+    """Reference PageRank block update; see kernels.pagerank."""
+    val = 0.15 * inv_n[0] + 0.85 * sums
+    msg = jnp.where(deg > 0.0, val / jnp.maximum(deg, 1.0), 0.0)
+    return val, msg
+
+
+def minrelax_block_ref(cur, msg):
+    """Reference min-relax block update; see kernels.minrelax."""
+    new = jnp.minimum(cur, msg)
+    changed = (new < cur).astype(jnp.int32)
+    return new, changed

@@ -1,0 +1,78 @@
+"""Layer-2: jax compute graphs for GraphD's per-superstep block updates.
+
+Each function here is a jit-able graph over fixed ``BLOCK``-sized arrays
+that calls the Layer-1 Pallas kernels.  ``aot.py`` lowers them once to HLO
+text; Rust (``rust/src/runtime``) loads + compiles those artifacts at
+startup and executes them on the recoded-mode hot path.  Python is never on
+the request path.
+
+A dense whole-graph PageRank (``pagerank_dense_ref``) is also provided as a
+model-level oracle: python/tests uses it to validate that iterating the
+block update reproduces the textbook power iteration.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import BLOCK, pagerank, minrelax
+
+
+def pagerank_update(sums, deg, inv_n):
+    """One PageRank block update (see kernels.pagerank).
+
+    f32[B] sums, f32[B] deg, f32[1] inv_n -> (f32[B] val, f32[B] msg).
+    """
+    return pagerank.pagerank_block(sums, deg, inv_n)
+
+
+def minrelax_f32(cur, msg):
+    """SSSP min-relax block update: f32 distances."""
+    return minrelax.minrelax_block(cur, msg)
+
+
+def minrelax_i32(cur, msg):
+    """Hash-Min min-relax block update: i32 component labels."""
+    return minrelax.minrelax_block(cur, msg)
+
+
+#: artifact name -> (function, example-argument ShapeDtypeStructs)
+ARTIFACTS = {
+    "pagerank_update": (
+        pagerank_update,
+        (
+            jax.ShapeDtypeStruct((BLOCK,), jnp.float32),
+            jax.ShapeDtypeStruct((BLOCK,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ),
+    ),
+    "minrelax_f32": (
+        minrelax_f32,
+        (
+            jax.ShapeDtypeStruct((BLOCK,), jnp.float32),
+            jax.ShapeDtypeStruct((BLOCK,), jnp.float32),
+        ),
+    ),
+    "minrelax_i32": (
+        minrelax_i32,
+        (
+            jax.ShapeDtypeStruct((BLOCK,), jnp.int32),
+            jax.ShapeDtypeStruct((BLOCK,), jnp.int32),
+        ),
+    ),
+}
+
+
+def pagerank_dense_ref(adj: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Dense power-iteration PageRank oracle over an adjacency matrix.
+
+    ``adj[u, v] = 1`` iff edge u->v.  Matches Pregel's formulation: sinks
+    simply leak mass (no redistribution), exactly like the message model.
+    """
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    r = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    for _ in range(iters):
+        contrib = jnp.where(deg > 0, r / jnp.maximum(deg, 1.0), 0.0)
+        sums = contrib @ adj.astype(jnp.float32)
+        r = 0.15 / n + 0.85 * sums
+    return r

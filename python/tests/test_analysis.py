@@ -1,0 +1,35 @@
+"""Static-analysis module tests: I/O accounting, census, roofline sanity."""
+
+from compile import analysis, aot, model
+from compile.kernels import BLOCK
+
+
+def test_io_bytes_pagerank():
+    i, o = analysis.artifact_io_bytes("pagerank_update")
+    assert i == 4 * BLOCK + 4 * BLOCK + 4  # sums + deg + inv_n
+    assert o == 8 * BLOCK
+
+
+def test_census_counts_ops_and_no_matmuls():
+    text = aot.to_hlo_text(aot.lower_artifact("minrelax_f32"))
+    census = analysis.op_census(text)
+    assert census.get("minimum", 0) >= 1
+    assert "dot" not in census
+    assert "convolution" not in census
+
+
+def test_roofline_scales_linearly():
+    a = analysis.roofline_mvert_per_sec(10, "pagerank_update")
+    b = analysis.roofline_mvert_per_sec(100, "pagerank_update")
+    assert abs(b / a - 10.0) < 1e-6
+    assert a > 0
+
+
+def test_vmem_footprint_under_tpu_budget():
+    assert analysis.tile_vmem_bytes() < 16 * 1024 * 1024  # 16 MiB VMEM
+
+
+def test_all_artifacts_analyzable():
+    for name in model.ARTIFACTS:
+        i, o = analysis.artifact_io_bytes(name)
+        assert i > 0 and o > 0

@@ -1,0 +1,122 @@
+"""Kernel vs pure-jnp reference — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes/values; every property asserts the Pallas
+kernel (interpret mode) matches ref.py to tight tolerance (exact for
+min/int paths).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import BLOCK, TILE, ref
+from compile.kernels.minrelax import minrelax_block
+from compile.kernels.pagerank import pagerank_block
+
+# Valid block sizes: multiples of TILE, plus small blocks (< TILE) where the
+# kernel clamps the tile to the block size.
+BLOCK_SIZES = st.sampled_from([1, 2, 7, 64, 1000, TILE, 2 * TILE, 4 * TILE])
+
+finite_f32 = st.floats(
+    min_value=0.0, max_value=1e6, allow_nan=False, allow_infinity=False, width=32
+)
+
+
+def _assert_allclose(a, b, **kw):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **kw)
+
+
+# ---------------------------------------------------------------- pagerank
+@settings(max_examples=30, deadline=None)
+@given(b=BLOCK_SIZES, seed=st.integers(0, 2**31 - 1), n=st.integers(1, 10**9))
+def test_pagerank_matches_ref(b, seed, n):
+    if b % min(TILE, b) != 0:
+        b = (b // TILE) * TILE or 1
+    rng = np.random.default_rng(seed)
+    sums = jnp.asarray(rng.random(b, dtype=np.float32))
+    deg = jnp.asarray(rng.integers(0, 50, b).astype(np.float32))
+    inv_n = jnp.asarray([1.0 / n], dtype=jnp.float32)
+    val, msg = pagerank_block(sums, deg, inv_n)
+    val_r, msg_r = ref.pagerank_block_ref(sums, deg, inv_n)
+    _assert_allclose(val, val_r, rtol=1e-6, atol=1e-9)
+    _assert_allclose(msg, msg_r, rtol=1e-6, atol=1e-9)
+
+
+def test_pagerank_sink_emits_zero():
+    sums = jnp.asarray([0.5, 0.25], dtype=jnp.float32)
+    deg = jnp.asarray([0.0, 5.0], dtype=jnp.float32)
+    inv_n = jnp.asarray([0.01], dtype=jnp.float32)
+    val, msg = pagerank_block(sums, deg, inv_n)
+    assert msg[0] == 0.0
+    _assert_allclose(val[0], 0.15 * 0.01 + 0.85 * 0.5, rtol=1e-6)
+    _assert_allclose(msg[1], val[1] / 5.0, rtol=1e-6)
+
+
+def test_pagerank_full_block_shape():
+    sums = jnp.zeros((BLOCK,), jnp.float32)
+    deg = jnp.ones((BLOCK,), jnp.float32)
+    inv_n = jnp.asarray([1e-6], jnp.float32)
+    val, msg = pagerank_block(sums, deg, inv_n)
+    assert val.shape == (BLOCK,) and msg.shape == (BLOCK,)
+    _assert_allclose(val, jnp.full((BLOCK,), 0.15e-6), rtol=1e-6)
+
+
+def test_pagerank_padding_lanes_are_finite():
+    # Rust pads the tail of the last block with sums=0, deg=0; those lanes
+    # must stay finite so later reads (even if ignored) can't poison NaNs.
+    sums = jnp.zeros((TILE,), jnp.float32)
+    deg = jnp.zeros((TILE,), jnp.float32)
+    val, msg = pagerank_block(sums, deg, jnp.asarray([0.5], jnp.float32))
+    assert bool(jnp.isfinite(val).all()) and bool(jnp.isfinite(msg).all())
+
+
+# ---------------------------------------------------------------- minrelax
+@settings(max_examples=30, deadline=None)
+@given(b=BLOCK_SIZES, seed=st.integers(0, 2**31 - 1))
+def test_minrelax_f32_matches_ref(b, seed):
+    rng = np.random.default_rng(seed)
+    cur = rng.random(b, dtype=np.float32) * 100
+    # mix of improvements, ties, regressions and "no message" (+inf)
+    msg = np.where(
+        rng.random(b) < 0.25, np.float32(np.inf), rng.random(b, dtype=np.float32) * 100
+    )
+    new, chg = minrelax_block(jnp.asarray(cur), jnp.asarray(msg.astype(np.float32)))
+    new_r, chg_r = ref.minrelax_block_ref(jnp.asarray(cur), jnp.asarray(msg))
+    _assert_allclose(new, new_r)
+    _assert_allclose(chg, chg_r)
+    # invariants: new <= cur, changed iff strictly smaller
+    assert bool(jnp.all(new <= cur))
+    np.testing.assert_array_equal(np.asarray(chg) == 1, np.asarray(new) < cur)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=BLOCK_SIZES, seed=st.integers(0, 2**31 - 1))
+def test_minrelax_i32_matches_ref(b, seed):
+    rng = np.random.default_rng(seed)
+    imax = np.iinfo(np.int32).max
+    cur = rng.integers(0, 10**6, b).astype(np.int32)
+    msg = np.where(rng.random(b) < 0.25, imax, rng.integers(0, 10**6, b)).astype(
+        np.int32
+    )
+    new, chg = minrelax_block(jnp.asarray(cur), jnp.asarray(msg))
+    new_r, chg_r = ref.minrelax_block_ref(jnp.asarray(cur), jnp.asarray(msg))
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(new_r))
+    np.testing.assert_array_equal(np.asarray(chg), np.asarray(chg_r))
+    assert new.dtype == jnp.int32 and chg.dtype == jnp.int32
+
+
+def test_minrelax_identity_is_noop():
+    cur = jnp.asarray([3.0, 1.5, 0.0], jnp.float32)
+    msg = jnp.full((3,), jnp.inf, jnp.float32)
+    new, chg = minrelax_block(cur, msg)
+    _assert_allclose(new, cur)
+    assert int(chg.sum()) == 0
+
+
+def test_minrelax_full_block():
+    cur = jnp.full((BLOCK,), 7, jnp.int32)
+    msg = jnp.full((BLOCK,), 3, jnp.int32)
+    new, chg = minrelax_block(cur, msg)
+    assert int(new[0]) == 3 and int(chg.sum()) == BLOCK

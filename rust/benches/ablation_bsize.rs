@@ -1,0 +1,56 @@
+//! Ablation A3 — OMS file cap ℬ sweep (§3.3.1).
+//!
+//! Small ℬ = fine-grained files (less sender stalling on the tail file,
+//! but many small network batches); large ℬ = efficient batches but
+//! coarse-grained overlap.  The paper picks 8 MB; at our scale the
+//! interesting regime is correspondingly smaller.
+
+use graphd::algos::PageRank;
+use graphd::bench::scale_from_env;
+use graphd::config::{ClusterProfile, JobConfig, Mode};
+use graphd::dfs::Dfs;
+use graphd::engine::{load, run, Engine};
+use graphd::graph::generator::Dataset;
+use graphd::metrics::{Cell, Table};
+use graphd::util::timer::timed;
+use std::sync::Arc;
+
+fn main() {
+    let scale = scale_from_env();
+    let g = Dataset::TwitterS.generate_scaled(scale);
+    let steps = 10u64;
+    let profile = ClusterProfile::wpc();
+
+    let mut t = Table::new(
+        &format!("Ablation — OMS file cap ℬ sweep, PageRank twitter-s (scale {scale})"),
+        &["Compute", "OMS files"],
+    );
+    for cap in [64 * 1024, 256 * 1024, 1024 * 1024, 8 * 1024 * 1024] {
+        let wd = std::env::temp_dir().join(format!("graphd_abl_b{}_{}", cap, std::process::id()));
+        let _ = std::fs::remove_dir_all(&wd);
+        let mut cfg = JobConfig::default();
+        cfg.workdir = wd.clone();
+        cfg.mode = Mode::Basic;
+        cfg.max_supersteps = steps;
+        cfg.oms_file_cap = cap;
+        let eng = Engine::new(profile.clone(), cfg).expect("engine");
+        let dfs = Dfs::new(&wd.join("dfs")).expect("dfs");
+        load::put_graph(&dfs, "g.txt", &g, Some(4242)).expect("put");
+        let stores = load::load_text(&eng, &dfs, "g.txt", false).expect("load");
+        let (secs, res) = timed(|| run::run_job(&eng, &stores, Arc::new(PageRank::new(steps))));
+        let res = res.expect("run");
+        let files: u64 = res
+            .metrics
+            .machines
+            .iter()
+            .flat_map(|m| m.steps.iter())
+            .map(|s| s.oms_files)
+            .sum();
+        t.row(
+            &graphd::util::human_bytes(cap as u64),
+            vec![Cell::Secs(secs), Cell::Text(files.to_string())],
+        );
+        let _ = std::fs::remove_dir_all(&wd);
+    }
+    println!("{}", t.render());
+}

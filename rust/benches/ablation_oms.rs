@@ -1,0 +1,68 @@
+//! Ablation A2 — OMS buffering vs stall-and-send (§3.3.1 "Design
+//! Philosophy").
+//!
+//! `disable_oms=true` reproduces the design the paper argues against:
+//! outgoing messages are buffered in memory and U_c *stalls* to transmit
+//! whenever the buffer fills, serializing computation and communication.
+//! With OMSs, appending to disk never blocks on the network and U_s
+//! overlaps transmission with U_c's next superstep.
+
+use graphd::algos::PageRank;
+use graphd::baselines::Algo;
+use graphd::bench::{run_graphd, scale_from_env, use_xla_from_env};
+use graphd::config::{ClusterProfile, JobConfig, Mode};
+use graphd::dfs::Dfs;
+use graphd::engine::{load, run, Engine};
+use graphd::graph::generator::Dataset;
+use graphd::metrics::{Cell, Table};
+use graphd::util::timer::timed;
+use std::sync::Arc;
+
+fn main() {
+    let scale = scale_from_env();
+    let ds = Dataset::WebUkS;
+    let g = ds.generate_scaled(scale);
+    let steps = 10u64;
+    let profile = ClusterProfile::wpc();
+
+    // with OMS (normal IO-Basic path)
+    let gd = run_graphd(
+        "abl_oms_on",
+        &g,
+        Algo::PageRank { supersteps: steps },
+        &profile,
+        use_xla_from_env(),
+    )
+    .expect("run");
+
+    // without OMS: stall-and-send
+    let wd = std::env::temp_dir().join(format!("graphd_abl_oms_off_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&wd);
+    let mut cfg = JobConfig::default();
+    cfg.workdir = wd.clone();
+    cfg.mode = Mode::Basic;
+    cfg.max_supersteps = steps;
+    cfg.disable_oms = true;
+    let eng = Engine::new(profile.clone(), cfg).expect("engine");
+    let dfs = Dfs::new(&wd.join("dfs")).expect("dfs");
+    load::put_graph(&dfs, "g.txt", &g, Some(4242)).expect("put");
+    let stores = load::load_text(&eng, &dfs, "g.txt", false).expect("load");
+    let (stall_secs, res) = timed(|| run::run_job(&eng, &stores, Arc::new(PageRank::new(steps))));
+    res.expect("stall run");
+    let _ = std::fs::remove_dir_all(&wd);
+
+    let mut t = Table::new(
+        &format!(
+            "Ablation — OMS overlap vs stall-and-send, PageRank {} (scale {scale})",
+            ds.name()
+        ),
+        &["Compute"],
+    );
+    t.row("OMS (overlap)", vec![Cell::Secs(gd.basic_compute)]);
+    t.row("no OMS (stall)", vec![Cell::Secs(stall_secs)]);
+    println!("{}", t.render());
+    println!(
+        "speedup from overlapping: {:.2}x",
+        stall_secs / gd.basic_compute.max(1e-9)
+    );
+}

@@ -1,0 +1,45 @@
+//! Ablation A6 — machine-count scaling on a shared switch.
+//!
+//! The paper's §1 argument for *small* clusters: with n machines there are
+//! n·(n−1) communication pairs contending for one switch, so adding
+//! machines stops helping once the network saturates — while per-machine
+//! memory (O(|V|/n)) and disk parallelism keep improving.  This sweep runs
+//! IO-Recoded PageRank on webuk-s with n ∈ {2,4,8,16} on the W^PC switch.
+
+use graphd::baselines::Algo;
+use graphd::bench::{run_graphd, scale_from_env, use_xla_from_env};
+use graphd::config::ClusterProfile;
+use graphd::graph::generator::Dataset;
+use graphd::metrics::{Cell, Table};
+use graphd::util::human_bytes;
+
+fn main() {
+    let scale = scale_from_env();
+    let g = Dataset::WebUkS.generate_scaled(scale);
+    let algo = Algo::PageRank { supersteps: 10 };
+
+    let mut t = Table::new(
+        &format!("Ablation — machines sweep, IO-Recoded PageRank webuk-s (scale {scale})"),
+        &["Load", "Compute", "peak state/machine"],
+    );
+    for n in [2usize, 4, 8, 16] {
+        let mut profile = ClusterProfile::wpc();
+        profile.machines = n;
+        match run_graphd(&format!("abl_scale_{n}"), &g, algo, &profile, use_xla_from_env()) {
+            Ok(gd) => t.row(
+                &format!("n = {n:>2}"),
+                vec![
+                    Cell::Secs(gd.basic_load),
+                    Cell::Secs(gd.recoded_compute),
+                    Cell::Text(human_bytes(gd.recoded_metrics.peak_state_bytes())),
+                ],
+            ),
+            Err(e) => t.row(&format!("n = {n:>2}"), vec![Cell::Text(format!("{e}")), Cell::NA, Cell::NA]),
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "expectation: per-machine state shrinks ~1/n; compute flattens once the\n\
+         shared switch saturates (the paper's case against big clusters, §1)"
+    );
+}

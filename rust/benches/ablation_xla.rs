@@ -1,0 +1,73 @@
+//! Ablation A5 — XLA block update vs scalar Rust on the recoded hot path.
+//!
+//! Measures IO-Recoded PageRank compute time with the AOT Pallas kernels
+//! (PJRT CPU) against the bit-identical scalar fallback, plus a pure
+//! kernel microbenchmark (block update throughput), isolating Layer-1
+//! cost from the streaming/network-dominated end-to-end time.
+
+use graphd::baselines::Algo;
+use graphd::bench::{run_graphd, scale_from_env};
+use graphd::config::ClusterProfile;
+use graphd::graph::generator::Dataset;
+use graphd::metrics::{Cell, Table};
+use graphd::runtime::{KernelSet, BLOCK};
+use std::time::Instant;
+
+fn main() {
+    let scale = scale_from_env();
+    let g = Dataset::TwitterS.generate_scaled(scale);
+    let algo = Algo::PageRank { supersteps: 10 };
+    let profile = ClusterProfile::wpc();
+
+    let mut t = Table::new(
+        &format!("Ablation — XLA block update vs scalar (scale {scale})"),
+        &["IO-Recoded compute"],
+    );
+    for (label, use_xla) in [("XLA (PJRT)", true), ("scalar Rust", false)] {
+        match run_graphd(&format!("abl_xla_{use_xla}"), &g, algo, &profile, use_xla) {
+            Ok(gd) => t.row(label, vec![Cell::Secs(gd.recoded_compute)]),
+            Err(e) => {
+                eprintln!("{label}: {e}");
+                t.row(label, vec![Cell::Text(format!("failed: {e}"))]);
+            }
+        }
+    }
+    println!("{}", t.render());
+
+    // Microbenchmark: raw block-update throughput (vertices/sec).
+    let dir = KernelSet::default_dir();
+    let kernels: Vec<(&str, KernelSet)> = if dir.join("pagerank_update.hlo.txt").exists() {
+        vec![
+            ("XLA", KernelSet::load(&dir).expect("load artifacts")),
+            ("native", KernelSet::native_only()),
+        ]
+    } else {
+        eprintln!("artifacts missing — microbench runs native only");
+        vec![("native", KernelSet::native_only())]
+    };
+    let n = 4 * BLOCK;
+    let sums: Vec<f32> = (0..n).map(|i| (i % 97) as f32 / 97.0).collect();
+    let degs: Vec<f32> = (0..n).map(|i| (i % 9) as f32).collect();
+    let mut t2 = Table::new(
+        "L1 microbench — pagerank_update over 64Ki vertices",
+        &["per call", "Mvert/s"],
+    );
+    for (label, ks) in &kernels {
+        // warmup
+        let _ = ks.pagerank_update(&sums, &degs, 1e-6).unwrap();
+        let reps = 50;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let _ = ks.pagerank_update(&sums, &degs, 1e-6).unwrap();
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        t2.row(
+            label,
+            vec![
+                Cell::Text(format!("{:.3} ms", per * 1e3)),
+                Cell::Text(format!("{:.1}", n as f64 / per / 1e6)),
+            ],
+        );
+    }
+    println!("{}", t2.render());
+}

@@ -1,0 +1,31 @@
+//! Table 1: dataset statistics of the five scaled paper analogs.
+//!
+//! Regenerates the |V| / |E| / AVG-deg / MAX-deg rows (at the simulated
+//! scale; ratios — degree shape, directedness — match the originals).
+
+use graphd::bench::scale_from_env;
+use graphd::graph::generator::Dataset;
+use graphd::metrics::{Cell, Table};
+
+fn main() {
+    let scale = scale_from_env();
+    let mut t = Table::new(
+        &format!("Table 1 — graph datasets (scale {scale})"),
+        &["Type", "|V|", "|E|", "AVG Deg", "MAX Deg"],
+    );
+    for ds in Dataset::all() {
+        let g = ds.generate_scaled(scale);
+        let s = g.stats();
+        t.row(
+            ds.name(),
+            vec![
+                Cell::Text(if s.directed { "directed" } else { "undirected" }.into()),
+                Cell::Text(s.nv.to_string()),
+                Cell::Text(s.ne.to_string()),
+                Cell::Text(format!("{:.2}", s.avg_deg)),
+                Cell::Text(s.max_deg.to_string()),
+            ],
+        );
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,20 @@
+//! Table 3 — PageRank on W^high (paper analog; see DESIGN.md experiment index).
+//!
+//! Env: GRAPHD_SCALE (default 1.0), GRAPHD_SYSTEMS filter, GRAPHD_XLA=0.
+
+use graphd::baselines::Algo;
+use graphd::bench::{render_table, scale_from_env};
+use graphd::config::ClusterProfile;
+use graphd::graph::generator::Dataset;
+
+fn main() {
+    let profile = ClusterProfile::whigh();
+    let combos = [(Dataset::WebUkS, Algo::PageRank { supersteps: 10 }), (Dataset::ClueWebS, Algo::PageRank { supersteps: 5 }), (Dataset::TwitterS, Algo::PageRank { supersteps: 10 })];
+    match render_table("Table 3 — PageRank on W^high", &combos, &profile, scale_from_env()) {
+        Ok(s) => println!("{s}"),
+        Err(e) => {
+            eprintln!("bench failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

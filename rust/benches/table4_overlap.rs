@@ -1,0 +1,54 @@
+//! Table 4 — message generation vs message transmission (PageRank).
+//!
+//! For each data-cluster combination, reports M-Send (U_s transmission
+//! time) and M-Gene (U_c vertex-centric computation time, which includes
+//! all local disk streaming) summed over machine 0's supersteps.  The
+//! paper's claim: on a commodity switch M-Gene ≪ M-Send, i.e. computation
+//! and disk I/O hide entirely inside communication.
+//!
+//! Env: GRAPHD_SCALE, GRAPHD_XLA=0.
+
+use graphd::baselines::Algo;
+use graphd::bench::{run_graphd, scale_from_env, use_xla_from_env};
+use graphd::config::ClusterProfile;
+use graphd::graph::generator::Dataset;
+use graphd::metrics::{Cell, Table};
+
+fn main() {
+    let scale = scale_from_env();
+    let combos = [
+        (Dataset::WebUkS, 10u64),
+        (Dataset::ClueWebS, 5),
+        (Dataset::TwitterS, 10),
+    ];
+    let mut t = Table::new(
+        &format!("Table 4 — M-Send vs M-Gene, PageRank (scale {scale})"),
+        &["mode", "M-Send", "M-Gene"],
+    );
+    for profile in [ClusterProfile::wpc(), ClusterProfile::whigh()] {
+        for (ds, steps) in combos {
+            let g = ds.generate_scaled(scale);
+            let algo = Algo::PageRank { supersteps: steps };
+            let tag = format!("t4_{}_{}", ds.name(), profile.name);
+            match run_graphd(&tag, &g, algo, &profile, use_xla_from_env()) {
+                Ok(gd) => {
+                    let (bg, bs) = gd.basic_metrics.m_gene_m_send();
+                    let (rg, rs) = gd.recoded_metrics.m_gene_m_send();
+                    t.row(
+                        &format!("{} {}", profile.name, ds.name()),
+                        vec![Cell::Text("IO-Basic".into()), Cell::Secs(bs), Cell::Secs(bg)],
+                    );
+                    t.row(
+                        "",
+                        vec![Cell::Text("IO-Recoded".into()), Cell::Secs(rs), Cell::Secs(rg)],
+                    );
+                }
+                Err(e) => {
+                    eprintln!("{} {} failed: {e}", profile.name, ds.name());
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,20 @@
+//! Table 7 — SSSP on W^PC (paper analog; see DESIGN.md experiment index).
+//!
+//! Env: GRAPHD_SCALE (default 1.0), GRAPHD_SYSTEMS filter, GRAPHD_XLA=0.
+
+use graphd::baselines::Algo;
+use graphd::bench::{render_table, scale_from_env};
+use graphd::config::ClusterProfile;
+use graphd::graph::generator::Dataset;
+
+fn main() {
+    let profile = ClusterProfile::wpc();
+    let combos = [(Dataset::BtcS, Algo::Sssp { source: 0 }), (Dataset::FriendsterS, Algo::Sssp { source: 0 }), (Dataset::WebUkS, Algo::Sssp { source: 0 }), (Dataset::TwitterS, Algo::Sssp { source: 0 })];
+    match render_table("Table 7 — SSSP on W^PC", &combos, &profile, scale_from_env()) {
+        Ok(s) => println!("{s}"),
+        Err(e) => {
+            eprintln!("bench failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Hash-Min connected components ([23], §6 "Performance of Hash-Min"):
+//! every vertex repeatedly adopts the minimum label seen; labels converge
+//! to the minimum vertex ID of each component.
+
+use crate::api::{BlockCtx, Combiner, Context, Edge, MinI32, VertexProgram};
+use crate::runtime::KernelSet;
+
+/// Hash-Min over an undirected graph.  MIN combiner, i32 labels
+/// (current-ID space — components are invariant under relabeling).
+pub struct HashMin;
+
+impl VertexProgram for HashMin {
+    type Value = i32;
+    type Msg = i32;
+    type Agg = ();
+
+    fn init_value(&self, id: u32, _deg: u32, _nv: u64) -> i32 {
+        id as i32
+    }
+
+    fn compute(
+        &self,
+        ctx: &mut Context<'_, i32, ()>,
+        _id: u32,
+        value: &mut i32,
+        edges: &[Edge],
+        msgs: &[i32],
+    ) {
+        if ctx.superstep == 0 {
+            // Announce own label.
+            for e in edges {
+                ctx.send(e.nbr, *value);
+            }
+        } else {
+            let best = msgs.iter().copied().min().unwrap_or(i32::MAX);
+            if best < *value {
+                *value = best;
+                for e in edges {
+                    ctx.send(e.nbr, best);
+                }
+            }
+        }
+        ctx.vote_to_halt();
+    }
+
+    fn combiner(&self) -> Option<&dyn Combiner<i32>> {
+        Some(&MinI32)
+    }
+
+    fn block_update(&self, kern: &KernelSet, b: &mut BlockCtx<'_, Self>) -> crate::Result<bool> {
+        let local = b.vals.len();
+        if b.superstep == 0 {
+            for pos in 0..local {
+                if b.degs[pos] > 0 {
+                    b.out_base[pos] = Some(b.vals[pos]);
+                }
+            }
+            b.halted.set_all();
+            return Ok(true);
+        }
+        let (new, chg) = kern.minrelax_i32(b.vals, b.sums)?;
+        b.vals.copy_from_slice(&new);
+        for pos in 0..local {
+            if chg[pos] != 0 {
+                b.out_base[pos] = Some(new[pos]);
+            }
+        }
+        b.halted.set_all();
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_compute(
+        p: &HashMin,
+        step: u64,
+        val: &mut i32,
+        edges: &[Edge],
+        msgs: &[i32],
+    ) -> Vec<(u32, i32)> {
+        let mut sent = Vec::new();
+        let mut send = |t: u32, m: i32| sent.push((t, m));
+        let mut la = ();
+        let mut ctx: Context<'_, i32, ()> = Context::new(step, 10, &(), &mut la, &mut send);
+        p.compute(&mut ctx, 0, val, edges, msgs);
+        assert!(ctx.halt);
+        sent
+    }
+
+    #[test]
+    fn announces_then_adopts_min() {
+        let p = HashMin;
+        let mut val = 7i32;
+        let edges = [Edge { nbr: 3, weight: 1.0 }];
+        assert_eq!(run_compute(&p, 0, &mut val, &edges, &[]), vec![(3, 7)]);
+        // better label arrives
+        assert_eq!(run_compute(&p, 1, &mut val, &edges, &[2, 5]), vec![(3, 2)]);
+        assert_eq!(val, 2);
+        // worse label: silent
+        assert!(run_compute(&p, 2, &mut val, &edges, &[4]).is_empty());
+        assert_eq!(val, 2);
+    }
+
+    #[test]
+    fn block_update_step0_announces_nonisolated() {
+        use crate::util::bitset::BitSet;
+        let p = HashMin;
+        let kern = KernelSet::native_only();
+        let mut vals = vec![0i32, 1, 2];
+        let degs = [1u32, 0, 2];
+        let sums = vec![i32::MAX; 3];
+        let mut halted = BitSet::new(3);
+        let mut out = vec![None; 3];
+        let mut la = ();
+        let mut b = BlockCtx::<HashMin> {
+            superstep: 0,
+            num_vertices: 3,
+            vals: &mut vals,
+            degs: &degs,
+            sums: &sums,
+            halted: &mut halted,
+            out_base: &mut out,
+            global_agg: &(),
+            local_agg: &mut la,
+        };
+        assert!(p.block_update(&kern, &mut b).unwrap());
+        assert_eq!(out, vec![Some(0), None, Some(2)]);
+    }
+}

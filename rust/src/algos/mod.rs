@@ -1,0 +1,25 @@
+//! The paper's evaluation algorithms as [`crate::api::VertexProgram`]s:
+//!
+//! * [`pagerank::PageRank`] — §2.1's running example; SUM combiner; dense
+//!   workload every superstep (Tables 2–4).
+//! * [`hashmin::HashMin`] — connected components of [23]; MIN combiner;
+//!   workload turns sparse as labels converge (Tables 5–6).
+//! * [`sssp::Sssp`] — single-source shortest paths (BFS with unit
+//!   weights); MIN combiner; sparse frontier every superstep — the
+//!   hardest case for out-of-core systems (Tables 7–8).
+//! * [`triangle::TriangleCount`] — the O(|E|^1.5)-message algorithm of
+//!   [13] §3.1; *no* combiner (exercises the sorted-IMS path) and a global
+//!   SUM aggregator.
+//!
+//! PageRank/Hash-Min/SSSP also implement `block_update`, the vectorized
+//! form executed on the AOT-compiled Pallas kernels in recoded mode.
+
+pub mod hashmin;
+pub mod pagerank;
+pub mod sssp;
+pub mod triangle;
+
+pub use hashmin::HashMin;
+pub use pagerank::{PageRank, PageRankConverge};
+pub use sssp::Sssp;
+pub use triangle::TriangleCount;

@@ -1,0 +1,260 @@
+//! PageRank (§2.1): `a(v) = 0.15/|V| + 0.85·Σ msgs`, messages `a(v)/d(v)`.
+//! Runs a fixed number of supersteps (the paper uses 10, 5 on ClueWeb).
+
+use crate::api::{BlockCtx, Combiner, Context, Edge, SumF32, VertexProgram};
+use crate::runtime::KernelSet;
+
+/// Fixed-iteration PageRank with SUM combiner + XLA block update.
+pub struct PageRank {
+    /// Total supersteps to run (compute steps; set engine
+    /// `max_supersteps` to the same value).
+    pub supersteps: u64,
+}
+
+impl PageRank {
+    pub fn new(supersteps: u64) -> Self {
+        Self { supersteps }
+    }
+}
+
+impl VertexProgram for PageRank {
+    type Value = f32;
+    type Msg = f32;
+    type Agg = ();
+
+    fn init_value(&self, _id: u32, _deg: u32, nv: u64) -> f32 {
+        1.0 / nv as f32
+    }
+
+    fn compute(
+        &self,
+        ctx: &mut Context<'_, f32, ()>,
+        _id: u32,
+        value: &mut f32,
+        edges: &[Edge],
+        msgs: &[f32],
+    ) {
+        if ctx.superstep > 0 {
+            let sum: f32 = msgs.iter().sum();
+            *value = 0.15 / ctx.num_vertices as f32 + 0.85 * sum;
+        }
+        if !edges.is_empty() {
+            let share = *value / edges.len() as f32;
+            for e in edges {
+                ctx.send(e.nbr, share);
+            }
+        }
+        // Never votes halt: termination is the superstep cap, as in the
+        // paper's fixed-iteration runs.
+    }
+
+    fn combiner(&self) -> Option<&dyn Combiner<f32>> {
+        Some(&SumF32)
+    }
+
+    fn block_update(&self, kern: &KernelSet, b: &mut BlockCtx<'_, Self>) -> crate::Result<bool> {
+        let local = b.vals.len();
+        if b.superstep == 0 {
+            // Distribute the initial rank; values were set by init_value.
+            for pos in 0..local {
+                let d = b.degs[pos];
+                b.out_base[pos] = (d > 0).then(|| b.vals[pos] / d as f32);
+            }
+            return Ok(true);
+        }
+        // sums == A_r with identity 0 where nothing was received — exactly
+        // the kernel's contract. This is the XLA hot path.
+        let degs_f: Vec<f32> = b.degs.iter().map(|&d| d as f32).collect();
+        let inv_n = 1.0 / b.num_vertices as f32;
+        let (vals, msg) = kern.pagerank_update(b.sums, &degs_f, inv_n)?;
+        b.vals.copy_from_slice(&vals);
+        for pos in 0..local {
+            b.out_base[pos] = (b.degs[pos] > 0).then(|| msg[pos]);
+        }
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_matches_formula() {
+        let pr = PageRank::new(10);
+        let mut sent: Vec<(u32, f32)> = Vec::new();
+        let mut val = 0.5f32;
+        let halted;
+        {
+            let mut send = |t: u32, m: f32| sent.push((t, m));
+            let mut la = ();
+            let mut ctx: Context<'_, f32, ()> = Context::new(3, 100, &(), &mut la, &mut send);
+            let edges = [Edge { nbr: 7, weight: 1.0 }, Edge { nbr: 9, weight: 1.0 }];
+            pr.compute(&mut ctx, 1, &mut val, &edges, &[0.1, 0.2]);
+            halted = ctx.halt;
+        }
+        let want = 0.15 / 100.0 + 0.85 * 0.3;
+        assert!((val - want).abs() < 1e-6);
+        assert_eq!(sent.len(), 2);
+        assert!((sent[0].1 - want / 2.0).abs() < 1e-6);
+        assert!(!halted);
+    }
+
+    #[test]
+    fn step0_distributes_initial_rank() {
+        let pr = PageRank::new(10);
+        let mut sent: Vec<(u32, f32)> = Vec::new();
+        let mut val = pr.init_value(0, 1, 4);
+        {
+            let mut send = |t: u32, m: f32| sent.push((t, m));
+            let mut la = ();
+            let mut ctx: Context<'_, f32, ()> = Context::new(0, 4, &(), &mut la, &mut send);
+            pr.compute(&mut ctx, 0, &mut val, &[Edge { nbr: 1, weight: 1.0 }], &[]);
+        }
+        assert_eq!(val, 0.25);
+        assert_eq!(sent, vec![(1, 0.25)]);
+    }
+
+    #[test]
+    fn block_update_matches_compute() {
+        use crate::util::bitset::BitSet;
+        let pr = PageRank::new(10);
+        let kern = KernelSet::native_only();
+        let n = 6usize;
+        let mut vals = vec![1.0 / n as f32; n];
+        let degs = vec![2u32, 0, 1, 3, 1, 2];
+        let sums = vec![0.0f32, 0.1, 0.2, 0.0, 0.3, 0.05];
+        let mut halted = BitSet::new(n);
+        let mut out = vec![None; n];
+        let mut la = ();
+        let mut b = BlockCtx::<PageRank> {
+            superstep: 2,
+            num_vertices: n as u64,
+            vals: &mut vals,
+            degs: &degs,
+            sums: &sums,
+            halted: &mut halted,
+            out_base: &mut out,
+            global_agg: &(),
+            local_agg: &mut la,
+        };
+        assert!(pr.block_update(&kern, &mut b).unwrap());
+        for pos in 0..n {
+            let want = 0.15 / 6.0 + 0.85 * sums[pos];
+            assert!((vals[pos] - want).abs() < 1e-6, "pos {pos}");
+            match out[pos] {
+                Some(m) => assert!((m - want / degs[pos] as f32).abs() < 1e-6),
+                None => assert_eq!(degs[pos], 0),
+            }
+        }
+    }
+}
+
+/// PageRank variant that terminates by *convergence* instead of a fixed
+/// superstep count, using Pregel's aggregator (§2.1): each vertex
+/// aggregates |Δa(v)|; when the global L1 delta of a superstep falls below
+/// `epsilon`, every vertex votes to halt and (with no messages pending)
+/// the job stops.  Exercises the aggregator broadcast path end-to-end.
+pub struct PageRankConverge {
+    pub epsilon: f32,
+}
+
+impl VertexProgram for PageRankConverge {
+    type Value = f32;
+    type Msg = f32;
+    /// Σ |Δ rank| of the previous superstep.
+    type Agg = f32;
+
+    fn init_value(&self, _id: u32, _deg: u32, nv: u64) -> f32 {
+        1.0 / nv as f32
+    }
+
+    fn compute(
+        &self,
+        ctx: &mut Context<'_, f32, f32>,
+        _id: u32,
+        value: &mut f32,
+        edges: &[Edge],
+        msgs: &[f32],
+    ) {
+        if ctx.superstep > 0 {
+            let sum: f32 = msgs.iter().sum();
+            let new = 0.15 / ctx.num_vertices as f32 + 0.85 * sum;
+            *ctx.local_agg += (new - *value).abs();
+            *value = new;
+            // Converged globally in the previous superstep? Stop sending.
+            if ctx.superstep >= 2 && *ctx.global_agg < self.epsilon {
+                ctx.vote_to_halt();
+                return;
+            }
+        }
+        if !edges.is_empty() {
+            let share = *value / edges.len() as f32;
+            for e in edges {
+                ctx.send(e.nbr, share);
+            }
+        }
+    }
+
+    fn combiner(&self) -> Option<&dyn Combiner<f32>> {
+        Some(&SumF32)
+    }
+
+    fn merge_agg(&self, a: &mut f32, b: &f32) {
+        *a += *b;
+    }
+}
+
+#[cfg(test)]
+mod converge_tests {
+    use super::*;
+
+    #[test]
+    fn halts_once_global_delta_small() {
+        let p = PageRankConverge { epsilon: 1e-3 };
+        let mut sent: Vec<(u32, f32)> = Vec::new();
+        let mut val = 0.25f32;
+        let halted;
+        {
+            let mut send = |t: u32, m: f32| sent.push((t, m));
+            let mut la = 0.0f32;
+            let global = 1e-6f32; // already converged
+            let mut ctx: Context<'_, f32, f32> =
+                Context::new(3, 4, &global, &mut la, &mut send);
+            p.compute(
+                &mut ctx,
+                0,
+                &mut val,
+                &[Edge { nbr: 1, weight: 1.0 }],
+                &[0.25],
+            );
+            halted = ctx.halt;
+        }
+        assert!(halted);
+        assert!(sent.is_empty());
+    }
+
+    #[test]
+    fn keeps_running_while_delta_large() {
+        let p = PageRankConverge { epsilon: 1e-6 };
+        let mut sent: Vec<(u32, f32)> = Vec::new();
+        let mut val = 0.25f32;
+        {
+            let mut send = |t: u32, m: f32| sent.push((t, m));
+            let mut la = 0.0f32;
+            let global = 0.5f32; // far from converged
+            let mut ctx: Context<'_, f32, f32> =
+                Context::new(3, 4, &global, &mut la, &mut send);
+            p.compute(
+                &mut ctx,
+                0,
+                &mut val,
+                &[Edge { nbr: 1, weight: 1.0 }],
+                &[0.1],
+            );
+            assert!(!ctx.halt);
+            assert!(la > 0.0, "delta aggregated");
+        }
+        assert_eq!(sent.len(), 1);
+    }
+}

@@ -1,0 +1,162 @@
+//! Single-source shortest paths (§6 "Performance of SSSP").  With unit
+//! edge weights this is BFS — the paper's hardest workload for out-of-core
+//! systems because every superstep touches only the frontier.
+
+use crate::api::{BlockCtx, Combiner, Context, Edge, MinF32, VertexProgram};
+use crate::runtime::KernelSet;
+
+/// SSSP from `source` (current-ID space).  MIN combiner; vertices halt
+/// every superstep and are reactivated by shorter-distance messages.
+pub struct Sssp {
+    pub source: u32,
+}
+
+impl Sssp {
+    pub fn new(source: u32) -> Self {
+        Self { source }
+    }
+}
+
+impl VertexProgram for Sssp {
+    type Value = f32;
+    type Msg = f32;
+    type Agg = ();
+
+    fn init_value(&self, id: u32, _deg: u32, _nv: u64) -> f32 {
+        if id == self.source {
+            0.0
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    fn initially_active(&self, id: u32) -> bool {
+        id == self.source
+    }
+
+    fn compute(
+        &self,
+        ctx: &mut Context<'_, f32, ()>,
+        _id: u32,
+        value: &mut f32,
+        edges: &[Edge],
+        msgs: &[f32],
+    ) {
+        let best = msgs.iter().copied().fold(f32::INFINITY, f32::min);
+        let improved = best < *value;
+        if improved {
+            *value = best;
+        }
+        // Relax out-edges on first activation (superstep 0, source) or on
+        // any improvement.
+        if ctx.superstep == 0 || improved {
+            for e in edges {
+                ctx.send(e.nbr, *value + e.weight);
+            }
+        }
+        ctx.vote_to_halt();
+    }
+
+    fn combiner(&self) -> Option<&dyn Combiner<f32>> {
+        Some(&MinF32)
+    }
+
+    fn block_update(&self, kern: &KernelSet, b: &mut BlockCtx<'_, Self>) -> crate::Result<bool> {
+        let local = b.vals.len();
+        if b.superstep == 0 {
+            for pos in 0..local {
+                // Only the source emits; everyone is halted afterwards.
+                if b.vals[pos] == 0.0 && !b.halted.get(pos) {
+                    b.out_base[pos] = Some(0.0);
+                }
+            }
+            b.halted.set_all();
+            return Ok(true);
+        }
+        let (new, chg) = kern.minrelax_f32(b.vals, b.sums)?;
+        b.vals.copy_from_slice(&new);
+        for pos in 0..local {
+            if chg[pos] != 0 {
+                b.out_base[pos] = Some(new[pos]);
+            }
+        }
+        b.halted.set_all();
+        Ok(true)
+    }
+
+    /// Relaxation adds the edge weight at fan-out time.
+    fn emit(&self, base: &f32, edges: &[Edge], send: &mut dyn FnMut(u32, f32)) {
+        for e in edges {
+            send(e.nbr, *base + e.weight);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn source_relaxes_at_step0() {
+        let p = Sssp::new(3);
+        assert!(p.initially_active(3));
+        assert!(!p.initially_active(4));
+        assert_eq!(p.init_value(3, 0, 10), 0.0);
+        assert!(p.init_value(4, 0, 10).is_infinite());
+
+        let mut sent = Vec::new();
+        let mut val = 0.0f32;
+        let halted;
+        {
+            let mut send = |t: u32, m: f32| sent.push((t, m));
+            let mut la = ();
+            let mut ctx: Context<'_, f32, ()> = Context::new(0, 10, &(), &mut la, &mut send);
+            p.compute(
+                &mut ctx,
+                3,
+                &mut val,
+                &[Edge { nbr: 5, weight: 2.0 }],
+                &[],
+            );
+            halted = ctx.halt;
+        }
+        assert_eq!(sent, vec![(5, 2.0)]);
+        assert!(halted);
+    }
+
+    #[test]
+    fn improvement_propagates_regression_does_not() {
+        let p = Sssp::new(0);
+        let mut sent = Vec::new();
+        let mut send = |t: u32, m: f32| sent.push((t, m));
+        let mut la = ();
+        let mut ctx: Context<'_, f32, ()> = Context::new(2, 10, &(), &mut la, &mut send);
+        let mut val = 5.0f32;
+        let edges = [Edge { nbr: 9, weight: 1.5 }];
+        p.compute(&mut ctx, 4, &mut val, &edges, &[7.0]); // worse
+        assert_eq!(val, 5.0);
+        assert!(sent.is_empty());
+        let mut send2 = |t: u32, m: f32| sent.push((t, m));
+        let mut la2 = ();
+        let mut ctx2: Context<'_, f32, ()> = Context::new(2, 10, &(), &mut la2, &mut send2);
+        p.compute(&mut ctx2, 4, &mut val, &edges, &[3.0]); // better
+        assert_eq!(val, 3.0);
+        assert_eq!(sent, vec![(9, 4.5)]);
+    }
+
+    #[test]
+    fn emit_adds_weight() {
+        let p = Sssp::new(0);
+        let mut sent = Vec::new();
+        let mut send = |t: u32, m: f32| sent.push((t, m));
+        p.emit(
+            &2.0,
+            &[
+                Edge { nbr: 1, weight: 1.0 },
+                Edge { nbr: 2, weight: 0.5 },
+            ],
+            &mut send,
+        );
+        assert_eq!(sent, vec![(1, 3.0), (2, 2.5)]);
+    }
+}

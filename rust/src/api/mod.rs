@@ -1,0 +1,265 @@
+//! The vertex-centric programming API (Pregel semantics, §2.1).
+//!
+//! A [`VertexProgram`] specifies the behaviour of one generic vertex:
+//! `compute(msgs)` may update the vertex value, send messages, and vote to
+//! halt.  An optional [`Combiner`] declares how messages to the same target
+//! fold together (enabling IO-Basic's pre-send combining and the entire
+//! recoded mode, §5).  An optional aggregator (the `Agg` associated type +
+//! `merge_agg`) provides Pregel's global communication.
+//!
+//! Programs may additionally implement [`VertexProgram::block_update`]: a
+//! vectorized whole-block form of `compute` used on the recoded-mode hot
+//! path, where it runs on the AOT-compiled XLA kernels (see
+//! [`crate::runtime::KernelSet`]).  The per-vertex `compute` remains the
+//! semantic ground truth; tests assert both paths agree.
+
+use crate::msg::Codec;
+use crate::runtime::KernelSet;
+use crate::util::bitset::BitSet;
+
+/// One adjacency-list item as handed to `compute` (weight = 1.0 on
+/// unweighted graphs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub nbr: u32,
+    pub weight: f32,
+}
+
+/// Message combiner (§2.1): fold messages targeted at the same vertex.
+/// `identity()` is the paper's `e0` (§5): `combine(e0, m) == m`.
+pub trait Combiner<M: Codec>: Send + Sync {
+    fn combine(&self, acc: &mut M, m: &M);
+    fn identity(&self) -> M;
+}
+
+/// Sum combiner for f32 messages (PageRank).
+pub struct SumF32;
+impl Combiner<f32> for SumF32 {
+    fn combine(&self, acc: &mut f32, m: &f32) {
+        *acc += *m;
+    }
+    fn identity(&self) -> f32 {
+        0.0
+    }
+}
+
+/// Min combiner for f32 messages (SSSP).
+pub struct MinF32;
+impl Combiner<f32> for MinF32 {
+    fn combine(&self, acc: &mut f32, m: &f32) {
+        if *m < *acc {
+            *acc = *m;
+        }
+    }
+    fn identity(&self) -> f32 {
+        f32::INFINITY
+    }
+}
+
+/// Min combiner for i32 messages (Hash-Min labels).
+pub struct MinI32;
+impl Combiner<i32> for MinI32 {
+    fn combine(&self, acc: &mut i32, m: &i32) {
+        if *m < *acc {
+            *acc = *m;
+        }
+    }
+    fn identity(&self) -> i32 {
+        i32::MAX
+    }
+}
+
+/// Context passed to `compute`: superstep info + message emission +
+/// aggregation + halt control for the current vertex.
+pub struct Context<'a, M: Codec, A> {
+    /// Current superstep (0-based; the paper's Step 1 is superstep 0).
+    pub superstep: u64,
+    /// Total number of vertices |V|.
+    pub num_vertices: u64,
+    /// Global aggregate from the previous superstep.
+    pub global_agg: &'a A,
+    /// This machine's partial aggregate for the current superstep.
+    pub local_agg: &'a mut A,
+    pub(crate) send_fn: &'a mut dyn FnMut(u32, M),
+    pub(crate) halt: bool,
+    pub(crate) sent: u64,
+}
+
+impl<'a, M: Codec, A> Context<'a, M, A> {
+    pub fn new(
+        superstep: u64,
+        num_vertices: u64,
+        global_agg: &'a A,
+        local_agg: &'a mut A,
+        send_fn: &'a mut dyn FnMut(u32, M),
+    ) -> Self {
+        Self {
+            superstep,
+            num_vertices,
+            global_agg,
+            local_agg,
+            send_fn,
+            halt: false,
+            sent: 0,
+        }
+    }
+
+    /// Send `msg` to vertex `target` (delivered next superstep).
+    #[inline]
+    pub fn send(&mut self, target: u32, msg: M) {
+        self.sent += 1;
+        (self.send_fn)(target, msg);
+    }
+
+    /// Vote to halt: deactivate this vertex until a message reactivates it.
+    #[inline]
+    pub fn vote_to_halt(&mut self) {
+        self.halt = true;
+    }
+
+    /// Reset per-vertex flags when a context is reused across vertices.
+    pub fn reset_vertex(&mut self) {
+        self.halt = false;
+    }
+
+    /// Messages emitted through this context so far.
+    pub fn msgs_sent(&self) -> u64 {
+        self.sent
+    }
+}
+
+/// Whole-block context for the vectorized recoded-mode path.  Arrays are
+/// indexed by position in the machine's state array `A`; `sums[p]` is the
+/// combined incoming message (`identity` when none — the paper's
+/// `A_r[pos] = e0` convention).
+pub struct BlockCtx<'a, P: VertexProgram + ?Sized> {
+    pub superstep: u64,
+    pub num_vertices: u64,
+    pub vals: &'a mut [P::Value],
+    pub degs: &'a [u32],
+    pub sums: &'a [P::Msg],
+    /// Whether each vertex was halted coming into this superstep.
+    pub halted: &'a mut BitSet,
+    /// Out: message base per vertex (`Some` ⇒ fan out along Γ(v) via
+    /// [`VertexProgram::emit`]); pre-filled with `None`.
+    pub out_base: &'a mut [Option<P::Msg>],
+    /// Global aggregate from the previous superstep.
+    pub global_agg: &'a P::Agg,
+    /// Machine-local aggregate contribution for this superstep.
+    pub local_agg: &'a mut P::Agg,
+}
+
+/// A Pregel vertex program.
+pub trait VertexProgram: Send + Sync + 'static {
+    /// Vertex value `a(v)`.
+    type Value: Codec + PartialEq + std::fmt::Debug;
+    /// Message type.
+    type Msg: Codec + PartialEq + std::fmt::Debug;
+    /// Aggregator partial value (use `()` when unused).
+    type Agg: Clone + Default + Send + Sync + 'static;
+
+    /// Initial vertex value at load time.
+    fn init_value(&self, id: u32, deg: u32, num_vertices: u64) -> Self::Value;
+
+    /// Is the vertex active in superstep 0?  (Pregel: all active; SSSP
+    /// activates only the source.)
+    fn initially_active(&self, _id: u32) -> bool {
+        true
+    }
+
+    /// The vertex-centric kernel (§2.1).  `edges` is Γ(v) streamed from
+    /// `S^E`; `msgs` the combined/raw incoming messages.
+    fn compute(
+        &self,
+        ctx: &mut Context<'_, Self::Msg, Self::Agg>,
+        id: u32,
+        value: &mut Self::Value,
+        edges: &[Edge],
+        msgs: &[Self::Msg],
+    );
+
+    /// Message combiner; `Some` enables pre-send combining and recoded
+    /// mode's in-memory digesting.
+    fn combiner(&self) -> Option<&dyn Combiner<Self::Msg>> {
+        None
+    }
+
+    /// Merge another machine's aggregate into `a`.
+    fn merge_agg(&self, _a: &mut Self::Agg, _b: &Self::Agg) {}
+
+    /// Vectorized whole-block update (recoded mode).  Return `true` if the
+    /// block was handled (the engine then fans out `out_base` along the
+    /// edge stream via [`Self::emit`]); `false` falls back to per-vertex
+    /// `compute`.  Implementations run on [`KernelSet`] — the XLA hot path.
+    fn block_update(&self, _kern: &KernelSet, _b: &mut BlockCtx<'_, Self>) -> crate::Result<bool>
+    where
+        Self: Sized,
+    {
+        Ok(false)
+    }
+
+    /// Fan one vertex's message base out along its adjacency list
+    /// (block-update path only).  Default: same message to every neighbor.
+    fn emit(&self, base: &Self::Msg, edges: &[Edge], send: &mut dyn FnMut(u32, Self::Msg)) {
+        for e in edges {
+            send(e.nbr, *base);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combiners_fold_correctly() {
+        let mut a = 1.5f32;
+        SumF32.combine(&mut a, &2.5);
+        assert_eq!(a, 4.0);
+        assert_eq!(SumF32.identity(), 0.0);
+
+        let mut m = 5.0f32;
+        MinF32.combine(&mut m, &7.0);
+        assert_eq!(m, 5.0);
+        MinF32.combine(&mut m, &2.0);
+        assert_eq!(m, 2.0);
+        assert_eq!(MinF32.identity(), f32::INFINITY);
+
+        let mut i = 9i32;
+        MinI32.combine(&mut i, &3);
+        assert_eq!(i, 3);
+        assert_eq!(MinI32.identity(), i32::MAX);
+    }
+
+    #[test]
+    fn combiner_identity_law() {
+        // combine(e0, m) == m for all three built-ins
+        for m in [0.0f32, -1.5, 1e20] {
+            let mut a = SumF32.identity();
+            SumF32.combine(&mut a, &m);
+            assert_eq!(a, m);
+            let mut b = MinF32.identity();
+            MinF32.combine(&mut b, &m);
+            assert_eq!(b, m);
+        }
+        let mut c = MinI32.identity();
+        MinI32.combine(&mut c, &42);
+        assert_eq!(c, 42);
+    }
+
+    #[test]
+    fn context_send_and_halt() {
+        let mut collected: Vec<(u32, f32)> = Vec::new();
+        let mut send = |t: u32, m: f32| collected.push((t, m));
+        let mut local = ();
+        let mut ctx: Context<'_, f32, ()> = Context::new(3, 100, &(), &mut local, &mut send);
+        ctx.send(7, 0.5);
+        ctx.send(9, 1.5);
+        assert_eq!(ctx.msgs_sent(), 2);
+        assert!(!ctx.halt);
+        ctx.vote_to_halt();
+        assert!(ctx.halt);
+        drop(ctx);
+        assert_eq!(collected, vec![(7, 0.5), (9, 1.5)]);
+    }
+}

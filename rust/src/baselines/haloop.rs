@@ -1,0 +1,124 @@
+//! HaLoop analog: iterative MapReduce with loop-aware caching.
+//!
+//! Cost structure (§2.2, §6): each iteration is a MapReduce job — map over
+//! the cached graph partition (full rescan from local disk), shuffle the
+//! messages (disk-buffered sort + network), reduce into new vertex values
+//! written back to the DFS.  Job startup overhead per iteration is the
+//! Hadoop tax that makes HaLoop the slowest distributed system in every
+//! table.
+
+use super::{adj_bytes, trace, Algo, BaselineRun, MSG_BYTES, STATE_BYTES};
+use crate::config::ClusterProfile;
+use crate::error::{Error, Result};
+use crate::graph::Graph;
+use crate::net::Switch;
+use crate::util::diskio::DiskBw;
+use crate::util::timer::timed;
+use std::sync::Arc;
+
+/// MapReduce job startup+teardown per iteration, scaled via latency.
+pub fn job_overhead_secs(profile: &ClusterProfile) -> f64 {
+    profile.latency_us as f64 * 1e-6 * 3000.0
+}
+
+pub fn disk_need_per_machine(g: &Graph, algo: Algo, n: usize) -> u64 {
+    // cached partition + map spill + shuffle segments + reduce output
+    (adj_bytes(g, algo) * 2 + 3 * g.num_edges() as u64 * MSG_BYTES) / n as u64
+}
+
+pub fn run(g: &Graph, algo: Algo, profile: &ClusterProfile) -> Result<BaselineRun> {
+    let n = profile.machines;
+    let need = disk_need_per_machine(g, algo, n);
+    if need > profile.disk_budget {
+        return Err(Error::InsufficientDisk {
+            need_mb: need as f64 / (1024.0 * 1024.0),
+            budget_mb: profile.disk_budget as f64 / (1024.0 * 1024.0),
+        });
+    }
+
+    let (values, steps) = trace(g, algo);
+    let adj = adj_bytes(g, algo);
+    let text = adj * 3 / 2;
+    let v_bytes = g.num_vertices() as u64 * STATE_BYTES;
+    let switch = Switch::new(profile.net_bytes_per_sec, profile.latency_us);
+    let overhead = job_overhead_secs(profile);
+    let disks: Vec<Option<Arc<DiskBw>>> = (0..n)
+        .map(|_| profile.disk_bytes_per_sec.map(DiskBw::new))
+        .collect();
+
+    let (compute_secs, ()) = timed(|| {
+        for st in &steps {
+            let msg_bytes = st.msgs * MSG_BYTES;
+            std::thread::scope(|s| {
+                for d in disks.iter() {
+                    let switch = switch.clone();
+                    let d = d.clone();
+                    s.spawn(move || {
+                        let per = |b: u64| (b / n as u64) as usize;
+                        if let Some(d) = &d {
+                            // map: rescan cached partition + spill sorted runs
+                            d.charge(per(text + msg_bytes));
+                        }
+                        // shuffle cross-machine segments
+                        switch.transmit(per(msg_bytes * (n as u64 - 1) / n as u64));
+                        if let Some(d) = &d {
+                            // reduce: merge runs + write new vertex values
+                            d.charge(per(msg_bytes + 2 * v_bytes));
+                        }
+                    });
+                }
+            });
+            std::thread::sleep(std::time::Duration::from_secs_f64(overhead));
+        }
+    });
+
+    Ok(BaselineRun {
+        system: "HaLoop",
+        preprocess_secs: 0.0,
+        load_secs: 0.0, // rescans the DFS every iteration — no load phase
+        compute_secs,
+        supersteps: steps.len() as u64,
+        values,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+
+    #[test]
+    fn rescans_graph_every_iteration() {
+        let g = generator::chain(30).with_unit_weights();
+        let mut p = ClusterProfile::test(2);
+        p.disk_bytes_per_sec = Some(50.0 * 1024.0 * 1024.0);
+        p.latency_us = 0;
+        let out = run(&g, Algo::Sssp { source: 0 }, &p).unwrap();
+        // every one of the ~31 supersteps rescans text/n bytes per machine
+        let text = adj_bytes(&g, Algo::Sssp { source: 0 }) * 3 / 2;
+        let min = out.supersteps as f64 * (text / 4) as f64 / (50.0 * 1024.0 * 1024.0);
+        assert!(out.compute_secs >= 0.5 * min);
+    }
+
+    #[test]
+    fn values_match_reference() {
+        let g = generator::uniform(60, 200, false, 7);
+        let out = run(&g, Algo::HashMin, &ClusterProfile::test(2)).unwrap();
+        match out.values {
+            super::super::AlgoValues::Labels(l) => {
+                assert_eq!(l, crate::graph::reference::components(&g));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn job_overhead_scales_with_latency() {
+        let mut p = ClusterProfile::test(2);
+        p.latency_us = 300;
+        let a = job_overhead_secs(&p);
+        p.latency_us = 80;
+        let b = job_overhead_secs(&p);
+        assert!(a > b);
+    }
+}

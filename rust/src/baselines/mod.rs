@@ -1,0 +1,251 @@
+//! Comparator systems (§6): in-memory Pregel+ and the out-of-core systems
+//! the paper benchmarks against.  Each baseline computes *exact* algorithm
+//! results (shared superstep tracer below) while paying its own system's
+//! I/O / network / sorting cost structure against the same simulated
+//! substrates (per-machine [`crate::util::diskio::DiskBw`] disks, the
+//! shared [`crate::net::Switch`]) — which is precisely what the paper's
+//! tables compare.
+//!
+//! | Module | Models | Cost structure |
+//! |---|---|---|
+//! | [`inmem`] | Pregel+ | all in RAM; compute *then* transmit (no overlap); refuses when over the RAM budget |
+//! | [`pregelix`] | Pregelix | per superstep: external message sort + join scan + group-by, plus a fixed per-superstep dataflow overhead |
+//! | [`haloop`] | HaLoop | per iteration: rescan the whole graph from DFS + MapReduce shuffle |
+//! | [`graphchi`] | GraphChi | single PC; shard preprocessing; every iteration loads whole shards even for one active vertex |
+//! | [`xstream`] | X-Stream | single PC; no preprocessing; every iteration streams **all** edges |
+
+pub mod graphchi;
+pub mod haloop;
+pub mod inmem;
+pub mod pregelix;
+pub mod xstream;
+
+use crate::graph::{reference, Graph};
+
+/// Which algorithm a baseline runs.
+#[derive(Clone, Copy, Debug)]
+pub enum Algo {
+    PageRank { supersteps: u64 },
+    HashMin,
+    Sssp { source: u32 },
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::PageRank { .. } => "pagerank",
+            Algo::HashMin => "hashmin",
+            Algo::Sssp { .. } => "sssp",
+        }
+    }
+
+    /// Bytes per adjacency item this algorithm streams (weights for SSSP).
+    pub fn item_size(&self) -> u64 {
+        match self {
+            Algo::Sssp { .. } => 8,
+            _ => 4,
+        }
+    }
+}
+
+/// Exact results, indexed by dense vertex id.
+#[derive(Clone, Debug)]
+pub enum AlgoValues {
+    Ranks(Vec<f32>),
+    Labels(Vec<u32>),
+    Dists(Vec<f32>),
+}
+
+/// Activity profile of one superstep — what each system's cost model is
+/// driven by.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTrace {
+    /// Vertices that compute this superstep.
+    pub frontier_vertices: u64,
+    /// Adjacency items those vertices scan.
+    pub frontier_edges: u64,
+    /// Messages generated.
+    pub msgs: u64,
+}
+
+/// A timed baseline run (one table row fragment).
+#[derive(Clone, Debug)]
+pub struct BaselineRun {
+    pub system: &'static str,
+    pub preprocess_secs: f64,
+    pub load_secs: f64,
+    pub compute_secs: f64,
+    pub supersteps: u64,
+    pub values: AlgoValues,
+}
+
+/// Exact per-superstep activity trace + final values, shared by all
+/// baselines (they differ only in the *cost* of executing it).
+pub fn trace(g: &Graph, algo: Algo) -> (AlgoValues, Vec<StepTrace>) {
+    match algo {
+        Algo::PageRank { supersteps } => {
+            let ne = g.num_edges() as u64;
+            let nv = g.num_vertices() as u64;
+            let steps = (0..supersteps)
+                .map(|_| StepTrace {
+                    frontier_vertices: nv,
+                    frontier_edges: ne,
+                    msgs: ne,
+                })
+                .collect();
+            (AlgoValues::Ranks(reference::pagerank(g, supersteps)), steps)
+        }
+        Algo::HashMin => {
+            let n = g.num_vertices();
+            let mut label: Vec<u32> = (0..n as u32).collect();
+            let mut steps = Vec::new();
+            // superstep 0: everyone announces
+            steps.push(StepTrace {
+                frontier_vertices: n as u64,
+                frontier_edges: g.num_edges() as u64,
+                msgs: g.num_edges() as u64,
+            });
+            loop {
+                let mut next = label.clone();
+                for v in 0..n as u32 {
+                    for &u in g.neighbors(v) {
+                        if label[u as usize] < next[v as usize] {
+                            next[v as usize] = label[u as usize];
+                        }
+                    }
+                }
+                let changed: Vec<u32> = (0..n as u32)
+                    .filter(|&v| next[v as usize] != label[v as usize])
+                    .collect();
+                label = next;
+                let fe: u64 = changed.iter().map(|&v| g.degree(v) as u64).sum();
+                steps.push(StepTrace {
+                    frontier_vertices: changed.len() as u64,
+                    frontier_edges: fe,
+                    msgs: fe,
+                });
+                if changed.is_empty() {
+                    break;
+                }
+            }
+            (AlgoValues::Labels(label), steps)
+        }
+        Algo::Sssp { source } => {
+            let n = g.num_vertices();
+            let mut dist = vec![f32::INFINITY; n];
+            dist[source as usize] = 0.0;
+            let mut in_next = vec![false; n];
+            let mut frontier: Vec<u32> = vec![source];
+            let mut steps = Vec::new();
+            while !frontier.is_empty() {
+                let fe: u64 = frontier.iter().map(|&v| g.degree(v) as u64).sum();
+                steps.push(StepTrace {
+                    frontier_vertices: frontier.len() as u64,
+                    frontier_edges: fe,
+                    msgs: fe,
+                });
+                let mut next: Vec<u32> = Vec::new();
+                for &v in &frontier {
+                    let ws = g.weights_of(v);
+                    for (i, &u) in g.neighbors(v).iter().enumerate() {
+                        let w = ws.map_or(1.0, |ws| ws[i]);
+                        let nd = dist[v as usize] + w;
+                        if nd < dist[u as usize] {
+                            dist[u as usize] = nd;
+                            if !in_next[u as usize] {
+                                in_next[u as usize] = true;
+                                next.push(u);
+                            }
+                        }
+                    }
+                }
+                for &u in &next {
+                    in_next[u as usize] = false;
+                }
+                frontier = next;
+            }
+            // final quiescence superstep (no messages)
+            steps.push(StepTrace::default());
+            (AlgoValues::Dists(dist), steps)
+        }
+    }
+}
+
+/// Estimated binary size of the graph partition data (adjacency items).
+pub fn adj_bytes(g: &Graph, algo: Algo) -> u64 {
+    g.num_edges() as u64 * algo.item_size()
+}
+
+/// Per-vertex state bytes (id, value, active, degree — Eq. 1).
+pub const STATE_BYTES: u64 = 16;
+
+/// Message record bytes (target + payload).
+pub const MSG_BYTES: u64 = 8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+
+    #[test]
+    fn trace_pagerank_constant_frontier() {
+        let g = generator::uniform(50, 200, true, 1);
+        let (vals, steps) = trace(&g, Algo::PageRank { supersteps: 4 });
+        assert_eq!(steps.len(), 4);
+        for s in &steps {
+            assert_eq!(s.frontier_vertices, 50);
+            assert_eq!(s.msgs, g.num_edges() as u64);
+        }
+        match vals {
+            AlgoValues::Ranks(r) => assert_eq!(r.len(), 50),
+            _ => panic!("wrong values"),
+        }
+    }
+
+    #[test]
+    fn trace_sssp_frontier_shrinks_to_zero() {
+        let g = generator::chain(20).with_unit_weights();
+        let (vals, steps) = trace(&g, Algo::Sssp { source: 0 });
+        // chain: 20 frontier steps (one vertex each) + quiescence
+        assert_eq!(steps.len(), 21);
+        assert!(steps.iter().take(19).all(|s| s.frontier_vertices == 1));
+        assert_eq!(steps.last().unwrap().msgs, 0);
+        match vals {
+            AlgoValues::Dists(d) => assert_eq!(d[19], 19.0),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn trace_sssp_weighted_matches_dijkstra() {
+        let g = generator::random_weights(generator::uniform(60, 240, true, 4), 5);
+        let (vals, _) = trace(&g, Algo::Sssp { source: 0 });
+        let want = reference::sssp(&g, 0);
+        match vals {
+            AlgoValues::Dists(d) => {
+                for v in 0..60 {
+                    if want[v].is_finite() {
+                        assert!((d[v] - want[v]).abs() < 1e-3, "v={v}");
+                    } else {
+                        assert!(d[v].is_infinite());
+                    }
+                }
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn trace_hashmin_matches_reference_components() {
+        let g = generator::uniform(80, 150, false, 3);
+        let (vals, steps) = trace(&g, Algo::HashMin);
+        assert!(steps.len() >= 2);
+        assert_eq!(steps.last().unwrap().msgs, 0, "ends quiescent");
+        match vals {
+            AlgoValues::Labels(l) => {
+                assert_eq!(l, reference::components(&g));
+            }
+            _ => panic!(),
+        }
+    }
+}

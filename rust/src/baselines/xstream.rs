@@ -1,0 +1,105 @@
+//! X-Stream analog: single-PC edge-centric scatter-gather streaming.
+//!
+//! Cost structure (§2.2, §6): no preprocessing, but every iteration
+//! streams **all** edges from disk (scatter), writes an update for every
+//! generated message, and streams the updates back (gather).  "X-Stream is
+//! inefficient for graphs whose structure requires a large number of
+//! iterations" — SSSP/BFS with hundreds of supersteps is its worst case,
+//! which Tables 7–8 show as `> 24 hr`.
+
+use super::{adj_bytes, trace, Algo, BaselineRun, MSG_BYTES, STATE_BYTES};
+use crate::config::ClusterProfile;
+use crate::error::{Error, Result};
+use crate::graph::Graph;
+use crate::util::diskio::DiskBw;
+use crate::util::timer::timed;
+
+pub fn disk_need(g: &Graph, algo: Algo) -> u64 {
+    // edges + an updates file up to one record per edge
+    adj_bytes(g, algo) + g.num_edges() as u64 * MSG_BYTES
+}
+
+pub fn run(g: &Graph, algo: Algo, profile: &ClusterProfile) -> Result<BaselineRun> {
+    let need = disk_need(g, algo);
+    // single-PC: runs on the big-disk machine
+    if need > profile.disk_budget_big {
+        return Err(Error::InsufficientDisk {
+            need_mb: need as f64 / (1024.0 * 1024.0),
+            budget_mb: profile.disk_budget_big as f64 / (1024.0 * 1024.0),
+        });
+    }
+    let disk = profile.disk_bytes_per_sec.map(DiskBw::new);
+    let charge = |b: u64| {
+        if let Some(d) = &disk {
+            d.charge(b as usize);
+        }
+    };
+
+    let adj = adj_bytes(g, algo);
+    let v_bytes = g.num_vertices() as u64 * STATE_BYTES;
+    let (values, steps) = trace(g, algo);
+    let (compute_secs, ()) = timed(|| {
+        for st in &steps {
+            // scatter: stream ALL edges + vertex states, write updates
+            charge(adj + v_bytes + st.msgs * MSG_BYTES);
+            // gather: stream updates, apply to vertices
+            charge(st.msgs * MSG_BYTES + v_bytes);
+        }
+    });
+
+    Ok(BaselineRun {
+        system: "X-Stream",
+        preprocess_secs: 0.0,
+        load_secs: 0.0,
+        compute_secs,
+        supersteps: steps.len() as u64,
+        values,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+
+    #[test]
+    fn many_superstep_jobs_pay_full_scans() {
+        // chain BFS: |V| supersteps, each streaming all edges — per-step
+        // cost must not shrink with the (tiny) frontier.
+        let g = generator::chain(100).with_unit_weights();
+        let mut p = ClusterProfile::test(1);
+        p.disk_bytes_per_sec = Some(100.0 * 1024.0 * 1024.0);
+        let out = run(&g, Algo::Sssp { source: 0 }, &p).unwrap();
+        assert_eq!(out.supersteps, 101);
+        // 101 steps × full edge scan ≥ 101 × adj bytes on one disk
+        let min_bytes = 101 * adj_bytes(&g, Algo::Sssp { source: 0 });
+        let min_secs = min_bytes as f64 / (100.0 * 1024.0 * 1024.0);
+        assert!(out.compute_secs >= 0.5 * min_secs);
+    }
+
+    #[test]
+    fn refuses_on_tiny_disk() {
+        let g = generator::uniform(100, 1000, true, 1);
+        let mut p = ClusterProfile::test(1);
+        p.disk_budget_big = 100;
+        assert!(matches!(
+            run(&g, Algo::PageRank { supersteps: 1 }, &p),
+            Err(Error::InsufficientDisk { .. })
+        ));
+    }
+
+    #[test]
+    fn values_match_reference() {
+        let g = generator::uniform(60, 300, true, 2);
+        let out = run(&g, Algo::PageRank { supersteps: 4 }, &ClusterProfile::test(1)).unwrap();
+        match out.values {
+            super::super::AlgoValues::Ranks(r) => {
+                let want = crate::graph::reference::pagerank(&g, 4);
+                for v in 0..60 {
+                    assert!((r[v] - want[v]).abs() < 1e-6);
+                }
+            }
+            _ => panic!(),
+        }
+    }
+}

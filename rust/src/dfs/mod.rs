@@ -1,0 +1,238 @@
+//! Simulated HDFS: a shared directory with block-oriented access.
+//!
+//! The paper's jobs load from / dump to HDFS (§2) and checkpoint to HDFS
+//! (§3.4).  We model it as a directory where each file exposes fixed-size
+//! blocks; during loading, machine `i` parses blocks `j ≡ i (mod n)` in
+//! parallel with the other machines — the line-boundary convention is the
+//! standard Hadoop one (skip to the first full line after the block start,
+//! read past the block end to finish the last line).
+
+use crate::error::{Error, Result};
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+/// Default block size: 4 MB (scaled-down HDFS 64 MB blocks).
+pub const DEFAULT_BLOCK: u64 = 4 * 1024 * 1024;
+
+/// Handle to the simulated DFS rooted at a directory.
+#[derive(Clone, Debug)]
+pub struct Dfs {
+    root: PathBuf,
+    block_size: u64,
+}
+
+impl Dfs {
+    pub fn new(root: &Path) -> Result<Self> {
+        std::fs::create_dir_all(root)?;
+        Ok(Self {
+            root: root.to_path_buf(),
+            block_size: DEFAULT_BLOCK,
+        })
+    }
+
+    pub fn with_block_size(mut self, bs: u64) -> Self {
+        self.block_size = bs.max(16);
+        self
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn path_of(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    /// Store bytes under `name` (replacing any existing file).
+    pub fn put(&self, name: &str, data: &[u8]) -> Result<()> {
+        let p = self.path_of(name);
+        if let Some(d) = p.parent() {
+            std::fs::create_dir_all(d)?;
+        }
+        std::fs::write(p, data)?;
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<Vec<u8>> {
+        Ok(std::fs::read(self.path_of(name))?)
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.path_of(name).exists()
+    }
+
+    pub fn delete(&self, name: &str) -> Result<()> {
+        let p = self.path_of(name);
+        if p.is_dir() {
+            std::fs::remove_dir_all(p)?;
+        } else if p.exists() {
+            std::fs::remove_file(p)?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self, name: &str) -> Result<u64> {
+        Ok(std::fs::metadata(self.path_of(name))?.len())
+    }
+
+    /// Number of blocks of `name`.
+    pub fn num_blocks(&self, name: &str) -> Result<u64> {
+        let len = self.len(name)?;
+        Ok((len + self.block_size - 1) / self.block_size)
+    }
+
+    /// Read the *lines* belonging to block `blk` of a text file, using the
+    /// Hadoop boundary convention.  Returns complete lines only.
+    pub fn read_block_lines(&self, name: &str, blk: u64) -> Result<Vec<String>> {
+        let path = self.path_of(name);
+        let mut f = std::fs::File::open(&path)?;
+        let len = f.metadata()?.len();
+        let start = blk * self.block_size;
+        let end = ((blk + 1) * self.block_size).min(len);
+        if start >= len {
+            return Ok(Vec::new());
+        }
+
+        // Find the true start: offset 0 starts immediately; otherwise skip
+        // to the byte after the first '\n' at/after `start - 1`.
+        let mut true_start = start;
+        if start > 0 {
+            f.seek(SeekFrom::Start(start - 1))?;
+            let mut buf = [0u8; 4096];
+            let mut off = start - 1;
+            'outer: loop {
+                let n = f.read(&mut buf)?;
+                if n == 0 {
+                    return Ok(Vec::new()); // no newline until EOF
+                }
+                for (i, &b) in buf[..n].iter().enumerate() {
+                    if b == b'\n' {
+                        true_start = off + i as u64 + 1;
+                        break 'outer;
+                    }
+                }
+                off += n as u64;
+            }
+            if true_start >= end {
+                return Ok(Vec::new()); // this block holds no line start
+            }
+        }
+
+        // Read from true_start past `end` to the newline terminating the
+        // last line that *starts* inside the block.
+        f.seek(SeekFrom::Start(true_start))?;
+        let mut data = Vec::new();
+        let mut reader = std::io::BufReader::new(f);
+        let mut buf = [0u8; 64 * 1024];
+        let mut pos = true_start;
+        loop {
+            let n = reader.read(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            data.extend_from_slice(&buf[..n]);
+            pos += n as u64;
+            if pos >= end {
+                // Have we got the final newline past the block boundary?
+                let boundary = (end - true_start) as usize;
+                if data[boundary.saturating_sub(1)..].contains(&b'\n') || pos >= len {
+                    break;
+                }
+            }
+        }
+
+        let boundary = (end - true_start) as usize;
+        let cut = match data[boundary.saturating_sub(1)..]
+            .iter()
+            .position(|&b| b == b'\n')
+        {
+            Some(i) => boundary.saturating_sub(1) + i + 1,
+            None => data.len(),
+        };
+        let text = std::str::from_utf8(&data[..cut])
+            .map_err(|e| Error::CorruptStream(format!("non-utf8 dfs block: {e}")))?;
+        Ok(text
+            .lines()
+            .map(str::to_owned)
+            .filter(|l| !l.is_empty())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdfs(name: &str, block: u64) -> Dfs {
+        let d = std::env::temp_dir().join(format!(
+            "graphd_dfs_{name}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        Dfs::new(&d).unwrap().with_block_size(block)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let dfs = tmpdfs("put", 64);
+        dfs.put("a/b.txt", b"hello").unwrap();
+        assert_eq!(dfs.get("a/b.txt").unwrap(), b"hello");
+        assert!(dfs.exists("a/b.txt"));
+        dfs.delete("a/b.txt").unwrap();
+        assert!(!dfs.exists("a/b.txt"));
+        let _ = std::fs::remove_dir_all(dfs.root());
+    }
+
+    #[test]
+    fn block_lines_partition_exactly() {
+        // Every line must be returned by exactly one block, regardless of
+        // where block boundaries fall.
+        for block in [8u64, 13, 32, 1000] {
+            let dfs = tmpdfs(&format!("part{block}"), block);
+            let lines: Vec<String> = (0..200).map(|i| format!("line{i:04}")).collect();
+            dfs.put("f.txt", (lines.join("\n") + "\n").as_bytes()).unwrap();
+            let nb = dfs.num_blocks("f.txt").unwrap();
+            let mut got = Vec::new();
+            for b in 0..nb {
+                got.extend(dfs.read_block_lines("f.txt", b).unwrap());
+            }
+            assert_eq!(got, lines, "block={block}");
+            let _ = std::fs::remove_dir_all(dfs.root());
+        }
+    }
+
+    #[test]
+    fn block_lines_no_trailing_newline() {
+        let dfs = tmpdfs("notrail", 10);
+        dfs.put("f.txt", b"aaaa\nbbbb\ncccc").unwrap();
+        let nb = dfs.num_blocks("f.txt").unwrap();
+        let mut got = Vec::new();
+        for b in 0..nb {
+            got.extend(dfs.read_block_lines("f.txt", b).unwrap());
+        }
+        assert_eq!(got, vec!["aaaa", "bbbb", "cccc"]);
+        let _ = std::fs::remove_dir_all(dfs.root());
+    }
+
+    #[test]
+    fn property_block_partition_random_lines() {
+        crate::util::proptest_lite::run(15, |g| {
+            let block = 4 + g.usize_in(0, 60) as u64;
+            let dfs = tmpdfs(&format!("prop{}_{}", g.case, block), block);
+            let n = g.usize_in(1, 100);
+            let lines: Vec<String> = (0..n)
+                .map(|i| format!("{i}:{}", "x".repeat(g.usize_in(0, 20))))
+                .collect();
+            dfs.put("f.txt", (lines.join("\n") + "\n").as_bytes()).unwrap();
+            let nb = dfs.num_blocks("f.txt").unwrap();
+            let mut got = Vec::new();
+            for b in 0..nb {
+                got.extend(dfs.read_block_lines("f.txt", b).unwrap());
+            }
+            let ok = got == lines;
+            let _ = std::fs::remove_dir_all(dfs.root());
+            crate::prop_assert!(g, ok, "partition mismatch block={block} n={n}");
+        });
+    }
+}

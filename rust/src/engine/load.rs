@@ -1,0 +1,228 @@
+//! Parallel graph loading from the simulated HDFS (§3.4).
+//!
+//! Machine `i` parses the text-file blocks `j ≡ i (mod n)`; each parsed
+//! vertex is routed over the (simulated) network to its owner
+//! `hash(id)`, which spills the received records to disk, then sorts them
+//! by vertex ID and splits them into the state array `A` + edge stream
+//! `S^E` — the "received vertices are merge-sorted by vertex ID into S^I,
+//! which then gets splitted into A and S^E" path of the paper.
+
+use crate::dfs::Dfs;
+use crate::engine::Engine;
+use crate::error::{Error, Result};
+use crate::graph::formats;
+use crate::net::{self, Payload};
+use crate::worker::storage::{EdgeStreamWriter, MachineStore};
+use crate::worker::Partitioning;
+
+/// Wire format of one loading record:
+/// `id u32 | deg u32 | deg × (nbr u32 [, w f32])`.
+fn encode_vertex(line: &formats::VertexLine, weighted: bool, out: &mut Vec<u8>) {
+    out.extend_from_slice(&line.id.to_le_bytes());
+    out.extend_from_slice(&(line.nbrs.len() as u32).to_le_bytes());
+    for (k, &nbr) in line.nbrs.iter().enumerate() {
+        out.extend_from_slice(&nbr.to_le_bytes());
+        if weighted {
+            let w = line.weights.as_ref().map_or(1.0, |ws| ws[k]);
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+}
+
+/// Load a text graph from `dfs` into `n` per-machine stores under
+/// `<workdir>/m<i>/basic/`.  Returns the stores (state arrays in memory).
+pub fn load_text(eng: &Engine, dfs: &Dfs, name: &str, weighted: bool) -> Result<Vec<MachineStore>> {
+    let n = eng.profile.machines;
+    let nblocks = dfs.num_blocks(name)?;
+    let endpoints = net::build(n, eng.profile.net_bytes_per_sec, eng.profile.latency_us);
+    let part = Partitioning::Hashed;
+    let item = if weighted { 8usize } else { 4 };
+    let cap = eng.cfg.oms_file_cap.max(64 * 1024);
+
+    let mut results: Vec<Option<Result<MachineStore>>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (i, (sender, receiver)) in endpoints.into_iter().enumerate() {
+            let store_dir = eng.store_dir(i, "basic");
+            let dfs = dfs.clone();
+            let name = name.to_string();
+            let disk = eng
+                .profile
+                .disk_bytes_per_sec
+                .map(crate::util::diskio::DiskBw::new);
+            handles.push(scope.spawn(move || -> Result<MachineStore> {
+                let _dg = crate::util::diskio::register(disk.clone());
+                // --- parser half (own thread so receive can overlap) ---
+                let parser = {
+                    let dfs = dfs.clone();
+                    let name = name.clone();
+                    let mut sender = sender;
+                    std::thread::spawn(move || -> Result<()> {
+                        let nmach = sender.peers();
+                        let mut bufs: Vec<Vec<u8>> = vec![Vec::new(); nmach];
+                        for blk in (i as u64..nblocks).step_by(nmach) {
+                            for line in dfs.read_block_lines(&name, blk)? {
+                                let vl = formats::parse_line(&line)?;
+                                let dst = part.machine_of(vl.id, nmach);
+                                encode_vertex(&vl, weighted, &mut bufs[dst]);
+                                if bufs[dst].len() >= cap {
+                                    let b = std::mem::take(&mut bufs[dst]);
+                                    sender.send(dst, 0, Payload::Load(b));
+                                }
+                            }
+                        }
+                        for dst in 0..nmach {
+                            if !bufs[dst].is_empty() {
+                                let b = std::mem::take(&mut bufs[dst]);
+                                sender.send(dst, 0, Payload::Load(b));
+                            }
+                            sender.send(dst, 0, Payload::LoadEnd);
+                        }
+                        Ok(())
+                    })
+                };
+
+                // --- receiver half: spill, index, sort, split ---
+                let _ = std::fs::remove_dir_all(&store_dir);
+                std::fs::create_dir_all(&store_dir)?;
+                let spill_path = store_dir.join("load_spill");
+                let mut spill = std::io::BufWriter::new(std::fs::File::create(&spill_path)?);
+                // (id, deg, byte offset of adjacency in spill)
+                let mut index: Vec<(u32, u32, u64)> = Vec::new();
+                let mut spill_off = 0u64;
+                let mut ends = 0usize;
+                let nmach = n;
+                while ends < nmach {
+                    let b = receiver.recv();
+                    match b.payload {
+                        Payload::LoadEnd => ends += 1,
+                        Payload::Load(data) => {
+                            let mut off = 0usize;
+                            while off < data.len() {
+                                let id = u32::from_le_bytes(data[off..off + 4].try_into().unwrap());
+                                let deg =
+                                    u32::from_le_bytes(data[off + 4..off + 8].try_into().unwrap());
+                                let adj_bytes = deg as usize * item;
+                                let adj = &data[off + 8..off + 8 + adj_bytes];
+                                use std::io::Write;
+                                spill.write_all(adj)?;
+                                index.push((id, deg, spill_off));
+                                spill_off += adj_bytes as u64;
+                                off += 8 + adj_bytes;
+                            }
+                        }
+                        _ => return Err(Error::CorruptStream("data batch during load".into())),
+                    }
+                }
+                {
+                    use std::io::Write;
+                    spill.flush()?;
+                }
+                parser
+                    .join()
+                    .map_err(|e| Error::WorkerPanic { machine: i, cause: format!("{e:?}") })??;
+
+                // Sort the state array by vertex ID; S^E follows A's order.
+                index.sort_unstable_by_key(|r| r.0);
+                if let Some(w) = index.windows(2).find(|w| w[0].0 == w[1].0) {
+                    return Err(Error::CorruptStream(format!(
+                        "duplicate vertex id {} in input",
+                        w[0].0
+                    )));
+                }
+                let ids: Vec<u32> = index.iter().map(|r| r.0).collect();
+                let degs: Vec<u32> = index.iter().map(|r| r.1).collect();
+                let mut se = EdgeStreamWriter::create(&store_dir, weighted, eng.cfg.stream_buf)?;
+                let spill_file = std::fs::File::open(&spill_path)?;
+                let mut adj_buf = Vec::new();
+                for &(_, deg, off) in &index {
+                    let adj_bytes = deg as usize * item;
+                    adj_buf.resize(adj_bytes, 0);
+                    read_exact_at(&spill_file, &mut adj_buf, off)?;
+                    for chunk in adj_buf.chunks_exact(item) {
+                        let nbr = u32::from_le_bytes(chunk[..4].try_into().unwrap());
+                        let w = if weighted {
+                            f32::from_le_bytes(chunk[4..8].try_into().unwrap())
+                        } else {
+                            1.0
+                        };
+                        se.push(nbr, w)?;
+                    }
+                }
+                se.finish()?;
+                let _ = std::fs::remove_file(&spill_path);
+
+                let store = MachineStore {
+                    dir: store_dir,
+                    machine: i,
+                    num_machines: nmach,
+                    total_vertices: 0, // fixed below
+                    weighted,
+                    recoded: false,
+                    ids,
+                    degs,
+                };
+                Ok(store)
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            results[i] = Some(h.join().unwrap_or_else(|e| {
+                Err(Error::WorkerPanic { machine: i, cause: format!("{e:?}") })
+            }));
+        }
+    });
+
+    let mut stores: Vec<MachineStore> = results
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect::<Result<_>>()?;
+    let total: u64 = stores.iter().map(|s| s.ids.len() as u64).sum();
+    for s in &mut stores {
+        s.total_vertices = total;
+        s.save()?;
+    }
+    Ok(stores)
+}
+
+fn read_exact_at(f: &std::fs::File, buf: &mut [u8], off: u64) -> Result<()> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        f.read_exact_at(buf, off)?;
+        Ok(())
+    }
+    #[cfg(not(unix))]
+    {
+        let mut f2 = f.try_clone()?;
+        use std::io::{Seek, SeekFrom};
+        f2.seek(SeekFrom::Start(off))?;
+        f2.read_exact(buf)?;
+        Ok(())
+    }
+}
+
+/// Reload previously saved stores ("load graph from local disks").
+pub fn load_local(eng: &Engine, kind: &str) -> Result<Vec<MachineStore>> {
+    (0..eng.profile.machines)
+        .map(|i| MachineStore::load(&eng.store_dir(i, kind)))
+        .collect()
+}
+
+/// Write a [`crate::graph::Graph`] to the dfs as a text file, optionally
+/// through a sparse old-ID mapping, and return (name, id mapping used).
+pub fn put_graph(
+    dfs: &Dfs,
+    name: &str,
+    g: &crate::graph::Graph,
+    sparse_seed: Option<u64>,
+) -> Result<Option<Vec<u32>>> {
+    let ids = sparse_seed.map(|s| formats::sparse_ids(g.num_vertices(), s));
+    let mut buf = Vec::new();
+    formats::write_text(g, ids.as_deref(), &mut buf)?;
+    dfs.put(name, &buf)?;
+    Ok(ids)
+}
+
+// `Read` used by the non-unix fallback only.
+#[allow(unused_imports)]
+use std::io::Read as _;

@@ -1,0 +1,38 @@
+//! The GraphD engine facade: load a graph from the (simulated) HDFS into
+//! per-machine stores, run vertex programs in IO-Basic or IO-Recoded mode,
+//! and gather results + metrics.
+//!
+//! ```ignore
+//! let eng = Engine::new(profile, cfg)?;
+//! let stores = eng.load_text(&dfs, "graph.txt", weighted)?;   // "Load"
+//! let rec    = recode::recode(&eng, &stores)?;                // "IO-Recoding"
+//! let out    = eng.run(&rec, Arc::new(PageRank::new(10)))?;   // "Compute"
+//! ```
+
+pub mod load;
+pub mod run;
+
+use crate::config::{ClusterProfile, JobConfig};
+use crate::error::Result;
+use std::path::PathBuf;
+
+pub use load::load_text;
+pub use run::{run_job, JobResult};
+
+/// Engine handle: profile + config + working directory.
+pub struct Engine {
+    pub profile: ClusterProfile,
+    pub cfg: JobConfig,
+}
+
+impl Engine {
+    pub fn new(profile: ClusterProfile, cfg: JobConfig) -> Result<Self> {
+        std::fs::create_dir_all(&cfg.workdir)?;
+        Ok(Self { profile, cfg })
+    }
+
+    /// Per-machine store directory for `store` generation ("basic"/"rec").
+    pub fn store_dir(&self, machine: usize, kind: &str) -> PathBuf {
+        self.cfg.workdir.join(format!("m{machine}")).join(kind)
+    }
+}

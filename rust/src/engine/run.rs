@@ -1,0 +1,174 @@
+//! Job runner: spin up `n` machines (threads), run the superstep loop to
+//! termination, gather values + metrics.
+
+use crate::api::VertexProgram;
+use crate::engine::Engine;
+use crate::error::{Error, Result};
+use crate::metrics::JobMetrics;
+use crate::net;
+use crate::util::timer::timed;
+use crate::worker::storage::MachineStore;
+use crate::worker::sync::Rendezvous;
+use crate::worker::units::{run_machine, JobGlobal, MachineOutput};
+use std::sync::Arc;
+
+/// Result of one GraphD job.
+pub struct JobResult<P: VertexProgram> {
+    pub outputs: Vec<MachineOutput<P>>,
+    pub metrics: JobMetrics,
+}
+
+impl<P: VertexProgram> JobResult<P> {
+    /// All (input-space id, value) pairs, sorted by id.
+    pub fn values_by_id(&self) -> Vec<(u32, P::Value)> {
+        let mut v: Vec<(u32, P::Value)> = self
+            .outputs
+            .iter()
+            .flat_map(|o| o.ids.iter().copied().zip(o.values.iter().copied()))
+            .collect();
+        v.sort_unstable_by_key(|(id, _)| *id);
+        v
+    }
+
+    pub fn supersteps(&self) -> u64 {
+        self.outputs.first().map_or(0, |o| o.supersteps)
+    }
+}
+
+/// Run `program` over the given per-machine stores.
+pub fn run_job<P: VertexProgram>(
+    eng: &Engine,
+    stores: &[MachineStore],
+    program: Arc<P>,
+) -> Result<JobResult<P>> {
+    run_job_with(eng, stores, program, None, None)
+}
+
+/// Run with optional checkpointing and/or recovery: `checkpoint` enables
+/// periodic checkpoints (§3.4); `resume = Some(s)` restarts from the
+/// completed checkpoint taken after superstep `s`.
+pub fn run_job_with<P: VertexProgram>(
+    eng: &Engine,
+    stores: &[MachineStore],
+    program: Arc<P>,
+    checkpoint: Option<crate::ft::CheckpointCfg>,
+    resume: Option<u64>,
+) -> Result<JobResult<P>> {
+    let n = eng.profile.machines;
+    if stores.len() != n {
+        return Err(Error::Config(format!(
+            "{} stores for {} machines",
+            stores.len(),
+            n
+        )));
+    }
+    let total_vertices = stores[0].total_vertices;
+    let max_local = stores.iter().map(|s| s.local_vertices()).max().unwrap_or(0);
+    let step_base = resume.map_or(0, |s| s + 1);
+    let ckpt_dir = checkpoint.as_ref().map(|c| c.dir.clone());
+    let global = JobGlobal {
+        program: program.clone(),
+        cfg: eng.cfg.clone(),
+        n,
+        total_vertices,
+        max_local,
+        checkpoint,
+        step_base,
+        uc_rv: Rendezvous::new(n),
+        ur_rv: Rendezvous::new(n),
+    };
+
+    let endpoints = net::build(n, eng.profile.net_bytes_per_sec, eng.profile.latency_us);
+
+    let (compute_secs, outputs) = timed(|| -> Result<Vec<MachineOutput<P>>> {
+        let mut results: Vec<Option<Result<MachineOutput<P>>>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (i, (sender, receiver)) in endpoints.into_iter().enumerate() {
+                let store = stores[i].clone();
+                let global = &global;
+                let program = program.clone();
+                let eng = &eng;
+                let disk = eng
+                    .profile
+                    .disk_bytes_per_sec
+                    .map(crate::util::diskio::DiskBw::new);
+                let ckpt_dir = ckpt_dir.clone();
+                handles.push(scope.spawn(move || -> Result<MachineOutput<P>> {
+                    if let Some(rs) = resume {
+                        // Recovery: reload values/halted/IMS from the
+                        // checkpoint; the store (A + S^E) is reloaded from
+                        // its durable on-disk form by the caller already.
+                        let dir = ckpt_dir
+                            .as_ref()
+                            .ok_or_else(|| Error::Config("resume without checkpoint dir".into()))?;
+                        let scratch = store.dir.join("recovery");
+                        let rec: crate::ft::Recovered<P::Value, P::Msg> =
+                            crate::ft::read_machine_checkpoint(dir, rs, i, &scratch)?;
+                        return crate::worker::units::run_machine_resumed(
+                            global,
+                            store,
+                            rec.vals,
+                            Some(rec.halted),
+                            Some(rec.incoming),
+                            sender,
+                            receiver,
+                            disk,
+                        );
+                    }
+                    // Initial values from the program (cheap, O(|V|/n)).
+                    let init: Vec<P::Value> = (0..store.local_vertices())
+                        .map(|pos| {
+                            program.init_value(
+                                store.id_at(pos),
+                                store.degs[pos],
+                                store.total_vertices,
+                            )
+                        })
+                        .collect();
+                    run_machine(global, store, init, sender, receiver, disk)
+                }));
+            }
+            for (i, h) in handles.into_iter().enumerate() {
+                results[i] = Some(h.join().unwrap_or_else(|e| {
+                    Err(Error::WorkerPanic {
+                        machine: i,
+                        cause: format!("{e:?}"),
+                    })
+                }));
+            }
+        });
+        results.into_iter().map(|r| r.unwrap()).collect()
+    });
+    let outputs = outputs?;
+
+    let metrics = JobMetrics {
+        load_secs: 0.0,
+        compute_secs,
+        preprocess_secs: 0.0,
+        supersteps: step_base + outputs.first().map_or(0, |o| o.supersteps),
+        machines: outputs.iter().map(|o| o.metrics.clone()).collect(),
+    };
+    Ok(JobResult { outputs, metrics })
+}
+
+/// Dump job results to the DFS as text part files (the paper's final
+/// "results are dumped to HDFS" step): one `part-<machine>` per machine,
+/// lines `id<TAB>value`.
+pub fn dump_results<P: VertexProgram>(
+    res: &JobResult<P>,
+    dfs: &crate::dfs::Dfs,
+    job_name: &str,
+) -> Result<()>
+where
+    P::Value: std::fmt::Debug,
+{
+    for out in &res.outputs {
+        let mut text = String::new();
+        for (id, v) in out.ids.iter().zip(out.values.iter()) {
+            text.push_str(&format!("{id}\t{v:?}\n"));
+        }
+        dfs.put(&format!("{job_name}/part-{:05}", out.machine), text.as_bytes())?;
+    }
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by GraphD jobs and substrates.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// An in-memory system refused to run: the estimated footprint exceeds
+    /// the per-machine RAM budget of the cluster profile (reproduces the
+    /// paper's "Insufficient Main Memories" table entries).
+    #[error("insufficient main memories: need {need_mb:.1} MB/machine, budget {budget_mb:.1} MB")]
+    InsufficientMemory { need_mb: f64, budget_mb: f64 },
+
+    /// An out-of-core system refused to run: its on-disk working set
+    /// exceeds the disk budget (the paper's "Insufficient Disk Space").
+    #[error("insufficient disk space: need {need_mb:.1} MB, budget {budget_mb:.1} MB")]
+    InsufficientDisk { need_mb: f64, budget_mb: f64 },
+
+    #[error("corrupt stream: {0}")]
+    CorruptStream(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    #[error("worker {machine} panicked: {cause}")]
+    WorkerPanic { machine: usize, cause: String },
+
+    #[error("{0}")]
+    Other(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        Error::Other(format!("{e:#}"))
+    }
+}

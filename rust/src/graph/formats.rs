@@ -1,0 +1,179 @@
+//! On-disk graph formats.
+//!
+//! * **Text** (HDFS input, §2): one vertex per line,
+//!   `id \t nbr1 nbr2 …` or `id \t nbr1:w1 nbr2:w2 …` for weighted graphs.
+//!   Vertex IDs may be *sparse* (the paper's normal mode never assumes
+//!   dense IDs) — [`sparse_ids`] fabricates such IDs so the ID-recoding
+//!   preprocessing (§5) has real work to do.
+//! * **Binary per-machine state/edge files** are written by the engine
+//!   itself (see `worker::storage`), not here.
+
+use super::{Graph, VertexId};
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+use std::io::Write;
+use std::path::Path;
+
+/// Generate a sparse, increasing old-ID assignment for `nv` vertices
+/// (dense id -> old id), with pseudo-random gaps (like the paper's Figure 1
+/// example IDs 2, 22, 32, 42…).
+pub fn sparse_ids(nv: usize, seed: u64) -> Vec<VertexId> {
+    let mut rng = Rng::new(seed);
+    let mut ids = Vec::with_capacity(nv);
+    let mut cur: u64 = 2;
+    for _ in 0..nv {
+        ids.push(cur as VertexId);
+        cur += 1 + rng.below(15);
+    }
+    assert!(cur < u32::MAX as u64, "sparse id overflow");
+    ids
+}
+
+/// One parsed vertex line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VertexLine {
+    pub id: VertexId,
+    pub nbrs: Vec<VertexId>,
+    pub weights: Option<Vec<f32>>,
+}
+
+/// Serialize a graph as text, mapping dense ids through `old_ids`
+/// (`None` keeps dense ids).  Returns the number of lines written.
+pub fn write_text(
+    g: &Graph,
+    old_ids: Option<&[VertexId]>,
+    out: &mut impl Write,
+) -> Result<usize> {
+    let map = |v: VertexId| old_ids.map_or(v, |m| m[v as usize]);
+    let mut lines = 0;
+    let mut buf = String::new();
+    for v in 0..g.num_vertices() as u32 {
+        buf.clear();
+        buf.push_str(&map(v).to_string());
+        buf.push('\t');
+        let ws = g.weights_of(v);
+        for (i, &n) in g.neighbors(v).iter().enumerate() {
+            if i > 0 {
+                buf.push(' ');
+            }
+            buf.push_str(&map(n).to_string());
+            if let Some(ws) = ws {
+                buf.push(':');
+                // Display for f32 is shortest round-trip: parsing recovers
+                // the exact bits, keeping loaded graphs == generated graphs.
+                buf.push_str(&format!("{}", ws[i]));
+            }
+        }
+        buf.push('\n');
+        out.write_all(buf.as_bytes())?;
+        lines += 1;
+    }
+    Ok(lines)
+}
+
+/// Parse one text line.
+pub fn parse_line(line: &str) -> Result<VertexLine> {
+    let bad = || Error::CorruptStream(format!("bad vertex line: {line:?}"));
+    let mut parts = line.splitn(2, '\t');
+    let id: VertexId = parts.next().ok_or_else(bad)?.trim().parse().map_err(|_| bad())?;
+    let rest = parts.next().unwrap_or("").trim();
+    let mut nbrs = Vec::new();
+    let mut weights: Option<Vec<f32>> = None;
+    for tok in rest.split_whitespace() {
+        if let Some((n, w)) = tok.split_once(':') {
+            let n: VertexId = n.parse().map_err(|_| bad())?;
+            let w: f32 = w.parse().map_err(|_| bad())?;
+            nbrs.push(n);
+            weights.get_or_insert_with(Vec::new).push(w);
+        } else {
+            nbrs.push(tok.parse().map_err(|_| bad())?);
+        }
+    }
+    if let Some(ws) = &weights {
+        if ws.len() != nbrs.len() {
+            return Err(bad());
+        }
+    }
+    Ok(VertexLine { id, nbrs, weights })
+}
+
+/// Write a graph to a text file on the local filesystem.
+pub fn write_text_file(
+    g: &Graph,
+    old_ids: Option<&[VertexId]>,
+    path: &Path,
+) -> Result<usize> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let n = write_text(g, old_ids, &mut f)?;
+    f.flush()?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+
+    #[test]
+    fn text_roundtrip_unweighted() {
+        let g = generator::uniform(30, 80, true, 1);
+        let mut buf = Vec::new();
+        write_text(&g, None, &mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        for (v, line) in text.lines().enumerate() {
+            let vl = parse_line(line).unwrap();
+            assert_eq!(vl.id, v as u32);
+            assert_eq!(vl.nbrs, g.neighbors(v as u32));
+            assert!(vl.weights.is_none());
+        }
+    }
+
+    #[test]
+    fn text_roundtrip_weighted() {
+        let g = generator::random_weights(generator::uniform(10, 30, true, 2), 3);
+        let mut buf = Vec::new();
+        write_text(&g, None, &mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        for (v, line) in text.lines().enumerate() {
+            let vl = parse_line(line).unwrap();
+            let ws = vl.weights.unwrap();
+            for (i, w) in ws.iter().enumerate() {
+                assert!((w - g.weights_of(v as u32).unwrap()[i]).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_ids_strictly_increasing() {
+        let ids = sparse_ids(1000, 7);
+        for w in ids.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(ids[999] > 999, "ids should be sparse");
+    }
+
+    #[test]
+    fn sparse_id_mapping_applied() {
+        let g = generator::chain(4);
+        let ids = vec![5u32, 17, 40, 99];
+        let mut buf = Vec::new();
+        write_text(&g, Some(&ids), &mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(parse_line(lines[0]).unwrap().id, 5);
+        assert_eq!(parse_line(lines[0]).unwrap().nbrs, vec![17]);
+        assert_eq!(parse_line(lines[3]).unwrap().nbrs, Vec::<u32>::new());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_line("notanum\t1 2").is_err());
+        assert!(parse_line("3\t1:x").is_err());
+        assert!(parse_line("").is_err());
+        // isolated vertex is fine
+        assert_eq!(parse_line("7\t").unwrap().nbrs, Vec::<u32>::new());
+    }
+}

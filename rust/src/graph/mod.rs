@@ -1,0 +1,168 @@
+//! Graph types: CSR in-memory representation (used by generators, loaders
+//! and the in-memory baseline) plus dataset statistics.
+//!
+//! GraphD itself never holds a whole graph in memory — workers stream
+//! `S^E` from disk — but generators/baselines and reference implementations
+//! need a materialized form.
+
+pub mod formats;
+pub mod generator;
+pub mod reference;
+
+/// Vertex identifier.  The paper allows arbitrary ID types; we fix u32
+/// (graphs here are ≤ 2^32 vertices) — recoded mode requires dense
+/// `0..|V|-1` IDs anyway (§5).
+pub type VertexId = u32;
+
+/// In-memory CSR graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub directed: bool,
+    /// Edge weights present? (SSSP streams 8-byte adjacency items, others 4.)
+    pub weighted: bool,
+    offsets: Vec<u64>,
+    nbrs: Vec<VertexId>,
+    weights: Option<Vec<f32>>,
+}
+
+impl Graph {
+    /// Build from an adjacency-list vector (index = vertex id).
+    pub fn from_adj(adj: Vec<Vec<VertexId>>, directed: bool) -> Self {
+        let mut offsets = Vec::with_capacity(adj.len() + 1);
+        offsets.push(0u64);
+        let mut nbrs = Vec::new();
+        for list in &adj {
+            nbrs.extend_from_slice(list);
+            offsets.push(nbrs.len() as u64);
+        }
+        Self {
+            directed,
+            weighted: false,
+            offsets,
+            nbrs,
+            weights: None,
+        }
+    }
+
+    /// Attach unit weights (turns the graph into a weighted one for SSSP).
+    pub fn with_unit_weights(mut self) -> Self {
+        self.weights = Some(vec![1.0; self.nbrs.len()]);
+        self.weighted = true;
+        self
+    }
+
+    /// Attach the given weights (len must equal edge count).
+    pub fn with_weights(mut self, w: Vec<f32>) -> Self {
+        assert_eq!(w.len(), self.nbrs.len());
+        self.weights = Some(w);
+        self.weighted = true;
+        self
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of adjacency items (directed edge count; undirected graphs
+    /// store both directions, as the paper's Γ(v) does).
+    pub fn num_edges(&self) -> usize {
+        self.nbrs.len()
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> u32 {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as u32
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let (a, b) = (
+            self.offsets[v as usize] as usize,
+            self.offsets[v as usize + 1] as usize,
+        );
+        &self.nbrs[a..b]
+    }
+
+    #[inline]
+    pub fn weights_of(&self, v: VertexId) -> Option<&[f32]> {
+        self.weights.as_ref().map(|w| {
+            let (a, b) = (
+                self.offsets[v as usize] as usize,
+                self.offsets[v as usize + 1] as usize,
+            );
+            &w[a..b]
+        })
+    }
+
+    pub fn max_degree(&self) -> u32 {
+        (0..self.num_vertices() as u32)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            0.0
+        } else {
+            self.num_edges() as f64 / self.num_vertices() as f64
+        }
+    }
+
+    /// Table-1-style stats row.
+    pub fn stats(&self) -> GraphStats {
+        GraphStats {
+            directed: self.directed,
+            nv: self.num_vertices() as u64,
+            ne: self.num_edges() as u64,
+            avg_deg: self.avg_degree(),
+            max_deg: self.max_degree(),
+        }
+    }
+}
+
+/// Summary statistics (paper Table 1).
+#[derive(Clone, Copy, Debug)]
+pub struct GraphStats {
+    pub directed: bool,
+    pub nv: u64,
+    pub ne: u64,
+    pub avg_deg: f64,
+    pub max_deg: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Graph {
+        Graph::from_adj(vec![vec![1, 2], vec![2], vec![], vec![0]], true)
+    }
+
+    #[test]
+    fn csr_accessors() {
+        let g = toy();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(2), &[] as &[u32]);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn weights_align() {
+        let g = toy().with_weights(vec![0.1, 0.2, 0.3, 0.4]);
+        assert!(g.weighted);
+        assert_eq!(g.weights_of(0).unwrap(), &[0.1, 0.2]);
+        assert_eq!(g.weights_of(3).unwrap(), &[0.4]);
+    }
+
+    #[test]
+    fn stats_row() {
+        let s = toy().stats();
+        assert_eq!(s.nv, 4);
+        assert_eq!(s.ne, 4);
+        assert!((s.avg_deg - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,191 @@
+//! Single-threaded in-memory reference implementations — the correctness
+//! oracles for every engine mode and baseline system.
+
+use super::Graph;
+
+/// Pregel-style PageRank: `supersteps` compute steps (step 0 distributes
+/// the initial rank), sinks leak mass — matches `algos::PageRank` exactly.
+pub fn pagerank(g: &Graph, supersteps: u64) -> Vec<f32> {
+    let n = g.num_vertices();
+    let nv = n as f32;
+    let mut rank = vec![1.0 / nv; n];
+    // Messages sent at step s are consumed at step s+1; steps 1..supersteps
+    // perform updates (identical to the vertex program).
+    let mut inbox = vec![0.0f32; n];
+    for step in 0..supersteps {
+        if step > 0 {
+            for v in 0..n {
+                rank[v] = 0.15 / nv + 0.85 * inbox[v];
+            }
+        }
+        inbox.iter_mut().for_each(|x| *x = 0.0);
+        for v in 0..n as u32 {
+            let d = g.degree(v);
+            if d > 0 {
+                let share = rank[v as usize] / d as f32;
+                for &u in g.neighbors(v) {
+                    inbox[u as usize] += share;
+                }
+            }
+        }
+    }
+    rank
+}
+
+/// Dijkstra SSSP (f64 accumulation, then f32 — tight enough for test
+/// tolerance against the message-passing engine).
+pub fn sssp(g: &Graph, source: u32) -> Vec<f32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let n = g.num_vertices();
+    let mut dist = vec![f32::INFINITY; n];
+    dist[source as usize] = 0.0;
+    let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
+    // f32 distances are totally ordered here (no NaN); encode via bits.
+    let key = |d: f32| (d.to_bits() as u64, 0u32).0;
+    heap.push(Reverse((key(0.0), source)));
+    while let Some(Reverse((k, v))) = heap.pop() {
+        if k > key(dist[v as usize]) {
+            continue;
+        }
+        let ws = g.weights_of(v);
+        for (i, &u) in g.neighbors(v).iter().enumerate() {
+            let w = ws.map_or(1.0, |ws| ws[i]);
+            let nd = dist[v as usize] + w;
+            if nd < dist[u as usize] {
+                dist[u as usize] = nd;
+                heap.push(Reverse((key(nd), u)));
+            }
+        }
+    }
+    dist
+}
+
+/// Connected components via union-find; labels = min vertex id per
+/// component (the Hash-Min fixpoint).
+pub fn components(g: &Graph) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(p: &mut [u32], x: u32) -> u32 {
+        let mut r = x;
+        while p[r as usize] != r {
+            r = p[r as usize];
+        }
+        let mut c = x;
+        while p[c as usize] != r {
+            let nx = p[c as usize];
+            p[c as usize] = r;
+            c = nx;
+        }
+        r
+    }
+    for v in 0..n as u32 {
+        for &u in g.neighbors(v) {
+            let (a, b) = (find(&mut parent, v), find(&mut parent, u));
+            if a != b {
+                parent[a.max(b) as usize] = a.min(b);
+            }
+        }
+    }
+    (0..n as u32).map(|v| find(&mut parent, v)).collect()
+}
+
+/// Brute-force triangle count (each triangle counted once).
+pub fn triangles(g: &Graph) -> u64 {
+    let n = g.num_vertices() as u32;
+    let mut count = 0u64;
+    for v in 0..n {
+        let nb: Vec<u32> = g.neighbors(v).iter().copied().filter(|&u| u > v).collect();
+        for (i, &u) in nb.iter().enumerate() {
+            for &w in &nb[i + 1..] {
+                if g.neighbors(u).binary_search(&w).is_ok() {
+                    count += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
+/// Number of supersteps Hash-Min needs (label propagation rounds + the
+/// final quiescent detection round) — used to pre-size bench runs.
+pub fn hashmin_rounds(g: &Graph) -> u64 {
+    let n = g.num_vertices();
+    let mut label: Vec<u32> = (0..n as u32).collect();
+    let mut rounds = 0u64;
+    loop {
+        let mut changed = false;
+        let mut next = label.clone();
+        for v in 0..n as u32 {
+            for &u in g.neighbors(v) {
+                if label[v as usize] < next[u as usize] {
+                    next[u as usize] = label[v as usize];
+                    changed = true;
+                }
+            }
+        }
+        label = next;
+        rounds += 1;
+        if !changed {
+            break;
+        }
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+
+    #[test]
+    fn pagerank_mass_conservation_on_ring() {
+        let g = generator::ring(10);
+        let r = pagerank(&g, 30);
+        let total: f32 = r.iter().sum();
+        assert!((total - 1.0).abs() < 1e-3, "total={total}");
+        // symmetric graph -> uniform ranks
+        for &x in &r {
+            assert!((x - 0.1).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sssp_on_chain() {
+        let g = generator::chain(6).with_unit_weights();
+        let d = sssp(&g, 0);
+        for (i, &x) in d.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
+        let d2 = sssp(&g, 3);
+        assert!(d2[0].is_infinite()); // chain is directed
+        assert_eq!(d2[5], 2.0);
+    }
+
+    #[test]
+    fn components_two_rings() {
+        let mut adj = vec![Vec::new(); 8];
+        for i in 0..4u32 {
+            adj[i as usize] = vec![(i + 1) % 4, (i + 3) % 4];
+            adj[4 + i as usize] = vec![4 + (i + 1) % 4, 4 + (i + 3) % 4];
+        }
+        let g = Graph::from_adj(adj, false);
+        let c = components(&g);
+        assert_eq!(&c[..4], &[0, 0, 0, 0]);
+        assert_eq!(&c[4..], &[4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn triangles_on_k4() {
+        let adj = vec![vec![1, 2, 3], vec![0, 2, 3], vec![0, 1, 3], vec![0, 1, 2]];
+        let g = Graph::from_adj(adj, false);
+        assert_eq!(triangles(&g), 4);
+    }
+
+    #[test]
+    fn hashmin_rounds_bounded_by_diameter() {
+        let g = generator::ring(16);
+        let r = hashmin_rounds(&g);
+        assert!(r <= 10, "r={r}");
+    }
+}

@@ -1,0 +1,43 @@
+//! # GraphD — out-of-core distributed Pregel in a small cluster
+//!
+//! Reproduction of *"Efficient Processing of Very Large Graphs in a Small
+//! Cluster"* (Yan, Huang, Cheng, Wu, 2016) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's system: the distributed
+//!   semi-streaming (DSS) engine.  Per machine, the vertex-state array `A`
+//!   lives in memory (`O(|V|/n)`), while the edge stream `S^E`, the incoming
+//!   message stream `S^I` and one outgoing message stream (OMS) per peer
+//!   are *streamed on local disk*.  Three units per machine — compute
+//!   [`worker`] `U_c`, send `U_s`, receive `U_r` — run in parallel and
+//!   overlap disk streaming with (simulated) network transmission (§4).
+//! * **Layer 2/1 (python/compile)** — block vertex updates (PageRank,
+//!   min-relax) written as Pallas kernels inside jax functions and
+//!   AOT-lowered to HLO text at build time.
+//! * **Runtime bridge** ([`runtime`]) — loads `artifacts/*.hlo.txt` via the
+//!   `xla` crate (PJRT CPU) and executes them on the recoded-mode hot path;
+//!   python never runs at job time.
+//!
+//! See `DESIGN.md` for the full inventory and experiment index, and
+//! `EXPERIMENTS.md` for reproduced tables.
+
+pub mod algos;
+pub mod api;
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod dfs;
+pub mod engine;
+pub mod error;
+pub mod ft;
+pub mod graph;
+pub mod metrics;
+pub mod msg;
+pub mod net;
+pub mod recode;
+pub mod runtime;
+pub mod stream;
+pub mod util;
+pub mod worker;
+
+pub use error::{Error, Result};

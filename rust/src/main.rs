@@ -1,0 +1,265 @@
+//! GraphD command-line launcher.
+//!
+//! ```text
+//! graphd gen   --dataset webuk-s [--scale 1.0] [--out PATH]
+//! graphd run   --algo pagerank|hashmin|sssp --dataset NAME
+//!              [--profile wpc|whigh|test] [--steps 10] [--machines N]
+//!              [--scale F] [-c key=val ...]
+//! graphd table --id 2|3|5|6|7|8 [--scale F]
+//! graphd info
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline crate registry has no clap.)
+
+use graphd::baselines::Algo;
+use graphd::bench;
+use graphd::config::{ClusterProfile, JobConfig};
+use graphd::graph::formats;
+use graphd::graph::generator::Dataset;
+use graphd::metrics::{Cell, Table};
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<(String, String)>) {
+    let mut flags = HashMap::new();
+    let mut cfgs = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if a == "-c" {
+            if let Some(kv) = args.get(i + 1) {
+                if let Some((k, v)) = kv.split_once('=') {
+                    cfgs.push((k.to_string(), v.to_string()));
+                }
+            }
+            i += 2;
+        } else if let Some(name) = a.strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            flags.insert(name.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    (flags, cfgs)
+}
+
+fn dataset_by_name(name: &str) -> Option<Dataset> {
+    Dataset::all().into_iter().find(|d| d.name() == name)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &args[..] } else { &args[1..] };
+    let (flags, cfgs) = parse_flags(rest);
+    let scale: f64 = flags
+        .get("scale")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(bench::scale_from_env);
+
+    let result = match cmd {
+        "gen" => cmd_gen(&flags, scale),
+        "run" => cmd_run(&flags, &cfgs, scale),
+        "table" => cmd_table(&flags, scale),
+        "info" => {
+            cmd_info();
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: graphd <gen|run|table|info> [flags]\n  see module docs of rust/src/main.rs"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_gen(flags: &HashMap<String, String>, scale: f64) -> graphd::Result<()> {
+    let name = flags
+        .get("dataset")
+        .map(String::as_str)
+        .unwrap_or("webuk-s");
+    let ds = dataset_by_name(name)
+        .ok_or_else(|| graphd::Error::Config(format!("unknown dataset {name}")))?;
+    let g = ds.generate_scaled(scale);
+    let s = g.stats();
+    eprintln!(
+        "{}: |V|={} |E|={} avg-deg {:.2} max-deg {}",
+        ds.name(),
+        s.nv,
+        s.ne,
+        s.avg_deg,
+        s.max_deg
+    );
+    if let Some(out) = flags.get("out") {
+        let n = formats::write_text_file(&g, None, std::path::Path::new(out))?;
+        eprintln!("wrote {n} vertex lines to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_run(
+    flags: &HashMap<String, String>,
+    cfgs: &[(String, String)],
+    scale: f64,
+) -> graphd::Result<()> {
+    let ds = dataset_by_name(flags.get("dataset").map(String::as_str).unwrap_or("btc-s"))
+        .ok_or_else(|| graphd::Error::Config("unknown dataset".into()))?;
+    let profile = ClusterProfile::by_name(
+        flags.get("profile").map(String::as_str).unwrap_or("wpc"),
+        flags.get("machines").and_then(|m| m.parse().ok()),
+    )?;
+    let steps: u64 = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(10);
+    let mut g = ds.generate_scaled(scale);
+    let algo = match flags.get("algo").map(String::as_str).unwrap_or("pagerank") {
+        "pagerank" => Algo::PageRank { supersteps: steps },
+        "hashmin" => Algo::HashMin,
+        "sssp" => {
+            g = g.with_unit_weights();
+            Algo::Sssp {
+                source: bench::sssp_source(&g),
+            }
+        }
+        other => return Err(graphd::Error::Config(format!("unknown algo {other}"))),
+    };
+    // Validate -c overrides even though the harness drives both modes.
+    let mut probe = JobConfig::default();
+    for (k, v) in cfgs {
+        probe.apply(k, v)?;
+    }
+
+    let gd = bench::run_graphd("cli", &g, algo, &profile, bench::use_xla_from_env())?;
+    let mut t = Table::new(
+        &format!("{} / {} on {}", ds.name(), algo.name(), profile.name),
+        &["Preprocess", "Load", "Compute"],
+    );
+    t.row(
+        "IO-Basic",
+        vec![
+            Cell::NA,
+            Cell::Secs(gd.basic_load),
+            Cell::Secs(gd.basic_compute),
+        ],
+    );
+    t.row(
+        "IO-Recoding",
+        vec![
+            Cell::NA,
+            Cell::Secs(gd.basic_load),
+            Cell::Secs(gd.recoding_compute),
+        ],
+    );
+    t.row(
+        "IO-Recoded",
+        vec![
+            Cell::Text("ID-Recoding".into()),
+            Cell::Secs(gd.recoded_load),
+            Cell::Secs(gd.recoded_compute),
+        ],
+    );
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_table(flags: &HashMap<String, String>, scale: f64) -> graphd::Result<()> {
+    let id = flags.get("id").map(String::as_str).unwrap_or("5");
+    let pr = |steps: u64| Algo::PageRank { supersteps: steps };
+    let (title, combos, profile): (&str, Vec<(Dataset, Algo)>, ClusterProfile) = match id {
+        "2" => (
+            "Table 2 — PageRank on W^PC",
+            vec![
+                (Dataset::WebUkS, pr(10)),
+                (Dataset::ClueWebS, pr(5)),
+                (Dataset::TwitterS, pr(10)),
+            ],
+            ClusterProfile::wpc(),
+        ),
+        "3" => (
+            "Table 3 — PageRank on W^high",
+            vec![
+                (Dataset::WebUkS, pr(10)),
+                (Dataset::ClueWebS, pr(5)),
+                (Dataset::TwitterS, pr(10)),
+            ],
+            ClusterProfile::whigh(),
+        ),
+        "5" => (
+            "Table 5 — Hash-Min on W^PC",
+            vec![
+                (Dataset::BtcS, Algo::HashMin),
+                (Dataset::FriendsterS, Algo::HashMin),
+            ],
+            ClusterProfile::wpc(),
+        ),
+        "6" => (
+            "Table 6 — Hash-Min on W^high",
+            vec![
+                (Dataset::BtcS, Algo::HashMin),
+                (Dataset::FriendsterS, Algo::HashMin),
+            ],
+            ClusterProfile::whigh(),
+        ),
+        "7" => (
+            "Table 7 — SSSP on W^PC",
+            vec![
+                (Dataset::BtcS, Algo::Sssp { source: 0 }),
+                (Dataset::FriendsterS, Algo::Sssp { source: 0 }),
+                (Dataset::WebUkS, Algo::Sssp { source: 0 }),
+                (Dataset::TwitterS, Algo::Sssp { source: 0 }),
+            ],
+            ClusterProfile::wpc(),
+        ),
+        "8" => (
+            "Table 8 — SSSP on W^high",
+            vec![
+                (Dataset::BtcS, Algo::Sssp { source: 0 }),
+                (Dataset::FriendsterS, Algo::Sssp { source: 0 }),
+                (Dataset::WebUkS, Algo::Sssp { source: 0 }),
+                (Dataset::TwitterS, Algo::Sssp { source: 0 }),
+            ],
+            ClusterProfile::whigh(),
+        ),
+        other => {
+            return Err(graphd::Error::Config(format!(
+                "table {other}: 1 and 4 are `cargo bench` targets; 2/3/5/6/7/8 run here"
+            )))
+        }
+    };
+    let out = bench::render_table(title, &combos, &profile, scale)?;
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_info() {
+    println!("GraphD reproduction — three-layer Rust + JAX + Pallas build");
+    println!("profiles:");
+    for p in [ClusterProfile::wpc(), ClusterProfile::whigh()] {
+        println!(
+            "  {:6} {} machines, net {}/s shared, disk {}/s, ram {}, disk budget {}",
+            p.name,
+            p.machines,
+            graphd::util::human_bytes(p.net_bytes_per_sec as u64),
+            graphd::util::human_bytes(p.disk_bytes_per_sec.unwrap_or(0.0) as u64),
+            graphd::util::human_bytes(p.ram_budget),
+            graphd::util::human_bytes(p.disk_budget),
+        );
+    }
+    println!("datasets:");
+    for d in Dataset::all() {
+        println!("  {}", d.name());
+    }
+    let dir = graphd::runtime::KernelSet::default_dir();
+    println!(
+        "artifacts: {} ({})",
+        dir.display(),
+        if dir.join("MANIFEST").exists() {
+            "present"
+        } else {
+            "missing — run `make artifacts`"
+        }
+    );
+}

@@ -1,0 +1,146 @@
+//! Fixed-size codecs for vertex values and messages.
+//!
+//! The paper assumes constant-size vertex-ID / value / adjacency / message
+//! types (§3.1) — so do we: every message on a stream or wire is
+//! `4 bytes target-id (LE u32) + Codec::SIZE bytes payload`, which lets the
+//! merge-sort and the in-memory A_r/A_s paths index records directly.
+
+/// A fixed-size binary-encodable value.
+pub trait Codec: Sized + Copy + Send + Sync + 'static {
+    const SIZE: usize;
+    fn encode(&self, out: &mut [u8]);
+    fn decode(buf: &[u8]) -> Self;
+}
+
+impl Codec for u32 {
+    const SIZE: usize = 4;
+    fn encode(&self, out: &mut [u8]) {
+        out[..4].copy_from_slice(&self.to_le_bytes());
+    }
+    fn decode(buf: &[u8]) -> Self {
+        u32::from_le_bytes(buf[..4].try_into().unwrap())
+    }
+}
+
+impl Codec for i32 {
+    const SIZE: usize = 4;
+    fn encode(&self, out: &mut [u8]) {
+        out[..4].copy_from_slice(&self.to_le_bytes());
+    }
+    fn decode(buf: &[u8]) -> Self {
+        i32::from_le_bytes(buf[..4].try_into().unwrap())
+    }
+}
+
+impl Codec for u64 {
+    const SIZE: usize = 8;
+    fn encode(&self, out: &mut [u8]) {
+        out[..8].copy_from_slice(&self.to_le_bytes());
+    }
+    fn decode(buf: &[u8]) -> Self {
+        u64::from_le_bytes(buf[..8].try_into().unwrap())
+    }
+}
+
+impl Codec for f32 {
+    const SIZE: usize = 4;
+    fn encode(&self, out: &mut [u8]) {
+        out[..4].copy_from_slice(&self.to_le_bytes());
+    }
+    fn decode(buf: &[u8]) -> Self {
+        f32::from_le_bytes(buf[..4].try_into().unwrap())
+    }
+}
+
+impl Codec for f64 {
+    const SIZE: usize = 8;
+    fn encode(&self, out: &mut [u8]) {
+        out[..8].copy_from_slice(&self.to_le_bytes());
+    }
+    fn decode(buf: &[u8]) -> Self {
+        f64::from_le_bytes(buf[..8].try_into().unwrap())
+    }
+}
+
+impl Codec for () {
+    const SIZE: usize = 0;
+    fn encode(&self, _out: &mut [u8]) {}
+    fn decode(_buf: &[u8]) -> Self {}
+}
+
+impl<A: Codec, B: Codec> Codec for (A, B) {
+    const SIZE: usize = A::SIZE + B::SIZE;
+    fn encode(&self, out: &mut [u8]) {
+        self.0.encode(&mut out[..A::SIZE]);
+        self.1.encode(&mut out[A::SIZE..]);
+    }
+    fn decode(buf: &[u8]) -> Self {
+        (A::decode(&buf[..A::SIZE]), B::decode(&buf[A::SIZE..]))
+    }
+}
+
+/// Encode one on-wire/on-disk message record: `target | payload`.
+#[inline]
+pub fn encode_msg<M: Codec>(target: u32, msg: &M, out: &mut Vec<u8>) {
+    let start = out.len();
+    out.resize(start + 4 + M::SIZE, 0);
+    out[start..start + 4].copy_from_slice(&target.to_le_bytes());
+    msg.encode(&mut out[start + 4..]);
+}
+
+/// Size of a message record for payload type `M`.
+#[inline]
+pub const fn msg_rec_size<M: Codec>() -> usize {
+    4 + M::SIZE
+}
+
+/// Decode the target id of a message record.
+#[inline]
+pub fn rec_target(rec: &[u8]) -> u32 {
+    u32::from_le_bytes(rec[..4].try_into().unwrap())
+}
+
+/// Decode the payload of a message record.
+#[inline]
+pub fn rec_payload<M: Codec>(rec: &[u8]) -> M {
+    M::decode(&rec[4..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Codec + PartialEq + std::fmt::Debug>(v: T) {
+        let mut buf = vec![0u8; T::SIZE];
+        v.encode(&mut buf);
+        assert_eq!(T::decode(&buf), v);
+    }
+
+    #[test]
+    fn scalar_roundtrips() {
+        roundtrip(42u32);
+        roundtrip(-7i32);
+        roundtrip(1u64 << 40);
+        roundtrip(3.25f32);
+        roundtrip(-2.5e300f64);
+        roundtrip(());
+        roundtrip((17u32, 2.5f32));
+    }
+
+    #[test]
+    fn msg_record_layout() {
+        let mut buf = Vec::new();
+        encode_msg(9u32, &1.5f32, &mut buf);
+        assert_eq!(buf.len(), msg_rec_size::<f32>());
+        assert_eq!(rec_target(&buf), 9);
+        assert_eq!(rec_payload::<f32>(&buf), 1.5);
+    }
+
+    #[test]
+    fn pair_layout_is_concatenation() {
+        let mut buf = vec![0u8; 8];
+        (0xAABBCCDDu32, 1.0f32).encode(&mut buf);
+        assert_eq!(u32::from_le_bytes(buf[..4].try_into().unwrap()), 0xAABBCCDD);
+        assert_eq!(f32::from_le_bytes(buf[4..].try_into().unwrap()), 1.0);
+    }
+}

@@ -1,0 +1,363 @@
+//! ID recoding (§5): preprocess a normal (sparse-ID) graph into the
+//! recoded form with dense IDs `0..|V|-1` and `hash(v) = id mod n`, so the
+//! recoded ID ↔ (machine, position) bijection enables in-memory message
+//! digesting/combining.
+//!
+//! The vertex at position `pos` of machine `i`'s state array gets new ID
+//! `n·pos + i`.  Rewriting the neighbor IDs inside every `S^E` takes the
+//! paper's 3 supersteps for a directed graph (request → respond → append)
+//! and 1 messaging round for an undirected one; all message traffic goes
+//! through the same simulated network, and reply records are sorted-spilled
+//! and merged exactly like an IMS — the whole preprocessing is itself a
+//! normal-mode GraphD job pattern with `O(|V|/n)` memory.
+
+use crate::engine::Engine;
+use crate::error::{Error, Result};
+use crate::net::{self, NetReceiver, NetSender, Payload};
+use crate::stream::{merge, StreamWriter};
+use crate::worker::storage::{item_size, EdgeStreamCursor, EdgeStreamWriter, MachineStore};
+use crate::worker::Partitioning;
+use std::path::PathBuf;
+
+const BATCH: usize = 256 * 1024;
+
+/// Batched per-destination sender used by every recoding phase.  Batches
+/// carry the phase number in the `step` field so receivers can tell a
+/// fast neighbor's phase-2 replies from their own pending phase-1 traffic.
+struct PhaseTx {
+    sender: NetSender,
+    phase: u64,
+    bufs: Vec<Vec<u8>>,
+}
+
+impl PhaseTx {
+    fn new(sender: NetSender, phase: u64) -> Self {
+        let n = sender.peers();
+        Self {
+            sender,
+            phase,
+            bufs: vec![Vec::new(); n],
+        }
+    }
+
+    fn push(&mut self, dst: usize, rec: &[u8]) {
+        let buf = &mut self.bufs[dst];
+        buf.extend_from_slice(rec);
+        if buf.len() >= BATCH {
+            let b = std::mem::take(buf);
+            self.sender.send(dst, self.phase, Payload::Load(b));
+        }
+    }
+
+    fn finish(mut self) {
+        for dst in 0..self.bufs.len() {
+            if !self.bufs[dst].is_empty() {
+                let b = std::mem::take(&mut self.bufs[dst]);
+                self.sender.send(dst, self.phase, Payload::Load(b));
+            }
+            self.sender.send(dst, self.phase, Payload::LoadEnd);
+        }
+    }
+}
+
+/// Phase-aware receiver: machines drift (one can finish phase p and start
+/// sending phase p+1 while a neighbor is still collecting phase-p end
+/// tags), so out-of-phase batches are stashed, never dropped.
+struct PhaseRx<'a> {
+    receiver: &'a NetReceiver,
+    stash: std::collections::VecDeque<crate::net::Batch>,
+}
+
+impl<'a> PhaseRx<'a> {
+    fn new(receiver: &'a NetReceiver) -> Self {
+        Self {
+            receiver,
+            stash: Default::default(),
+        }
+    }
+
+    /// Receive phase `phase` until `n` end tags, handing batches to `f`.
+    fn drain_phase(
+        &mut self,
+        phase: u64,
+        n: usize,
+        mut f: impl FnMut(Vec<u8>) -> Result<()>,
+    ) -> Result<()> {
+        let mut ends = 0;
+        while ends < n {
+            let b = match self.stash.iter().position(|b| b.step == phase) {
+                Some(i) => self.stash.remove(i).unwrap(),
+                None => {
+                    let b = self.receiver.recv();
+                    if b.step != phase {
+                        debug_assert!(b.step > phase, "batch from completed phase");
+                        self.stash.push_back(b);
+                        continue;
+                    }
+                    b
+                }
+            };
+            match b.payload {
+                Payload::LoadEnd => ends += 1,
+                Payload::Load(data) => f(data)?,
+                _ => return Err(Error::CorruptStream("unexpected payload in recode".into())),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// New-ID lookup: old IDs are sorted per machine, so `binary_search` gives
+/// the position, hence the new ID `n·pos + i`.
+#[inline]
+fn new_id_of(ids: &[u32], old: u32, machine: usize, n: usize) -> Result<u32> {
+    match ids.binary_search(&old) {
+        Ok(pos) => Ok((pos * n + machine) as u32),
+        Err(_) => Err(Error::CorruptStream(format!(
+            "edge endpoint {old} is not a vertex (machine {machine})"
+        ))),
+    }
+}
+
+/// Run ID recoding over basic stores, producing recoded stores under
+/// `<workdir>/m<i>/rec/`.  Directed graphs use the 3-superstep protocol;
+/// undirected ones the 1-round shortcut (§5 Preprocessing).
+pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<Vec<MachineStore>> {
+    let n = eng.profile.machines;
+    let weighted = stores[0].weighted;
+    let part = Partitioning::Hashed;
+    // request/reply record sizes
+    let req_size = if weighted { 12 } else { 8 }; // u_old, v_old [, w]
+    let rep_size = if weighted { 12 } else { 8 }; // key, payload [, w]
+
+    let endpoints = net::build(n, eng.profile.net_bytes_per_sec, eng.profile.latency_us);
+    let mut results: Vec<Option<Result<MachineStore>>> = (0..n).map(|_| None).collect();
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (i, (sender, receiver)) in endpoints.into_iter().enumerate() {
+            let store = stores[i].clone();
+            let rec_dir = eng.store_dir(i, "rec");
+            let stream_buf = eng.cfg.stream_buf;
+            let merge_k = eng.cfg.merge_k;
+            let disk = eng
+                .profile
+                .disk_bytes_per_sec
+                .map(crate::util::diskio::DiskBw::new);
+            handles.push(scope.spawn(move || -> Result<MachineStore> {
+                let _dg = crate::util::diskio::register(disk.clone());
+                let mut rx = PhaseRx::new(&receiver);
+                let _ = std::fs::remove_dir_all(&rec_dir);
+                std::fs::create_dir_all(&rec_dir)?;
+
+                let reply_spills: Vec<PathBuf>;
+                if directed {
+                    // ---- Superstep 1: each v asks owner(u) for new id(u),
+                    // for every out-neighbor u.
+                    let req_file = rec_dir.join("requests");
+                    {
+                        let parser = {
+                            let store = store.clone();
+                            let mut tx = PhaseTx::new(sender.clone(), 1);
+                            std::thread::spawn(move || -> Result<()> {
+                                let mut se = EdgeStreamCursor::open(&store, stream_buf)?;
+                                let mut edges = Vec::new();
+                                for pos in 0..store.local_vertices() {
+                                    let v_old = store.ids[pos];
+                                    se.read_adjacency(store.degs[pos], &mut edges)?;
+                                    for e in &edges {
+                                        let mut rec = [0u8; 12];
+                                        rec[..4].copy_from_slice(&e.nbr.to_le_bytes());
+                                        rec[4..8].copy_from_slice(&v_old.to_le_bytes());
+                                        if weighted {
+                                            rec[8..12].copy_from_slice(&e.weight.to_le_bytes());
+                                        }
+                                        tx.push(part.machine_of(e.nbr, n), &rec[..req_size]);
+                                    }
+                                }
+                                tx.finish();
+                                Ok(())
+                            })
+                        };
+                        let mut w = StreamWriter::create(&req_file, stream_buf)?;
+                        rx.drain_phase(1, n, |data| w.write_all(&data))?;
+                        w.finish()?;
+                        parser.join().map_err(|e| Error::WorkerPanic {
+                            machine: i,
+                            cause: format!("{e:?}"),
+                        })??;
+                    }
+
+                    // ---- Superstep 2: u replies (v_old, new_id(u)) to
+                    // owner(v_old); replies are sorted-spilled by target pos.
+                    let spills = {
+                        let responder = {
+                            let store = store.clone();
+                            let mut tx = PhaseTx::new(sender.clone(), 2);
+                            let req_file = req_file.clone();
+                            std::thread::spawn(move || -> Result<()> {
+                                let mut r =
+                                    crate::stream::StreamReader::open(&req_file, stream_buf)?;
+                                let mut rec = vec![0u8; req_size];
+                                while r.remaining() >= req_size as u64 {
+                                    r.read_exact(&mut rec)?;
+                                    let u_old =
+                                        u32::from_le_bytes(rec[..4].try_into().unwrap());
+                                    let v_old =
+                                        u32::from_le_bytes(rec[4..8].try_into().unwrap());
+                                    let u_new = new_id_of(&store.ids, u_old, i, n)?;
+                                    let mut rep = [0u8; 12];
+                                    rep[..4].copy_from_slice(&v_old.to_le_bytes());
+                                    rep[4..8].copy_from_slice(&u_new.to_le_bytes());
+                                    if weighted {
+                                        rep[8..12].copy_from_slice(&rec[8..12]);
+                                    }
+                                    tx.push(part.machine_of(v_old, n), &rep[..rep_size]);
+                                }
+                                tx.finish();
+                                Ok(())
+                            })
+                        };
+                        let spills =
+                            receive_sorted_replies(&mut rx, n, &store, rep_size, &rec_dir)?;
+                        responder.join().map_err(|e| Error::WorkerPanic {
+                            machine: i,
+                            cause: format!("{e:?}"),
+                        })??;
+                        let _ = std::fs::remove_file(&req_file);
+                        spills
+                    };
+                    reply_spills = spills;
+                } else {
+                    // ---- Undirected 1-round: v sends new_id(v) to each
+                    // neighbor u (owner(u) records it under u's position).
+                    let spills = {
+                        let announcer = {
+                            let store = store.clone();
+                            let mut tx = PhaseTx::new(sender.clone(), 2);
+                            std::thread::spawn(move || -> Result<()> {
+                                let mut se = EdgeStreamCursor::open(&store, stream_buf)?;
+                                let mut edges = Vec::new();
+                                for pos in 0..store.local_vertices() {
+                                    let v_new = (pos * n + i) as u32;
+                                    se.read_adjacency(store.degs[pos], &mut edges)?;
+                                    for e in &edges {
+                                        let mut rec = [0u8; 12];
+                                        rec[..4].copy_from_slice(&e.nbr.to_le_bytes());
+                                        rec[4..8].copy_from_slice(&v_new.to_le_bytes());
+                                        if weighted {
+                                            rec[8..12].copy_from_slice(&e.weight.to_le_bytes());
+                                        }
+                                        tx.push(part.machine_of(e.nbr, n), &rec[..rep_size]);
+                                    }
+                                }
+                                tx.finish();
+                                Ok(())
+                            })
+                        };
+                        let spills =
+                            receive_sorted_replies(&mut rx, n, &store, rep_size, &rec_dir)?;
+                        announcer.join().map_err(|e| Error::WorkerPanic {
+                            machine: i,
+                            cause: format!("{e:?}"),
+                        })??;
+                        spills
+                    };
+                    reply_spills = spills;
+                }
+
+                // ---- Superstep 3 / final: merge reply spills by position
+                // and append the recoded adjacency lists to S^E_rec.
+                let mut se = EdgeStreamWriter::create(&rec_dir, weighted, stream_buf)?;
+                let mut counts = vec![0u32; store.local_vertices()];
+                merge::merge_streams(
+                    &reply_spills,
+                    rep_size,
+                    merge_k,
+                    stream_buf,
+                    &rec_dir,
+                    |rec| {
+                        let pos = u32::from_le_bytes(rec[..4].try_into().unwrap()) as usize;
+                        let u_new = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+                        let w = if weighted {
+                            f32::from_le_bytes(rec[8..12].try_into().unwrap())
+                        } else {
+                            1.0
+                        };
+                        counts[pos] += 1;
+                        se.push(u_new, w)
+                    },
+                )?;
+                se.finish()?;
+                for sp in &reply_spills {
+                    let _ = std::fs::remove_file(sp);
+                }
+                if counts != store.degs {
+                    return Err(Error::CorruptStream(format!(
+                        "recode degree mismatch on machine {i}"
+                    )));
+                }
+
+                let rec_store = MachineStore {
+                    dir: rec_dir,
+                    machine: i,
+                    num_machines: n,
+                    total_vertices: store.total_vertices,
+                    weighted,
+                    recoded: true,
+                    ids: store.ids.clone(), // old IDs kept for reporting
+                    degs: store.degs.clone(),
+                };
+                rec_store.save()?;
+                Ok(rec_store)
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            results[i] = Some(h.join().unwrap_or_else(|e| {
+                Err(Error::WorkerPanic {
+                    machine: i,
+                    cause: format!("{e:?}"),
+                })
+            }));
+        }
+    });
+
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Receive reply records, translate the old target ID into the local array
+/// position, sort each batch by position and spill — the IMS pattern.
+fn receive_sorted_replies(
+    rx: &mut PhaseRx<'_>,
+    n: usize,
+    store: &MachineStore,
+    rep_size: usize,
+    dir: &PathBuf,
+) -> Result<Vec<PathBuf>> {
+    let mut spills = Vec::new();
+    rx.drain_phase(2, n, |data| {
+        let mut out = Vec::with_capacity(data.len());
+        for rec in data.chunks_exact(rep_size) {
+            let v_old = u32::from_le_bytes(rec[..4].try_into().unwrap());
+            let pos = store
+                .ids
+                .binary_search(&v_old)
+                .map_err(|_| Error::CorruptStream(format!("reply for foreign vertex {v_old}")))?
+                as u32;
+            out.extend_from_slice(&pos.to_le_bytes());
+            out.extend_from_slice(&rec[4..]);
+        }
+        merge::sort_records(&mut out, rep_size);
+        let sp = dir.join(format!("reply_spill_{}", spills.len()));
+        std::fs::write(&sp, &out)?;
+        spills.push(sp);
+        Ok(())
+    })?;
+    Ok(spills)
+}
+
+/// Edge-stream byte length sanity helper used in tests.
+pub fn se_len_items(store: &MachineStore) -> Result<u64> {
+    let md = std::fs::metadata(store.se_path())?;
+    Ok(md.len() / item_size(store.weighted) as u64)
+}

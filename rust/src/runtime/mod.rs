@@ -1,0 +1,275 @@
+//! Runtime bridge: load AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the PJRT CPU client via the
+//! `xla` crate (see /opt/xla-example/load_hlo for the reference wiring).
+//!
+//! The recoded-mode hot path calls [`KernelSet`] for block vertex updates
+//! (PageRank, min-relax).  Every kernel also has a scalar Rust fallback
+//! with bit-identical semantics — used when artifacts are absent, by the
+//! `use_xla=false` ablation, and as a correctness oracle in tests.
+//!
+//! Artifacts operate on fixed [`BLOCK`]-sized arrays; inputs are padded and
+//! outputs truncated here, so callers never see the block size.
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Block size baked into the AOT artifacts (mirrors python `kernels.BLOCK`).
+pub const BLOCK: usize = 65536;
+
+/// One compiled HLO artifact.
+pub struct HloExecutable {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl HloExecutable {
+    /// Load `path` (HLO text emitted by jax lowering) and compile it on a
+    /// CPU PJRT client.
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Self { client, exe })
+    }
+
+    /// Execute with literal inputs; artifacts are lowered with
+    /// `return_tuple=True`, so the result is always a tuple literal.
+    pub fn run(&self, args: &[xla::Literal]) -> anyhow::Result<xla::Literal> {
+        let out = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(out)
+    }
+}
+
+fn xla_err(e: anyhow::Error) -> Error {
+    Error::Xla(format!("{e:#}"))
+}
+
+/// The loaded kernel set used by the engine's block updates.
+pub struct KernelSet {
+    pagerank: Option<HloExecutable>,
+    minrelax_f32: Option<HloExecutable>,
+    minrelax_i32: Option<HloExecutable>,
+    /// Force the scalar fallback even when artifacts are loaded.
+    pub force_native: bool,
+}
+
+impl KernelSet {
+    /// Load all artifacts from `dir`.  Missing files are tolerated (the
+    /// corresponding kernel falls back to scalar Rust); a present-but-
+    /// corrupt artifact is an error.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let load_one = |name: &str| -> Result<Option<HloExecutable>> {
+            let p: PathBuf = dir.join(format!("{name}.hlo.txt"));
+            if !p.exists() {
+                return Ok(None);
+            }
+            HloExecutable::load(p.to_str().unwrap())
+                .map(Some)
+                .map_err(xla_err)
+        };
+        Ok(Self {
+            pagerank: load_one("pagerank_update")?,
+            minrelax_f32: load_one("minrelax_f32")?,
+            minrelax_i32: load_one("minrelax_i32")?,
+            force_native: false,
+        })
+    }
+
+    /// A kernel set with no artifacts: everything runs on the scalar path.
+    pub fn native_only() -> Self {
+        Self {
+            pagerank: None,
+            minrelax_f32: None,
+            minrelax_i32: None,
+            force_native: true,
+        }
+    }
+
+    /// Default artifacts directory (repo `artifacts/`, or `$GRAPHD_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GRAPHD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+
+    pub fn has_xla(&self) -> bool {
+        !self.force_native
+            && (self.pagerank.is_some()
+                || self.minrelax_f32.is_some()
+                || self.minrelax_i32.is_some())
+    }
+
+    /// PageRank block update over `sums`/`deg` (combined message sums and
+    /// out-degrees): returns `(val, msg)` per vertex.
+    pub fn pagerank_update(
+        &self,
+        sums: &[f32],
+        deg: &[f32],
+        inv_n: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        debug_assert_eq!(sums.len(), deg.len());
+        match (&self.pagerank, self.force_native) {
+            (Some(exe), false) => {
+                let n = sums.len();
+                let mut val = Vec::with_capacity(n);
+                let mut msg = Vec::with_capacity(n);
+                let mut sums_blk = vec![0f32; BLOCK];
+                let mut deg_blk = vec![0f32; BLOCK];
+                for start in (0..n).step_by(BLOCK) {
+                    let len = (n - start).min(BLOCK);
+                    sums_blk[..len].copy_from_slice(&sums[start..start + len]);
+                    sums_blk[len..].fill(0.0);
+                    deg_blk[..len].copy_from_slice(&deg[start..start + len]);
+                    deg_blk[len..].fill(0.0);
+                    let args = [
+                        xla::Literal::vec1(&sums_blk),
+                        xla::Literal::vec1(&deg_blk),
+                        xla::Literal::vec1(&[inv_n]),
+                    ];
+                    let out = exe.run(&args).map_err(xla_err)?;
+                    let parts = out.to_tuple().map_err(|e| xla_err(e.into()))?;
+                    let v = parts[0].to_vec::<f32>().map_err(|e| xla_err(e.into()))?;
+                    let m = parts[1].to_vec::<f32>().map_err(|e| xla_err(e.into()))?;
+                    val.extend_from_slice(&v[..len]);
+                    msg.extend_from_slice(&m[..len]);
+                }
+                Ok((val, msg))
+            }
+            _ => {
+                // Scalar fallback: the exact formulas of kernels/pagerank.py.
+                let mut val = Vec::with_capacity(sums.len());
+                let mut msg = Vec::with_capacity(sums.len());
+                for i in 0..sums.len() {
+                    let v = 0.15 * inv_n + 0.85 * sums[i];
+                    val.push(v);
+                    msg.push(if deg[i] > 0.0 { v / deg[i].max(1.0) } else { 0.0 });
+                }
+                Ok((val, msg))
+            }
+        }
+    }
+
+    /// f32 min-relax block update: `(new, changed)` per vertex.
+    pub fn minrelax_f32(&self, cur: &[f32], msg: &[f32]) -> Result<(Vec<f32>, Vec<i32>)> {
+        debug_assert_eq!(cur.len(), msg.len());
+        match (&self.minrelax_f32, self.force_native) {
+            (Some(exe), false) => run_minrelax_blocks(exe, cur, msg, f32::INFINITY),
+            _ => Ok(native_minrelax(cur, msg)),
+        }
+    }
+
+    /// i32 min-relax block update: `(new, changed)` per vertex.
+    pub fn minrelax_i32(&self, cur: &[i32], msg: &[i32]) -> Result<(Vec<i32>, Vec<i32>)> {
+        debug_assert_eq!(cur.len(), msg.len());
+        match (&self.minrelax_i32, self.force_native) {
+            (Some(exe), false) => run_minrelax_blocks(exe, cur, msg, i32::MAX),
+            _ => Ok(native_minrelax(cur, msg)),
+        }
+    }
+}
+
+fn native_minrelax<T: PartialOrd + Copy>(cur: &[T], msg: &[T]) -> (Vec<T>, Vec<i32>) {
+    let mut new = Vec::with_capacity(cur.len());
+    let mut chg = Vec::with_capacity(cur.len());
+    for i in 0..cur.len() {
+        let n = if msg[i] < cur[i] { msg[i] } else { cur[i] };
+        chg.push((msg[i] < cur[i]) as i32);
+        new.push(n);
+    }
+    (new, chg)
+}
+
+/// Pad/execute/truncate a minrelax artifact over arbitrary lengths.
+fn run_minrelax_blocks<T>(
+    exe: &HloExecutable,
+    cur: &[T],
+    msg: &[T],
+    pad: T,
+) -> Result<(Vec<T>, Vec<i32>)>
+where
+    T: xla::NativeType + xla::ArrayElement + Copy,
+{
+    let n = cur.len();
+    let mut new = Vec::with_capacity(n);
+    let mut chg = Vec::with_capacity(n);
+    let mut cur_blk = vec![pad; BLOCK];
+    let mut msg_blk = vec![pad; BLOCK];
+    for start in (0..n).step_by(BLOCK) {
+        let len = (n - start).min(BLOCK);
+        cur_blk[..len].copy_from_slice(&cur[start..start + len]);
+        cur_blk[len..].fill(pad);
+        msg_blk[..len].copy_from_slice(&msg[start..start + len]);
+        msg_blk[len..].fill(pad);
+        let args = [xla::Literal::vec1(&cur_blk), xla::Literal::vec1(&msg_blk)];
+        let out = exe.run(&args).map_err(xla_err)?;
+        let parts = out.to_tuple().map_err(|e| xla_err(e.into()))?;
+        let nv = parts[0].to_vec::<T>().map_err(|e| xla_err(e.into()))?;
+        let cv = parts[1].to_vec::<i32>().map_err(|e| xla_err(e.into()))?;
+        new.extend_from_slice(&nv[..len]);
+        chg.extend_from_slice(&cv[..len]);
+    }
+    Ok((new, chg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_pagerank_formula() {
+        let ks = KernelSet::native_only();
+        let (val, msg) = ks
+            .pagerank_update(&[0.0, 1.0, 0.5], &[2.0, 0.0, 5.0], 0.01)
+            .unwrap();
+        assert!((val[0] - 0.0015).abs() < 1e-7);
+        assert!((val[1] - 0.8515).abs() < 1e-7);
+        assert_eq!(msg[1], 0.0); // sink
+        assert!((msg[2] - val[2] / 5.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn native_minrelax_semantics() {
+        let ks = KernelSet::native_only();
+        let (new, chg) = ks
+            .minrelax_f32(&[3.0, 1.0, f32::INFINITY], &[2.0, f32::INFINITY, 7.0])
+            .unwrap();
+        assert_eq!(new, vec![2.0, 1.0, 7.0]);
+        assert_eq!(chg, vec![1, 0, 1]);
+        let (ni, ci) = ks.minrelax_i32(&[5, 5], &[i32::MAX, 4]).unwrap();
+        assert_eq!(ni, vec![5, 4]);
+        assert_eq!(ci, vec![0, 1]);
+    }
+
+    #[test]
+    fn xla_matches_native_when_artifacts_present() {
+        let dir = KernelSet::default_dir();
+        if !dir.join("pagerank_update.hlo.txt").exists() {
+            eprintln!("no artifacts; skipping parity test");
+            return;
+        }
+        let xla_ks = KernelSet::load(&dir).unwrap();
+        let nat = KernelSet::native_only();
+        // Non-multiple-of-BLOCK length exercises padding.
+        let n = BLOCK + 777;
+        let sums: Vec<f32> = (0..n).map(|i| (i % 89) as f32 / 89.0).collect();
+        let deg: Vec<f32> = (0..n).map(|i| (i % 6) as f32).collect();
+        let (v1, m1) = xla_ks.pagerank_update(&sums, &deg, 1e-5).unwrap();
+        let (v2, m2) = nat.pagerank_update(&sums, &deg, 1e-5).unwrap();
+        for i in 0..n {
+            assert!((v1[i] - v2[i]).abs() < 1e-6, "val[{i}]");
+            assert!((m1[i] - m2[i]).abs() < 1e-6, "msg[{i}]");
+        }
+
+        let cur: Vec<f32> = (0..n).map(|i| (i % 103) as f32).collect();
+        let msg: Vec<f32> = (0..n)
+            .map(|i| if i % 3 == 0 { f32::INFINITY } else { (i % 47) as f32 })
+            .collect();
+        let a = xla_ks.minrelax_f32(&cur, &msg).unwrap();
+        let b = nat.minrelax_f32(&cur, &msg).unwrap();
+        assert_eq!(a, b);
+    }
+}

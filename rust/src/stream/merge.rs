@@ -1,0 +1,387 @@
+//! k-way external merge-sort over fixed-size records (§3.3.1–3.3.2).
+//!
+//! Records are fixed-size byte strings whose first 4 bytes are the
+//! little-endian destination vertex ID (the sort key).  Each input file is
+//! already sorted (the receiver sorts every ≤ℬ batch in memory before
+//! spilling); this module merges them with a k-way heap using one 64 KB
+//! buffer per way — (k+1)·b memory, as in the paper.  With k = 1000 a
+//! single pass suffices for any realistic stream; more inputs trigger
+//! multi-pass merging.
+//!
+//! `merge_combine` additionally folds equal-key runs through a combiner —
+//! this is exactly the paper's "merge-sort then combine each group into one
+//! message" pre-send step of IO-Basic.
+
+use crate::error::Result;
+use crate::stream::{reader::StreamReader, writer::StreamWriter};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::path::{Path, PathBuf};
+
+/// Sort a flat buffer of `rec_size`-byte records in place by leading-u32 key.
+///
+/// Hot path: 8-byte records (u32 target + 4-byte payload, the common
+/// message layout) are reinterpreted as `u64`s whose *low* 32 bits are the
+/// LE key, so a plain `sort_unstable` on masked u64s replaces the
+/// index-permutation gather (≈3× faster; EXPERIMENTS.md §Perf).
+pub fn sort_records(buf: &mut [u8], rec_size: usize) {
+    debug_assert_eq!(buf.len() % rec_size, 0);
+    let n = buf.len() / rec_size;
+    if n <= 1 {
+        return;
+    }
+    if rec_size == 8 {
+        // Copy into aligned u64s (buf may be unaligned), sort by the key
+        // half, copy back. LE layout puts the key in the low 32 bits.
+        let mut words: Vec<u64> = buf
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        words.sort_unstable_by_key(|&w| w as u32);
+        for (c, w) in buf.chunks_exact_mut(8).zip(words) {
+            c.copy_from_slice(&w.to_le_bytes());
+        }
+        return;
+    }
+    // Generic path: sort an index permutation, then gather.
+    let key =
+        |i: usize| u32::from_le_bytes(buf[i * rec_size..i * rec_size + 4].try_into().unwrap());
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.sort_by_key(|&i| key(i as usize));
+    let mut out = vec![0u8; buf.len()];
+    for (j, &i) in idx.iter().enumerate() {
+        let i = i as usize;
+        out[j * rec_size..(j + 1) * rec_size]
+            .copy_from_slice(&buf[i * rec_size..(i + 1) * rec_size]);
+    }
+    buf.copy_from_slice(&out);
+}
+
+#[inline]
+fn rec_key(rec: &[u8]) -> u32 {
+    u32::from_le_bytes(rec[..4].try_into().unwrap())
+}
+
+struct Way {
+    reader: StreamReader,
+    rec: Vec<u8>,
+    src: usize,
+}
+
+struct HeapEntry {
+    key: u32,
+    src: usize,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.key == o.key && self.src == o.src
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // Min-heap via reversed compare; tie-break on src for stability.
+        (o.key, o.src).cmp(&(self.key, self.src))
+    }
+}
+
+/// Stream records of all (sorted) `inputs` in global key order into `emit`.
+/// Uses at most `k` ways per pass; extra inputs are merged in multiple
+/// passes through temporary files in `tmp_dir`.
+pub fn merge_streams(
+    inputs: &[PathBuf],
+    rec_size: usize,
+    k: usize,
+    buf_size: usize,
+    tmp_dir: &Path,
+    mut emit: impl FnMut(&[u8]) -> Result<()>,
+) -> Result<()> {
+    let inputs = multi_pass_reduce(inputs, rec_size, k, buf_size, tmp_dir)?;
+    merge_once(&inputs.paths(), rec_size, buf_size, |rec| emit(rec))
+}
+
+/// Merge + combine equal-key runs: `combine(acc_payload, payload)` folds the
+/// payloads (bytes after the 4-byte key) of records sharing a key, and
+/// `emit` receives one combined record per distinct key.
+pub fn merge_combine(
+    inputs: &[PathBuf],
+    rec_size: usize,
+    k: usize,
+    buf_size: usize,
+    tmp_dir: &Path,
+    mut combine: impl FnMut(&mut [u8], &[u8]),
+    mut emit: impl FnMut(&[u8]) -> Result<()>,
+) -> Result<()> {
+    let inputs = multi_pass_reduce(inputs, rec_size, k, buf_size, tmp_dir)?;
+    let mut acc: Vec<u8> = Vec::new();
+    merge_once(&inputs.paths(), rec_size, buf_size, |rec| {
+        if acc.is_empty() {
+            acc.extend_from_slice(rec);
+        } else if rec_key(&acc) == rec_key(rec) {
+            let (head, payload) = acc.split_at_mut(4);
+            let _ = head;
+            combine(payload, &rec[4..]);
+        } else {
+            emit(&acc)?;
+            acc.clear();
+            acc.extend_from_slice(rec);
+        }
+        Ok(())
+    })?;
+    if !acc.is_empty() {
+        emit(&acc)?;
+    }
+    Ok(())
+}
+
+/// Holds reduced input paths plus ownership of temporaries for cleanup.
+struct Reduced {
+    paths: Vec<PathBuf>,
+    temps: Vec<PathBuf>,
+}
+
+impl Reduced {
+    fn paths(&self) -> Vec<PathBuf> {
+        self.paths.clone()
+    }
+}
+
+impl Drop for Reduced {
+    fn drop(&mut self) {
+        for t in &self.temps {
+            let _ = std::fs::remove_file(t);
+        }
+    }
+}
+
+/// Reduce `inputs` to ≤ k sorted files via intermediate merge passes.
+fn multi_pass_reduce(
+    inputs: &[PathBuf],
+    rec_size: usize,
+    k: usize,
+    buf_size: usize,
+    tmp_dir: &Path,
+) -> Result<Reduced> {
+    let k = k.max(2);
+    let mut cur: Vec<PathBuf> = inputs.to_vec();
+    let mut temps: Vec<PathBuf> = Vec::new();
+    let mut pass = 0;
+    while cur.len() > k {
+        std::fs::create_dir_all(tmp_dir)?;
+        let mut next: Vec<PathBuf> = Vec::new();
+        for (gi, group) in cur.chunks(k).enumerate() {
+            let out = tmp_dir.join(format!("merge_p{pass}_{gi}"));
+            let mut w = StreamWriter::create(&out, buf_size)?;
+            merge_once(group, rec_size, buf_size, |rec| w.write_all(rec))?;
+            w.finish()?;
+            next.push(out.clone());
+            temps.push(out);
+        }
+        cur = next;
+        pass += 1;
+    }
+    Ok(Reduced { paths: cur, temps })
+}
+
+fn merge_once(
+    inputs: &[PathBuf],
+    rec_size: usize,
+    buf_size: usize,
+    mut emit: impl FnMut(&[u8]) -> Result<()>,
+) -> Result<()> {
+    let mut ways: Vec<Way> = Vec::with_capacity(inputs.len());
+    let mut heap = BinaryHeap::new();
+    for (src, p) in inputs.iter().enumerate() {
+        let mut reader = StreamReader::open(p, buf_size)?;
+        if reader.remaining() == 0 {
+            continue;
+        }
+        let mut rec = vec![0u8; rec_size];
+        reader.read_exact(&mut rec)?;
+        heap.push(HeapEntry {
+            key: rec_key(&rec),
+            src,
+        });
+        ways.push(Way { reader, rec, src });
+        // keep ways indexable by src: fix up ordering below
+    }
+    // Map src -> way index.
+    let mut way_of = vec![usize::MAX; inputs.len()];
+    for (wi, w) in ways.iter().enumerate() {
+        way_of[w.src] = wi;
+    }
+    while let Some(HeapEntry { src, .. }) = heap.pop() {
+        let wi = way_of[src];
+        emit(&ways[wi].rec)?;
+        let w = &mut ways[wi];
+        if w.reader.remaining() >= rec_size as u64 {
+            w.reader.read_exact(&mut w.rec)?;
+            heap.push(HeapEntry {
+                key: rec_key(&w.rec),
+                src,
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpd(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "graphd_merge_{name}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_sorted(dir: &Path, name: &str, recs: &mut Vec<(u32, f32)>) -> PathBuf {
+        recs.sort_by_key(|r| r.0);
+        let p = dir.join(name);
+        let mut w = StreamWriter::create(&p, 4096).unwrap();
+        for (k, v) in recs.iter() {
+            w.write_all(&k.to_le_bytes()).unwrap();
+            w.write_all(&v.to_le_bytes()).unwrap();
+        }
+        w.finish().unwrap();
+        p
+    }
+
+    #[test]
+    fn sort_records_orders_by_key() {
+        let mut buf = Vec::new();
+        for k in [5u32, 1, 9, 1, 3] {
+            buf.extend_from_slice(&k.to_le_bytes());
+            buf.extend_from_slice(&(k as f32).to_le_bytes());
+        }
+        sort_records(&mut buf, 8);
+        let keys: Vec<u32> = buf
+            .chunks(8)
+            .map(|c| u32::from_le_bytes(c[..4].try_into().unwrap()))
+            .collect();
+        assert_eq!(keys, vec![1, 1, 3, 5, 9]);
+    }
+
+    #[test]
+    fn merge_two_files_in_order() {
+        let d = tmpd("two");
+        let a = write_sorted(&d, "a", &mut vec![(1, 1.0), (3, 3.0), (5, 5.0)]);
+        let b = write_sorted(&d, "b", &mut vec![(2, 2.0), (3, 30.0), (6, 6.0)]);
+        let mut keys = Vec::new();
+        merge_streams(&[a, b], 8, 1000, 4096, &d, |rec| {
+            keys.push(rec_key(rec));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(keys, vec![1, 2, 3, 3, 5, 6]);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn merge_combine_sums_groups() {
+        let d = tmpd("comb");
+        let a = write_sorted(&d, "a", &mut vec![(1, 1.0), (3, 3.0), (3, 4.0)]);
+        let b = write_sorted(&d, "b", &mut vec![(3, 30.0), (7, 7.0)]);
+        let mut out: Vec<(u32, f32)> = Vec::new();
+        merge_combine(
+            &[a, b],
+            8,
+            1000,
+            4096,
+            &d,
+            |acc, pay| {
+                let a = f32::from_le_bytes(acc[..4].try_into().unwrap());
+                let b = f32::from_le_bytes(pay[..4].try_into().unwrap());
+                acc[..4].copy_from_slice(&(a + b).to_le_bytes());
+            },
+            |rec| {
+                out.push((
+                    rec_key(rec),
+                    f32::from_le_bytes(rec[4..8].try_into().unwrap()),
+                ));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(out, vec![(1, 1.0), (3, 37.0), (7, 7.0)]);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn multi_pass_merge_small_k() {
+        let d = tmpd("multipass");
+        let mut rng = Rng::new(11);
+        let mut all: Vec<u32> = Vec::new();
+        let mut files = Vec::new();
+        for fi in 0..9 {
+            let mut recs: Vec<(u32, f32)> = (0..50)
+                .map(|_| (rng.below(10_000) as u32, 1.0f32))
+                .collect();
+            all.extend(recs.iter().map(|r| r.0));
+            files.push(write_sorted(&d, &format!("f{fi}"), &mut recs));
+        }
+        all.sort_unstable();
+        let mut got = Vec::new();
+        // k = 3 forces ceil(log3 9) = 2 reduce passes
+        merge_streams(&files, 8, 3, 4096, &d, |rec| {
+            got.push(rec_key(rec));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, all);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn merge_handles_empty_inputs() {
+        let d = tmpd("empty");
+        let a = write_sorted(&d, "a", &mut vec![]);
+        let b = write_sorted(&d, "b", &mut vec![(2, 2.0)]);
+        let mut got = Vec::new();
+        merge_streams(&[a, b], 8, 1000, 4096, &d, |rec| {
+            got.push(rec_key(rec));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, vec![2]);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn property_merge_equals_global_sort() {
+        crate::util::proptest_lite::run(25, |g| {
+            let d = tmpd(&format!("prop{}", g.case));
+            let nfiles = g.usize_in(1, 8);
+            let mut all: Vec<u32> = Vec::new();
+            let mut files = Vec::new();
+            for fi in 0..nfiles {
+                let n = g.usize_in(0, 200);
+                let mut recs: Vec<(u32, f32)> =
+                    (0..n).map(|_| (g.u32_below(500), 0.0f32)).collect();
+                all.extend(recs.iter().map(|r| r.0));
+                files.push(write_sorted(&d, &format!("f{fi}"), &mut recs));
+            }
+            all.sort_unstable();
+            let mut got = Vec::new();
+            merge_streams(&files, 8, 4, 256, &d, |rec| {
+                got.push(rec_key(rec));
+                Ok(())
+            })
+            .unwrap();
+            let _ = std::fs::remove_dir_all(&d);
+            crate::prop_assert!(g, got == all, "merge mismatch: {} vs {}", got.len(), all.len());
+        });
+    }
+}

@@ -1,0 +1,30 @@
+//! Disk-stream substrate (§3 of the paper).
+//!
+//! * [`reader::StreamReader`] — buffered sequential reads with the paper's
+//!   `skip(num_items)` (§3.2): skipping within the 64 KB buffer costs
+//!   nothing; a longer skip costs exactly one random read.  This is what
+//!   makes sparse computation workloads cheap.
+//! * [`writer::StreamWriter`] — buffered sequential appends.
+//! * [`splittable::SplittableStream`] — an OMS (§3.3.1): a long stream
+//!   broken into ≤ℬ-byte files so the sender can ship fully-written files
+//!   from the head while computation appends at the tail.
+//! * [`merge`] — k-way external merge-sort (k = 1000) used to combine OMS
+//!   files before sending and to build the sorted IMS (§3.3.1–3.3.2).
+
+pub mod merge;
+pub mod reader;
+pub mod splittable;
+pub mod writer;
+
+pub use reader::StreamReader;
+pub use splittable::SplittableStream;
+pub use writer::StreamWriter;
+
+/// Paper default in-memory stream buffer `b` = 64 KB.
+pub const DEFAULT_BUF: usize = 64 * 1024;
+
+/// Paper default OMS file cap `ℬ` = 8 MB.
+pub const DEFAULT_FILE_CAP: usize = 8 * 1024 * 1024;
+
+/// Paper default merge-sort fan-in `k` = 1000.
+pub const DEFAULT_MERGE_K: usize = 1000;

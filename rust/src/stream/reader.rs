@@ -1,0 +1,248 @@
+//! Buffered stream reader with the paper's `skip()` (§3.2).
+//!
+//! A stream is read through an in-memory buffer `B` of `b` bytes; each
+//! refill is one random disk read whose cost is amortized over `b` bytes,
+//! so reads are effectively sequential.  `skip(k)` advances the read
+//! position; if the target stays inside `B` no I/O happens, otherwise one
+//! `seek` + refill is issued.  Worst case total cost == streaming the whole
+//! file once; sparse workloads skip most of it with few random reads.
+
+use crate::error::{Error, Result};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+/// Sequential reader with buffer-aware skipping and I/O accounting.
+pub struct StreamReader {
+    file: File,
+    buf: Vec<u8>,
+    /// Valid bytes in `buf`.
+    filled: usize,
+    /// Next unread offset within `buf`.
+    pos: usize,
+    /// Stream offset of `buf[0]`.
+    base: u64,
+    len: u64,
+    // --- I/O accounting (drives the metrics tables) ---
+    refills: u64,
+    seeks: u64,
+    bytes_read: u64,
+}
+
+impl StreamReader {
+    pub fn open(path: &Path, buf_size: usize) -> Result<Self> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        Ok(Self {
+            file,
+            buf: vec![0; buf_size.max(16)],
+            filled: 0,
+            pos: 0,
+            base: 0,
+            len,
+            refills: 0,
+            seeks: 0,
+            bytes_read: 0,
+        })
+    }
+
+    /// Total length of the underlying stream in bytes.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Current read offset in the stream.
+    pub fn offset(&self) -> u64 {
+        self.base + self.pos as u64
+    }
+
+    /// Bytes remaining from the current position to EOF.
+    pub fn remaining(&self) -> u64 {
+        self.len - self.offset()
+    }
+
+    fn refill(&mut self) -> Result<()> {
+        self.base += self.filled as u64;
+        debug_assert_eq!(self.base, self.offset() - self.pos as u64);
+        self.pos = 0;
+        self.filled = 0;
+        while self.filled < self.buf.len() {
+            let n = self.file.read(&mut self.buf[self.filled..])?;
+            if n == 0 {
+                break;
+            }
+            self.filled += n;
+        }
+        self.refills += 1;
+        self.bytes_read += self.filled as u64;
+        crate::util::diskio::charge(self.filled);
+        Ok(())
+    }
+
+    /// Read exactly `out.len()` bytes; errors on EOF.
+    pub fn read_exact(&mut self, out: &mut [u8]) -> Result<()> {
+        let mut done = 0;
+        while done < out.len() {
+            if self.pos == self.filled {
+                if self.offset() >= self.len {
+                    return Err(Error::CorruptStream(format!(
+                        "unexpected EOF at {} (want {} more bytes)",
+                        self.offset(),
+                        out.len() - done
+                    )));
+                }
+                self.refill()?;
+                if self.filled == 0 {
+                    return Err(Error::CorruptStream("short read".into()));
+                }
+            }
+            let n = (out.len() - done).min(self.filled - self.pos);
+            out[done..done + n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            done += n;
+        }
+        Ok(())
+    }
+
+    /// The paper's `skip`: advance `nbytes` forward.  If the target is
+    /// still inside the buffer this is free; otherwise one seek + refill.
+    pub fn skip_bytes(&mut self, nbytes: u64) -> Result<()> {
+        let target_in_buf = self.pos as u64 + nbytes;
+        if target_in_buf <= self.filled as u64 {
+            // Still inside B — no disk access.
+            self.pos = target_in_buf as usize;
+            return Ok(());
+        }
+        // Past the end of B: seek the file forward to the target and refill.
+        let target = self.base + target_in_buf;
+        if target > self.len {
+            return Err(Error::CorruptStream(format!(
+                "skip past EOF: to {target}, len {}",
+                self.len
+            )));
+        }
+        self.file.seek(SeekFrom::Start(target))?;
+        self.seeks += 1;
+        self.base = target;
+        self.pos = 0;
+        self.filled = 0;
+        Ok(())
+    }
+
+    /// Number of buffer refills (≈ sequential batched reads) so far.
+    pub fn refills(&self) -> u64 {
+        self.refills
+    }
+
+    /// Number of random seeks caused by long skips.
+    pub fn seeks(&self) -> u64 {
+        self.seeks
+    }
+
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::writer::StreamWriter;
+
+    fn tmpfile(name: &str, data: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("graphd_reader_{name}_{}", std::process::id()));
+        let mut w = StreamWriter::create(&p, 64).unwrap();
+        w.write_all(data).unwrap();
+        w.finish().unwrap();
+        p
+    }
+
+    #[test]
+    fn sequential_read_roundtrip() {
+        let data: Vec<u8> = (0..10_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        let p = tmpfile("seq", &data);
+        let mut r = StreamReader::open(&p, 256).unwrap();
+        let mut buf = [0u8; 4];
+        for i in 0..10_000u32 {
+            r.read_exact(&mut buf).unwrap();
+            assert_eq!(u32::from_le_bytes(buf), i);
+        }
+        assert_eq!(r.remaining(), 0);
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn skip_within_buffer_is_free() {
+        let data = vec![7u8; 4096];
+        let p = tmpfile("free", &data);
+        let mut r = StreamReader::open(&p, 4096).unwrap();
+        let mut b = [0u8; 1];
+        r.read_exact(&mut b).unwrap(); // forces first refill
+        let seeks0 = r.seeks();
+        r.skip_bytes(1000).unwrap();
+        r.skip_bytes(2000).unwrap();
+        assert_eq!(r.seeks(), seeks0, "in-buffer skips must not seek");
+        r.read_exact(&mut b).unwrap();
+        assert_eq!(r.offset(), 3002);
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn long_skip_costs_one_seek() {
+        let data: Vec<u8> = (0..100_000u32).flat_map(|i| (i as u8).to_le_bytes()).collect();
+        let p = tmpfile("long", &data);
+        let mut r = StreamReader::open(&p, 1024).unwrap();
+        let mut b = [0u8; 1];
+        r.read_exact(&mut b).unwrap();
+        r.skip_bytes(50_000).unwrap();
+        assert_eq!(r.seeks(), 1);
+        r.read_exact(&mut b).unwrap();
+        assert_eq!(b[0], data[50_001]);
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn skip_past_eof_errors() {
+        let p = tmpfile("eof", &[0u8; 100]);
+        let mut r = StreamReader::open(&p, 16).unwrap();
+        assert!(r.skip_bytes(101).is_err());
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn skip_to_exact_eof_ok() {
+        let p = tmpfile("exact", &[1u8; 64]);
+        let mut r = StreamReader::open(&p, 16).unwrap();
+        r.skip_bytes(64).unwrap();
+        assert_eq!(r.remaining(), 0);
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn interleaved_read_skip_matches_offsets() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(65536).collect();
+        let p = tmpfile("mix", &data);
+        let mut r = StreamReader::open(&p, 777).unwrap(); // odd buffer size
+        let mut off = 0usize;
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut buf = [0u8; 3];
+        while off + 10 < data.len() {
+            if rng.chance(0.5) {
+                r.read_exact(&mut buf).unwrap();
+                assert_eq!(buf[..], data[off..off + 3]);
+                off += 3;
+            } else {
+                let k = rng.below(2000) as usize;
+                let k = k.min(data.len() - off - 4);
+                r.skip_bytes(k as u64).unwrap();
+                off += k;
+            }
+            assert_eq!(r.offset(), off as u64);
+        }
+        std::fs::remove_file(p).unwrap();
+    }
+}

@@ -1,0 +1,374 @@
+//! Splittable stream — the OMS structure of §3.3.1.
+//!
+//! A long stream of records broken into files `F_1, F_2, …`, each at most
+//! ℬ bytes (or a single record if that record alone exceeds ℬ).  The
+//! computing unit appends at the tail while the sending unit concurrently
+//! fetches *fully written* files from the head; a sent file is garbage
+//! collected (unless kept for fault recovery).  The paper's `no_w` / `no_s`
+//! counters are `files_closed` / `files_taken` here.
+
+use crate::error::Result;
+use crate::stream::writer::StreamWriter;
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Tail {
+    writer: Option<StreamWriter>,
+    file_idx: u64,
+    cur_bytes: usize,
+}
+
+struct Shared {
+    /// Closed, fully-written files ready for the sender: (index, path, bytes).
+    ready: VecDeque<(u64, PathBuf, u64)>,
+    /// Total files closed so far (`no_w`).
+    files_closed: u64,
+    /// Files taken by the sender (`no_s`).
+    files_taken: u64,
+    /// Appender called `finalize()` — no more files will appear.
+    finalized: bool,
+    total_bytes: u64,
+}
+
+/// An OMS: concurrent append (tail) + fetch (head) over ≤ℬ-byte files.
+pub struct SplittableStream {
+    dir: PathBuf,
+    cap: usize,
+    tail: Mutex<Tail>,
+    shared: Mutex<Shared>,
+    cond: Condvar,
+    buf_size: usize,
+}
+
+impl SplittableStream {
+    /// Create an empty splittable stream storing its files under `dir`.
+    pub fn create(dir: &Path, cap: usize, buf_size: usize) -> Result<Arc<Self>> {
+        std::fs::create_dir_all(dir)?;
+        Ok(Arc::new(Self {
+            dir: dir.to_path_buf(),
+            cap,
+            tail: Mutex::new(Tail {
+                writer: None,
+                file_idx: 0,
+                cur_bytes: 0,
+            }),
+            shared: Mutex::new(Shared {
+                ready: VecDeque::new(),
+                files_closed: 0,
+                files_taken: 0,
+                finalized: false,
+                total_bytes: 0,
+            }),
+            cond: Condvar::new(),
+            buf_size,
+        }))
+    }
+
+    fn file_path(&self, idx: u64) -> PathBuf {
+        self.dir.join(format!("f{idx:06}"))
+    }
+
+    /// Append one record.  If the current file would exceed ℬ, it is closed
+    /// (becoming fetchable) and a new file started.  A record larger than ℬ
+    /// gets a file of its own (paper: "contains only one data item whose
+    /// size is larger than ℬ").
+    pub fn append(&self, record: &[u8]) -> Result<()> {
+        let mut t = self.tail.lock().unwrap();
+        if t.writer.is_some() && t.cur_bytes + record.len() > self.cap {
+            self.close_current(&mut t)?;
+        }
+        if t.writer.is_none() {
+            let idx = t.file_idx;
+            t.writer = Some(StreamWriter::create(&self.file_path(idx), self.buf_size)?);
+            t.cur_bytes = 0;
+        }
+        t.writer.as_mut().unwrap().write_all(record)?;
+        t.cur_bytes += record.len();
+        Ok(())
+    }
+
+    fn close_current(&self, t: &mut Tail) -> Result<()> {
+        if let Some(w) = t.writer.take() {
+            let bytes = w.finish()?;
+            let idx = t.file_idx;
+            t.file_idx += 1;
+            t.cur_bytes = 0;
+            let mut s = self.shared.lock().unwrap();
+            s.ready.push_back((idx, self.file_path(idx), bytes));
+            s.files_closed += 1;
+            s.total_bytes += bytes;
+            drop(s);
+            self.cond.notify_all();
+        }
+        Ok(())
+    }
+
+    /// Append many fixed-size records under one lock (the hot-path form:
+    /// one mutex acquisition and one buffered write per *batch* instead of
+    /// per record).  Splits at record boundaries so files stay ≤ ℬ.
+    pub fn append_records(&self, data: &[u8], rec_size: usize) -> Result<()> {
+        debug_assert_eq!(data.len() % rec_size, 0);
+        if data.is_empty() {
+            return Ok(());
+        }
+        let mut t = self.tail.lock().unwrap();
+        let mut off = 0usize;
+        while off < data.len() {
+            if t.writer.is_some() && t.cur_bytes + rec_size > self.cap {
+                self.close_current(&mut t)?;
+            }
+            if t.writer.is_none() {
+                let idx = t.file_idx;
+                t.writer = Some(StreamWriter::create(&self.file_path(idx), self.buf_size)?);
+                t.cur_bytes = 0;
+            }
+            // Fill the current file up to its cap in one write.
+            let room = (self.cap - t.cur_bytes) / rec_size * rec_size;
+            let take = room.min(data.len() - off).max(rec_size);
+            t.writer.as_mut().unwrap().write_all(&data[off..off + take])?;
+            t.cur_bytes += take;
+            off += take;
+        }
+        Ok(())
+    }
+
+    /// Close the in-progress file (if any) *without* finalizing the stream,
+    /// and return the total number of closed files — the superstep
+    /// watermark: every file with index < watermark belongs to supersteps
+    /// ≤ the current one.  This is what lets U_c append superstep-(i+1)
+    /// files to an OMS while U_s is still draining superstep-i files (§4).
+    pub fn close_current_file(&self) -> Result<u64> {
+        let mut t = self.tail.lock().unwrap();
+        self.close_current(&mut t)?;
+        Ok(self.shared.lock().unwrap().files_closed)
+    }
+
+    /// Like [`Self::try_take_next`] but only files with index < `upto`.
+    pub fn try_take_next_upto(&self, upto: u64) -> Option<(u64, PathBuf, u64)> {
+        let mut s = self.shared.lock().unwrap();
+        if s.ready.front().is_some_and(|f| f.0 < upto) {
+            s.files_taken += 1;
+            s.ready.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Return a taken file to the head of the queue (used by the sender
+    /// when a concurrently-published watermark reveals the file belongs to
+    /// the *next* superstep).
+    pub fn put_back(&self, idx: u64, path: PathBuf, bytes: u64) {
+        let mut s = self.shared.lock().unwrap();
+        debug_assert!(s.ready.front().map_or(true, |f| f.0 > idx));
+        s.ready.push_front((idx, path, bytes));
+        s.files_taken -= 1;
+    }
+
+    /// Like [`Self::try_take_all`] but only files with index < `upto`.
+    pub fn try_take_all_upto(&self, upto: u64) -> Vec<(u64, PathBuf, u64)> {
+        let mut s = self.shared.lock().unwrap();
+        let mut out = Vec::new();
+        while s.ready.front().is_some_and(|f| f.0 < upto) {
+            out.push(s.ready.pop_front().unwrap());
+            s.files_taken += 1;
+        }
+        out
+    }
+
+    /// Close the in-progress file (if any) and mark the stream complete:
+    /// after this, `take_next` drains the queue and then returns `None`.
+    pub fn finalize(&self) -> Result<()> {
+        let mut t = self.tail.lock().unwrap();
+        self.close_current(&mut t)?;
+        let mut s = self.shared.lock().unwrap();
+        s.finalized = true;
+        drop(s);
+        self.cond.notify_all();
+        Ok(())
+    }
+
+    /// Re-open for a new superstep after a `finalize` + full drain.
+    pub fn reset(&self) {
+        let mut s = self.shared.lock().unwrap();
+        debug_assert!(s.ready.is_empty());
+        s.finalized = false;
+    }
+
+    /// Non-blocking fetch of the next fully-written file, if any.
+    pub fn try_take_next(&self) -> Option<(u64, PathBuf, u64)> {
+        let mut s = self.shared.lock().unwrap();
+        let f = s.ready.pop_front();
+        if f.is_some() {
+            s.files_taken += 1;
+        }
+        f
+    }
+
+    /// Take *all* currently ready files (the combiner path merges every
+    /// pending file of an OMS in one batch — §3.3.1 "Sending Strategies").
+    pub fn try_take_all(&self) -> Vec<(u64, PathBuf, u64)> {
+        let mut s = self.shared.lock().unwrap();
+        let out: Vec<_> = s.ready.drain(..).collect();
+        s.files_taken += out.len() as u64;
+        out
+    }
+
+    /// Number of files ready to send right now.
+    pub fn ready_count(&self) -> usize {
+        self.shared.lock().unwrap().ready.len()
+    }
+
+    /// True once finalized and fully drained.
+    pub fn exhausted(&self) -> bool {
+        let s = self.shared.lock().unwrap();
+        s.finalized && s.ready.is_empty()
+    }
+
+    pub fn is_finalized(&self) -> bool {
+        self.shared.lock().unwrap().finalized
+    }
+
+    /// (files_closed, files_taken, total_bytes) — the paper's (no_w, no_s).
+    pub fn stats(&self) -> (u64, u64, u64) {
+        let s = self.shared.lock().unwrap();
+        (s.files_closed, s.files_taken, s.total_bytes)
+    }
+
+    /// Delete a consumed file (GC). With fault-recovery logging enabled the
+    /// worker defers this until the next checkpoint (§3.4).
+    pub fn gc_file(path: &Path) {
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "graphd_split_{name}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn splits_at_cap() {
+        let d = tmpdir("cap");
+        let s = SplittableStream::create(&d, 100, 64).unwrap();
+        // 30-byte records: 3 fit in 90 < 100, 4th would make 120 -> split
+        for _ in 0..7 {
+            s.append(&[1u8; 30]).unwrap();
+        }
+        s.finalize().unwrap();
+        let files: Vec<_> = std::iter::from_fn(|| s.try_take_next()).collect();
+        assert_eq!(files.len(), 3, "7*30 bytes at cap 100 -> 90+90+30");
+        assert_eq!(files[0].2, 90);
+        assert_eq!(files[1].2, 90);
+        assert_eq!(files[2].2, 30);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn oversized_record_gets_own_file() {
+        let d = tmpdir("big");
+        let s = SplittableStream::create(&d, 64, 64).unwrap();
+        s.append(&[1u8; 10]).unwrap();
+        s.append(&[2u8; 500]).unwrap(); // > cap
+        s.append(&[3u8; 10]).unwrap();
+        s.finalize().unwrap();
+        let files = s.try_take_all();
+        assert_eq!(files.len(), 3);
+        assert_eq!(files[1].2, 500);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn concurrent_append_and_fetch() {
+        let d = tmpdir("conc");
+        let s = SplittableStream::create(&d, 256, 64).unwrap();
+        let s2 = s.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..1000u32 {
+                s2.append(&i.to_le_bytes()).unwrap();
+            }
+            s2.finalize().unwrap();
+        });
+        // Consumer: poll until exhausted, verifying record order across files.
+        let mut next = 0u32;
+        loop {
+            if let Some((_, path, _)) = s.try_take_next() {
+                let data = std::fs::read(&path).unwrap();
+                for c in data.chunks(4) {
+                    assert_eq!(u32::from_le_bytes(c.try_into().unwrap()), next);
+                    next += 1;
+                }
+                SplittableStream::gc_file(&path);
+            } else if s.exhausted() {
+                break;
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(next, 1000);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn stats_track_now_nos() {
+        let d = tmpdir("stats");
+        let s = SplittableStream::create(&d, 8, 64).unwrap();
+        for i in 0..4u32 {
+            s.append(&i.to_le_bytes()).unwrap(); // 2 records per file
+        }
+        s.finalize().unwrap();
+        assert_eq!(s.stats().0, 2); // no_w = 2 files closed
+        s.try_take_next().unwrap();
+        assert_eq!(s.stats().1, 1); // no_s = 1
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn watermark_separates_supersteps() {
+        let d = tmpdir("wm");
+        let s = SplittableStream::create(&d, 8, 64).unwrap();
+        // step 0: two files
+        for i in 0..4u32 {
+            s.append(&i.to_le_bytes()).unwrap();
+        }
+        let wm0 = s.close_current_file().unwrap();
+        assert_eq!(wm0, 2);
+        // step 1 already appending
+        s.append(&9u32.to_le_bytes()).unwrap();
+        s.append(&10u32.to_le_bytes()).unwrap();
+        s.append(&11u32.to_le_bytes()).unwrap(); // closes f2 at 8 bytes
+        // sender drains only step-0 files
+        let step0: Vec<_> = std::iter::from_fn(|| s.try_take_next_upto(wm0)).collect();
+        assert_eq!(step0.len(), 2);
+        assert!(s.try_take_next_upto(wm0).is_none(), "f2 is step-1");
+        let wm1 = s.close_current_file().unwrap();
+        assert_eq!(s.try_take_all_upto(wm1).len(), 2);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn reset_allows_reuse() {
+        let d = tmpdir("reset");
+        let s = SplittableStream::create(&d, 8, 64).unwrap();
+        s.append(&[0u8; 4]).unwrap();
+        s.finalize().unwrap();
+        assert!(s.try_take_next().is_some());
+        assert!(s.exhausted());
+        s.reset();
+        assert!(!s.exhausted());
+        s.append(&[1u8; 4]).unwrap();
+        s.finalize().unwrap();
+        assert_eq!(s.try_take_all().len(), 1);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

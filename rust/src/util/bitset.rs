@@ -1,0 +1,131 @@
+//! Compact bitset for per-vertex flags (active map etc.) — keeps the
+//! per-machine vertex state within the paper's O(|V|/n) budget.
+
+/// Fixed-capacity bitset over `u64` words.
+#[derive(Clone, Debug)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    pub fn new(len: usize) -> Self {
+        Self {
+            words: vec![0; (len + 63) / 64],
+            len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Grow capacity to at least `len` bits (new bits are 0).
+    pub fn grow(&mut self, len: usize) {
+        if len > self.len {
+            self.words.resize((len + 63) / 64, 0);
+            self.len = len;
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+    }
+
+    pub fn set_all(&mut self) {
+        self.words.fill(!0);
+        // mask tail bits beyond len
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    /// Iterate indices of set bits.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut b = BitSet::new(130);
+        b.set(0, true);
+        b.set(64, true);
+        b.set(129, true);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1) && !b.get(128));
+        assert_eq!(b.count_ones(), 3);
+        b.set(64, false);
+        assert_eq!(b.count_ones(), 2);
+    }
+
+    #[test]
+    fn set_all_masks_tail() {
+        let mut b = BitSet::new(70);
+        b.set_all();
+        assert_eq!(b.count_ones(), 70);
+    }
+
+    #[test]
+    fn iter_ones_matches() {
+        let mut b = BitSet::new(200);
+        let idx = [0usize, 3, 63, 64, 65, 127, 199];
+        for &i in &idx {
+            b.set(i, true);
+        }
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), idx);
+    }
+
+    #[test]
+    fn grow_preserves_bits() {
+        let mut b = BitSet::new(10);
+        b.set(9, true);
+        b.grow(100);
+        assert!(b.get(9));
+        assert!(!b.get(99));
+        assert_eq!(b.len(), 100);
+    }
+}

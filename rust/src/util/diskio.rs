@@ -1,0 +1,139 @@
+//! Simulated per-machine disk bandwidth.
+//!
+//! The paper's central quantitative claim is an *ordering*: local disk
+//! streaming bandwidth ≫ per-machine share of a commodity switch (§3.3.1).
+//! Real disks on this testbed are far faster than our scaled-down network
+//! model, which would make out-of-core cost invisible; instead every
+//! simulated machine owns a [`DiskBw`] token bucket and all stream I/O on
+//! its threads is charged against it (threads register via [`register`]).
+//!
+//! A `None` registration (the default, used by unit tests) means
+//! unthrottled real-disk speed.
+
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shared-per-machine disk bandwidth bucket: concurrent readers/writers on
+/// the same simulated machine contend, like a single spindle/SSD channel.
+pub struct DiskBw {
+    rate: f64,
+    next_free: Mutex<Instant>,
+    bytes: Mutex<u64>,
+}
+
+impl DiskBw {
+    pub fn new(bytes_per_sec: f64) -> Arc<Self> {
+        Arc::new(Self {
+            rate: bytes_per_sec.max(1.0),
+            next_free: Mutex::new(Instant::now()),
+            bytes: Mutex::new(0),
+        })
+    }
+
+    /// Block for the simulated time of moving `bytes` to/from this disk.
+    pub fn charge(&self, bytes: usize) {
+        if bytes == 0 {
+            return;
+        }
+        let dur = Duration::from_secs_f64(bytes as f64 / self.rate);
+        let until = {
+            let mut nf = self.next_free.lock().unwrap();
+            let start = (*nf).max(Instant::now());
+            *nf = start + dur;
+            *nf
+        };
+        *self.bytes.lock().unwrap() += bytes as u64;
+        let now = Instant::now();
+        if until > now {
+            std::thread::sleep(until - now);
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        *self.bytes.lock().unwrap()
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<DiskBw>>> = const { RefCell::new(None) };
+}
+
+/// Install `bw` as this thread's disk (returns a guard restoring the
+/// previous registration on drop).
+pub fn register(bw: Option<Arc<DiskBw>>) -> Guard {
+    let prev = CURRENT.with(|c| c.replace(bw));
+    Guard { prev }
+}
+
+/// Charge `bytes` against the registered disk, if any.
+#[inline]
+pub fn charge(bytes: usize) {
+    CURRENT.with(|c| {
+        if let Some(bw) = c.borrow().as_ref() {
+            bw.charge(bytes);
+        }
+    });
+}
+
+/// Restores the previous registration on drop.
+pub struct Guard {
+    prev: Option<Arc<DiskBw>>,
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unregistered_is_free() {
+        let t = Instant::now();
+        charge(100 << 20);
+        assert!(t.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn registered_throttles() {
+        let bw = DiskBw::new(10.0 * 1024.0 * 1024.0);
+        let _g = register(Some(bw.clone()));
+        let t = Instant::now();
+        charge(1024 * 1024);
+        assert!(t.elapsed() >= Duration::from_millis(90), "{:?}", t.elapsed());
+        assert_eq!(bw.total_bytes(), 1024 * 1024);
+    }
+
+    #[test]
+    fn guard_restores() {
+        let bw = DiskBw::new(1e12);
+        {
+            let _g = register(Some(bw.clone()));
+            charge(10);
+        }
+        assert_eq!(bw.total_bytes(), 10);
+        charge(100); // unregistered again — not counted
+        assert_eq!(bw.total_bytes(), 10);
+    }
+
+    #[test]
+    fn contending_threads_serialize() {
+        let bw = DiskBw::new(10.0 * 1024.0 * 1024.0);
+        let t = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let bw = bw.clone();
+                s.spawn(move || {
+                    let _g = register(Some(bw));
+                    charge(512 * 1024);
+                });
+            }
+        });
+        assert!(t.elapsed() >= Duration::from_millis(85), "{:?}", t.elapsed());
+    }
+}

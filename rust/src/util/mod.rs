@@ -1,0 +1,67 @@
+//! Small shared utilities: deterministic PRNG, timers, size formatting,
+//! bitsets, and an in-repo property-testing helper (`proptest_lite`).
+
+pub mod bitset;
+pub mod diskio;
+pub mod proptest_lite;
+pub mod rng;
+pub mod timer;
+
+/// Format a byte count as a human-readable string.
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format seconds the way the paper's tables do ("1189 s", "1.74 s").
+pub fn human_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0} s")
+    } else if s >= 10.0 {
+        format!("{s:.1} s")
+    } else {
+        format!("{s:.2} s")
+    }
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(17), "17 B");
+        assert_eq!(human_bytes(64 * 1024), "64.0 KB");
+        assert_eq!(human_bytes(8 * 1024 * 1024), "8.0 MB");
+    }
+
+    #[test]
+    fn human_secs_paper_style() {
+        assert_eq!(human_secs(1189.4), "1189 s");
+        assert_eq!(human_secs(81.72), "81.7 s");
+        assert_eq!(human_secs(1.7449), "1.74 s");
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 8), 0);
+        assert_eq!(ceil_div(1, 8), 1);
+        assert_eq!(ceil_div(8, 8), 1);
+        assert_eq!(ceil_div(9, 8), 2);
+    }
+}

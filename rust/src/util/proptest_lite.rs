@@ -1,0 +1,155 @@
+//! `proptest_lite` — a tiny property-testing harness (the offline registry
+//! has no `proptest`).  Runs a property over many seeded random cases and,
+//! on failure, retries with "smaller" cases derived from the failing seed
+//! to report a minimal-ish reproduction.
+//!
+//! Usage:
+//! ```ignore
+//! proptest_lite::run(100, |g| {
+//!     let v = g.vec_u32(0..500, 0..1000);
+//!     let prop = check(&v);
+//!     prop_assert!(g, prop, "check failed for {v:?}");
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Per-case generator handle: wraps the PRNG plus a size budget so retries
+/// can shrink input magnitude.
+pub struct Gen {
+    pub rng: Rng,
+    /// Multiplier in (0, 1]; shrink passes lower it to produce smaller cases.
+    pub size: f64,
+    pub case: u64,
+    failed: Option<String>,
+}
+
+impl Gen {
+    /// Integer in `lo..hi` scaled by the shrink budget.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        let span = ((hi - lo) as f64 * self.size).max(1.0) as u64;
+        lo + self.rng.below(span) as usize
+    }
+
+    pub fn u32_below(&mut self, bound: u32) -> u32 {
+        self.rng.below(bound as u64) as u32
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vec of u32 with length in `len_range` and values below `val_bound`.
+    pub fn vec_u32(&mut self, len_lo: usize, len_hi: usize, val_bound: u32) -> Vec<u32> {
+        let n = self.usize_in(len_lo, len_hi.max(len_lo + 1));
+        (0..n).map(|_| self.u32_below(val_bound)).collect()
+    }
+
+    /// Record a failure (used by `prop_assert!`).
+    pub fn fail(&mut self, msg: String) {
+        if self.failed.is_none() {
+            self.failed = Some(msg);
+        }
+    }
+}
+
+/// Assert inside a property; records the message instead of panicking so the
+/// harness can shrink.
+#[macro_export]
+macro_rules! prop_assert {
+    ($g:expr, $cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            $g.fail(format!($($fmt)+));
+            return;
+        }
+    };
+}
+
+/// Run `prop` over `cases` seeded random cases.  Panics with the seed and
+/// message of the smallest failing case found.
+pub fn run(cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    // Honor an env override so failures can be replayed exactly.
+    let base: u64 = std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Some(msg) = run_one(seed, case, 1.0, &mut prop) {
+            // Shrink: try the same seed with smaller size budgets.
+            let mut best = (1.0f64, msg);
+            for &size in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                if let Some(m) = run_one(seed, case, size, &mut prop) {
+                    best = (size, m);
+                }
+            }
+            panic!(
+                "proptest_lite: case {case} failed (seed={seed:#x}, size={}):\n{}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+fn run_one(
+    seed: u64,
+    case: u64,
+    size: f64,
+    prop: &mut impl FnMut(&mut Gen),
+) -> Option<String> {
+    let mut g = Gen {
+        rng: Rng::new(seed),
+        size,
+        case,
+        failed: None,
+    };
+    prop(&mut g);
+    g.failed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        run(50, |g| {
+            let _ = g.u64();
+            n += 1;
+        });
+        assert!(n >= 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "proptest_lite")]
+    fn failing_property_panics_with_seed() {
+        run(50, |g| {
+            let v = g.usize_in(0, 1000);
+            prop_assert!(g, v < 990, "v too large: {v}");
+        });
+    }
+
+    #[test]
+    fn sizes_shrink_inputs() {
+        let mut g = Gen {
+            rng: Rng::new(1),
+            size: 0.01,
+            case: 0,
+            failed: None,
+        };
+        for _ in 0..100 {
+            assert!(g.usize_in(0, 1000) <= 10);
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Wall-clock timing helpers used by the per-superstep metrics (the paper's
+//! M-Send vs M-Gene accounting in Table 4 needs accumulated spans).
+
+use std::time::{Duration, Instant};
+
+/// A resumable stopwatch accumulating total elapsed time over many spans.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.total += t.elapsed();
+        }
+    }
+
+    /// Total accumulated time (includes the running span, if any).
+    pub fn total(&self) -> Duration {
+        match self.started {
+            Some(t) => self.total + t.elapsed(),
+            None => self.total,
+        }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.total().as_secs_f64()
+    }
+
+    /// Time a closure, accumulating its duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+}
+
+/// Measure a closure once, returning (seconds, output).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t = Instant::now();
+    let out = f();
+    (t.elapsed().as_secs_f64(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_spans() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(sw.secs() >= 0.009, "got {}", sw.secs());
+    }
+
+    #[test]
+    fn timed_returns_output() {
+        let (s, v) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Per-machine worker runtime: on-disk stores, the three parallel units
+//! (`U_c` compute / `U_s` send / `U_r` receive, §4) and the superstep loop.
+//!
+//! Submodules:
+//! * [`storage`] — the machine's persistent state: vertex-state array `A`
+//!   (ids/degrees, kept in memory during jobs) + the edge stream `S^E`.
+//! * [`sync`] — the condition-variable plumbing between units and the
+//!   global barriers between machines.
+//! * [`units`] — the unit bodies and the per-machine job driver.
+
+pub mod storage;
+pub mod sync;
+pub mod units;
+
+pub use storage::{EdgeStreamWriter, MachineStore};
+
+/// Vertex-to-machine partitioning.
+///
+/// Normal mode hashes arbitrary (possibly sparse) IDs with a Fibonacci
+/// multiplicative hash; recoded mode *must* use `id mod n` so that machine
+/// and array position are computable from the ID alone (§5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partitioning {
+    Hashed,
+    Modulo,
+}
+
+impl Partitioning {
+    #[inline]
+    pub fn machine_of(&self, id: u32, n: usize) -> usize {
+        match self {
+            Partitioning::Hashed => {
+                ((id as u64).wrapping_mul(11400714819323198485) >> 33) as usize % n
+            }
+            Partitioning::Modulo => id as usize % n,
+        }
+    }
+
+    /// Position of a recoded vertex in its machine's state array A (§5):
+    /// `pos = id / n` (valid for `Modulo` only).
+    #[inline]
+    pub fn position_of(&self, id: u32, n: usize) -> usize {
+        debug_assert_eq!(*self, Partitioning::Modulo);
+        id as usize / n
+    }
+
+    /// Recoded ID of the vertex at `pos` on machine `i`: `n·pos + i` (§5).
+    #[inline]
+    pub fn id_at(&self, pos: usize, machine: usize, n: usize) -> u32 {
+        debug_assert_eq!(*self, Partitioning::Modulo);
+        (pos * n + machine) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modulo_bijection() {
+        let n = 5;
+        let p = Partitioning::Modulo;
+        for id in 0..1000u32 {
+            let m = p.machine_of(id, n);
+            let pos = p.position_of(id, n);
+            assert_eq!(p.id_at(pos, m, n), id);
+        }
+    }
+
+    #[test]
+    fn hashed_is_reasonably_balanced() {
+        let n = 8;
+        let p = Partitioning::Hashed;
+        let mut counts = vec![0usize; n];
+        // sparse ids with regular stride — the case plain modulo handles badly
+        for i in 0..10_000u32 {
+            counts[p.machine_of(i * 16 + 2, n)] += 1;
+        }
+        let (mn, mx) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        // Lemma 1: max load < 2·|V|/n with overwhelming probability
+        assert!(mx < 2 * 10_000 / n, "max={mx}");
+        assert!(mn > 0);
+    }
+}

@@ -1,0 +1,373 @@
+//! Per-machine persistent store: vertex-state array `A` + edge stream `S^E`.
+//!
+//! Layout under `<workdir>/m<i>/<store>/`:
+//! * `meta`    — text key=val: counts, flags;
+//! * `ids.bin` — sorted current-space vertex IDs (LE u32), absent when the
+//!   store is recoded (IDs are implicit: `id = pos·n + i`, §5);
+//! * `degs.bin`— degrees (LE u32), aligned with `ids.bin`;
+//! * `se.bin`  — the edge stream: adjacency lists concatenated in `A`
+//!   order; 4 bytes/item unweighted, 8 bytes (nbr + f32 weight) weighted.
+//!
+//! Only ids/degs are loaded to RAM for a job (`O(|V|/n)`); `se.bin` is
+//! always streamed.
+
+use crate::api::Edge;
+use crate::error::{Error, Result};
+use crate::stream::{StreamReader, StreamWriter};
+use std::path::{Path, PathBuf};
+
+/// Adjacency item byte width.
+pub const fn item_size(weighted: bool) -> usize {
+    if weighted {
+        8
+    } else {
+        4
+    }
+}
+
+/// Metadata + in-memory state array of one machine's graph partition.
+#[derive(Clone, Debug)]
+pub struct MachineStore {
+    pub dir: PathBuf,
+    pub machine: usize,
+    pub num_machines: usize,
+    /// Total vertices across the cluster.
+    pub total_vertices: u64,
+    pub weighted: bool,
+    /// Dense recoded IDs? (implicit `pos·n + i`.)
+    pub recoded: bool,
+    /// Sorted current-space IDs.  For a recoded store this instead holds
+    /// the *old* IDs (kept for reporting results in the input ID space);
+    /// it may be empty if the input was already dense.
+    pub ids: Vec<u32>,
+    pub degs: Vec<u32>,
+}
+
+impl MachineStore {
+    pub fn se_path(&self) -> PathBuf {
+        self.dir.join("se.bin")
+    }
+
+    pub fn local_vertices(&self) -> usize {
+        self.degs.len()
+    }
+
+    /// Current-space ID of the vertex at `pos`.
+    #[inline]
+    pub fn id_at(&self, pos: usize) -> u32 {
+        if self.recoded {
+            (pos * self.num_machines + self.machine) as u32
+        } else {
+            self.ids[pos]
+        }
+    }
+
+    /// ID to report results under: the original input-space ID.
+    #[inline]
+    pub fn display_id_at(&self, pos: usize) -> u32 {
+        if self.ids.is_empty() {
+            self.id_at(pos)
+        } else {
+            self.ids[pos]
+        }
+    }
+
+    /// In-memory bytes of the state array (the O(|V|/n) budget).
+    pub fn state_bytes(&self) -> u64 {
+        (self.ids.len() * 4 + self.degs.len() * 4) as u64
+    }
+
+    /// Persist `meta` + `ids.bin` + `degs.bin` (se.bin is written by
+    /// [`EdgeStreamWriter`]).
+    pub fn save(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        let meta = format!(
+            "machine={}\nnum_machines={}\ntotal_vertices={}\nweighted={}\nrecoded={}\nlocal={}\n",
+            self.machine,
+            self.num_machines,
+            self.total_vertices,
+            self.weighted,
+            self.recoded,
+            self.degs.len()
+        );
+        std::fs::write(self.dir.join("meta"), meta)?;
+        write_u32s(&self.dir.join("degs.bin"), &self.degs)?;
+        if !self.ids.is_empty() {
+            write_u32s(&self.dir.join("ids.bin"), &self.ids)?;
+        }
+        Ok(())
+    }
+
+    /// Load a previously saved store ("loading from local disks", §3.2).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta = std::fs::read_to_string(dir.join("meta"))?;
+        let get = |k: &str| -> Result<String> {
+            meta.lines()
+                .find_map(|l| l.strip_prefix(&format!("{k}=")))
+                .map(str::to_string)
+                .ok_or_else(|| Error::CorruptStream(format!("meta missing {k}")))
+        };
+        let parse_err = |k: &str| Error::CorruptStream(format!("bad meta field {k}"));
+        let machine: usize = get("machine")?.parse().map_err(|_| parse_err("machine"))?;
+        let num_machines: usize = get("num_machines")?
+            .parse()
+            .map_err(|_| parse_err("num_machines"))?;
+        let total_vertices: u64 = get("total_vertices")?
+            .parse()
+            .map_err(|_| parse_err("total_vertices"))?;
+        let weighted: bool = get("weighted")?.parse().map_err(|_| parse_err("weighted"))?;
+        let recoded: bool = get("recoded")?.parse().map_err(|_| parse_err("recoded"))?;
+        let degs = read_u32s(&dir.join("degs.bin"))?;
+        let ids = if dir.join("ids.bin").exists() {
+            read_u32s(&dir.join("ids.bin"))?
+        } else if recoded {
+            Vec::new()
+        } else {
+            return Err(Error::CorruptStream("non-recoded store missing ids.bin".into()));
+        };
+        if !recoded && ids.len() != degs.len() {
+            return Err(Error::CorruptStream("ids/degs length mismatch".into()));
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            machine,
+            num_machines,
+            total_vertices,
+            weighted,
+            recoded,
+            ids,
+            degs,
+        })
+    }
+}
+
+fn write_u32s(path: &Path, xs: &[u32]) -> Result<()> {
+    let mut w = StreamWriter::create(path, 64 * 1024)?;
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    w.finish()?;
+    Ok(())
+}
+
+fn read_u32s(path: &Path) -> Result<Vec<u32>> {
+    let mut r = StreamReader::open(path, 64 * 1024)?;
+    let n = (r.len() / 4) as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut buf = [0u8; 4];
+    for _ in 0..n {
+        r.read_exact(&mut buf)?;
+        out.push(u32::from_le_bytes(buf));
+    }
+    Ok(out)
+}
+
+/// Sequential writer for `se.bin` (adjacency lists in A order).
+pub struct EdgeStreamWriter {
+    w: StreamWriter,
+    weighted: bool,
+    items: u64,
+}
+
+impl EdgeStreamWriter {
+    pub fn create(store_dir: &Path, weighted: bool, buf: usize) -> Result<Self> {
+        Ok(Self {
+            w: StreamWriter::create(&store_dir.join("se.bin"), buf)?,
+            weighted,
+            items: 0,
+        })
+    }
+
+    #[inline]
+    pub fn push(&mut self, nbr: u32, weight: f32) -> Result<()> {
+        self.w.write_all(&nbr.to_le_bytes())?;
+        if self.weighted {
+            self.w.write_all(&weight.to_le_bytes())?;
+        }
+        self.items += 1;
+        Ok(())
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    pub fn finish(self) -> Result<u64> {
+        self.w.finish()?;
+        Ok(self.items)
+    }
+}
+
+/// Streaming cursor over `se.bin`: read Γ(v) for computed vertices, skip
+/// over inactive runs (the §3.2 algorithm; the skip lands in the reader's
+/// buffer for short runs and costs one seek otherwise).
+pub struct EdgeStreamCursor {
+    r: StreamReader,
+    weighted: bool,
+    pending_skip_items: u64,
+    items_read: u64,
+    items_skipped: u64,
+}
+
+impl EdgeStreamCursor {
+    pub fn open(store: &MachineStore, buf: usize) -> Result<Self> {
+        Ok(Self {
+            r: StreamReader::open(&store.se_path(), buf)?,
+            weighted: store.weighted,
+            pending_skip_items: 0,
+            items_read: 0,
+            items_skipped: 0,
+        })
+    }
+
+    /// Note that the next `deg` items belong to a vertex that will not
+    /// compute — accumulate them into one lazy skip.
+    #[inline]
+    pub fn defer_skip(&mut self, deg: u32) {
+        self.pending_skip_items += deg as u64;
+    }
+
+    fn flush_skip(&mut self) -> Result<()> {
+        if self.pending_skip_items > 0 {
+            let bytes = self.pending_skip_items * item_size(self.weighted) as u64;
+            self.r.skip_bytes(bytes)?;
+            self.items_skipped += self.pending_skip_items;
+            self.pending_skip_items = 0;
+        }
+        Ok(())
+    }
+
+    /// Read the next `deg` items into `out` (cleared first).
+    pub fn read_adjacency(&mut self, deg: u32, out: &mut Vec<Edge>) -> Result<()> {
+        self.flush_skip()?;
+        out.clear();
+        out.reserve(deg as usize);
+        let isz = item_size(self.weighted);
+        let mut buf = [0u8; 8];
+        for _ in 0..deg {
+            self.r.read_exact(&mut buf[..isz])?;
+            let nbr = u32::from_le_bytes(buf[..4].try_into().unwrap());
+            let weight = if self.weighted {
+                f32::from_le_bytes(buf[4..8].try_into().unwrap())
+            } else {
+                1.0
+            };
+            out.push(Edge { nbr, weight });
+        }
+        self.items_read += deg as u64;
+        Ok(())
+    }
+
+    /// (items_read, items_skipped, seeks)
+    pub fn io_stats(&self) -> (u64, u64, u64) {
+        (self.items_read, self.items_skipped, self.r.seeks())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "graphd_store_{name}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_store(dir: &Path, weighted: bool) -> MachineStore {
+        let store = MachineStore {
+            dir: dir.to_path_buf(),
+            machine: 1,
+            num_machines: 4,
+            total_vertices: 12,
+            weighted,
+            recoded: false,
+            ids: vec![2, 22, 32],
+            degs: vec![2, 3, 1],
+        };
+        store.save().unwrap();
+        let mut w = EdgeStreamWriter::create(dir, weighted, 64).unwrap();
+        for (i, nbr) in [(0u32, 5u32), (1, 6), (2, 7), (3, 8), (4, 9), (5, 10)] {
+            w.push(nbr, i as f32 + 0.5).unwrap();
+        }
+        w.finish().unwrap();
+        store
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let d = tmp("roundtrip");
+        let s = sample_store(&d, false);
+        let l = MachineStore::load(&d).unwrap();
+        assert_eq!(l.ids, s.ids);
+        assert_eq!(l.degs, s.degs);
+        assert_eq!(l.total_vertices, 12);
+        assert_eq!(l.machine, 1);
+        assert!(!l.recoded);
+        assert_eq!(l.id_at(1), 22);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn recoded_store_implicit_ids() {
+        let d = tmp("recoded");
+        let mut s = sample_store(&d, false);
+        s.recoded = true;
+        s.ids.clear();
+        s.save().unwrap();
+        let l = MachineStore::load(&d).unwrap();
+        assert!(l.recoded);
+        // pos·n + i with n=4, i=1
+        assert_eq!(l.id_at(0), 1);
+        assert_eq!(l.id_at(2), 9);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn cursor_reads_and_skips() {
+        let d = tmp("cursor");
+        let s = sample_store(&d, false);
+        let mut c = EdgeStreamCursor::open(&s, 8).unwrap(); // tiny buffer
+        let mut edges = Vec::new();
+        // read vertex 0 (deg 2): items 5,6
+        c.read_adjacency(2, &mut edges).unwrap();
+        assert_eq!(edges[0].nbr, 5);
+        assert_eq!(edges[1].nbr, 6);
+        assert_eq!(edges[1].weight, 1.0);
+        // skip vertex 1 (deg 3), read vertex 2 (deg 1): item 10
+        c.defer_skip(3);
+        c.read_adjacency(1, &mut edges).unwrap();
+        assert_eq!(edges[0].nbr, 10);
+        let (read, skipped, _) = c.io_stats();
+        assert_eq!((read, skipped), (3, 3));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn cursor_weighted_items() {
+        let d = tmp("weighted");
+        let s = sample_store(&d, true);
+        let mut c = EdgeStreamCursor::open(&s, 64).unwrap();
+        let mut edges = Vec::new();
+        c.read_adjacency(2, &mut edges).unwrap();
+        assert_eq!(edges[0], Edge { nbr: 5, weight: 0.5 });
+        assert_eq!(edges[1], Edge { nbr: 6, weight: 1.5 });
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn trailing_skip_without_read_ok() {
+        let d = tmp("trail");
+        let s = sample_store(&d, false);
+        let mut c = EdgeStreamCursor::open(&s, 8).unwrap();
+        c.defer_skip(6); // whole stream skipped, never flushed — fine
+        let (r, sk, _) = c.io_stats();
+        assert_eq!((r, sk), (0, 0)); // lazy: nothing actually happened
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -1,0 +1,315 @@
+//! Synchronization plumbing for the parallel framework (§4).
+//!
+//! Within a machine, the three units coordinate through a single
+//! mutex+condvar over step counters ([`MachineSync`]):
+//!
+//! * `compute_done` — U_c finished generating superstep-s messages, so U_s
+//!   may emit end tags for s once the OMS watermarks are drained;
+//! * `recv_done`    — U_r received *all* superstep-s messages addressed to
+//!   this machine (n end tags), so U_c may compute superstep s+1;
+//! * `send_allowed` — the receiving units of all machines synchronized for
+//!   superstep s−1, so U_s may start transmitting superstep-s messages
+//!   (the paper's rule that step-(i+1) traffic must not delay step-i);
+//! * `decided`      — U_c's global control sync for superstep s completed
+//!   (carries the job-continue verdict, letting U_s/U_r terminate).
+//!
+//! Between machines, compute units and receiving units each synchronize
+//! through a [`Rendezvous`] barrier (the paper's two independent
+//! synchronizations: aggregator/control among U_c's — early; transmission
+//! completion among U_r's — late).
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Per-machine unit coordination state.
+#[derive(Debug)]
+pub struct MachineSync {
+    state: Mutex<State>,
+    cond: Condvar,
+}
+
+#[derive(Debug)]
+struct State {
+    compute_done: i64,
+    recv_done: i64,
+    send_allowed: i64,
+    /// Per-step job-continue verdicts: `verdicts[s]` answers "does the job
+    /// continue past superstep s?".  Stored per step — U_c can race one
+    /// superstep ahead of U_s/U_r, so "latest verdict" would let a unit
+    /// skip its final superstep (a real bug this representation fixes).
+    verdicts: Vec<bool>,
+    /// Per-destination OMS file watermarks, one entry pushed per superstep:
+    /// `watermarks[dst][s]` = first file index NOT belonging to steps ≤ s.
+    watermarks: Vec<Vec<u64>>,
+    /// A unit died with an error; waiting units panic instead of
+    /// deadlocking (the error itself is propagated by the joiner).
+    failed: Option<String>,
+}
+
+impl MachineSync {
+    pub fn new(num_machines: usize) -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(State {
+                compute_done: -1,
+                recv_done: -1,
+                send_allowed: 0, // superstep-0 sending needs no prior sync
+                verdicts: Vec::new(),
+                watermarks: vec![Vec::new(); num_machines],
+                failed: None,
+            }),
+            cond: Condvar::new(),
+        })
+    }
+
+    fn update(&self, f: impl FnOnce(&mut State)) {
+        let mut st = self.state.lock().unwrap();
+        f(&mut st);
+        self.cond.notify_all();
+    }
+
+    fn wait_until<T>(&self, mut pred: impl FnMut(&State) -> Option<T>) -> T {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(cause) = &st.failed {
+                panic!("sibling unit failed: {cause}");
+            }
+            if let Some(v) = pred(&st) {
+                return v;
+            }
+            st = self.cond.wait(st).unwrap();
+        }
+    }
+
+    /// Poison the machine: a unit died; wake all waiters so they panic
+    /// instead of deadlocking.
+    pub fn fail(&self, cause: String) {
+        self.update(|st| st.failed = Some(cause));
+    }
+
+    // ---- U_c side ----
+
+    /// U_c finished superstep `s`; publish the per-OMS watermarks captured
+    /// at finalize time.
+    pub fn set_compute_done(&self, s: u64, marks: Vec<u64>) {
+        self.update(|st| {
+            st.compute_done = s as i64;
+            for (dst, m) in marks.into_iter().enumerate() {
+                debug_assert_eq!(st.watermarks[dst].len(), s as usize);
+                st.watermarks[dst].push(m);
+            }
+        });
+    }
+
+    /// Publish the global control decision for superstep `s`.
+    pub fn set_decided(&self, s: u64, continues: bool) {
+        self.update(|st| {
+            debug_assert_eq!(st.verdicts.len(), s as usize, "decision out of order");
+            st.verdicts.push(continues);
+        });
+    }
+
+    /// U_c blocks until all superstep-`s` messages for this machine arrived.
+    pub fn wait_recv_done(&self, s: u64) {
+        self.wait_until(|st| (st.recv_done >= s as i64).then_some(()));
+    }
+
+    // ---- U_s side ----
+
+    /// U_s blocks until it may transmit superstep-`s` messages.
+    pub fn wait_send_allowed(&self, s: u64) {
+        self.wait_until(|st| (st.send_allowed >= s as i64).then_some(()));
+    }
+
+    /// U_s blocks until U_c finished superstep `s`, returning the OMS
+    /// watermarks for `s` (so it can tell step-s files from step-(s+1)).
+    pub fn wait_compute_done(&self, s: u64) -> Vec<u64> {
+        self.wait_until(|st| {
+            (st.compute_done >= s as i64)
+                .then(|| st.watermarks.iter().map(|w| w[s as usize]).collect())
+        })
+    }
+
+    /// Watermark for one destination, if already published.
+    pub fn try_watermark(&self, dst: usize, s: u64) -> Option<u64> {
+        let st = self.state.lock().unwrap();
+        st.watermarks[dst].get(s as usize).copied()
+    }
+
+    /// Sleep until new OMS files may exist (notified on every publish);
+    /// bounded wait keeps the sender responsive to progress it can't
+    /// observe through this condvar (file closes inside SplittableStream).
+    pub fn idle_wait(&self) {
+        let st = self.state.lock().unwrap();
+        let _ = self
+            .cond
+            .wait_timeout(st, std::time::Duration::from_micros(500))
+            .unwrap();
+    }
+
+    /// Wake any unit in `idle_wait` (U_c calls this after closing OMS files).
+    pub fn kick(&self) {
+        self.cond.notify_all();
+    }
+
+    // ---- U_r side ----
+
+    /// U_r finished receiving superstep `s` for this machine.
+    pub fn set_recv_done(&self, s: u64) {
+        self.update(|st| st.recv_done = s as i64);
+    }
+
+    /// U_r (after the inter-machine barrier) allows superstep-`s` sending.
+    pub fn set_send_allowed(&self, s: u64) {
+        self.update(|st| st.send_allowed = st.send_allowed.max(s as i64));
+    }
+
+    /// Block until the control decision for superstep `s` is published;
+    /// returns whether the job continues *past superstep s* (the verdict
+    /// for exactly step `s`, even if later steps were already decided).
+    pub fn wait_decided(&self, s: u64) -> bool {
+        self.wait_until(|st| st.verdicts.get(s as usize).copied())
+    }
+}
+
+/// Reusable N-party barrier with a leader section: all parties deposit,
+/// one (the last to arrive) runs `leader` over the deposits, then everyone
+/// observes the result.  (std's Barrier has no deposit/result phase.)
+pub struct Rendezvous<T, R> {
+    n: usize,
+    state: Mutex<RvState<T, R>>,
+    cond: Condvar,
+}
+
+struct RvState<T, R> {
+    round: u64,
+    deposits: Vec<Option<T>>,
+    result: Option<R>,
+    left: usize,
+}
+
+impl<T, R: Clone> Rendezvous<T, R> {
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(Self {
+            n,
+            state: Mutex::new(RvState {
+                round: 0,
+                deposits: (0..n).map(|_| None).collect(),
+                result: None,
+                left: 0,
+            }),
+            cond: Condvar::new(),
+        })
+    }
+
+    /// Deposit `value` for `who`, run `leader` once all `n` deposited, and
+    /// return the (cloned) leader result to every party.
+    pub fn exchange(&self, who: usize, value: T, leader: impl FnOnce(Vec<T>) -> R) -> R {
+        let mut st = self.state.lock().unwrap();
+        // Wait for the previous round's stragglers to pick up their result.
+        while st.left > 0 {
+            st = self.cond.wait(st).unwrap();
+        }
+        let round = st.round;
+        debug_assert!(st.deposits[who].is_none(), "double deposit by {who}");
+        st.deposits[who] = Some(value);
+        let arrived = st.deposits.iter().filter(|d| d.is_some()).count();
+        if arrived == self.n {
+            let vals: Vec<T> = st.deposits.iter_mut().map(|d| d.take().unwrap()).collect();
+            let r = leader(vals);
+            st.result = Some(r.clone());
+            st.left = self.n - 1;
+            st.round += 1;
+            self.cond.notify_all();
+            return r;
+        }
+        loop {
+            st = self.cond.wait(st).unwrap();
+            if st.round > round {
+                let r = st.result.as_ref().unwrap().clone();
+                st.left -= 1;
+                if st.left == 0 {
+                    st.result = None;
+                    self.cond.notify_all();
+                }
+                return r;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn machine_sync_step_counters() {
+        let ms = MachineSync::new(2);
+        let ms2 = ms.clone();
+        let t = std::thread::spawn(move || {
+            ms2.wait_recv_done(0);
+            ms2.wait_send_allowed(1);
+            true
+        });
+        ms.set_recv_done(0);
+        ms.set_send_allowed(1);
+        assert!(t.join().unwrap());
+    }
+
+    #[test]
+    fn watermarks_per_step() {
+        let ms = MachineSync::new(3);
+        ms.set_compute_done(0, vec![2, 0, 1]);
+        let m = ms.wait_compute_done(0);
+        assert_eq!(m, vec![2, 0, 1]);
+        assert_eq!(ms.try_watermark(0, 0), Some(2));
+        assert_eq!(ms.try_watermark(0, 1), None);
+        ms.set_compute_done(1, vec![5, 1, 1]);
+        assert_eq!(ms.wait_compute_done(1), vec![5, 1, 1]);
+    }
+
+    #[test]
+    fn decided_carries_verdict() {
+        let ms = MachineSync::new(1);
+        ms.set_decided(0, true);
+        assert!(ms.wait_decided(0));
+        ms.set_decided(1, false);
+        assert!(!ms.wait_decided(1));
+    }
+
+    #[test]
+    fn rendezvous_sums_and_broadcasts() {
+        let rv: Arc<Rendezvous<u64, u64>> = Rendezvous::new(4);
+        let total = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for who in 0..4 {
+                let rv = rv.clone();
+                let total = &total;
+                s.spawn(move || {
+                    let r = rv.exchange(who, who as u64 + 1, |vs| vs.iter().sum());
+                    total.fetch_add(r, Ordering::SeqCst);
+                });
+            }
+        });
+        // each of 4 parties sees 1+2+3+4 = 10
+        assert_eq!(total.load(Ordering::SeqCst), 40);
+    }
+
+    #[test]
+    fn rendezvous_multiple_rounds() {
+        let rv: Arc<Rendezvous<u64, u64>> = Rendezvous::new(3);
+        std::thread::scope(|s| {
+            for who in 0..3 {
+                let rv = rv.clone();
+                s.spawn(move || {
+                    for round in 0..50u64 {
+                        let r = rv.exchange(who, round, |vs| {
+                            assert!(vs.iter().all(|&v| v == round));
+                            round * 3
+                        });
+                        assert_eq!(r, round * 3);
+                    }
+                });
+            }
+        });
+    }
+}

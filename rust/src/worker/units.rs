@@ -1,0 +1,1155 @@
+//! The three parallel units per machine (§4) and the per-machine job driver.
+//!
+//! * **U_c** (compute): streams `S^E` + the incoming messages of the
+//!   previous superstep, calls `compute()` (or the vectorized
+//!   `block_update` on the XLA kernels in recoded mode), and appends raw
+//!   outgoing messages to one OMS per destination machine.  It synchronizes
+//!   aggregator/control data with the other compute units *early* — right
+//!   after computation — so superstep i+1 can start while superstep-i
+//!   messages are still in flight.
+//! * **U_s** (send): ring-scans the OMSs (§3.3.1 "Sending Strategies"),
+//!   ships fully-written files.  With a combiner it combines all pending
+//!   files of an OMS before sending: by external merge-sort in IO-Basic,
+//!   or through the in-memory array `A_s` in recoded mode (§5 — the
+//!   recoded-ID bijection makes the target slot `id / n`, eliminating the
+//!   merge-sort entirely).  Once U_c finished the superstep and an OMS is
+//!   drained it emits that destination's end tag.  It must not transmit
+//!   superstep-(i+1) messages before every machine received all
+//!   superstep-i messages.
+//! * **U_r** (receive): counts end tags (n per superstep); spills sorted
+//!   batches and merges them into `S^I` (IO-Basic) or combines messages
+//!   directly into the in-memory array `A_r` (recoded, §5), then
+//!   synchronizes with the other receiving units and unblocks sending of
+//!   the next superstep.
+
+use crate::api::{BlockCtx, Context, Edge, VertexProgram};
+use crate::config::{JobConfig, Mode};
+use crate::error::{Error, Result};
+use crate::metrics::{MachineMetrics, StepMetrics};
+use crate::msg::{encode_msg, msg_rec_size, rec_payload, rec_target, Codec};
+use crate::net::{NetReceiver, NetSender, Payload};
+use crate::runtime::KernelSet;
+use crate::stream::{merge, SplittableStream, StreamReader, StreamWriter};
+use crate::util::bitset::BitSet;
+use crate::util::timer::Stopwatch;
+use crate::worker::storage::{EdgeStreamCursor, MachineStore};
+use crate::worker::sync::{MachineSync, Rendezvous};
+use crate::worker::Partitioning;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Messages of one finished superstep, handed from U_r to U_c.
+pub enum Incoming<M> {
+    /// IO-Basic: a single sorted message stream `S^I` on disk.
+    Sorted { path: PathBuf, msgs: u64 },
+    /// Recoded: combined messages in memory (`A_r`), plus a received
+    /// bitmap (strictly more precise than the paper's `A_r[pos] != e0`
+    /// convention; same asymptotic memory).
+    Digested { ar: Vec<M>, bits: BitSet },
+}
+
+/// Step-ordered handoff U_r → U_c.
+pub struct IncomingQueue<M> {
+    q: Mutex<VecDeque<(u64, Incoming<M>)>>,
+    cond: Condvar,
+}
+
+impl<M: Send> IncomingQueue<M> {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            q: Mutex::new(VecDeque::new()),
+            cond: Condvar::new(),
+        })
+    }
+
+    pub fn put(&self, step: u64, inc: Incoming<M>) {
+        self.q.lock().unwrap().push_back((step, inc));
+        self.cond.notify_all();
+    }
+
+    pub fn take(&self, step: u64) -> Incoming<M> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(pos) = q.iter().position(|(s, _)| *s == step) {
+                return q.remove(pos).unwrap().1;
+            }
+            q = self.cond.wait(q).unwrap();
+        }
+    }
+
+    /// Run `f` over the queued entry for `step` without consuming it
+    /// (used by synchronous checkpointing).  The entry must be present.
+    pub fn peek_with<R>(&self, step: u64, f: impl FnOnce(&Incoming<M>) -> R) -> R {
+        let q = self.q.lock().unwrap();
+        let (_, inc) = q
+            .iter()
+            .find(|(s, _)| *s == step)
+            .expect("peek_with: step not queued");
+        f(inc)
+    }
+}
+
+/// Global (inter-machine) control report deposited by each U_c per step.
+pub struct UcReport<A> {
+    pub msgs_sent: u64,
+    pub active: u64,
+    pub agg: A,
+}
+
+/// Leader verdict broadcast back to every U_c.
+#[derive(Clone)]
+pub struct UcDecision<A> {
+    pub continues: bool,
+    pub agg: Arc<A>,
+}
+
+/// Everything shared across the machines of one job.
+pub struct JobGlobal<P: VertexProgram> {
+    pub program: Arc<P>,
+    pub cfg: JobConfig,
+    pub n: usize,
+    pub total_vertices: u64,
+    /// max over machines of |V(W)| — sizes A_s (§5). Note recoded IDs are
+    /// `n·pos + i`, so with uneven partitions they range up to
+    /// `n·max_local`, not |V|.
+    pub max_local: usize,
+    /// Checkpointing (§3.4): dir + cadence, None = disabled.
+    pub checkpoint: Option<crate::ft::CheckpointCfg>,
+    /// Absolute superstep number of local step 0 (0 for fresh jobs,
+    /// `ckpt_step + 1` when resuming).
+    pub step_base: u64,
+    pub uc_rv: Arc<Rendezvous<UcReport<P::Agg>, UcDecision<P::Agg>>>,
+    pub ur_rv: Arc<Rendezvous<(), ()>>,
+}
+
+/// Per-machine output returned by [`run_machine`].
+pub struct MachineOutput<P: VertexProgram> {
+    pub machine: usize,
+    pub ids: Vec<u32>,
+    pub values: Vec<P::Value>,
+    pub metrics: MachineMetrics,
+    pub supersteps: u64,
+    /// Globally merged aggregate of the final superstep.
+    pub final_agg: Arc<P::Agg>,
+}
+
+/// Shared, step-indexed metrics sink written by all three units.
+#[derive(Clone)]
+pub struct MetricsSink(Arc<Mutex<Vec<StepMetrics>>>);
+
+impl MetricsSink {
+    pub fn new() -> Self {
+        Self(Arc::new(Mutex::new(Vec::new())))
+    }
+
+    pub fn with_step(&self, step: u64, f: impl FnOnce(&mut StepMetrics)) {
+        let mut v = self.0.lock().unwrap();
+        while v.len() <= step as usize {
+            let s = v.len() as u64;
+            v.push(StepMetrics {
+                step: s,
+                ..Default::default()
+            });
+        }
+        f(&mut v[step as usize]);
+    }
+
+    pub fn snapshot(&self) -> Vec<StepMetrics> {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// Run one machine's full job: spawns U_s and U_r, runs U_c inline, joins.
+pub fn run_machine<P: VertexProgram>(
+    global: &JobGlobal<P>,
+    store: MachineStore,
+    init_values: Vec<P::Value>,
+    sender: NetSender,
+    receiver: NetReceiver,
+    disk: Option<std::sync::Arc<crate::util::diskio::DiskBw>>,
+) -> Result<MachineOutput<P>> {
+    run_machine_resumed(global, store, init_values, None, None, sender, receiver, disk)
+}
+
+/// Like [`run_machine`] but optionally seeded from a checkpoint: the
+/// halted bitmap and the incoming messages of the first local superstep.
+#[allow(clippy::too_many_arguments)]
+pub fn run_machine_resumed<P: VertexProgram>(
+    global: &JobGlobal<P>,
+    store: MachineStore,
+    init_values: Vec<P::Value>,
+    init_halted: Option<BitSet>,
+    init_incoming: Option<Incoming<P::Msg>>,
+    sender: NetSender,
+    receiver: NetReceiver,
+    disk: Option<std::sync::Arc<crate::util::diskio::DiskBw>>,
+) -> Result<MachineOutput<P>> {
+    let me = store.machine;
+    let n = global.n;
+    let msync = MachineSync::new(n);
+    let incoming: Arc<IncomingQueue<P::Msg>> = IncomingQueue::new();
+    let sink = MetricsSink::new();
+
+    // One OMS per destination machine, living for the whole job.
+    let job_dir = store.dir.join("job");
+    let _ = std::fs::remove_dir_all(&job_dir);
+    std::fs::create_dir_all(&job_dir)?;
+    let mut oms = Vec::with_capacity(n);
+    for d in 0..n {
+        oms.push(SplittableStream::create(
+            &job_dir.join(format!("oms_{d}")),
+            global.cfg.oms_file_cap,
+            global.cfg.stream_buf,
+        )?);
+    }
+    let oms = Arc::new(oms);
+
+    std::thread::scope(|scope| -> Result<MachineOutput<P>> {
+        let us_handle = {
+            let oms = oms.clone();
+            let msync = msync.clone();
+            let sink = sink.clone();
+            let sender = sender.clone();
+            let job_dir = job_dir.clone();
+            let disk = disk.clone();
+            scope.spawn(move || {
+                let _dg = crate::util::diskio::register(disk);
+                let r = sender_unit(global, me, oms, msync.clone(), sender, job_dir, sink);
+                if let Err(e) = &r {
+                    // Surface immediately and poison the machine: U_c may
+                    // be blocked and would otherwise deadlock.
+                    eprintln!("[graphd] U_s of machine {me} failed: {e}");
+                    msync.fail(format!("U_s: {e}"));
+                }
+                r
+            })
+        };
+        let ur_handle = {
+            let msync = msync.clone();
+            let incoming = incoming.clone();
+            let sink = sink.clone();
+            let local = store.local_vertices();
+            let job_dir = job_dir.clone();
+            let disk = disk.clone();
+            scope.spawn(move || {
+                let _dg = crate::util::diskio::register(disk);
+                let r = receiver_unit(
+                    global, me, local, receiver, msync.clone(), incoming, job_dir, sink,
+                );
+                if let Err(e) = &r {
+                    eprintln!("[graphd] U_r of machine {me} failed: {e}");
+                    msync.fail(format!("U_r: {e}"));
+                }
+                r
+            })
+        };
+
+        let uc_out = {
+            let _dg = crate::util::diskio::register(disk.clone());
+            compute_unit(
+                global, store, init_values, init_halted, init_incoming, oms, msync, incoming,
+                sender, &sink,
+            )
+        };
+
+        us_handle.join().map_err(|e| Error::WorkerPanic {
+            machine: me,
+            cause: format!("U_s: {e:?}"),
+        })??;
+        ur_handle.join().map_err(|e| Error::WorkerPanic {
+            machine: me,
+            cause: format!("U_r: {e:?}"),
+        })??;
+
+        let (ids, values, peak_state, supersteps, final_agg) = uc_out?;
+        let metrics = MachineMetrics {
+            machine: me,
+            steps: sink.snapshot(),
+            peak_state_bytes: peak_state,
+        };
+        Ok(MachineOutput {
+            machine: me,
+            ids,
+            values,
+            metrics,
+            supersteps,
+            final_agg,
+        })
+    })
+}
+
+// --------------------------------------------------------------------- U_s
+
+type TakenFile = (u64, PathBuf, u64);
+
+fn sender_unit<P: VertexProgram>(
+    global: &JobGlobal<P>,
+    me: usize,
+    oms: Arc<Vec<Arc<SplittableStream>>>,
+    msync: Arc<MachineSync>,
+    mut sender: NetSender,
+    job_dir: PathBuf,
+    sink: MetricsSink,
+) -> Result<()> {
+    let n = global.n;
+    let rec_size = msg_rec_size::<P::Msg>();
+    let combiner = global.program.combiner();
+    let recoded_as = global.cfg.mode == Mode::Recoded && combiner.is_some();
+    let tmp = job_dir.join("us_tmp");
+
+    // A_s (§5): one slot per position of the destination machine; bounded
+    // by max |V(W)| (Lemma 1: < 2|V|/n w.h.p.). Reused across OMSs/steps.
+    let as_cap = global.max_local + 1;
+    let mut a_s: Vec<P::Msg> = if recoded_as {
+        vec![combiner.unwrap().identity(); as_cap]
+    } else {
+        Vec::new()
+    };
+    let mut as_touched: Vec<u32> = Vec::new();
+    let mut as_bits = BitSet::new(if recoded_as { as_cap } else { 0 });
+
+    // Files this unit has taken per destination; step drained towards dst
+    // when sent_files[dst] == watermark[dst][step].
+    let mut sent_files = vec![0u64; n];
+
+    let mut step: u64 = 0;
+    loop {
+        msync.wait_send_allowed(step);
+        let mut sw = Stopwatch::new();
+        let mut marks: Option<Vec<u64>> = None;
+        let mut end_sent = vec![false; n];
+        let mut ends_left = n;
+        let mut p = me; // ring position; per-machine start offset (§3.3.1)
+
+        while ends_left > 0 {
+            if marks.is_none() {
+                marks = (0..n)
+                    .map(|d| msync.try_watermark(d, step))
+                    .collect::<Option<Vec<u64>>>();
+            }
+            let mut progressed = false;
+            for off in 0..n {
+                let j = (p + off) % n;
+                if end_sent[j] {
+                    continue;
+                }
+                let upto = marks.as_ref().map_or(u64::MAX, |m| m[j]);
+                if combiner.is_some() {
+                    let files = oms[j].try_take_all_upto(upto);
+                    if files.is_empty() {
+                        continue;
+                    }
+                    // Guard the unknown-watermark race: files closed after
+                    // U_c finished this step belong to the next superstep.
+                    let files = put_back_overshoot(files, &msync, j, step, &oms[j]);
+                    if files.is_empty() {
+                        continue;
+                    }
+                    sent_files[j] += files.len() as u64;
+                    sw.start();
+                    let batch = if recoded_as {
+                        combine_in_memory::<P>(
+                            &files, rec_size, combiner.unwrap(), n,
+                            &mut a_s, &mut as_touched, &mut as_bits,
+                        )?
+                    } else {
+                        combine_by_mergesort::<P>(
+                            &files, rec_size, combiner.unwrap(),
+                            global.cfg.merge_k, global.cfg.stream_buf, &tmp,
+                        )?
+                    };
+                    let (nbytes, nmsgs) = (batch.len() as u64, (batch.len() / rec_size) as u64);
+                    sender.send(j, step, Payload::Data(batch));
+                    sw.stop();
+                    sink.with_step(step, |m| {
+                        m.bytes_sent += nbytes;
+                        m.msgs_sent += nmsgs;
+                    });
+                    for (_, path, _) in &files {
+                        gc(path, &global.cfg);
+                    }
+                    progressed = true;
+                    p = (j + 1) % n;
+                    break;
+                } else if let Some((idx, path, bytes)) = oms[j].try_take_next_upto(upto) {
+                    if overshoots(idx, &msync, j, step) {
+                        oms[j].put_back(idx, path, bytes);
+                        continue;
+                    }
+                    sent_files[j] += 1;
+                    sw.start();
+                    let data = std::fs::read(&path)?;
+                    crate::util::diskio::charge(data.len());
+                    let (nbytes, nmsgs) = (data.len() as u64, (data.len() / rec_size) as u64);
+                    sender.send(j, step, Payload::Data(data));
+                    sw.stop();
+                    sink.with_step(step, |m| {
+                        m.bytes_sent += nbytes;
+                        m.msgs_sent += nmsgs;
+                    });
+                    gc(&path, &global.cfg);
+                    progressed = true;
+                    p = (j + 1) % n;
+                    break;
+                }
+            }
+            if !progressed {
+                if let Some(m) = &marks {
+                    for j in 0..n {
+                        if !end_sent[j] && sent_files[j] == m[j] {
+                            sw.time(|| sender.send(j, step, Payload::End));
+                            end_sent[j] = true;
+                            ends_left -= 1;
+                        }
+                    }
+                    if ends_left == 0 {
+                        break;
+                    }
+                }
+                msync.idle_wait();
+            }
+        }
+        sink.with_step(step, |m| m.m_send_secs += sw.secs());
+        if !msync.wait_decided(step) {
+            return Ok(());
+        }
+        step += 1;
+    }
+}
+
+fn overshoots(idx: u64, msync: &MachineSync, dst: usize, step: u64) -> bool {
+    matches!(msync.try_watermark(dst, step), Some(m) if idx >= m)
+}
+
+fn put_back_overshoot(
+    files: Vec<TakenFile>,
+    msync: &MachineSync,
+    dst: usize,
+    step: u64,
+    oms: &SplittableStream,
+) -> Vec<TakenFile> {
+    match msync.try_watermark(dst, step) {
+        Some(m) => {
+            let mut keep = Vec::with_capacity(files.len());
+            let mut back = Vec::new();
+            for f in files {
+                if f.0 >= m {
+                    back.push(f);
+                } else {
+                    keep.push(f);
+                }
+            }
+            // Put back in reverse so push_front restores ascending order.
+            for f in back.into_iter().rev() {
+                oms.put_back(f.0, f.1, f.2);
+            }
+            keep
+        }
+        None => files,
+    }
+}
+
+fn gc(path: &PathBuf, cfg: &JobConfig) {
+    if !cfg.keep_oms_for_recovery {
+        SplittableStream::gc_file(path);
+    }
+}
+
+/// Recoded-mode in-memory combining (§5): fold every message of the taken
+/// files into `A_s[target / n]`, then emit one record per touched slot.
+fn combine_in_memory<P: VertexProgram>(
+    files: &[TakenFile],
+    rec_size: usize,
+    combiner: &dyn crate::api::Combiner<P::Msg>,
+    n: usize,
+    a_s: &mut [P::Msg],
+    touched: &mut Vec<u32>,
+    bits: &mut BitSet,
+) -> Result<Vec<u8>> {
+    for (_, path, _) in files {
+        let data = std::fs::read(path)?;
+        crate::util::diskio::charge(data.len());
+        for rec in data.chunks_exact(rec_size) {
+            let target = rec_target(rec);
+            let pos = target as usize / n;
+            if pos >= a_s.len() {
+                return Err(Error::CorruptStream(format!(
+                    "A_s overflow: target {target} pos {pos} cap {} file {path:?} len {}",
+                    a_s.len(),
+                    data.len()
+                )));
+            }
+            let m = rec_payload::<P::Msg>(rec);
+            if bits.get(pos) {
+                combiner.combine(&mut a_s[pos], &m);
+            } else {
+                a_s[pos] = m;
+                bits.set(pos, true);
+                touched.push(target);
+            }
+        }
+    }
+    // Deterministic output order helps tests; sort cost is per-send-batch.
+    touched.sort_unstable();
+    let mut out = Vec::with_capacity(touched.len() * rec_size);
+    for &t in touched.iter() {
+        let pos = t as usize / n;
+        encode_msg(t, &a_s[pos], &mut out);
+        a_s[pos] = combiner.identity(); // reset for the next batch (§5)
+        bits.set(pos, false);
+    }
+    touched.clear();
+    Ok(out)
+}
+
+/// IO-Basic pre-send combining: in-memory sort of each ≤ℬ file, k-way
+/// merge, one combining pass (§3.3.1).
+fn combine_by_mergesort<P: VertexProgram>(
+    files: &[TakenFile],
+    rec_size: usize,
+    combiner: &dyn crate::api::Combiner<P::Msg>,
+    merge_k: usize,
+    buf: usize,
+    tmp: &PathBuf,
+) -> Result<Vec<u8>> {
+    std::fs::create_dir_all(tmp)?;
+    let mut sorted_paths = Vec::with_capacity(files.len());
+    for (i, (_, path, _)) in files.iter().enumerate() {
+        let mut data = std::fs::read(path)?;
+        merge::sort_records(&mut data, rec_size);
+        let sp = tmp.join(format!("sorted_{i}"));
+        std::fs::write(&sp, &data)?;
+        crate::util::diskio::charge(2 * data.len());
+        sorted_paths.push(sp);
+    }
+    let mut out = Vec::new();
+    merge::merge_combine(
+        &sorted_paths,
+        rec_size,
+        merge_k,
+        buf,
+        tmp,
+        |acc, pay| {
+            let mut a = P::Msg::decode(acc);
+            let b = P::Msg::decode(pay);
+            combiner.combine(&mut a, &b);
+            a.encode(acc);
+        },
+        |rec| {
+            out.extend_from_slice(rec);
+            Ok(())
+        },
+    )?;
+    for p in sorted_paths {
+        let _ = std::fs::remove_file(p);
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------------------- U_r
+
+#[allow(clippy::too_many_arguments)]
+fn receiver_unit<P: VertexProgram>(
+    global: &JobGlobal<P>,
+    me: usize,
+    local_vertices: usize,
+    receiver: NetReceiver,
+    msync: Arc<MachineSync>,
+    incoming: Arc<IncomingQueue<P::Msg>>,
+    job_dir: PathBuf,
+    sink: MetricsSink,
+) -> Result<()> {
+    let n = global.n;
+    let rec_size = msg_rec_size::<P::Msg>();
+    let recoded_digest = global.cfg.mode == Mode::Recoded && global.program.combiner().is_some();
+    let part = Partitioning::Modulo;
+
+    let mut step: u64 = 0;
+    loop {
+        let mut ends = 0usize;
+        let mut msgs_recv = 0u64;
+        let mut spills: Vec<PathBuf> = Vec::new();
+        let mut ar: Vec<P::Msg> = Vec::new();
+        let mut bits = BitSet::new(local_vertices);
+        if recoded_digest {
+            ar = vec![global.program.combiner().unwrap().identity(); local_vertices];
+        }
+
+        while ends < n {
+            let b = receiver.recv();
+            debug_assert_eq!(b.step, step, "out-of-step batch from {}", b.src);
+            match b.payload {
+                Payload::End => ends += 1,
+                Payload::Data(mut data) => {
+                    debug_assert_eq!(data.len() % rec_size, 0);
+                    msgs_recv += (data.len() / rec_size) as u64;
+                    if recoded_digest {
+                        // §5: combine each message into A_r[pos] in memory.
+                        let comb = global.program.combiner().unwrap();
+                        for rec in data.chunks_exact(rec_size) {
+                            let pos = part.position_of(rec_target(rec), n);
+                            let m = rec_payload::<P::Msg>(rec);
+                            if bits.get(pos) {
+                                comb.combine(&mut ar[pos], &m);
+                            } else {
+                                ar[pos] = m;
+                                bits.set(pos, true);
+                            }
+                        }
+                    } else {
+                        // §3.3.2: sort the batch, spill to disk.
+                        merge::sort_records(&mut data, rec_size);
+                        let sp = job_dir.join(format!("imsp_{step}_{}", spills.len()));
+                        std::fs::write(&sp, &data)?;
+                        crate::util::diskio::charge(data.len());
+                        spills.push(sp);
+                    }
+                }
+                Payload::Load(_) | Payload::LoadEnd => {
+                    return Err(Error::CorruptStream("load batch during superstep".into()))
+                }
+            }
+        }
+
+        let inc = if recoded_digest {
+            Incoming::Digested { ar, bits }
+        } else {
+            let si = job_dir.join(format!("si_{step}"));
+            let mut w = StreamWriter::create(&si, global.cfg.stream_buf)?;
+            merge::merge_streams(
+                &spills,
+                rec_size,
+                global.cfg.merge_k,
+                global.cfg.stream_buf,
+                &job_dir,
+                |rec| w.write_all(rec),
+            )?;
+            w.finish()?;
+            for sp in &spills {
+                let _ = std::fs::remove_file(sp);
+            }
+            Incoming::Sorted {
+                path: si,
+                msgs: msgs_recv,
+            }
+        };
+        sink.with_step(step, |m| m.msgs_recv += msgs_recv);
+        incoming.put(step, inc);
+        msync.set_recv_done(step);
+
+        // Synchronize with the receiving units of all machines, then allow
+        // next-superstep transmission (§4).
+        global.ur_rv.exchange(me, (), |_| ());
+        msync.set_send_allowed(step + 1);
+
+        if !msync.wait_decided(step) {
+            return Ok(());
+        }
+        step += 1;
+    }
+}
+
+// --------------------------------------------------------------------- U_c
+
+type UcResult<P> = Result<(
+    Vec<u32>,
+    Vec<<P as VertexProgram>::Value>,
+    u64,
+    u64,
+    Arc<<P as VertexProgram>::Agg>,
+)>;
+
+/// Cursor over the sorted incoming stream `S^I`, advanced in lockstep with
+/// the A-order vertex scan.
+struct MsgCursor<M: Codec> {
+    reader: Option<StreamReader>,
+    next: Option<(u32, M)>,
+    rec: Vec<u8>,
+}
+
+impl<M: Codec> MsgCursor<M> {
+    fn open(path: &PathBuf, buf: usize) -> Result<Self> {
+        let reader = StreamReader::open(path, buf)?;
+        let mut c = Self {
+            reader: Some(reader),
+            next: None,
+            rec: vec![0u8; msg_rec_size::<M>()],
+        };
+        c.advance()?;
+        Ok(c)
+    }
+
+    fn empty() -> Self {
+        Self {
+            reader: None,
+            next: None,
+            rec: Vec::new(),
+        }
+    }
+
+    fn advance(&mut self) -> Result<()> {
+        self.next = None;
+        if let Some(r) = &mut self.reader {
+            if r.remaining() >= self.rec.len() as u64 {
+                r.read_exact(&mut self.rec)?;
+                self.next = Some((rec_target(&self.rec), rec_payload::<M>(&self.rec)));
+            }
+        }
+        Ok(())
+    }
+
+    fn peek_target(&self) -> Option<u32> {
+        self.next.as_ref().map(|(t, _)| *t)
+    }
+
+    fn take_for(&mut self, id: u32, out: &mut Vec<M>) -> Result<()> {
+        while let Some((t, m)) = &self.next {
+            if *t != id {
+                debug_assert!(*t > id, "S^I unsorted or vertex ids out of order");
+                break;
+            }
+            out.push(*m);
+            self.advance()?;
+        }
+        Ok(())
+    }
+}
+
+/// Outgoing-message sink for one superstep of U_c: raw OMS appends, or
+/// bounded in-memory buffers + synchronous (stalling) sends when the
+/// `disable_oms` ablation is active.
+struct Outbox<'a, M: Codec> {
+    _msg: std::marker::PhantomData<M>,
+    part: Partitioning,
+    n: usize,
+    rec_size: usize,
+    disable_oms: bool,
+    cap: usize,
+    step: u64,
+    stall_bufs: Vec<Vec<u8>>,
+    stall_sender: &'a mut NetSender,
+    oms: &'a [Arc<SplittableStream>],
+    /// Per-destination append batches: amortizes the OMS mutex + buffered
+    /// write over ~BATCH bytes of records (perf: -40% M-Gene, see
+    /// EXPERIMENTS.md §Perf).
+    batch: Vec<Vec<u8>>,
+    msgs_sent: u64,
+}
+
+/// Outbox per-destination batch size before an OMS append (bytes).
+const OUTBOX_BATCH: usize = 8 * 1024;
+
+impl<'a, M: Codec> Outbox<'a, M> {
+    #[inline]
+    fn send(&mut self, target: u32, m: M) {
+        self.msgs_sent += 1;
+        let dst = self.part.machine_of(target, self.n);
+        if self.disable_oms {
+            let buf = &mut self.stall_bufs[dst];
+            encode_msg(target, &m, buf);
+            if buf.len() + self.rec_size > self.cap {
+                let batch = std::mem::take(buf);
+                // Synchronous send: U_c blocks for the simulated
+                // transmission — the stall the paper's OMS design avoids.
+                self.stall_sender.send(dst, self.step, Payload::Data(batch));
+            }
+        } else {
+            let buf = &mut self.batch[dst];
+            encode_msg(target, &m, buf);
+            if buf.len() >= OUTBOX_BATCH {
+                self.oms[dst]
+                    .append_records(buf, self.rec_size)
+                    .expect("oms append");
+                buf.clear();
+            }
+        }
+    }
+
+    /// Flush remaining batches (end of superstep, before finalize).
+    fn flush_batches(&mut self) -> Result<()> {
+        if !self.disable_oms {
+            for dst in 0..self.n {
+                if !self.batch[dst].is_empty() {
+                    self.oms[dst].append_records(&self.batch[dst], self.rec_size)?;
+                    self.batch[dst].clear();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn flush_stall(&mut self) {
+        if self.disable_oms {
+            for dst in 0..self.n {
+                if !self.stall_bufs[dst].is_empty() {
+                    let batch = std::mem::take(&mut self.stall_bufs[dst]);
+                    self.stall_sender.send(dst, self.step, Payload::Data(batch));
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn compute_unit<P: VertexProgram>(
+    global: &JobGlobal<P>,
+    store: MachineStore,
+    mut vals: Vec<P::Value>,
+    init_halted: Option<BitSet>,
+    mut init_incoming: Option<Incoming<P::Msg>>,
+    oms: Arc<Vec<Arc<SplittableStream>>>,
+    msync: Arc<MachineSync>,
+    incoming: Arc<IncomingQueue<P::Msg>>,
+    mut stall_sender: NetSender,
+    sink: &MetricsSink,
+) -> UcResult<P> {
+    let n = global.n;
+    let me = store.machine;
+    let program = &*global.program;
+    let cfg = &global.cfg;
+    let local = store.local_vertices();
+    let part = if store.recoded {
+        Partitioning::Modulo
+    } else {
+        Partitioning::Hashed
+    };
+    let rec_size = msg_rec_size::<P::Msg>();
+    // Each U_c owns its kernel set: xla handles are not Send.
+    let kern = if cfg.use_xla {
+        KernelSet::load(&KernelSet::default_dir())?
+    } else {
+        KernelSet::native_only()
+    };
+
+    let mut halted = match init_halted {
+        Some(h) => h,
+        None => {
+            let mut h = BitSet::new(local);
+            for pos in 0..local {
+                if !program.initially_active(store.id_at(pos)) {
+                    h.set(pos, true);
+                }
+            }
+            h
+        }
+    };
+
+    // Peak in-memory state accounting (the O(|V|/n) bound).
+    let as_cap = global.max_local + 1;
+    let digesting = cfg.mode == Mode::Recoded && program.combiner().is_some();
+    let peak_state = (vals.len() * P::Value::SIZE) as u64
+        + store.state_bytes()
+        + (local as u64 / 8)
+        + if digesting {
+            // A_r (U_r) + A_s (U_s) message arrays
+            ((local + as_cap) * P::Msg::SIZE) as u64
+        } else {
+            0
+        };
+
+    let mut global_agg: Arc<P::Agg> = Arc::new(P::Agg::default());
+    let mut step: u64 = 0;
+    let supersteps;
+    loop {
+        let inc: Option<Incoming<P::Msg>> = if step == 0 {
+            // fresh job: no messages; resumed job: the checkpointed IMS
+            init_incoming.take()
+        } else {
+            msync.wait_recv_done(step - 1);
+            Some(incoming.take(step - 1))
+        };
+        let abs_step = global.step_base + step;
+
+        let mut sw = Stopwatch::new();
+        sw.start();
+        let mut local_agg = P::Agg::default();
+        let mut computed = 0u64;
+        let mut out = Outbox::<P::Msg> {
+            _msg: std::marker::PhantomData,
+            part,
+            n,
+            rec_size,
+            disable_oms: cfg.disable_oms,
+            cap: cfg.oms_file_cap,
+            step,
+            stall_bufs: vec![Vec::new(); if cfg.disable_oms { n } else { 0 }],
+            stall_sender: &mut stall_sender,
+            oms: &oms,
+            batch: vec![Vec::with_capacity(OUTBOX_BATCH + 64); if cfg.disable_oms { 0 } else { n }],
+            msgs_sent: 0,
+        };
+
+        if digesting {
+            let (sums, bits) = match inc {
+                Some(Incoming::Digested { ar, bits }) => (ar, bits),
+                None => (
+                    vec![program.combiner().unwrap().identity(); local],
+                    BitSet::new(local),
+                ),
+                Some(Incoming::Sorted { .. }) => {
+                    return Err(Error::Other("sorted incoming in recoded mode".into()))
+                }
+            };
+            recoded_pass::<P>(
+                program, &kern, &store, cfg, abs_step, global.total_vertices, &global_agg,
+                &mut local_agg, &mut vals, &mut halted, sums, bits, &mut out, &mut computed,
+                sink,
+            )?;
+        } else {
+            let mut cursor = match inc {
+                Some(Incoming::Sorted { path, .. }) => MsgCursor::open(&path, cfg.stream_buf)?,
+                None => MsgCursor::empty(),
+                Some(Incoming::Digested { .. }) => {
+                    return Err(Error::Other("digested incoming in basic mode".into()))
+                }
+            };
+            per_vertex_pass::<P>(
+                program, &store, cfg, abs_step, global.total_vertices, &global_agg,
+                &mut local_agg, &mut vals, &mut halted, &mut cursor, &mut out, &mut computed,
+                sink,
+            )?;
+        }
+
+        let msgs_sent = out.msgs_sent;
+        out.flush_batches()?;
+        out.flush_stall();
+        drop(out);
+
+        // Finalize this superstep's OMS files; publish watermarks.
+        let mut marks = Vec::with_capacity(n);
+        for d in 0..n {
+            marks.push(oms[d].close_current_file()?);
+        }
+        sw.stop();
+        let active_after = (local - halted.count_ones()) as u64;
+        sink.with_step(step, |m| {
+            m.m_gene_secs += sw.secs();
+            m.computed_vertices += computed;
+            m.active_after = active_after;
+            m.oms_files = marks.iter().copied().max().unwrap_or(0);
+        });
+        msync.set_compute_done(step, marks);
+        msync.kick();
+
+        // Early global control/aggregator sync among U_c's (§4).
+        let max_steps = cfg.max_supersteps;
+        let abs_step2 = abs_step;
+        let program2 = global.program.clone();
+        let decision = global.uc_rv.exchange(
+            me,
+            UcReport {
+                msgs_sent,
+                active: active_after,
+                agg: local_agg,
+            },
+            move |reports| {
+                let mut it = reports.into_iter();
+                let first = it.next().unwrap();
+                let mut agg = first.agg;
+                let mut sent = first.msgs_sent;
+                let mut active = first.active;
+                for r in it {
+                    program2.merge_agg(&mut agg, &r.agg);
+                    sent += r.msgs_sent;
+                    active += r.active;
+                }
+                let continues = (sent > 0 || active > 0)
+                    && (max_steps == 0 || abs_step2 + 1 < max_steps);
+                UcDecision {
+                    continues,
+                    agg: Arc::new(agg),
+                }
+            },
+        );
+        global_agg = decision.agg.clone();
+        msync.set_decided(step, decision.continues);
+
+        // Synchronous checkpoint (§3.4): after deciding step s, persist
+        // values + halted + the incoming messages of step s+1.
+        if let Some(ck) = &global.checkpoint {
+            if decision.continues && ck.every > 0 && (abs_step + 1) % ck.every == 0 {
+                msync.wait_recv_done(step);
+                incoming.peek_with(step, |inc| {
+                    crate::ft::write_machine_checkpoint(
+                        &ck.dir, abs_step, me, &vals, &halted, inc,
+                    )
+                })?;
+                // All machines must finish writing before the marker.
+                let done = global.ur_rv.clone();
+                let _ = done; // (checkpoint completion uses its own sync)
+                let ok = global.uc_rv.exchange(
+                    me,
+                    UcReport { msgs_sent: 0, active: 0, agg: P::Agg::default() },
+                    |_| UcDecision { continues: true, agg: Arc::new(P::Agg::default()) },
+                );
+                let _ = ok;
+                if me == 0 {
+                    crate::ft::mark_done(&ck.dir, abs_step)?;
+                }
+            }
+        }
+
+        if !decision.continues {
+            supersteps = step + 1;
+            break;
+        }
+        step += 1;
+    }
+
+    // Report results under input-space (old) IDs.
+    let ids = (0..local).map(|p| store.display_id_at(p)).collect();
+    Ok((ids, vals, peak_state, supersteps, global_agg))
+}
+
+/// Per-vertex pass over A + S^E (+ sorted S^I): IO-Basic and the
+/// non-combining recoded fallback.
+#[allow(clippy::too_many_arguments)]
+fn per_vertex_pass<P: VertexProgram>(
+    program: &P,
+    store: &MachineStore,
+    cfg: &JobConfig,
+    step: u64,
+    nv: u64,
+    global_agg: &P::Agg,
+    local_agg: &mut P::Agg,
+    vals: &mut [P::Value],
+    halted: &mut BitSet,
+    cursor: &mut MsgCursor<P::Msg>,
+    out: &mut Outbox<'_, P::Msg>,
+    computed: &mut u64,
+    sink: &MetricsSink,
+) -> Result<()> {
+    let local = store.local_vertices();
+    let mut se = EdgeStreamCursor::open(store, cfg.stream_buf)?;
+    let mut edges: Vec<Edge> = Vec::new();
+    let mut msgs: Vec<P::Msg> = Vec::new();
+
+    for pos in 0..local {
+        let id = store.id_at(pos);
+        let has_msg = cursor.peek_target() == Some(id);
+        let active = !halted.get(pos);
+        if !active && !has_msg {
+            se.defer_skip(store.degs[pos]);
+            continue;
+        }
+        msgs.clear();
+        if has_msg {
+            cursor.take_for(id, &mut msgs)?;
+            halted.set(pos, false); // message reactivates a halted vertex
+        }
+        se.read_adjacency(store.degs[pos], &mut edges)?;
+        *computed += 1;
+
+        let halt_flag;
+        {
+            let mut send_fn = |t: u32, m: P::Msg| out.send(t, m);
+            let mut ctx: Context<'_, P::Msg, P::Agg> =
+                Context::new(step, nv, global_agg, local_agg, &mut send_fn);
+            program.compute(&mut ctx, id, &mut vals[pos], &edges, &msgs);
+            halt_flag = ctx.halt;
+        }
+        if halt_flag {
+            halted.set(pos, true);
+        }
+    }
+    let (read, skipped, seeks) = se.io_stats();
+    sink.with_step(step, |m| {
+        m.edge_items_read += read;
+        m.edge_items_skipped += skipped;
+        m.seeks += seeks;
+    });
+    Ok(())
+}
+
+/// Recoded-mode pass fed by the digested A_r: vectorized block update (XLA
+/// kernels) with scalar per-vertex fallback.
+#[allow(clippy::too_many_arguments)]
+fn recoded_pass<P: VertexProgram>(
+    program: &P,
+    kern: &KernelSet,
+    store: &MachineStore,
+    cfg: &JobConfig,
+    step: u64,
+    nv: u64,
+    global_agg: &P::Agg,
+    local_agg: &mut P::Agg,
+    vals: &mut Vec<P::Value>,
+    halted: &mut BitSet,
+    sums: Vec<P::Msg>,
+    bits: BitSet,
+    out: &mut Outbox<'_, P::Msg>,
+    computed: &mut u64,
+    sink: &MetricsSink,
+) -> Result<()> {
+    let local = store.local_vertices();
+    let mut out_base: Vec<Option<P::Msg>> = vec![None; local];
+    let handled = {
+        let mut bctx = BlockCtx::<P> {
+            superstep: step,
+            num_vertices: nv,
+            vals,
+            degs: &store.degs,
+            sums: &sums,
+            halted,
+            out_base: &mut out_base,
+            global_agg,
+            local_agg,
+        };
+        program.block_update(kern, &mut bctx)?
+    };
+
+    let mut se = EdgeStreamCursor::open(store, cfg.stream_buf)?;
+    let mut edges: Vec<Edge> = Vec::new();
+    if handled {
+        // Fan message bases out along S^E, skipping silent vertices.
+        for pos in 0..local {
+            match &out_base[pos] {
+                None => se.defer_skip(store.degs[pos]),
+                Some(base) => {
+                    *computed += 1;
+                    se.read_adjacency(store.degs[pos], &mut edges)?;
+                    let mut send_fn = |t: u32, m: P::Msg| out.send(t, m);
+                    program.emit(base, &edges, &mut send_fn);
+                }
+            }
+        }
+    } else {
+        // Scalar fallback: synthesize per-vertex messages from A_r.
+        let mut msgs: Vec<P::Msg> = Vec::new();
+        for pos in 0..local {
+            let has_msg = bits.get(pos);
+            let active = !halted.get(pos);
+            if !active && !has_msg {
+                se.defer_skip(store.degs[pos]);
+                continue;
+            }
+            msgs.clear();
+            if has_msg {
+                msgs.push(sums[pos]);
+                halted.set(pos, false);
+            }
+            se.read_adjacency(store.degs[pos], &mut edges)?;
+            *computed += 1;
+            let id = store.id_at(pos);
+            let halt_flag;
+            {
+                let mut send_fn = |t: u32, m: P::Msg| out.send(t, m);
+                let mut ctx: Context<'_, P::Msg, P::Agg> =
+                    Context::new(step, nv, global_agg, local_agg, &mut send_fn);
+                program.compute(&mut ctx, id, &mut vals[pos], &edges, &msgs);
+                halt_flag = ctx.halt;
+            }
+            if halt_flag {
+                halted.set(pos, true);
+            }
+        }
+    }
+    let (read, skipped, seeks) = se.io_stats();
+    sink.with_step(step, |m| {
+        m.edge_items_read += read;
+        m.edge_items_skipped += skipped;
+        m.seeks += seeks;
+    });
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Integration test for the AOT bridge: HLO-text artifacts emitted by
+//! `python/compile/aot.py` must load, compile and execute on the PJRT CPU
+//! client with numerics matching the kernel formulas.
+//!
+//! Requires `make artifacts` to have run (skips with a message otherwise).
+
+use graphd::runtime::HloExecutable;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if d.join("pagerank_update.hlo.txt").exists() {
+        Some(d)
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping");
+        None
+    }
+}
+
+const BLOCK: usize = graphd::runtime::BLOCK;
+
+#[test]
+fn pagerank_artifact_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let exe = HloExecutable::load(dir.join("pagerank_update.hlo.txt").to_str().unwrap())
+        .expect("load+compile pagerank_update");
+
+    let mut sums = vec![0f32; BLOCK];
+    let mut deg = vec![0f32; BLOCK];
+    for i in 0..BLOCK {
+        sums[i] = (i % 97) as f32 / 97.0;
+        deg[i] = (i % 7) as f32; // includes sinks (deg 0)
+    }
+    let inv_n = [1.0f32 / 1_000_000.0];
+
+    let args = [
+        xla::Literal::vec1(&sums),
+        xla::Literal::vec1(&deg),
+        xla::Literal::vec1(&inv_n),
+    ];
+    let out = exe.run(&args).expect("execute");
+    let parts = out.to_tuple().expect("tuple output");
+    assert_eq!(parts.len(), 2);
+    let val = parts[0].to_vec::<f32>().unwrap();
+    let msg = parts[1].to_vec::<f32>().unwrap();
+
+    for i in (0..BLOCK).step_by(1231) {
+        let want_val = 0.15 * inv_n[0] + 0.85 * sums[i];
+        let want_msg = if deg[i] > 0.0 { want_val / deg[i] } else { 0.0 };
+        assert!((val[i] - want_val).abs() < 1e-6, "val[{i}]");
+        assert!((msg[i] - want_msg).abs() < 1e-6, "msg[{i}]");
+    }
+}
+
+#[test]
+fn minrelax_f32_artifact_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let exe = HloExecutable::load(dir.join("minrelax_f32.hlo.txt").to_str().unwrap())
+        .expect("load+compile minrelax_f32");
+
+    let mut cur = vec![0f32; BLOCK];
+    let mut msg = vec![0f32; BLOCK];
+    for i in 0..BLOCK {
+        cur[i] = (i % 100) as f32;
+        msg[i] = if i % 3 == 0 { f32::INFINITY } else { (i % 50) as f32 };
+    }
+    let args = [xla::Literal::vec1(&cur), xla::Literal::vec1(&msg)];
+    let out = exe.run(&args).expect("execute");
+    let parts = out.to_tuple().expect("tuple output");
+    let new = parts[0].to_vec::<f32>().unwrap();
+    let chg = parts[1].to_vec::<i32>().unwrap();
+
+    for i in (0..BLOCK).step_by(977) {
+        let want = cur[i].min(msg[i]);
+        assert_eq!(new[i], want, "new[{i}]");
+        assert_eq!(chg[i], (want < cur[i]) as i32, "chg[{i}]");
+    }
+}
+
+#[test]
+fn minrelax_i32_artifact_roundtrip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let exe = HloExecutable::load(dir.join("minrelax_i32.hlo.txt").to_str().unwrap())
+        .expect("load+compile minrelax_i32");
+
+    let mut cur = vec![0i32; BLOCK];
+    let mut msg = vec![0i32; BLOCK];
+    for i in 0..BLOCK {
+        cur[i] = (i % 1000) as i32;
+        msg[i] = if i % 4 == 0 { i32::MAX } else { (i % 700) as i32 };
+    }
+    let args = [xla::Literal::vec1(&cur), xla::Literal::vec1(&msg)];
+    let out = exe.run(&args).expect("execute");
+    let parts = out.to_tuple().expect("tuple output");
+    let new = parts[0].to_vec::<i32>().unwrap();
+    let chg = parts[1].to_vec::<i32>().unwrap();
+
+    for i in (0..BLOCK).step_by(1013) {
+        let want = cur[i].min(msg[i]);
+        assert_eq!(new[i], want, "new[{i}]");
+        assert_eq!(chg[i], (want < cur[i]) as i32, "chg[{i}]");
+    }
+}

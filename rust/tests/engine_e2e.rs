@@ -1,0 +1,338 @@
+//! End-to-end engine tests: DFS text load → IO-Basic / IO-Recoded runs →
+//! compare against single-threaded references.  This exercises the whole
+//! §3–§5 machinery: parallel loading, OMS/IMS streaming, the three units,
+//! combiners, ID recoding, and the in-memory digesting path.
+
+use graphd::algos::{HashMin, PageRank, Sssp, TriangleCount};
+use graphd::config::{ClusterProfile, JobConfig, Mode};
+use graphd::dfs::Dfs;
+use graphd::engine::{load, run, Engine};
+use graphd::graph::{generator, reference, Graph};
+use graphd::recode;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn fresh_workdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "graphd_e2e_{name}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+struct Setup {
+    eng: Engine,
+    dfs: Dfs,
+}
+
+fn setup(name: &str, machines: usize, mode: Mode) -> Setup {
+    let wd = fresh_workdir(name);
+    let mut cfg = JobConfig::default();
+    cfg.workdir = wd.clone();
+    cfg.mode = mode;
+    cfg.oms_file_cap = 16 * 1024; // small ℬ to exercise file splitting
+    let eng = Engine::new(ClusterProfile::test(machines), cfg).unwrap();
+    let dfs = Dfs::new(&wd.join("dfs")).unwrap().with_block_size(4096);
+    Setup { eng, dfs }
+}
+
+fn cleanup(s: &Setup) {
+    let _ = std::fs::remove_dir_all(&s.eng.cfg.workdir);
+}
+
+/// Load `g` (optionally with sparse ids), returning basic stores and the
+/// dense→old id mapping.
+fn load_graph(s: &Setup, g: &Graph, sparse: bool) -> (Vec<graphd::worker::MachineStore>, Option<Vec<u32>>) {
+    let ids = load::put_graph(&s.dfs, "g.txt", g, sparse.then_some(77)).unwrap();
+    let stores = load::load_text(&s.eng, &s.dfs, "g.txt", g.weighted).unwrap();
+    (stores, ids)
+}
+
+#[test]
+fn pagerank_basic_matches_reference() {
+    let s = setup("pr_basic", 4, Mode::Basic);
+    let g = generator::uniform(300, 1500, true, 42);
+    let (stores, ids) = load_graph(&s, &g, true);
+    let ids = ids.unwrap();
+
+    let mut cfg = s.eng.cfg.clone();
+    cfg.max_supersteps = 5;
+    let eng = Engine::new(s.eng.profile.clone(), cfg).unwrap();
+    let out = run::run_job(&eng, &stores, Arc::new(PageRank::new(5))).unwrap();
+    assert_eq!(out.supersteps(), 5);
+
+    let want = reference::pagerank(&g, 5);
+    let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
+    assert_eq!(got.len(), 300);
+    for v in 0..300usize {
+        let gv = got[&ids[v]];
+        assert!(
+            (gv - want[v]).abs() < 1e-5 * (1.0 + want[v].abs()),
+            "v={v}: got {gv}, want {}",
+            want[v]
+        );
+    }
+    cleanup(&s);
+}
+
+#[test]
+fn pagerank_recoded_matches_reference() {
+    let s = setup("pr_rec", 4, Mode::Recoded);
+    let g = generator::uniform(250, 1200, true, 43);
+    let (stores, ids) = load_graph(&s, &g, true);
+    let ids = ids.unwrap();
+
+    let rec = recode::recode(&s.eng, &stores, true).unwrap();
+    let mut cfg = s.eng.cfg.clone();
+    cfg.max_supersteps = 6;
+    let eng = Engine::new(s.eng.profile.clone(), cfg).unwrap();
+    let out = run::run_job(&eng, &rec, Arc::new(PageRank::new(6))).unwrap();
+
+    let want = reference::pagerank(&g, 6);
+    let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
+    for v in 0..250usize {
+        let gv = got[&ids[v]];
+        assert!(
+            (gv - want[v]).abs() < 1e-5 * (1.0 + want[v].abs()),
+            "v={v}: got {gv}, want {}",
+            want[v]
+        );
+    }
+    cleanup(&s);
+}
+
+#[test]
+fn sssp_basic_and_recoded_match_dijkstra() {
+    let g = generator::random_weights(generator::uniform(200, 900, true, 44), 9);
+    let dist = reference::sssp(&g, 0);
+
+    for mode in [Mode::Basic, Mode::Recoded] {
+        let s = setup(&format!("sssp_{mode:?}"), 3, mode);
+        let (stores, ids) = load_graph(&s, &g, true);
+        let ids = ids.unwrap();
+        let source_old = ids[0];
+
+        let (stores, source_cur) = if mode == Mode::Recoded {
+            let rec = recode::recode(&s.eng, &stores, true).unwrap();
+            let src = translate(&rec, source_old);
+            (rec, src)
+        } else {
+            (stores, source_old)
+        };
+
+        let out = run::run_job(&s.eng, &stores, Arc::new(Sssp::new(source_cur))).unwrap();
+        let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
+        for v in 0..200usize {
+            let gv = got[&ids[v]];
+            if dist[v].is_infinite() {
+                assert!(gv.is_infinite(), "v={v} should be unreachable");
+            } else {
+                assert!((gv - dist[v]).abs() < 1e-3, "v={v}: got {gv}, want {}", dist[v]);
+            }
+        }
+        cleanup(&s);
+    }
+}
+
+/// Old→current translation for a recoded store set (owner by Hashed on old
+/// id; position by binary search; new id = pos·n + machine).
+fn translate(stores: &[graphd::worker::MachineStore], old: u32) -> u32 {
+    let n = stores.len();
+    let m = graphd::worker::Partitioning::Hashed.machine_of(old, n);
+    let pos = stores[m].ids.binary_search(&old).expect("vertex exists");
+    (pos * n + m) as u32
+}
+
+#[test]
+fn hashmin_components_both_modes() {
+    let g = generator::uniform(240, 500, false, 45);
+    let want = reference::components(&g);
+
+    for mode in [Mode::Basic, Mode::Recoded] {
+        let s = setup(&format!("hm_{mode:?}"), 4, mode);
+        let (stores, ids) = load_graph(&s, &g, true);
+        let ids = ids.unwrap();
+        let stores = if mode == Mode::Recoded {
+            recode::recode(&s.eng, &stores, false).unwrap()
+        } else {
+            stores
+        };
+        let out = run::run_job(&s.eng, &stores, Arc::new(HashMin)).unwrap();
+        let got: HashMap<u32, i32> = out.values_by_id().into_iter().collect();
+
+        // Labels live in the current-ID space; compare *partitions*.
+        let mut by_label: HashMap<i32, Vec<u32>> = HashMap::new();
+        for v in 0..240usize {
+            by_label.entry(got[&ids[v]]).or_default().push(v as u32);
+        }
+        let mut by_ref: HashMap<u32, Vec<u32>> = HashMap::new();
+        for v in 0..240u32 {
+            by_ref.entry(want[v as usize]).or_default().push(v);
+        }
+        let mut parts_got: Vec<Vec<u32>> = by_label.into_values().collect();
+        let mut parts_ref: Vec<Vec<u32>> = by_ref.into_values().collect();
+        for p in parts_got.iter_mut().chain(parts_ref.iter_mut()) {
+            p.sort_unstable();
+        }
+        parts_got.sort();
+        parts_ref.sort();
+        assert_eq!(parts_got, parts_ref, "{mode:?}");
+        cleanup(&s);
+    }
+}
+
+#[test]
+fn triangle_count_via_aggregator() {
+    let g = generator::uniform(120, 700, false, 46);
+    let want = reference::triangles(&g);
+
+    let s = setup("tri", 3, Mode::Basic);
+    let (stores, _) = load_graph(&s, &g, false);
+    let out = run::run_job(&s.eng, &stores, Arc::new(TriangleCount)).unwrap();
+    let got = *out.outputs[0].final_agg;
+    assert_eq!(got, want, "triangles");
+    // diagnostic per-vertex counts must sum to the same number
+    let sum: u64 = out.values_by_id().iter().map(|(_, c)| *c).sum();
+    assert_eq!(sum, want);
+    cleanup(&s);
+}
+
+#[test]
+fn bfs_chain_exercises_skip_and_many_supersteps() {
+    // Directed chain: one active vertex per superstep — the paper's
+    // sparse-workload worst case. skip() must dominate reads.
+    let g = generator::chain(400).with_unit_weights();
+    let s = setup("chain", 4, Mode::Basic);
+    let (stores, ids) = load_graph(&s, &g, true);
+    let ids = ids.unwrap();
+    let source = ids[0];
+
+    let out = run::run_job(&s.eng, &stores, Arc::new(Sssp::new(source))).unwrap();
+    assert_eq!(out.supersteps(), 400, "chain BFS = |V| supersteps");
+    let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
+    assert_eq!(got[&ids[399]], 399.0);
+
+    // Sparse workload: far more items skipped than read across the job.
+    let (read, skipped): (u64, u64) = out
+        .metrics
+        .machines
+        .iter()
+        .flat_map(|m| m.steps.iter())
+        .fold((0, 0), |(r, s), st| {
+            (r + st.edge_items_read, s + st.edge_items_skipped)
+        });
+    assert!(
+        skipped > 10 * read.max(1),
+        "skip() ineffective: read={read} skipped={skipped}"
+    );
+    cleanup(&s);
+}
+
+#[test]
+fn memory_stays_within_dss_bound() {
+    // Lemma 1 + §3.3.3: per-machine state is O(|V|/n), NOT O(|E|/n).
+    let g = generator::uniform(400, 8000, true, 47); // avg degree 20
+    let s = setup("membound", 4, Mode::Recoded);
+    let (stores, _) = load_graph(&s, &g, true);
+    let rec = recode::recode(&s.eng, &stores, true).unwrap();
+    let mut cfg = s.eng.cfg.clone();
+    cfg.max_supersteps = 3;
+    let eng = Engine::new(s.eng.profile.clone(), cfg).unwrap();
+    let out = run::run_job(&eng, &rec, Arc::new(PageRank::new(3))).unwrap();
+
+    let per_vertex_budget = 64; // bytes per local vertex, generous constant
+    for m in &out.metrics.machines {
+        let local = (400 / 4) + 30; // Lemma-1 slack
+        assert!(
+            m.peak_state_bytes < (local * per_vertex_budget) as u64,
+            "machine {} state {} exceeds O(|V|/n) budget",
+            m.machine,
+            m.peak_state_bytes
+        );
+    }
+    cleanup(&s);
+}
+
+#[test]
+fn recoded_xla_block_path_matches_reference() {
+    // The full three-layer story: recoded mode + AOT Pallas kernels via
+    // PJRT on the block-update hot path.
+    if !graphd::runtime::KernelSet::default_dir()
+        .join("pagerank_update.hlo.txt")
+        .exists()
+    {
+        eprintln!("artifacts missing; run `make artifacts` — skipping");
+        return;
+    }
+    let g = generator::uniform(300, 1600, true, 48);
+    let s = setup("xla", 4, Mode::Recoded);
+    let (stores, ids) = load_graph(&s, &g, true);
+    let ids = ids.unwrap();
+    let rec = recode::recode(&s.eng, &stores, true).unwrap();
+
+    let mut cfg = s.eng.cfg.clone();
+    cfg.max_supersteps = 5;
+    cfg.use_xla = true;
+    let eng = Engine::new(s.eng.profile.clone(), cfg).unwrap();
+    let out = run::run_job(&eng, &rec, Arc::new(PageRank::new(5))).unwrap();
+
+    let want = reference::pagerank(&g, 5);
+    let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
+    for v in 0..300usize {
+        let gv = got[&ids[v]];
+        assert!(
+            (gv - want[v]).abs() < 1e-5 * (1.0 + want[v].abs()),
+            "v={v}: got {gv}, want {}",
+            want[v]
+        );
+    }
+    cleanup(&s);
+}
+
+#[test]
+fn convergent_pagerank_stops_via_aggregator_and_dumps() {
+    use graphd::algos::PageRankConverge;
+    let s = setup("prconv", 3, Mode::Basic);
+    let g = generator::uniform(200, 1200, true, 51);
+    let (stores, _) = load_graph(&s, &g, true);
+
+    let out = run::run_job(&s.eng, &stores, Arc::new(PageRankConverge { epsilon: 1e-4 }))
+        .unwrap();
+    let steps = out.supersteps();
+    assert!(steps > 3, "converged suspiciously fast: {steps}");
+    assert!(steps < 200, "aggregator never stopped the job");
+    // final global delta is below epsilon
+    assert!(*out.outputs[0].final_agg < 1e-4 + 1e-6);
+    // sanity on the fixpoint: total rank mass ≈ 1 minus sink leakage
+    let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
+    let sum: f32 = got.values().sum();
+    assert!((sum - 1.0).abs() < 0.2, "rank mass wildly off: {sum}");
+
+    // results dumped to the DFS as part files (paper's final step)
+    run::dump_results(&out, &s.dfs, "out/pagerank").unwrap();
+    for m in 0..3 {
+        assert!(s.dfs.exists(&format!("out/pagerank/part-{m:05}")));
+    }
+    let part0 = String::from_utf8(s.dfs.get("out/pagerank/part-00000").unwrap()).unwrap();
+    assert!(part0.lines().next().unwrap().contains('\t'));
+    cleanup(&s);
+}
+
+#[test]
+fn empty_messages_terminate_immediately() {
+    // A graph with no edges: every algorithm should stop after superstep 0
+    // (no messages, everyone halts / PageRank capped at 1).
+    let g = Graph::from_adj(vec![vec![]; 50], false);
+    let s = setup("noedges", 2, Mode::Basic);
+    let (stores, _) = load_graph(&s, &g, false);
+    let out = run::run_job(&s.eng, &stores, Arc::new(HashMin)).unwrap();
+    assert_eq!(out.supersteps(), 1);
+    // labels stay = own id
+    for (id, lbl) in out.values_by_id() {
+        assert_eq!(lbl as u32, id);
+    }
+    cleanup(&s);
+}

@@ -1,0 +1,229 @@
+//! Cross-module property tests (proptest_lite): engine-vs-reference over
+//! random graphs, recoding invariants, and coordinator-level invariants
+//! (routing, Lemma-1 balance, message conservation).
+
+use graphd::algos::{HashMin, PageRank};
+use graphd::config::{ClusterProfile, JobConfig, Mode};
+use graphd::dfs::Dfs;
+use graphd::engine::{load, run, Engine};
+use graphd::graph::{generator, reference, Graph};
+use graphd::recode;
+use graphd::util::proptest_lite::{self, Gen};
+use graphd::worker::Partitioning;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn wd(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "graphd_prop_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn random_graph(g: &mut Gen, directed: bool) -> Graph {
+    let nv = g.usize_in(8, 200);
+    let ne = g.usize_in(nv, nv * 6);
+    if g.bool(0.5) {
+        generator::uniform(nv, ne, directed, g.u64())
+    } else {
+        generator::rmat(nv, ne, (0.55, 0.2, 0.2), directed, g.u64())
+    }
+}
+
+#[test]
+fn property_pagerank_engine_equals_reference() {
+    proptest_lite::run(8, |pg| {
+        let g = random_graph(pg, true);
+        let machines = 2 + pg.usize_in(0, 3);
+        let steps = 2 + pg.usize_in(0, 4) as u64;
+        let d = wd(&format!("pr{}", pg.case));
+        let mut cfg = JobConfig::default();
+        cfg.workdir = d.clone();
+        cfg.max_supersteps = steps;
+        cfg.oms_file_cap = 4096; // tiny ℬ: force many files
+        let eng = Engine::new(ClusterProfile::test(machines), cfg).unwrap();
+        let dfs = Dfs::new(&d.join("dfs")).unwrap();
+        let ids = load::put_graph(&dfs, "g.txt", &g, Some(pg.u64())).unwrap().unwrap();
+        let stores = load::load_text(&eng, &dfs, "g.txt", false).unwrap();
+        let out = run::run_job(&eng, &stores, Arc::new(PageRank::new(steps))).unwrap();
+        let want = reference::pagerank(&g, steps);
+        let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
+        let mut ok = true;
+        for v in 0..g.num_vertices() {
+            let gv = got[&ids[v]];
+            if (gv - want[v]).abs() > 1e-4 * (1.0 + want[v].abs()) {
+                ok = false;
+                break;
+            }
+        }
+        let _ = std::fs::remove_dir_all(&d);
+        graphd::prop_assert!(
+            pg,
+            ok,
+            "pagerank mismatch: |V|={} machines={machines} steps={steps}",
+            g.num_vertices()
+        );
+    });
+}
+
+#[test]
+fn property_recoding_preserves_graph() {
+    // After ID recoding, the multiset of (new-id) edges must be the image
+    // of the original edges under the old→new bijection.
+    proptest_lite::run(8, |pg| {
+        let g = random_graph(pg, true);
+        let machines = 2 + pg.usize_in(0, 3);
+        let d = wd(&format!("rc{}", pg.case));
+        let mut cfg = JobConfig::default();
+        cfg.workdir = d.clone();
+        let eng = Engine::new(ClusterProfile::test(machines), cfg).unwrap();
+        let dfs = Dfs::new(&d.join("dfs")).unwrap();
+        let ids = load::put_graph(&dfs, "g.txt", &g, Some(pg.u64())).unwrap().unwrap();
+        let stores = load::load_text(&eng, &dfs, "g.txt", false).unwrap();
+        let rec = recode::recode(&eng, &stores, true).unwrap();
+
+        // old -> new map from the recoded stores
+        let mut old2new: HashMap<u32, u32> = HashMap::new();
+        for s in &rec {
+            for (pos, &old) in s.ids.iter().enumerate() {
+                old2new.insert(old, (pos * machines + s.machine) as u32);
+            }
+        }
+        // expected edge multiset in new-id space
+        let mut want: Vec<(u32, u32)> = Vec::new();
+        for v in 0..g.num_vertices() as u32 {
+            let v_new = old2new[&ids[v as usize]];
+            for &u in g.neighbors(v) {
+                want.push((v_new, old2new[&ids[u as usize]]));
+            }
+        }
+        want.sort_unstable();
+        // actual recoded edge stream
+        let mut got: Vec<(u32, u32)> = Vec::new();
+        for s in &rec {
+            let mut cur = graphd::worker::storage::EdgeStreamCursor::open(s, 4096).unwrap();
+            let mut edges = Vec::new();
+            for pos in 0..s.local_vertices() {
+                cur.read_adjacency(s.degs[pos], &mut edges).unwrap();
+                let v_new = (pos * machines + s.machine) as u32;
+                for e in &edges {
+                    got.push((v_new, e.nbr));
+                }
+            }
+        }
+        got.sort_unstable();
+        let ok = got == want;
+        let _ = std::fs::remove_dir_all(&d);
+        graphd::prop_assert!(pg, ok, "recoded edges differ: {} vs {}", got.len(), want.len());
+    });
+}
+
+#[test]
+fn property_hashmin_partitions_match_union_find() {
+    proptest_lite::run(6, |pg| {
+        let g = random_graph(pg, false);
+        let machines = 2 + pg.usize_in(0, 2);
+        let mode = if pg.bool(0.5) { Mode::Basic } else { Mode::Recoded };
+        let d = wd(&format!("hm{}", pg.case));
+        let mut cfg = JobConfig::default();
+        cfg.workdir = d.clone();
+        cfg.mode = mode;
+        let eng = Engine::new(ClusterProfile::test(machines), cfg).unwrap();
+        let dfs = Dfs::new(&d.join("dfs")).unwrap();
+        let ids = load::put_graph(&dfs, "g.txt", &g, Some(pg.u64())).unwrap().unwrap();
+        let stores = load::load_text(&eng, &dfs, "g.txt", false).unwrap();
+        let stores = if mode == Mode::Recoded {
+            recode::recode(&eng, &stores, false).unwrap()
+        } else {
+            stores
+        };
+        let out = run::run_job(&eng, &stores, Arc::new(HashMin)).unwrap();
+        let got: HashMap<u32, i32> = out.values_by_id().into_iter().collect();
+        let want = reference::components(&g);
+        // same-partition iff same reference label
+        let mut label_of: HashMap<i32, u32> = HashMap::new();
+        let mut ok = true;
+        for v in 0..g.num_vertices() {
+            let l = got[&ids[v]];
+            match label_of.get(&l) {
+                Some(&w) => {
+                    if want[v] != w {
+                        ok = false;
+                        break;
+                    }
+                }
+                None => {
+                    label_of.insert(l, want[v]);
+                }
+            }
+        }
+        // and distinct got-labels map to distinct reference components
+        let mut seen: Vec<u32> = label_of.values().copied().collect();
+        seen.sort_unstable();
+        let before = seen.len();
+        seen.dedup();
+        ok &= before == seen.len();
+        let _ = std::fs::remove_dir_all(&d);
+        graphd::prop_assert!(pg, ok, "components mismatch ({mode:?}, {machines} machines)");
+    });
+}
+
+#[test]
+fn property_hashed_partitioning_is_balanced() {
+    // Lemma 1: max |V(W)| < 2|V|/n w.h.p., under the sparse-ID generator.
+    proptest_lite::run(40, |pg| {
+        let nv = pg.usize_in(500, 4000);
+        let n = 2 + pg.usize_in(0, 6);
+        let ids = graphd::graph::formats::sparse_ids(nv, pg.u64());
+        let mut counts = vec![0usize; n];
+        for id in ids {
+            counts[Partitioning::Hashed.machine_of(id, n)] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        graphd::prop_assert!(
+            pg,
+            max < 2 * nv / n + 2,
+            "imbalance: max {max} vs bound {} (nv={nv}, n={n})",
+            2 * nv / n
+        );
+    });
+}
+
+#[test]
+fn property_message_count_conserved() {
+    // Every message generated is received exactly once: Σ sent == Σ recv
+    // across machines and supersteps (no loss, no duplication).
+    proptest_lite::run(6, |pg| {
+        let g = random_graph(pg, true);
+        let machines = 2 + pg.usize_in(0, 3);
+        let d = wd(&format!("mc{}", pg.case));
+        let mut cfg = JobConfig::default();
+        cfg.workdir = d.clone();
+        cfg.max_supersteps = 3;
+        cfg.oms_file_cap = 2048;
+        let eng = Engine::new(ClusterProfile::test(machines), cfg).unwrap();
+        let dfs = Dfs::new(&d.join("dfs")).unwrap();
+        load::put_graph(&dfs, "g.txt", &g, Some(pg.u64())).unwrap();
+        let stores = load::load_text(&eng, &dfs, "g.txt", false).unwrap();
+        let out = run::run_job(&eng, &stores, Arc::new(PageRank::new(3))).unwrap();
+        let (mut sent, mut recv) = (0u64, 0u64);
+        for m in &out.metrics.machines {
+            for s in &m.steps {
+                sent += s.msgs_sent;
+                recv += s.msgs_recv;
+            }
+        }
+        let _ = std::fs::remove_dir_all(&d);
+        // (PageRank has a SUM combiner: received count may be smaller
+        // after combining, but never larger, and never zero when sent>0.)
+        graphd::prop_assert!(
+            pg,
+            recv <= sent && (sent == 0 || recv > 0),
+            "conservation violated: sent={sent} recv={recv}"
+        );
+    });
+}
