@@ -1,0 +1,24 @@
+# Repo-level convenience targets.  `make ci` mirrors .github/workflows/ci.yml.
+
+CARGO ?= cargo
+MANIFEST := rust/Cargo.toml
+
+.PHONY: build test fmt-check ci artifacts clean
+
+build:
+	$(CARGO) build --release --manifest-path $(MANIFEST)
+
+test:
+	$(CARGO) test -q --manifest-path $(MANIFEST)
+
+fmt-check:
+	$(CARGO) fmt --check --manifest-path $(MANIFEST)
+
+ci: build test fmt-check
+
+# Regenerate the AOT HLO artifacts from the python layer (needs jax).
+artifacts:
+	python3 python/compile/aot.py --out rust/artifacts
+
+clean:
+	$(CARGO) clean --manifest-path $(MANIFEST)

@@ -1,6 +1,7 @@
 //! Connected components with Hash-Min on an undirected social graph,
 //! comparing IO-Basic (external merge-sort combining) with IO-Recoded
-//! (in-memory A_r/A_s digesting) — §5's headline feature.
+//! (in-memory A_r/A_s digesting) — §5's headline feature.  Runs through
+//! the bench harness, which drives the fluent session API.
 
 use graphd::baselines::Algo;
 use graphd::bench::{run_graphd, scale_from_env, use_xla_from_env};

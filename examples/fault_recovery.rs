@@ -1,14 +1,13 @@
 //! Fault tolerance (§3.4): checkpoint a PageRank job every 3 supersteps,
 //! simulate a machine failure, and recover from the latest checkpoint —
 //! verifying the recovered run converges to exactly the same ranks as an
-//! uninterrupted one.
+//! uninterrupted one.  Checkpointing and resume are per-job knobs on the
+//! session's [`graphd::JobBuilder`].
 
 use graphd::algos::PageRank;
-use graphd::config::{ClusterProfile, JobConfig};
-use graphd::dfs::Dfs;
-use graphd::engine::{load, run, Engine};
 use graphd::ft::{self, CheckpointCfg};
 use graphd::graph::generator;
+use graphd::{GraphD, GraphSource};
 use std::sync::Arc;
 
 fn main() -> graphd::Result<()> {
@@ -18,17 +17,16 @@ fn main() -> graphd::Result<()> {
     let g = generator::rmat(10_000, 120_000, (0.57, 0.19, 0.19), true, 33);
     println!("graph: |V|={} |E|={}", g.num_vertices(), g.num_edges());
 
-    let mut cfg = JobConfig::default();
-    cfg.workdir = wd.clone();
-    cfg.max_supersteps = 10;
-    cfg.keep_oms_for_recovery = true; // message logs for [19]-style recovery
-    let eng = Engine::new(ClusterProfile::test(4), cfg)?;
-    let dfs = Dfs::new(&wd.join("dfs"))?;
-    load::put_graph(&dfs, "g.txt", &g, Some(11))?;
-    let stores = load::load_text(&eng, &dfs, "g.txt", false)?;
+    let session = GraphD::builder()
+        .machines(4)
+        .workdir(&wd)
+        .max_supersteps(10)
+        .keep_oms_for_recovery(true) // message logs for [19]-style recovery
+        .build()?;
+    let graph = session.load(GraphSource::InMemorySparse(&g, 11))?;
 
     // Uninterrupted run (the ground truth).
-    let full = run::run_job(&eng, &stores, Arc::new(PageRank::new(10)))?;
+    let full = graph.run(Arc::new(PageRank::new(10)))?;
     println!("uninterrupted: {} supersteps", full.supersteps());
 
     // Run with checkpointing every 3 supersteps.
@@ -36,7 +34,10 @@ fn main() -> graphd::Result<()> {
         dir: wd.join("dfs/checkpoints"),
         every: 3,
     };
-    let _ = run::run_job_with(&eng, &stores, Arc::new(PageRank::new(10)), Some(ck.clone()), None)?;
+    let _ = graph
+        .job(Arc::new(PageRank::new(10)))
+        .checkpoint(ck.clone())
+        .run()?;
     let cks: Vec<u64> = (0..10)
         .filter(|s| ft::latest_checkpoint(&ck.dir, Some(*s)) == Some(*s))
         .collect();
@@ -47,13 +48,11 @@ fn main() -> graphd::Result<()> {
     let fail_at = 7;
     let restart = ft::latest_checkpoint(&ck.dir, Some(fail_at)).expect("a checkpoint exists");
     println!("failure at superstep {fail_at}; recovering from checkpoint {restart}");
-    let recovered = run::run_job_with(
-        &eng,
-        &stores,
-        Arc::new(PageRank::new(10)),
-        Some(ck),
-        Some(restart),
-    )?;
+    let recovered = graph
+        .job(Arc::new(PageRank::new(10)))
+        .checkpoint(ck)
+        .resume(restart)
+        .run()?;
     println!(
         "recovered run: {} total supersteps ({} replayed)",
         recovered.metrics.supersteps,

@@ -1,5 +1,6 @@
-//! End-to-end driver (the repo's headline validation run, recorded in
-//! EXPERIMENTS.md): a web-scale-shaped workload through the full stack.
+//! End-to-end driver (the repo's headline validation run): a web-scale-
+//! shaped workload through the full stack via the bench harness, which
+//! drives everything through the fluent session API.
 //!
 //! * generates the webuk-s analog (~134 K vertices / ~5.5 M edges,
 //!   power-law, sparse input IDs),

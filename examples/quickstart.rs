@@ -1,20 +1,18 @@
-//! Quickstart: the complete GraphD pipeline on a small graph in ~40 lines.
+//! Quickstart: the complete GraphD pipeline — Load, IO-Recoding, Compute —
+//! in ~15 lines through the fluent session API.
 //!
-//! 1. generate a graph and put it on the (simulated) HDFS as text,
-//! 2. load it into per-machine stores (state array A + edge stream S^E),
-//! 3. run PageRank in IO-Basic mode,
-//! 4. ID-recode and run again in IO-Recoded mode (in-memory digesting on
-//!    the AOT-compiled Pallas kernels, if `make artifacts` has been run),
-//! 5. print the top-ranked vertices.
+//! 1. generate a power-law graph with sparse vertex IDs (like real input),
+//! 2. one builder → one [`graphd::Session`],
+//! 3. `load` → IO-Basic PageRank,
+//! 4. `recode` → `Mode::Auto` picks IO-Recoded (+ the AOT Pallas kernels
+//!    when `make artifacts` has produced them),
+//! 5. print the top-ranked vertices and check both modes agree.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use graphd::algos::PageRank;
-use graphd::config::{ClusterProfile, JobConfig, Mode};
-use graphd::dfs::Dfs;
-use graphd::engine::{load, run, Engine};
 use graphd::graph::generator;
-use graphd::recode;
+use graphd::{GraphD, GraphSource, Mode};
 use std::sync::Arc;
 
 fn main() -> graphd::Result<()> {
@@ -30,41 +28,32 @@ fn main() -> graphd::Result<()> {
         g.max_degree()
     );
 
-    let mut cfg = JobConfig::default();
-    cfg.workdir = wd.clone();
-    cfg.max_supersteps = 10;
-    let profile = ClusterProfile::test(4); // 4 simulated machines
+    // The whole pipeline: build a session, load, run, recode, run again.
+    let session = GraphD::builder()
+        .machines(4)
+        .workdir(&wd)
+        .max_supersteps(10)
+        .build()?;
+    let mut graph = session.load(GraphSource::InMemorySparse(&g, 99))?;
+    let basic = graph.run(Arc::new(PageRank::new(10)))?;
+    let recoded = graph
+        .recode()?
+        .job(Arc::new(PageRank::new(10)))
+        .mode(Mode::Auto)
+        .run()?;
 
-    // 1-2: put on DFS (sparse ids), parallel-load into per-machine stores.
-    let dfs = Dfs::new(&wd.join("dfs"))?;
-    load::put_graph(&dfs, "web.txt", &g, Some(99))?;
-    let eng = Engine::new(profile.clone(), cfg.clone())?;
-    let stores = load::load_text(&eng, &dfs, "web.txt", false)?;
-
-    // 3: IO-Basic run.
-    let basic = run::run_job(&eng, &stores, Arc::new(PageRank::new(10)))?;
     println!(
         "IO-Basic:   {} supersteps, {:.2}s compute",
         basic.supersteps(),
         basic.metrics.compute_secs
     );
-
-    // 4: recode + IO-Recoded run (XLA block kernels when artifacts exist).
-    let rec = recode::recode(&eng, &stores, true)?;
-    cfg.mode = Mode::Recoded;
-    cfg.use_xla = graphd::runtime::KernelSet::default_dir()
-        .join("pagerank_update.hlo.txt")
-        .exists();
-    let eng_rec = Engine::new(profile, cfg)?;
-    let recoded = run::run_job(&eng_rec, &rec, Arc::new(PageRank::new(10)))?;
     println!(
-        "IO-Recoded: {} supersteps, {:.2}s compute (xla={})",
+        "IO-Recoded: {} supersteps, {:.2}s compute",
         recoded.supersteps(),
-        recoded.metrics.compute_secs,
-        eng_rec.cfg.use_xla
+        recoded.metrics.compute_secs
     );
 
-    // 5: top-5 ranks agree between modes.
+    // Top-5 ranks agree between modes.
     let mut ranks = basic.values_by_id();
     ranks.sort_by(|a, b| b.1.total_cmp(&a.1));
     println!("top-5 vertices by PageRank:");

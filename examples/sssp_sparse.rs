@@ -1,7 +1,8 @@
 //! SSSP with sparse frontiers — the workload the paper's `skip()` design
 //! targets (§3.2, Tables 7–8).  Shows that per-superstep edge-stream reads
 //! track the frontier instead of |E|, and compares against the X-Stream
-//! baseline which must stream all edges every superstep.
+//! baseline which must stream all edges every superstep.  Runs through
+//! the bench harness, which drives the fluent session API.
 
 use graphd::baselines::{self, Algo};
 use graphd::bench::{run_graphd, scale_from_env, sssp_source, use_xla_from_env};

@@ -5,10 +5,8 @@
 //! global count flows through the aggregator.
 
 use graphd::algos::TriangleCount;
-use graphd::config::{ClusterProfile, JobConfig};
-use graphd::dfs::Dfs;
-use graphd::engine::{load, run, Engine};
 use graphd::graph::{generator, reference};
+use graphd::{GraphD, GraphSource};
 use std::sync::Arc;
 
 fn main() -> graphd::Result<()> {
@@ -23,14 +21,9 @@ fn main() -> graphd::Result<()> {
         g.num_edges()
     );
 
-    let mut cfg = JobConfig::default();
-    cfg.workdir = wd.clone();
-    let eng = Engine::new(ClusterProfile::test(4), cfg)?;
-    let dfs = Dfs::new(&wd.join("dfs"))?;
-    load::put_graph(&dfs, "g.txt", &g, Some(5))?;
-    let stores = load::load_text(&eng, &dfs, "g.txt", false)?;
+    let session = GraphD::builder().machines(4).workdir(&wd).build()?;
+    let res = session.run(GraphSource::InMemorySparse(&g, 5), Arc::new(TriangleCount))?;
 
-    let res = run::run_job(&eng, &stores, Arc::new(TriangleCount))?;
     let count = *res.outputs[0].final_agg;
     let msgs = res.metrics.total_msgs();
     println!(

@@ -7,12 +7,11 @@
 
 use graphd::algos::PageRank;
 use graphd::bench::scale_from_env;
-use graphd::config::{ClusterProfile, JobConfig, Mode};
-use graphd::dfs::Dfs;
-use graphd::engine::{load, run, Engine};
+use graphd::config::ClusterProfile;
 use graphd::graph::generator::Dataset;
 use graphd::metrics::{Cell, Table};
 use graphd::util::timer::timed;
+use graphd::{GraphD, GraphSource};
 use std::sync::Arc;
 
 fn main() {
@@ -28,16 +27,17 @@ fn main() {
     for cap in [64 * 1024, 256 * 1024, 1024 * 1024, 8 * 1024 * 1024] {
         let wd = std::env::temp_dir().join(format!("graphd_abl_b{}_{}", cap, std::process::id()));
         let _ = std::fs::remove_dir_all(&wd);
-        let mut cfg = JobConfig::default();
-        cfg.workdir = wd.clone();
-        cfg.mode = Mode::Basic;
-        cfg.max_supersteps = steps;
-        cfg.oms_file_cap = cap;
-        let eng = Engine::new(profile.clone(), cfg).expect("engine");
-        let dfs = Dfs::new(&wd.join("dfs")).expect("dfs");
-        load::put_graph(&dfs, "g.txt", &g, Some(4242)).expect("put");
-        let stores = load::load_text(&eng, &dfs, "g.txt", false).expect("load");
-        let (secs, res) = timed(|| run::run_job(&eng, &stores, Arc::new(PageRank::new(steps))));
+        let session = GraphD::builder()
+            .profile(profile.clone())
+            .workdir(&wd)
+            .max_supersteps(steps)
+            .oms_file_cap(cap)
+            .build()
+            .expect("session");
+        let graph = session
+            .load(GraphSource::InMemorySparse(&g, 4242))
+            .expect("load");
+        let (secs, res) = timed(|| graph.run(Arc::new(PageRank::new(steps))));
         let res = res.expect("run");
         let files: u64 = res
             .metrics

@@ -10,12 +10,11 @@
 use graphd::algos::PageRank;
 use graphd::baselines::Algo;
 use graphd::bench::{run_graphd, scale_from_env, use_xla_from_env};
-use graphd::config::{ClusterProfile, JobConfig, Mode};
-use graphd::dfs::Dfs;
-use graphd::engine::{load, run, Engine};
+use graphd::config::ClusterProfile;
 use graphd::graph::generator::Dataset;
 use graphd::metrics::{Cell, Table};
 use graphd::util::timer::timed;
+use graphd::{GraphD, GraphSource};
 use std::sync::Arc;
 
 fn main() {
@@ -38,16 +37,21 @@ fn main() {
     // without OMS: stall-and-send
     let wd = std::env::temp_dir().join(format!("graphd_abl_oms_off_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&wd);
-    let mut cfg = JobConfig::default();
-    cfg.workdir = wd.clone();
-    cfg.mode = Mode::Basic;
-    cfg.max_supersteps = steps;
-    cfg.disable_oms = true;
-    let eng = Engine::new(profile.clone(), cfg).expect("engine");
-    let dfs = Dfs::new(&wd.join("dfs")).expect("dfs");
-    load::put_graph(&dfs, "g.txt", &g, Some(4242)).expect("put");
-    let stores = load::load_text(&eng, &dfs, "g.txt", false).expect("load");
-    let (stall_secs, res) = timed(|| run::run_job(&eng, &stores, Arc::new(PageRank::new(steps))));
+    let session = GraphD::builder()
+        .profile(profile.clone())
+        .workdir(&wd)
+        .max_supersteps(steps)
+        .build()
+        .expect("session");
+    let graph = session
+        .load(GraphSource::InMemorySparse(&g, 4242))
+        .expect("load");
+    let (stall_secs, res) = timed(|| {
+        graph
+            .job(Arc::new(PageRank::new(steps)))
+            .disable_oms(true)
+            .run()
+    });
     res.expect("stall run");
     let _ = std::fs::remove_dir_all(&wd);
 

@@ -1,4 +1,4 @@
-//! Table 8 — SSSP on W^high (paper analog; see DESIGN.md experiment index).
+//! Table 8 — SSSP on W^high (paper analog; see README.md experiment index).
 //!
 //! Env: GRAPHD_SCALE (default 1.0), GRAPHD_SYSTEMS filter, GRAPHD_XLA=0.
 

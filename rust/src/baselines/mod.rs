@@ -13,6 +13,9 @@
 //! | [`haloop`] | HaLoop | per iteration: rescan the whole graph from DFS + MapReduce shuffle |
 //! | [`graphchi`] | GraphChi | single PC; shard preprocessing; every iteration loads whole shards even for one active vertex |
 //! | [`xstream`] | X-Stream | single PC; no preprocessing; every iteration streams **all** edges |
+//!
+//! The GraphD rows the baselines are compared against run through the
+//! fluent session API ([`crate::session`]) via [`crate::bench::run_graphd`].
 
 pub mod graphchi;
 pub mod haloop;

@@ -8,15 +8,12 @@
 
 use crate::algos::{HashMin, PageRank, Sssp};
 use crate::baselines::{self, Algo, AlgoValues, BaselineRun};
-use crate::config::{ClusterProfile, JobConfig, Mode};
-use crate::dfs::Dfs;
-use crate::engine::{load, run, Engine};
+use crate::config::{ClusterProfile, Mode};
 use crate::error::{Error, Result};
 use crate::graph::generator::Dataset;
 use crate::graph::Graph;
 use crate::metrics::{Cell, JobMetrics, Table};
-use crate::recode;
-use crate::util::timer::timed;
+use crate::session::{GraphD, GraphSource, LoadedGraph};
 use crate::worker::{MachineStore, Partitioning};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -84,35 +81,45 @@ pub fn run_graphd(
     profile: &ClusterProfile,
     use_xla: bool,
 ) -> Result<GraphDRuns> {
+    run_graphd_cfg(tag, g, algo, profile, use_xla, &[])
+}
+
+/// [`run_graphd`] with raw `key=value` config overrides (the CLI's `-c`
+/// flags), threaded through the session builder.
+pub fn run_graphd_cfg(
+    tag: &str,
+    g: &Graph,
+    algo: Algo,
+    profile: &ClusterProfile,
+    use_xla: bool,
+    overrides: &[(String, String)],
+) -> Result<GraphDRuns> {
     let wd = workdir(tag);
     let _ = std::fs::remove_dir_all(&wd);
-    let mut cfg = JobConfig::default();
-    cfg.workdir = wd.clone();
-    cfg.use_xla = use_xla;
+    let mut b = GraphD::builder()
+        .profile(profile.clone())
+        .workdir(&wd)
+        .use_xla(use_xla);
     if let Algo::PageRank { supersteps } = algo {
-        cfg.max_supersteps = supersteps;
+        b = b.max_supersteps(supersteps);
     }
+    for (k, v) in overrides {
+        b = b.config(k, v);
+    }
+    let session = b.build()?;
 
-    let dfs = Dfs::new(&wd.join("dfs"))?;
-    load::put_graph(&dfs, "g.txt", g, Some(4242))?;
-
-    // ---- IO-Basic ----
-    cfg.mode = Mode::Basic;
-    let eng = Engine::new(profile.clone(), cfg.clone())?;
-    let (basic_load, stores) = timed(|| load::load_text(&eng, &dfs, "g.txt", g.weighted));
-    let stores = stores?;
-    let (basic_compute, basic_out) = run_algo(&eng, &stores, algo, None)?;
+    // ---- Load + IO-Basic ----
+    let mut graph = session.load(GraphSource::InMemorySparse(g, 4242))?;
+    let basic_load = graph.load_secs;
+    let (basic_compute, basic_out) = run_algo(&graph, Mode::Basic, algo)?;
 
     // ---- IO-Recoding (preprocessing) ----
-    let (recoding_compute, rec) = timed(|| recode::recode(&eng, &stores, g.directed));
-    let rec = rec?;
+    graph.recode()?;
+    let recoding_compute = graph.recode_secs.unwrap_or(0.0);
 
-    // ---- IO-Recoded ----
-    cfg.mode = Mode::Recoded;
-    let eng_rec = Engine::new(profile.clone(), cfg)?;
-    let (recoded_load, rec_loaded) = timed(|| load::load_local(&eng_rec, "rec"));
-    let rec_loaded = rec_loaded?;
-    let (recoded_compute, rec_out) = run_algo(&eng_rec, &rec_loaded, algo, Some(&rec))?;
+    // ---- IO-Recoded (reload from local disks, then compute) ----
+    let recoded_load = graph.reload_recoded()?;
+    let (recoded_compute, rec_out) = run_algo(&graph, Mode::Recoded, algo)?;
 
     // Cross-check both modes produced equivalent results.
     check_equivalent(&basic_out.0, &rec_out.0, algo)?;
@@ -133,20 +140,18 @@ pub fn run_graphd(
 
 type AlgoOut = (AlgoValues, JobMetrics);
 
-fn run_algo(
-    eng: &Engine,
-    stores: &[MachineStore],
-    algo: Algo,
-    rec_stores: Option<&[MachineStore]>,
-) -> Result<(f64, AlgoOut)> {
+fn run_algo(graph: &LoadedGraph<'_>, mode: Mode, algo: Algo) -> Result<(f64, AlgoOut)> {
     Ok(match algo {
         Algo::PageRank { supersteps } => {
-            let res = run::run_job(eng, stores, Arc::new(PageRank::new(supersteps)))?;
+            let res = graph
+                .job(Arc::new(PageRank::new(supersteps)))
+                .mode(mode)
+                .run()?;
             let vals = AlgoValues::Ranks(by_id_f32(res.values_by_id()));
             (res.metrics.compute_secs, (vals, res.metrics))
         }
         Algo::HashMin => {
-            let res = run::run_job(eng, stores, Arc::new(HashMin))?;
+            let res = graph.job(Arc::new(HashMin)).mode(mode).run()?;
             let vals = AlgoValues::Labels(
                 res.values_by_id().into_iter().map(|(_, l)| l as u32).collect(),
             );
@@ -155,12 +160,13 @@ fn run_algo(
         Algo::Sssp { source } => {
             // `source` is a dense generator ID; inputs carry sparse IDs
             // (dense → sparse is order-preserving since sparse_ids is
-            // increasing), and recoded stores need a second translation.
-            let src_cur = match rec_stores {
-                None => nth_sparse_id(stores, source),
-                Some(rec) => translate_to_recoded(rec, nth_sparse_id(rec, source)),
+            // increasing), and recoded jobs need a second translation.
+            let src_sparse = nth_sparse_id(graph.stores(), source);
+            let src_cur = match mode {
+                Mode::Recoded => graph.current_id_of(src_sparse),
+                _ => src_sparse,
             };
-            let res = run::run_job(eng, stores, Arc::new(Sssp::new(src_cur)))?;
+            let res = graph.job(Arc::new(Sssp::new(src_cur))).mode(mode).run()?;
             let vals = AlgoValues::Dists(by_id_f32(res.values_by_id()));
             (res.metrics.compute_secs, (vals, res.metrics))
         }
@@ -176,6 +182,10 @@ fn nth_sparse_id(stores: &[MachineStore], dense: u32) -> u32 {
 }
 
 /// Old (sparse) id → recoded id, per §5's bijection.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the session API: LoadedGraph::current_id_of(old) after recode()"
+)]
 pub fn translate_to_recoded(rec_stores: &[MachineStore], old: u32) -> u32 {
     let n = rec_stores.len();
     let m = Partitioning::Hashed.machine_of(old, n);

@@ -35,7 +35,7 @@ pub struct ClusterProfile {
 
 impl ClusterProfile {
     /// `W^PC`: commodity PCs on a slow unmanaged Gigabit switch.  Scaled
-    /// ~1/1000 from the paper's testbed (see DESIGN.md substitutions);
+    /// ~1/1000 from the paper's testbed (see README.md substitutions);
     /// network deliberately slower than local disk streaming.
     pub fn wpc() -> Self {
         Self {
@@ -105,6 +105,11 @@ pub enum Mode {
     Basic,
     /// IO-Recoded: dense IDs; in-memory A_r/A_s digesting (needs combiner).
     Recoded,
+    /// Resolved by the session layer before a job starts: picks IO-Recoded
+    /// (+XLA kernels when artifacts are present) when the program has a
+    /// combiner and the graph has been ID-recoded, else IO-Basic.  The raw
+    /// engine treats an unresolved `Auto` as `Basic`.
+    Auto,
 }
 
 impl std::fmt::Display for Mode {
@@ -112,6 +117,7 @@ impl std::fmt::Display for Mode {
         match self {
             Mode::Basic => write!(f, "IO-Basic"),
             Mode::Recoded => write!(f, "IO-Recoded"),
+            Mode::Auto => write!(f, "Auto"),
         }
     }
 }
@@ -142,6 +148,9 @@ pub struct JobConfig {
     /// instead of spilling to OMSs (the "no-OMS" design the paper argues
     /// against; used by `ablation_oms`).
     pub disable_oms: bool,
+    /// Directory holding the AOT `*.hlo.txt` artifacts for the XLA block
+    /// path (`None` = [`crate::runtime::KernelSet::default_dir`]).
+    pub artifacts_dir: Option<PathBuf>,
 }
 
 impl Default for JobConfig {
@@ -157,6 +166,7 @@ impl Default for JobConfig {
             keep_oms_for_recovery: false,
             checkpoint_every: 0,
             disable_oms: false,
+            artifacts_dir: None,
         }
     }
 }
@@ -177,10 +187,12 @@ impl JobConfig {
                 self.mode = match val {
                     "basic" => Mode::Basic,
                     "recoded" => Mode::Recoded,
+                    "auto" => Mode::Auto,
                     _ => return Err(bad(key, val)),
                 }
             }
             "use_xla" => self.use_xla = val.parse().map_err(|_| bad(key, val))?,
+            "artifacts_dir" => self.artifacts_dir = Some(PathBuf::from(val)),
             "disable_oms" => self.disable_oms = val.parse().map_err(|_| bad(key, val))?,
             "checkpoint_every" => {
                 self.checkpoint_every = val.parse().map_err(|_| bad(key, val))?

@@ -29,9 +29,28 @@ fn encode_vertex(line: &formats::VertexLine, weighted: bool, out: &mut Vec<u8>) 
     }
 }
 
-/// Load a text graph from `dfs` into `n` per-machine stores under
-/// `<workdir>/m<i>/basic/`.  Returns the stores (state arrays in memory).
+/// Load a text graph from `dfs` into per-machine stores.
+///
+/// Deprecated shim: the session API is the supported entry point —
+/// `session.load(GraphSource::Text { .. })` (see [`crate::session`]).
+#[deprecated(
+    since = "0.2.0",
+    note = "use the session API: session.load(GraphSource::Text { name, weighted, directed })"
+)]
 pub fn load_text(eng: &Engine, dfs: &Dfs, name: &str, weighted: bool) -> Result<Vec<MachineStore>> {
+    load_text_impl(eng, dfs, name, weighted)
+}
+
+/// Parallel text loading (§3.4): machine `i` parses blocks `j ≡ i (mod n)`
+/// into `n` per-machine stores under `<workdir>/m<i>/basic/`.  Returns the
+/// stores (state arrays in memory).  [`crate::session::Session::load`] is
+/// the public face of this function.
+pub(crate) fn load_text_impl(
+    eng: &Engine,
+    dfs: &Dfs,
+    name: &str,
+    weighted: bool,
+) -> Result<Vec<MachineStore>> {
     let n = eng.profile.machines;
     let nblocks = dfs.num_blocks(name)?;
     let endpoints = net::build(n, eng.profile.net_bytes_per_sec, eng.profile.latency_us);

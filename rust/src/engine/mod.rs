@@ -1,13 +1,22 @@
-//! The GraphD engine facade: load a graph from the (simulated) HDFS into
-//! per-machine stores, run vertex programs in IO-Basic or IO-Recoded mode,
-//! and gather results + metrics.
+//! The GraphD engine internals: load a graph from the (simulated) HDFS
+//! into per-machine stores, run vertex programs in IO-Basic or IO-Recoded
+//! mode, and gather results + metrics.
+//!
+//! Callers should not wire these pieces by hand any more — the fluent
+//! session API ([`crate::session`]) is the single entry point for the
+//! Load → IO-Recoding → Compute pipeline:
 //!
 //! ```ignore
-//! let eng = Engine::new(profile, cfg)?;
-//! let stores = eng.load_text(&dfs, "graph.txt", weighted)?;   // "Load"
-//! let rec    = recode::recode(&eng, &stores)?;                // "IO-Recoding"
-//! let out    = eng.run(&rec, Arc::new(PageRank::new(10)))?;   // "Compute"
+//! let session = GraphD::builder().machines(4).workdir(wd).build()?;
+//! let mut graph = session.load(GraphSource::InMemory(&g))?;   // "Load"
+//! graph.recode()?;                                            // "IO-Recoding"
+//! let out = graph.job(Arc::new(PageRank::new(10)))            // "Compute"
+//!     .mode(Mode::Auto)
+//!     .run()?;
 //! ```
+//!
+//! The free functions `load::load_text` / `run::run_job` remain as thin
+//! deprecated shims so out-of-tree code keeps compiling.
 
 pub mod load;
 pub mod run;
@@ -16,8 +25,11 @@ use crate::config::{ClusterProfile, JobConfig};
 use crate::error::Result;
 use std::path::PathBuf;
 
+#[allow(deprecated)]
 pub use load::load_text;
-pub use run::{run_job, JobResult};
+#[allow(deprecated)]
+pub use run::run_job;
+pub use run::JobResult;
 
 /// Engine handle: profile + config + working directory.
 pub struct Engine {

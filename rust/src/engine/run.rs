@@ -36,18 +36,47 @@ impl<P: VertexProgram> JobResult<P> {
 }
 
 /// Run `program` over the given per-machine stores.
+///
+/// Deprecated shim: the fluent session API is the supported entry point —
+/// `GraphD::builder()…build()?.load(src)?.run(program)` (see
+/// [`crate::session`]).  Kept so out-of-tree callers still compile;
+/// behaviour is identical to `Session`/`JobBuilder` runs.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the session API: GraphD::builder()…load(..)?.run(program) or .job(program).run()"
+)]
 pub fn run_job<P: VertexProgram>(
     eng: &Engine,
     stores: &[MachineStore],
     program: Arc<P>,
 ) -> Result<JobResult<P>> {
-    run_job_with(eng, stores, program, None, None)
+    run_job_with_impl(eng, stores, program, None, None)
 }
 
-/// Run with optional checkpointing and/or recovery: `checkpoint` enables
-/// periodic checkpoints (§3.4); `resume = Some(s)` restarts from the
-/// completed checkpoint taken after superstep `s`.
+/// Run with optional checkpointing and/or recovery.
+///
+/// Deprecated shim over the session API: use
+/// `graph.job(program).checkpoint(cfg).resume(step).run()` instead.
+#[deprecated(
+    since = "0.2.0",
+    note = "use the session API: graph.job(program).checkpoint(cfg).resume(step).run()"
+)]
 pub fn run_job_with<P: VertexProgram>(
+    eng: &Engine,
+    stores: &[MachineStore],
+    program: Arc<P>,
+    checkpoint: Option<crate::ft::CheckpointCfg>,
+    resume: Option<u64>,
+) -> Result<JobResult<P>> {
+    run_job_with_impl(eng, stores, program, checkpoint, resume)
+}
+
+/// The actual job driver: spin up `n` machine threads, run the superstep
+/// loop to termination, gather values + metrics.  `checkpoint` enables
+/// periodic checkpoints (§3.4); `resume = Some(s)` restarts from the
+/// completed checkpoint taken after superstep `s`.  Session [`crate::session::JobBuilder`]
+/// is the public face of this function.
+pub(crate) fn run_job_with_impl<P: VertexProgram>(
     eng: &Engine,
     stores: &[MachineStore],
     program: Arc<P>,

@@ -1,44 +1,94 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled Display/Error impls: the offline
+//! build carries no external dependencies).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by GraphD jobs and substrates.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("I/O error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// An in-memory system refused to run: the estimated footprint exceeds
     /// the per-machine RAM budget of the cluster profile (reproduces the
     /// paper's "Insufficient Main Memories" table entries).
-    #[error("insufficient main memories: need {need_mb:.1} MB/machine, budget {budget_mb:.1} MB")]
     InsufficientMemory { need_mb: f64, budget_mb: f64 },
 
     /// An out-of-core system refused to run: its on-disk working set
     /// exceeds the disk budget (the paper's "Insufficient Disk Space").
-    #[error("insufficient disk space: need {need_mb:.1} MB, budget {budget_mb:.1} MB")]
     InsufficientDisk { need_mb: f64, budget_mb: f64 },
 
-    #[error("corrupt stream: {0}")]
     CorruptStream(String),
 
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
-    #[error("worker {machine} panicked: {cause}")]
     WorkerPanic { machine: usize, cause: String },
 
-    #[error("{0}")]
     Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "I/O error: {e}"),
+            Error::InsufficientMemory { need_mb, budget_mb } => write!(
+                f,
+                "insufficient main memories: need {need_mb:.1} MB/machine, budget {budget_mb:.1} MB"
+            ),
+            Error::InsufficientDisk { need_mb, budget_mb } => write!(
+                f,
+                "insufficient disk space: need {need_mb:.1} MB, budget {budget_mb:.1} MB"
+            ),
+            Error::CorruptStream(s) => write!(f, "corrupt stream: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Xla(s) => write!(f, "xla runtime error: {s}"),
+            Error::WorkerPanic { machine, cause } => {
+                write!(f, "worker {machine} panicked: {cause}")
+            }
+            Error::Other(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        Error::Other(format!("{e:#}"))
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-impl From<anyhow::Error> for Error {
-    fn from(e: anyhow::Error) -> Self {
-        Error::Other(format!("{e:#}"))
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_seed_messages() {
+        let e = Error::InsufficientMemory { need_mb: 12.0, budget_mb: 8.0 };
+        assert_eq!(
+            e.to_string(),
+            "insufficient main memories: need 12.0 MB/machine, budget 8.0 MB"
+        );
+        let e = Error::WorkerPanic { machine: 3, cause: "boom".into() };
+        assert_eq!(e.to_string(), "worker 3 panicked: boom");
+        let io = Error::from(std::io::Error::new(std::io::ErrorKind::Other, "x"));
+        assert!(io.to_string().starts_with("I/O error:"));
     }
 }

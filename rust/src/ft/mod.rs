@@ -20,13 +20,25 @@ use crate::util::bitset::BitSet;
 use crate::worker::units::Incoming;
 use std::path::{Path, PathBuf};
 
-/// Checkpoint configuration handed to the job.
+/// Checkpoint configuration handed to a job via
+/// [`crate::session::JobBuilder::checkpoint`] (or the deprecated
+/// `run_job_with` shim).
 #[derive(Clone, Debug)]
 pub struct CheckpointCfg {
     /// Target directory (a DFS path).
     pub dir: PathBuf,
     /// Checkpoint every `every` supersteps.
     pub every: u64,
+}
+
+impl CheckpointCfg {
+    /// Checkpoint into `dir` every `every` supersteps.
+    pub fn every(dir: impl Into<PathBuf>, every: u64) -> Self {
+        Self {
+            dir: dir.into(),
+            every,
+        }
+    }
 }
 
 fn ckpt_path(dir: &Path, step: u64, machine: usize) -> PathBuf {

@@ -15,11 +15,20 @@
 //!   min-relax) written as Pallas kernels inside jax functions and
 //!   AOT-lowered to HLO text at build time.
 //! * **Runtime bridge** ([`runtime`]) — loads `artifacts/*.hlo.txt` via the
-//!   `xla` crate (PJRT CPU) and executes them on the recoded-mode hot path;
-//!   python never runs at job time.
+//!   `xla` crate (PJRT CPU, behind the `xla` cargo feature) and executes
+//!   them on the recoded-mode hot path; python never runs at job time.
 //!
-//! See `DESIGN.md` for the full inventory and experiment index, and
-//! `EXPERIMENTS.md` for reproduced tables.
+//! The supported entry point is the fluent [`session`] API:
+//!
+//! ```ignore
+//! let session = GraphD::builder().machines(4).workdir(wd).build()?;
+//! let mut graph = session.load(GraphSource::InMemory(&g))?;
+//! let basic = graph.run(Arc::new(PageRank::new(10)))?;
+//! let recoded = graph.recode()?.job(Arc::new(PageRank::new(10))).mode(Mode::Auto).run()?;
+//! ```
+//!
+//! See the top-level `README.md` for the quickstart and the experiment
+//! index (tables are reproduced by `rust/benches/` and `graphd table`).
 
 pub mod algos;
 pub mod api;
@@ -36,8 +45,11 @@ pub mod msg;
 pub mod net;
 pub mod recode;
 pub mod runtime;
+pub mod session;
 pub mod stream;
 pub mod util;
 pub mod worker;
 
+pub use config::Mode;
 pub use error::{Error, Result};
+pub use session::{GraphD, GraphSource, JobBuilder, JobPlan, LoadedGraph, Session, Xla};

@@ -13,12 +13,15 @@
 
 use graphd::baselines::Algo;
 use graphd::bench;
-use graphd::config::{ClusterProfile, JobConfig};
+use graphd::config::ClusterProfile;
 use graphd::graph::formats;
 use graphd::graph::generator::Dataset;
 use graphd::metrics::{Cell, Table};
 use std::collections::HashMap;
 
+/// Parse `--flag [value]` and `-c key=val` arguments.  A `--flag` followed
+/// by another flag (or by nothing) is a *boolean* flag: it maps to an empty
+/// string and does **not** swallow the next token.
 fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<(String, String)>) {
     let mut flags = HashMap::new();
     let mut cfgs = Vec::new();
@@ -33,9 +36,16 @@ fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<(String, String
             }
             i += 2;
         } else if let Some(name) = a.strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_default();
-            flags.insert(name.to_string(), val);
-            i += 2;
+            match args.get(i + 1) {
+                Some(next) if !next.starts_with("--") && next != "-c" => {
+                    flags.insert(name.to_string(), next.clone());
+                    i += 2;
+                }
+                _ => {
+                    flags.insert(name.to_string(), String::new());
+                    i += 1;
+                }
+            }
         } else {
             i += 1;
         }
@@ -126,13 +136,15 @@ fn cmd_run(
         }
         other => return Err(graphd::Error::Config(format!("unknown algo {other}"))),
     };
-    // Validate -c overrides even though the harness drives both modes.
-    let mut probe = JobConfig::default();
-    for (k, v) in cfgs {
-        probe.apply(k, v)?;
-    }
 
-    let gd = bench::run_graphd("cli", &g, algo, &profile, bench::use_xla_from_env())?;
+    let gd = bench::run_graphd_cfg(
+        "cli",
+        &g,
+        algo,
+        &profile,
+        bench::use_xla_from_env(),
+        cfgs,
+    )?;
     let mut t = Table::new(
         &format!("{} / {} on {}", ds.name(), algo.name(), profile.name),
         &["Preprocess", "Load", "Compute"],
@@ -262,4 +274,40 @@ fn cmd_info() {
             "missing — run `make artifacts`"
         }
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_values_and_configs() {
+        let (flags, cfgs) = parse_flags(&sv(&[
+            "--dataset", "btc-s", "--steps", "5", "-c", "mode=recoded",
+        ]));
+        assert_eq!(flags["dataset"], "btc-s");
+        assert_eq!(flags["steps"], "5");
+        assert_eq!(cfgs, vec![("mode".to_string(), "recoded".to_string())]);
+    }
+
+    #[test]
+    fn parse_flags_boolean_does_not_swallow_next_flag() {
+        // Regression: `--verbose --dataset btc-s` used to record
+        // verbose="--dataset" and drop the dataset flag entirely.
+        let (flags, _) = parse_flags(&sv(&["--verbose", "--dataset", "btc-s"]));
+        assert_eq!(flags["verbose"], "");
+        assert_eq!(flags["dataset"], "btc-s");
+    }
+
+    #[test]
+    fn parse_flags_trailing_boolean_and_c_boundary() {
+        let (flags, cfgs) = parse_flags(&sv(&["--dry-run", "-c", "merge_k=10", "--force"]));
+        assert_eq!(flags["dry-run"], "");
+        assert_eq!(flags["force"], "");
+        assert_eq!(cfgs, vec![("merge_k".to_string(), "10".to_string())]);
+    }
 }

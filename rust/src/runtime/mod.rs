@@ -1,56 +1,55 @@
 //! Runtime bridge: load AOT-compiled HLO-text artifacts produced by
 //! `python/compile/aot.py` and execute them on the PJRT CPU client via the
-//! `xla` crate (see /opt/xla-example/load_hlo for the reference wiring).
+//! `xla` crate.
 //!
 //! The recoded-mode hot path calls [`KernelSet`] for block vertex updates
 //! (PageRank, min-relax).  Every kernel also has a scalar Rust fallback
 //! with bit-identical semantics — used when artifacts are absent, by the
 //! `use_xla=false` ablation, and as a correctness oracle in tests.
 //!
+//! The PJRT path is behind the `xla` cargo feature (it needs the external
+//! `xla`/`anyhow` crates and a PJRT plugin, which the offline build does
+//! not carry).  Without the feature [`KernelSet::load`] yields an empty
+//! set and every update runs on the scalar path — numerics are identical,
+//! so callers and tests need no gating.
+//!
 //! Artifacts operate on fixed [`BLOCK`]-sized arrays; inputs are padded and
 //! outputs truncated here, so callers never see the block size.
 
-use crate::error::{Error, Result};
+use crate::error::Result;
 use std::path::{Path, PathBuf};
 
 /// Block size baked into the AOT artifacts (mirrors python `kernels.BLOCK`).
 pub const BLOCK: usize = 65536;
 
-/// One compiled HLO artifact.
-pub struct HloExecutable {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
+#[cfg(feature = "xla")]
+pub use pjrt::HloExecutable;
+
+/// Artifact files a [`KernelSet`] looks for.
+pub const ARTIFACT_NAMES: [&str; 3] = ["pagerank_update", "minrelax_f32", "minrelax_i32"];
+
+/// Does `dir` contain at least one AOT artifact?  A pure file check, usable
+/// regardless of whether the PJRT runtime is compiled in — the session's
+/// `Mode::Auto`/`Xla::Auto` detection relies on it.
+pub fn artifacts_present(dir: &Path) -> bool {
+    ARTIFACT_NAMES
+        .iter()
+        .any(|n| dir.join(format!("{n}.hlo.txt")).exists())
 }
 
-impl HloExecutable {
-    /// Load `path` (HLO text emitted by jax lowering) and compile it on a
-    /// CPU PJRT client.
-    pub fn load(path: &str) -> anyhow::Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        let proto = xla::HloModuleProto::from_text_file(path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        Ok(Self { client, exe })
-    }
-
-    /// Execute with literal inputs; artifacts are lowered with
-    /// `return_tuple=True`, so the result is always a tuple literal.
-    pub fn run(&self, args: &[xla::Literal]) -> anyhow::Result<xla::Literal> {
-        let out = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
-        Ok(out)
-    }
-}
-
-fn xla_err(e: anyhow::Error) -> Error {
-    Error::Xla(format!("{e:#}"))
+/// Is the PJRT execution path compiled into this binary?
+pub const fn xla_runtime_available() -> bool {
+    cfg!(feature = "xla")
 }
 
 /// The loaded kernel set used by the engine's block updates.
 pub struct KernelSet {
-    pagerank: Option<HloExecutable>,
-    minrelax_f32: Option<HloExecutable>,
-    minrelax_i32: Option<HloExecutable>,
+    #[cfg(feature = "xla")]
+    pagerank: Option<pjrt::HloExecutable>,
+    #[cfg(feature = "xla")]
+    minrelax_f32: Option<pjrt::HloExecutable>,
+    #[cfg(feature = "xla")]
+    minrelax_i32: Option<pjrt::HloExecutable>,
     /// Force the scalar fallback even when artifacts are loaded.
     pub force_native: bool,
 }
@@ -58,30 +57,42 @@ pub struct KernelSet {
 impl KernelSet {
     /// Load all artifacts from `dir`.  Missing files are tolerated (the
     /// corresponding kernel falls back to scalar Rust); a present-but-
-    /// corrupt artifact is an error.
+    /// corrupt artifact is an error.  Without the `xla` feature this always
+    /// yields an empty (scalar-only) set.
     pub fn load(dir: &Path) -> Result<Self> {
-        let load_one = |name: &str| -> Result<Option<HloExecutable>> {
-            let p: PathBuf = dir.join(format!("{name}.hlo.txt"));
-            if !p.exists() {
-                return Ok(None);
-            }
-            HloExecutable::load(p.to_str().unwrap())
-                .map(Some)
-                .map_err(xla_err)
-        };
-        Ok(Self {
-            pagerank: load_one("pagerank_update")?,
-            minrelax_f32: load_one("minrelax_f32")?,
-            minrelax_i32: load_one("minrelax_i32")?,
-            force_native: false,
-        })
+        #[cfg(feature = "xla")]
+        {
+            let load_one = |name: &str| -> Result<Option<pjrt::HloExecutable>> {
+                let p: PathBuf = dir.join(format!("{name}.hlo.txt"));
+                if !p.exists() {
+                    return Ok(None);
+                }
+                pjrt::HloExecutable::load(p.to_str().unwrap())
+                    .map(Some)
+                    .map_err(pjrt::xla_err)
+            };
+            Ok(Self {
+                pagerank: load_one("pagerank_update")?,
+                minrelax_f32: load_one("minrelax_f32")?,
+                minrelax_i32: load_one("minrelax_i32")?,
+                force_native: false,
+            })
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            let _ = dir;
+            Ok(Self { force_native: false })
+        }
     }
 
     /// A kernel set with no artifacts: everything runs on the scalar path.
     pub fn native_only() -> Self {
         Self {
+            #[cfg(feature = "xla")]
             pagerank: None,
+            #[cfg(feature = "xla")]
             minrelax_f32: None,
+            #[cfg(feature = "xla")]
             minrelax_i32: None,
             force_native: true,
         }
@@ -91,16 +102,21 @@ impl KernelSet {
     pub fn default_dir() -> PathBuf {
         std::env::var("GRAPHD_ARTIFACTS")
             .map(PathBuf::from)
-            .unwrap_or_else(|_| {
-                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-            })
+            .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
     }
 
     pub fn has_xla(&self) -> bool {
-        !self.force_native
-            && (self.pagerank.is_some()
-                || self.minrelax_f32.is_some()
-                || self.minrelax_i32.is_some())
+        #[cfg(feature = "xla")]
+        {
+            !self.force_native
+                && (self.pagerank.is_some()
+                    || self.minrelax_f32.is_some()
+                    || self.minrelax_i32.is_some())
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            false
+        }
     }
 
     /// PageRank block update over `sums`/`deg` (combined message sums and
@@ -112,63 +128,39 @@ impl KernelSet {
         inv_n: f32,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         debug_assert_eq!(sums.len(), deg.len());
-        match (&self.pagerank, self.force_native) {
-            (Some(exe), false) => {
-                let n = sums.len();
-                let mut val = Vec::with_capacity(n);
-                let mut msg = Vec::with_capacity(n);
-                let mut sums_blk = vec![0f32; BLOCK];
-                let mut deg_blk = vec![0f32; BLOCK];
-                for start in (0..n).step_by(BLOCK) {
-                    let len = (n - start).min(BLOCK);
-                    sums_blk[..len].copy_from_slice(&sums[start..start + len]);
-                    sums_blk[len..].fill(0.0);
-                    deg_blk[..len].copy_from_slice(&deg[start..start + len]);
-                    deg_blk[len..].fill(0.0);
-                    let args = [
-                        xla::Literal::vec1(&sums_blk),
-                        xla::Literal::vec1(&deg_blk),
-                        xla::Literal::vec1(&[inv_n]),
-                    ];
-                    let out = exe.run(&args).map_err(xla_err)?;
-                    let parts = out.to_tuple().map_err(|e| xla_err(e.into()))?;
-                    let v = parts[0].to_vec::<f32>().map_err(|e| xla_err(e.into()))?;
-                    let m = parts[1].to_vec::<f32>().map_err(|e| xla_err(e.into()))?;
-                    val.extend_from_slice(&v[..len]);
-                    msg.extend_from_slice(&m[..len]);
-                }
-                Ok((val, msg))
-            }
-            _ => {
-                // Scalar fallback: the exact formulas of kernels/pagerank.py.
-                let mut val = Vec::with_capacity(sums.len());
-                let mut msg = Vec::with_capacity(sums.len());
-                for i in 0..sums.len() {
-                    let v = 0.15 * inv_n + 0.85 * sums[i];
-                    val.push(v);
-                    msg.push(if deg[i] > 0.0 { v / deg[i].max(1.0) } else { 0.0 });
-                }
-                Ok((val, msg))
-            }
+        #[cfg(feature = "xla")]
+        if let (Some(exe), false) = (&self.pagerank, self.force_native) {
+            return pjrt::pagerank_blocks(exe, sums, deg, inv_n);
         }
+        // Scalar fallback: the exact formulas of kernels/pagerank.py.
+        let mut val = Vec::with_capacity(sums.len());
+        let mut msg = Vec::with_capacity(sums.len());
+        for i in 0..sums.len() {
+            let v = 0.15 * inv_n + 0.85 * sums[i];
+            val.push(v);
+            msg.push(if deg[i] > 0.0 { v / deg[i].max(1.0) } else { 0.0 });
+        }
+        Ok((val, msg))
     }
 
     /// f32 min-relax block update: `(new, changed)` per vertex.
     pub fn minrelax_f32(&self, cur: &[f32], msg: &[f32]) -> Result<(Vec<f32>, Vec<i32>)> {
         debug_assert_eq!(cur.len(), msg.len());
-        match (&self.minrelax_f32, self.force_native) {
-            (Some(exe), false) => run_minrelax_blocks(exe, cur, msg, f32::INFINITY),
-            _ => Ok(native_minrelax(cur, msg)),
+        #[cfg(feature = "xla")]
+        if let (Some(exe), false) = (&self.minrelax_f32, self.force_native) {
+            return pjrt::run_minrelax_blocks(exe, cur, msg, f32::INFINITY);
         }
+        Ok(native_minrelax(cur, msg))
     }
 
     /// i32 min-relax block update: `(new, changed)` per vertex.
     pub fn minrelax_i32(&self, cur: &[i32], msg: &[i32]) -> Result<(Vec<i32>, Vec<i32>)> {
         debug_assert_eq!(cur.len(), msg.len());
-        match (&self.minrelax_i32, self.force_native) {
-            (Some(exe), false) => run_minrelax_blocks(exe, cur, msg, i32::MAX),
-            _ => Ok(native_minrelax(cur, msg)),
+        #[cfg(feature = "xla")]
+        if let (Some(exe), false) = (&self.minrelax_i32, self.force_native) {
+            return pjrt::run_minrelax_blocks(exe, cur, msg, i32::MAX);
         }
+        Ok(native_minrelax(cur, msg))
     }
 }
 
@@ -183,36 +175,106 @@ fn native_minrelax<T: PartialOrd + Copy>(cur: &[T], msg: &[T]) -> (Vec<T>, Vec<i
     (new, chg)
 }
 
-/// Pad/execute/truncate a minrelax artifact over arbitrary lengths.
-fn run_minrelax_blocks<T>(
-    exe: &HloExecutable,
-    cur: &[T],
-    msg: &[T],
-    pad: T,
-) -> Result<(Vec<T>, Vec<i32>)>
-where
-    T: xla::NativeType + xla::ArrayElement + Copy,
-{
-    let n = cur.len();
-    let mut new = Vec::with_capacity(n);
-    let mut chg = Vec::with_capacity(n);
-    let mut cur_blk = vec![pad; BLOCK];
-    let mut msg_blk = vec![pad; BLOCK];
-    for start in (0..n).step_by(BLOCK) {
-        let len = (n - start).min(BLOCK);
-        cur_blk[..len].copy_from_slice(&cur[start..start + len]);
-        cur_blk[len..].fill(pad);
-        msg_blk[..len].copy_from_slice(&msg[start..start + len]);
-        msg_blk[len..].fill(pad);
-        let args = [xla::Literal::vec1(&cur_blk), xla::Literal::vec1(&msg_blk)];
-        let out = exe.run(&args).map_err(xla_err)?;
-        let parts = out.to_tuple().map_err(|e| xla_err(e.into()))?;
-        let nv = parts[0].to_vec::<T>().map_err(|e| xla_err(e.into()))?;
-        let cv = parts[1].to_vec::<i32>().map_err(|e| xla_err(e.into()))?;
-        new.extend_from_slice(&nv[..len]);
-        chg.extend_from_slice(&cv[..len]);
+/// PJRT execution of the HLO-text artifacts (needs the `xla` crate).
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::BLOCK;
+    use crate::error::{Error, Result};
+
+    /// One compiled HLO artifact.
+    pub struct HloExecutable {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
     }
-    Ok((new, chg))
+
+    impl HloExecutable {
+        /// Load `path` (HLO text emitted by jax lowering) and compile it on
+        /// a CPU PJRT client.
+        pub fn load(path: &str) -> anyhow::Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            Ok(Self { client, exe })
+        }
+
+        /// Execute with literal inputs; artifacts are lowered with
+        /// `return_tuple=True`, so the result is always a tuple literal.
+        pub fn run(&self, args: &[xla::Literal]) -> anyhow::Result<xla::Literal> {
+            let out = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+            Ok(out)
+        }
+    }
+
+    pub fn xla_err(e: anyhow::Error) -> Error {
+        Error::Xla(format!("{e:#}"))
+    }
+
+    /// Pad/execute/truncate the pagerank artifact over arbitrary lengths.
+    pub fn pagerank_blocks(
+        exe: &HloExecutable,
+        sums: &[f32],
+        deg: &[f32],
+        inv_n: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = sums.len();
+        let mut val = Vec::with_capacity(n);
+        let mut msg = Vec::with_capacity(n);
+        let mut sums_blk = vec![0f32; BLOCK];
+        let mut deg_blk = vec![0f32; BLOCK];
+        for start in (0..n).step_by(BLOCK) {
+            let len = (n - start).min(BLOCK);
+            sums_blk[..len].copy_from_slice(&sums[start..start + len]);
+            sums_blk[len..].fill(0.0);
+            deg_blk[..len].copy_from_slice(&deg[start..start + len]);
+            deg_blk[len..].fill(0.0);
+            let args = [
+                xla::Literal::vec1(&sums_blk),
+                xla::Literal::vec1(&deg_blk),
+                xla::Literal::vec1(&[inv_n]),
+            ];
+            let out = exe.run(&args).map_err(xla_err)?;
+            let parts = out.to_tuple().map_err(|e| xla_err(e.into()))?;
+            let v = parts[0].to_vec::<f32>().map_err(|e| xla_err(e.into()))?;
+            let m = parts[1].to_vec::<f32>().map_err(|e| xla_err(e.into()))?;
+            val.extend_from_slice(&v[..len]);
+            msg.extend_from_slice(&m[..len]);
+        }
+        Ok((val, msg))
+    }
+
+    /// Pad/execute/truncate a minrelax artifact over arbitrary lengths.
+    pub fn run_minrelax_blocks<T>(
+        exe: &HloExecutable,
+        cur: &[T],
+        msg: &[T],
+        pad: T,
+    ) -> Result<(Vec<T>, Vec<i32>)>
+    where
+        T: xla::NativeType + xla::ArrayElement + Copy,
+    {
+        let n = cur.len();
+        let mut new = Vec::with_capacity(n);
+        let mut chg = Vec::with_capacity(n);
+        let mut cur_blk = vec![pad; BLOCK];
+        let mut msg_blk = vec![pad; BLOCK];
+        for start in (0..n).step_by(BLOCK) {
+            let len = (n - start).min(BLOCK);
+            cur_blk[..len].copy_from_slice(&cur[start..start + len]);
+            cur_blk[len..].fill(pad);
+            msg_blk[..len].copy_from_slice(&msg[start..start + len]);
+            msg_blk[len..].fill(pad);
+            let args = [xla::Literal::vec1(&cur_blk), xla::Literal::vec1(&msg_blk)];
+            let out = exe.run(&args).map_err(xla_err)?;
+            let parts = out.to_tuple().map_err(|e| xla_err(e.into()))?;
+            let nv = parts[0].to_vec::<T>().map_err(|e| xla_err(e.into()))?;
+            let cv = parts[1].to_vec::<i32>().map_err(|e| xla_err(e.into()))?;
+            new.extend_from_slice(&nv[..len]);
+            chg.extend_from_slice(&cv[..len]);
+        }
+        Ok((new, chg))
+    }
 }
 
 #[cfg(test)]
@@ -244,6 +306,22 @@ mod tests {
         assert_eq!(ci, vec![0, 1]);
     }
 
+    #[test]
+    fn artifacts_present_is_a_pure_file_check() {
+        let d = std::env::temp_dir().join(format!(
+            "graphd_artifacts_probe_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        assert!(!artifacts_present(&d));
+        std::fs::write(d.join("pagerank_update.hlo.txt"), "hlo").unwrap();
+        assert!(artifacts_present(&d));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[cfg(feature = "xla")]
     #[test]
     fn xla_matches_native_when_artifacts_present() {
         let dir = KernelSet::default_dir();

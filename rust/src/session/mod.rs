@@ -1,0 +1,756 @@
+//! The fluent GraphD session API — the single entry point for the paper's
+//! three-phase pipeline: **Load** (§3.4) → **IO-Recoding** (§5) →
+//! **Compute** (§3–§4).
+//!
+//! One builder yields a [`Session`]; [`Session::load`] materialises a
+//! [`GraphSource`] into per-machine stores and returns a [`LoadedGraph`]
+//! that owns the stores and the engine; jobs run through a per-job
+//! [`JobBuilder`] that folds in what used to be scattered entry points:
+//! execution mode ([`Mode::Auto`] resolution), XLA-kernel detection
+//! ([`Xla`]), checkpointing and resume (§3.4).
+//!
+//! ```ignore
+//! use graphd::{GraphD, GraphSource, Mode};
+//!
+//! let session = GraphD::builder()
+//!     .machines(4)
+//!     .workdir(&wd)
+//!     .max_supersteps(10)
+//!     .build()?;
+//! let mut graph = session.load(GraphSource::InMemory(&g))?;
+//! let basic = graph.run(Arc::new(PageRank::new(10)))?;          // IO-Basic
+//! let recoded = graph.recode()?                                 // IO-Recoding
+//!     .job(Arc::new(PageRank::new(10)))
+//!     .mode(Mode::Auto)                                         // IO-Recoded (+XLA if artifacts)
+//!     .run()?;
+//! ```
+//!
+//! The old free functions (`engine::load::load_text`, `engine::run::run_job`)
+//! survive as thin deprecated shims over the same internals.
+
+use crate::api::VertexProgram;
+use crate::config::{ClusterProfile, JobConfig, Mode};
+use crate::dfs::Dfs;
+use crate::engine::run::JobResult;
+use crate::engine::{load as engine_load, run as engine_run, Engine};
+use crate::error::{Error, Result};
+use crate::ft::CheckpointCfg;
+use crate::graph::generator::Dataset;
+use crate::graph::Graph;
+use crate::recode;
+use crate::runtime::{self, KernelSet};
+use crate::util::timer::timed;
+use crate::worker::{MachineStore, Partitioning};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// XLA block-kernel policy for a session or a single job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Xla {
+    /// Use the AOT kernels iff artifacts are present in the artifacts
+    /// directory (missing artifacts fall back to the scalar path).
+    Auto,
+    /// Request the kernels unconditionally (a present-but-corrupt artifact
+    /// is then a job error; absent artifacts still fall back to scalar).
+    On,
+    /// Scalar Rust only.
+    Off,
+}
+
+/// Marker type carrying the builder entry point: `GraphD::builder()`.
+pub struct GraphD;
+
+impl GraphD {
+    /// Start configuring a session.  Defaults: the `test` cluster profile
+    /// with 4 machines, paper-default job tunables, a pid-scoped temp
+    /// workdir, and `Xla::Auto`.
+    pub fn builder() -> GraphDBuilder {
+        GraphDBuilder::default()
+    }
+}
+
+/// Fluent configuration for a [`Session`].
+pub struct GraphDBuilder {
+    profile: ClusterProfile,
+    cfg: JobConfig,
+    xla: Xla,
+    dfs_block_size: Option<u64>,
+    overrides: Vec<(String, String)>,
+}
+
+impl Default for GraphDBuilder {
+    fn default() -> Self {
+        // Process-unique counter so two default-built sessions in one
+        // process never share (and clobber) store directories.
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut cfg = JobConfig::default();
+        cfg.workdir = std::env::temp_dir()
+            .join(format!("graphd_session_{}_{}", std::process::id(), seq));
+        Self {
+            profile: ClusterProfile::test(4),
+            cfg,
+            xla: Xla::Auto,
+            dfs_block_size: None,
+            overrides: Vec::new(),
+        }
+    }
+}
+
+impl GraphDBuilder {
+    /// Replace the whole cluster profile (resets any earlier `machines`).
+    pub fn profile(mut self, p: ClusterProfile) -> Self {
+        self.profile = p;
+        self
+    }
+
+    /// Number of simulated machines (worker threads).
+    pub fn machines(mut self, n: usize) -> Self {
+        self.profile.machines = n;
+        self
+    }
+
+    /// Working-directory root; each machine stores under `<root>/m<i>/`,
+    /// the session DFS under `<root>/dfs/`.
+    pub fn workdir(mut self, p: impl Into<PathBuf>) -> Self {
+        self.cfg.workdir = p.into();
+        self
+    }
+
+    /// Session-default maximum supersteps (0 = unlimited); jobs can
+    /// override per run via [`JobBuilder::max_supersteps`].
+    pub fn max_supersteps(mut self, n: u64) -> Self {
+        self.cfg.max_supersteps = n;
+        self
+    }
+
+    /// Session-default execution mode (jobs override via [`JobBuilder::mode`]).
+    pub fn mode(mut self, m: Mode) -> Self {
+        self.cfg.mode = m;
+        self
+    }
+
+    /// Stream in-memory buffer size b (bytes).
+    pub fn stream_buf(mut self, b: usize) -> Self {
+        self.cfg.stream_buf = b;
+        self
+    }
+
+    /// Splittable-stream file cap ℬ (bytes).
+    pub fn oms_file_cap(mut self, b: usize) -> Self {
+        self.cfg.oms_file_cap = b;
+        self
+    }
+
+    /// Merge-sort fan-in k.
+    pub fn merge_k(mut self, k: usize) -> Self {
+        self.cfg.merge_k = k;
+        self
+    }
+
+    /// Keep OMS files until the next checkpoint (message-log recovery).
+    pub fn keep_oms_for_recovery(mut self, keep: bool) -> Self {
+        self.cfg.keep_oms_for_recovery = keep;
+        self
+    }
+
+    /// Session-default stall-and-send ablation switch.
+    pub fn disable_oms(mut self, d: bool) -> Self {
+        self.cfg.disable_oms = d;
+        self
+    }
+
+    /// XLA policy: `true` ⇒ [`Xla::Auto`], `false` ⇒ [`Xla::Off`].
+    pub fn use_xla(mut self, on: bool) -> Self {
+        self.xla = if on { Xla::Auto } else { Xla::Off };
+        self
+    }
+
+    /// Explicit XLA policy.
+    pub fn xla(mut self, x: Xla) -> Self {
+        self.xla = x;
+        self
+    }
+
+    /// Directory holding the AOT `*.hlo.txt` artifacts (default:
+    /// [`KernelSet::default_dir`]).
+    pub fn artifacts_dir(mut self, p: impl Into<PathBuf>) -> Self {
+        self.cfg.artifacts_dir = Some(p.into());
+        self
+    }
+
+    /// Simulated-HDFS block size for this session's DFS.
+    pub fn dfs_block_size(mut self, bs: u64) -> Self {
+        self.dfs_block_size = Some(bs);
+        self
+    }
+
+    /// Queue a raw `key=value` override (the CLI's `-c key=val` flags);
+    /// applied — and validated — at [`Self::build`] time.
+    pub fn config(mut self, key: &str, val: &str) -> Self {
+        self.overrides.push((key.to_string(), val.to_string()));
+        self
+    }
+
+    /// Validate the configuration, create the workdir + session DFS, and
+    /// return the [`Session`].
+    pub fn build(self) -> Result<Session> {
+        let mut cfg = self.cfg;
+        let mut xla = self.xla;
+        for (k, v) in &self.overrides {
+            cfg.apply(k, v)?;
+            if k == "use_xla" {
+                xla = if cfg.use_xla { Xla::Auto } else { Xla::Off };
+            }
+        }
+        if self.profile.machines == 0 {
+            return Err(Error::Config("a session needs at least 1 machine".into()));
+        }
+        std::fs::create_dir_all(&cfg.workdir)?;
+        let mut dfs = Dfs::new(&cfg.workdir.join("dfs"))?;
+        if let Some(bs) = self.dfs_block_size {
+            dfs = dfs.with_block_size(bs);
+        }
+        Ok(Session {
+            profile: self.profile,
+            cfg,
+            dfs,
+            xla,
+        })
+    }
+}
+
+/// Where [`Session::load`] gets its graph from.
+pub enum GraphSource<'a> {
+    /// A text file already on the session DFS (`session.dfs().put(..)` or
+    /// an earlier job's output).  `directed` drives the ID-recoding
+    /// protocol choice (3 supersteps vs the 1-round undirected shortcut).
+    Text {
+        name: String,
+        weighted: bool,
+        directed: bool,
+    },
+    /// An in-memory graph, written to the session DFS with its dense IDs.
+    InMemory(&'a Graph),
+    /// An in-memory graph written through a sparse old-ID mapping (seeded),
+    /// like real web inputs; the mapping is kept on the [`LoadedGraph`].
+    InMemorySparse(&'a Graph, u64),
+    /// A dataset preset at the given scale factor.
+    Generate(Dataset, f64),
+}
+
+/// One configured GraphD session: cluster profile + job defaults + DFS.
+pub struct Session {
+    profile: ClusterProfile,
+    cfg: JobConfig,
+    dfs: Dfs,
+    xla: Xla,
+}
+
+impl Session {
+    pub fn profile(&self) -> &ClusterProfile {
+        &self.profile
+    }
+
+    /// The session-default job configuration (per-job knobs are overridden
+    /// through [`JobBuilder`]).
+    pub fn config(&self) -> &JobConfig {
+        &self.cfg
+    }
+
+    pub fn dfs(&self) -> &Dfs {
+        &self.dfs
+    }
+
+    pub fn workdir(&self) -> &Path {
+        &self.cfg.workdir
+    }
+
+    /// The artifacts directory consulted by `Xla::Auto` detection.
+    pub fn artifacts_dir(&self) -> PathBuf {
+        self.cfg
+            .artifacts_dir
+            .clone()
+            .unwrap_or_else(KernelSet::default_dir)
+    }
+
+    fn engine(&self) -> Result<Engine> {
+        Engine::new(self.profile.clone(), self.cfg.clone())
+    }
+
+    /// The paper's "Load" phase: materialise `src` into per-machine stores
+    /// (state array `A` in memory, edge stream `S^E` on disk).
+    pub fn load(&self, src: GraphSource<'_>) -> Result<LoadedGraph<'_>> {
+        let engine = self.engine()?;
+        let (name, weighted, directed, id_map) = match src {
+            GraphSource::Text {
+                name,
+                weighted,
+                directed,
+            } => {
+                if !self.dfs.exists(&name) {
+                    return Err(Error::Config(format!(
+                        "GraphSource::Text: '{name}' not on the session DFS"
+                    )));
+                }
+                (name, weighted, directed, None)
+            }
+            GraphSource::InMemory(g) => {
+                engine_load::put_graph(&self.dfs, "graph.txt", g, None)?;
+                ("graph.txt".to_string(), g.weighted, g.directed, None)
+            }
+            GraphSource::InMemorySparse(g, seed) => {
+                let ids = engine_load::put_graph(&self.dfs, "graph.txt", g, Some(seed))?;
+                ("graph.txt".to_string(), g.weighted, g.directed, ids)
+            }
+            GraphSource::Generate(ds, scale) => {
+                let g = ds.generate_scaled(scale);
+                engine_load::put_graph(&self.dfs, "graph.txt", &g, None)?;
+                ("graph.txt".to_string(), g.weighted, g.directed, None)
+            }
+        };
+        let (load_secs, stores) =
+            timed(|| engine_load::load_text_impl(&engine, &self.dfs, &name, weighted));
+        Ok(LoadedGraph {
+            session: self,
+            engine,
+            stores: stores?,
+            recoded: None,
+            directed,
+            weighted,
+            id_map,
+            load_secs,
+            recode_secs: None,
+        })
+    }
+
+    /// Convenience: load `src` and run `program` with the session defaults
+    /// in one call.
+    pub fn run<P: VertexProgram>(
+        &self,
+        src: GraphSource<'_>,
+        program: Arc<P>,
+    ) -> Result<JobResult<P>> {
+        self.load(src)?.run(program)
+    }
+}
+
+/// A loaded graph: owns the per-machine stores, the engine handle, and —
+/// after [`Self::recode`] — the recoded store generation.
+pub struct LoadedGraph<'s> {
+    session: &'s Session,
+    engine: Engine,
+    stores: Vec<MachineStore>,
+    recoded: Option<Vec<MachineStore>>,
+    directed: bool,
+    weighted: bool,
+    id_map: Option<Vec<u32>>,
+    /// Wall-clock seconds of the parallel text load.
+    pub load_secs: f64,
+    /// Wall-clock seconds of ID recoding (set by [`Self::recode`]).
+    pub recode_secs: Option<f64>,
+}
+
+impl<'s> LoadedGraph<'s> {
+    /// The IO-Basic store generation.
+    pub fn stores(&self) -> &[MachineStore] {
+        &self.stores
+    }
+
+    /// The recoded store generation, if [`Self::recode`] has run.
+    pub fn recoded_stores(&self) -> Option<&[MachineStore]> {
+        self.recoded.as_deref()
+    }
+
+    pub fn is_recoded(&self) -> bool {
+        self.recoded.is_some()
+    }
+
+    pub fn directed(&self) -> bool {
+        self.directed
+    }
+
+    pub fn weighted(&self) -> bool {
+        self.weighted
+    }
+
+    /// Dense-ID → input-ID mapping when the session wrote the graph with
+    /// sparse IDs ([`GraphSource::InMemorySparse`]).
+    pub fn id_map(&self) -> Option<&[u32]> {
+        self.id_map.as_deref()
+    }
+
+    /// The paper's "IO-Recoding" phase (§5): produce the dense-ID store
+    /// generation under `<workdir>/m<i>/rec/`.  Idempotent; records
+    /// [`Self::recode_secs`] on first run.
+    pub fn recode(&mut self) -> Result<&mut Self> {
+        if self.recoded.is_none() {
+            let (secs, rec) =
+                timed(|| recode::recode(&self.engine, &self.stores, self.directed));
+            self.recoded = Some(rec?);
+            self.recode_secs = Some(secs);
+        }
+        Ok(self)
+    }
+
+    /// Re-read the recoded stores from local disks (the paper's "load
+    /// graph from local disks" cost), replacing the in-memory handles.
+    /// Returns the elapsed seconds.
+    pub fn reload_recoded(&mut self) -> Result<f64> {
+        if self.recoded.is_none() {
+            return Err(Error::Config(
+                "reload_recoded() requires recode() to have run".into(),
+            ));
+        }
+        let (secs, rec) = timed(|| engine_load::load_local(&self.engine, "rec"));
+        self.recoded = Some(rec?);
+        Ok(secs)
+    }
+
+    /// Translate an input-space vertex ID into the current ID space: the
+    /// identity before recoding, the §5 bijection (`pos·n + i`) after.
+    /// Panics if the vertex does not exist.
+    pub fn current_id_of(&self, input_id: u32) -> u32 {
+        match &self.recoded {
+            None => input_id,
+            Some(rec) => {
+                let n = rec.len();
+                let m = Partitioning::Hashed.machine_of(input_id, n);
+                let pos = rec[m]
+                    .ids
+                    .binary_search(&input_id)
+                    .expect("vertex must exist");
+                (pos * n + m) as u32
+            }
+        }
+    }
+
+    /// Run `program` with the session defaults (equivalent to
+    /// `self.job(program).run()`).
+    pub fn run<P: VertexProgram>(&self, program: Arc<P>) -> Result<JobResult<P>> {
+        self.job(program).run()
+    }
+
+    /// Start configuring a single job over this graph.
+    pub fn job<P: VertexProgram>(&self, program: Arc<P>) -> JobBuilder<'_, 's, P> {
+        JobBuilder {
+            mode: self.session.cfg.mode,
+            xla: self.session.xla,
+            graph: self,
+            program,
+            max_supersteps: None,
+            checkpoint: None,
+            resume: None,
+            disable_oms: None,
+        }
+    }
+}
+
+/// What a [`JobBuilder`] resolved its `Auto` knobs to (also the shape of
+/// the job the engine will actually run).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobPlan {
+    /// `Basic` or `Recoded` — never `Auto`.
+    pub mode: Mode,
+    /// Whether the job will request the XLA block kernels.
+    pub use_xla: bool,
+    /// Whether HLO artifacts were found in the artifacts directory.
+    pub artifacts_present: bool,
+}
+
+/// Per-job configuration: mode, superstep cap, checkpointing, resume, XLA.
+pub struct JobBuilder<'g, 's, P: VertexProgram> {
+    graph: &'g LoadedGraph<'s>,
+    program: Arc<P>,
+    mode: Mode,
+    xla: Xla,
+    max_supersteps: Option<u64>,
+    checkpoint: Option<CheckpointCfg>,
+    resume: Option<u64>,
+    disable_oms: Option<bool>,
+}
+
+impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
+    /// Execution mode.  [`Mode::Auto`] picks IO-Recoded (+XLA per the
+    /// [`Xla`] policy) when the program has a combiner and the graph has
+    /// been recoded, falling back to IO-Basic.  Note that recoded jobs
+    /// address vertices in the recoded ID space — translate sources via
+    /// [`LoadedGraph::current_id_of`].
+    pub fn mode(mut self, m: Mode) -> Self {
+        self.mode = m;
+        self
+    }
+
+    /// Per-job XLA policy (default: the session's).
+    pub fn xla(mut self, x: Xla) -> Self {
+        self.xla = x;
+        self
+    }
+
+    /// Per-job superstep cap (0 = unlimited).
+    pub fn max_supersteps(mut self, n: u64) -> Self {
+        self.max_supersteps = Some(n);
+        self
+    }
+
+    /// Enable periodic checkpoints (§3.4).
+    pub fn checkpoint(mut self, ck: CheckpointCfg) -> Self {
+        self.checkpoint = Some(ck);
+        self
+    }
+
+    /// Restart from the completed checkpoint taken after superstep `s`
+    /// (requires [`Self::checkpoint`] to point at the checkpoint dir).
+    pub fn resume(mut self, s: u64) -> Self {
+        self.resume = Some(s);
+        self
+    }
+
+    /// Stall-and-send ablation switch for this job.
+    pub fn disable_oms(mut self, d: bool) -> Self {
+        self.disable_oms = Some(d);
+        self
+    }
+
+    /// Resolve `Auto` mode and the XLA policy without running the job.
+    pub fn plan(&self) -> JobPlan {
+        let has_combiner = self.program.combiner().is_some();
+        let artifacts_present = runtime::artifacts_present(&self.graph.session.artifacts_dir());
+        let mode = match self.mode {
+            Mode::Auto => {
+                if has_combiner && self.graph.recoded.is_some() {
+                    Mode::Recoded
+                } else {
+                    Mode::Basic
+                }
+            }
+            m => m,
+        };
+        let use_xla = mode == Mode::Recoded
+            && match self.xla {
+                Xla::On => true,
+                Xla::Off => false,
+                Xla::Auto => artifacts_present,
+            };
+        JobPlan {
+            mode,
+            use_xla,
+            artifacts_present,
+        }
+    }
+
+    /// The paper's "Compute" phase: run the superstep loop to termination
+    /// and gather values + metrics (load/preprocess timings from the
+    /// [`LoadedGraph`] are folded into the returned metrics).
+    pub fn run(self) -> Result<JobResult<P>> {
+        let plan = self.plan();
+        let stores: &[MachineStore] = match plan.mode {
+            Mode::Recoded => self.graph.recoded.as_deref().ok_or_else(|| {
+                Error::Config("Mode::Recoded requires LoadedGraph::recode() first".into())
+            })?,
+            _ => &self.graph.stores,
+        };
+        let mut cfg = self.graph.session.cfg.clone();
+        cfg.mode = plan.mode;
+        cfg.use_xla = plan.use_xla;
+        if let Some(n) = self.max_supersteps {
+            cfg.max_supersteps = n;
+        }
+        if let Some(d) = self.disable_oms {
+            cfg.disable_oms = d;
+        }
+        // A `checkpoint_every` session/`-c` override without an explicit
+        // CheckpointCfg checkpoints into the session DFS.
+        let checkpoint = match (self.checkpoint, cfg.checkpoint_every) {
+            (Some(ck), _) => {
+                cfg.checkpoint_every = ck.every;
+                Some(ck)
+            }
+            (None, every) if every > 0 => Some(CheckpointCfg {
+                dir: self.graph.session.workdir().join("dfs").join("checkpoints"),
+                every,
+            }),
+            (None, _) => None,
+        };
+        let eng = Engine::new(self.graph.engine.profile.clone(), cfg)?;
+        let mut res =
+            engine_run::run_job_with_impl(&eng, stores, self.program, checkpoint, self.resume)?;
+        res.metrics.load_secs = self.graph.load_secs;
+        if plan.mode == Mode::Recoded {
+            res.metrics.preprocess_secs = self.graph.recode_secs.unwrap_or(0.0);
+        }
+        Ok(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{PageRank, TriangleCount};
+    use crate::graph::generator;
+
+    fn wd(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "graphd_session_test_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn builder_defaults_match_paper_constants() {
+        let d = wd("defaults");
+        let s = GraphD::builder().workdir(&d).build().unwrap();
+        assert_eq!(s.profile().machines, 4);
+        assert_eq!(s.profile().name, "test");
+        assert_eq!(s.config().stream_buf, 64 * 1024); // b = 64 KB
+        assert_eq!(s.config().oms_file_cap, 8 * 1024 * 1024); // ℬ = 8 MB
+        assert_eq!(s.config().merge_k, 1000); // k = 1000
+        assert_eq!(s.config().mode, Mode::Basic);
+        assert_eq!(s.config().max_supersteps, 0);
+        assert!(s.workdir().exists());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn builder_overrides_and_validation() {
+        let d = wd("overrides");
+        let s = GraphD::builder()
+            .workdir(&d)
+            .machines(3)
+            .config("mode", "recoded")
+            .config("oms_file_cap", "65536")
+            .build()
+            .unwrap();
+        assert_eq!(s.profile().machines, 3);
+        assert_eq!(s.config().mode, Mode::Recoded);
+        assert_eq!(s.config().oms_file_cap, 65536);
+        let _ = std::fs::remove_dir_all(&d);
+
+        let d2 = wd("badcfg");
+        assert!(GraphD::builder()
+            .workdir(&d2)
+            .config("nope", "1")
+            .build()
+            .is_err());
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn auto_mode_resolution_depends_on_combiner_and_recode() {
+        let d = wd("auto");
+        let g = generator::uniform(60, 240, false, 9);
+        let s = GraphD::builder().workdir(&d).machines(2).build().unwrap();
+        let mut lg = s.load(GraphSource::InMemory(&g)).unwrap();
+
+        // Not recoded yet: Auto falls back to Basic even with a combiner.
+        let plan = lg.job(Arc::new(PageRank::new(3))).mode(Mode::Auto).plan();
+        assert_eq!(plan.mode, Mode::Basic);
+
+        lg.recode().unwrap();
+        // Combiner + recoded stores: Auto picks Recoded.
+        let plan = lg.job(Arc::new(PageRank::new(3))).mode(Mode::Auto).plan();
+        assert_eq!(plan.mode, Mode::Recoded);
+        // No combiner (TriangleCount): Auto stays Basic.
+        let plan = lg.job(Arc::new(TriangleCount)).mode(Mode::Auto).plan();
+        assert_eq!(plan.mode, Mode::Basic);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn xla_policy_follows_artifacts_dir() {
+        let d = wd("xla");
+        let fake_artifacts = d.join("arts");
+        std::fs::create_dir_all(&fake_artifacts).unwrap();
+        let g = generator::uniform(40, 160, false, 3);
+
+        let s = GraphD::builder()
+            .workdir(d.join("sess"))
+            .machines(2)
+            .artifacts_dir(&fake_artifacts)
+            .build()
+            .unwrap();
+        let mut lg = s.load(GraphSource::InMemory(&g)).unwrap();
+        lg.recode().unwrap();
+
+        // Empty artifacts dir: Auto resolves to no XLA.
+        let plan = lg.job(Arc::new(PageRank::new(2))).mode(Mode::Auto).plan();
+        assert_eq!(plan.mode, Mode::Recoded);
+        assert!(!plan.artifacts_present);
+        assert!(!plan.use_xla);
+
+        // Drop in an artifact file: Auto flips on (plan only — running
+        // against a fake artifact is a job error on PJRT builds).
+        std::fs::write(fake_artifacts.join("pagerank_update.hlo.txt"), "hlo").unwrap();
+        let plan = lg.job(Arc::new(PageRank::new(2))).mode(Mode::Auto).plan();
+        assert!(plan.artifacts_present);
+        assert!(plan.use_xla);
+        // Explicit Off wins over present artifacts.
+        let plan = lg
+            .job(Arc::new(PageRank::new(2)))
+            .mode(Mode::Auto)
+            .xla(Xla::Off)
+            .plan();
+        assert!(!plan.use_xla);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn recoded_mode_without_recode_is_a_config_error() {
+        let d = wd("norec");
+        let g = generator::uniform(30, 90, true, 4);
+        let s = GraphD::builder().workdir(&d).machines(2).build().unwrap();
+        let lg = s.load(GraphSource::InMemory(&g)).unwrap();
+        let err = lg
+            .job(Arc::new(PageRank::new(2)))
+            .mode(Mode::Recoded)
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn checkpoint_every_override_writes_checkpoints() {
+        let d = wd("ckevery");
+        let g = generator::uniform(80, 400, true, 13);
+        let s = GraphD::builder()
+            .workdir(&d)
+            .machines(2)
+            .max_supersteps(4)
+            .config("checkpoint_every", "2")
+            .build()
+            .unwrap();
+        let lg = s.load(GraphSource::InMemory(&g)).unwrap();
+        lg.run(Arc::new(PageRank::new(4))).unwrap();
+        // every=2 over 4 supersteps checkpoints after step 1 (the final
+        // step never checkpoints: the job is already done).
+        let ckdir = d.join("dfs").join("checkpoints");
+        assert_eq!(
+            crate::ft::latest_checkpoint(&ckdir, None),
+            Some(1),
+            "checkpoint_every=2 must checkpoint into the session DFS"
+        );
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn generate_source_loads_and_runs() {
+        let d = wd("gen");
+        let s = GraphD::builder().workdir(&d).machines(2).build().unwrap();
+        let lg = s
+            .load(GraphSource::Generate(Dataset::BtcS, 0.02))
+            .unwrap();
+        assert!(lg.stores().iter().map(|st| st.local_vertices()).sum::<usize>() > 0);
+        let res = lg
+            .job(Arc::new(PageRank::new(2)))
+            .max_supersteps(2)
+            .run()
+            .unwrap();
+        assert_eq!(res.supersteps(), 2);
+        assert!(res.metrics.load_secs >= 0.0);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -23,7 +23,7 @@ use std::path::{Path, PathBuf};
 /// Hot path: 8-byte records (u32 target + 4-byte payload, the common
 /// message layout) are reinterpreted as `u64`s whose *low* 32 bits are the
 /// LE key, so a plain `sort_unstable` on masked u64s replaces the
-/// index-permutation gather (≈3× faster; EXPERIMENTS.md §Perf).
+/// index-permutation gather (≈3× faster; README.md §Perf).
 pub fn sort_records(buf: &mut [u8], rec_size: usize) {
     debug_assert_eq!(buf.len() % rec_size, 0);
     let n = buf.len() / rec_size;

@@ -732,7 +732,7 @@ struct Outbox<'a, M: Codec> {
     oms: &'a [Arc<SplittableStream>],
     /// Per-destination append batches: amortizes the OMS mutex + buffered
     /// write over ~BATCH bytes of records (perf: -40% M-Gene, see
-    /// EXPERIMENTS.md §Perf).
+    /// README.md §Perf).
     batch: Vec<Vec<u8>>,
     msgs_sent: u64,
 }
@@ -817,7 +817,11 @@ fn compute_unit<P: VertexProgram>(
     let rec_size = msg_rec_size::<P::Msg>();
     // Each U_c owns its kernel set: xla handles are not Send.
     let kern = if cfg.use_xla {
-        KernelSet::load(&KernelSet::default_dir())?
+        let dir = cfg
+            .artifacts_dir
+            .clone()
+            .unwrap_or_else(KernelSet::default_dir);
+        KernelSet::load(&dir)?
     } else {
         KernelSet::native_only()
     };

@@ -2,7 +2,11 @@
 //! `python/compile/aot.py` must load, compile and execute on the PJRT CPU
 //! client with numerics matching the kernel formulas.
 //!
-//! Requires `make artifacts` to have run (skips with a message otherwise).
+//! Requires `make artifacts` to have run (skips with a message otherwise)
+//! and the `xla` cargo feature (the whole file is gated: the offline build
+//! has no PJRT runtime to round-trip through).
+
+#![cfg(feature = "xla")]
 
 use graphd::runtime::HloExecutable;
 

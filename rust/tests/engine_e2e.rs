@@ -1,14 +1,13 @@
 //! End-to-end engine tests: DFS text load → IO-Basic / IO-Recoded runs →
 //! compare against single-threaded references.  This exercises the whole
-//! §3–§5 machinery: parallel loading, OMS/IMS streaming, the three units,
-//! combiners, ID recoding, and the in-memory digesting path.
+//! §3–§5 machinery through the fluent session API: parallel loading,
+//! OMS/IMS streaming, the three units, combiners, ID recoding, and the
+//! in-memory digesting path.
 
 use graphd::algos::{HashMin, PageRank, Sssp, TriangleCount};
-use graphd::config::{ClusterProfile, JobConfig, Mode};
-use graphd::dfs::Dfs;
-use graphd::engine::{load, run, Engine};
+use graphd::config::Mode;
 use graphd::graph::{generator, reference, Graph};
-use graphd::recode;
+use graphd::{GraphD, GraphSource, Session};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -23,45 +22,50 @@ fn fresh_workdir(name: &str) -> PathBuf {
     d
 }
 
-struct Setup {
-    eng: Engine,
-    dfs: Dfs,
+fn setup(name: &str, machines: usize, mode: Mode) -> Session {
+    GraphD::builder()
+        .machines(machines)
+        .workdir(fresh_workdir(name))
+        .mode(mode)
+        .oms_file_cap(16 * 1024) // small ℬ to exercise file splitting
+        .dfs_block_size(4096)
+        .build()
+        .unwrap()
 }
 
-fn setup(name: &str, machines: usize, mode: Mode) -> Setup {
-    let wd = fresh_workdir(name);
-    let mut cfg = JobConfig::default();
-    cfg.workdir = wd.clone();
-    cfg.mode = mode;
-    cfg.oms_file_cap = 16 * 1024; // small ℬ to exercise file splitting
-    let eng = Engine::new(ClusterProfile::test(machines), cfg).unwrap();
-    let dfs = Dfs::new(&wd.join("dfs")).unwrap().with_block_size(4096);
-    Setup { eng, dfs }
+fn cleanup(s: &Session) {
+    let _ = std::fs::remove_dir_all(s.workdir());
 }
 
-fn cleanup(s: &Setup) {
-    let _ = std::fs::remove_dir_all(&s.eng.cfg.workdir);
-}
-
-/// Load `g` (optionally with sparse ids), returning basic stores and the
-/// dense→old id mapping.
-fn load_graph(s: &Setup, g: &Graph, sparse: bool) -> (Vec<graphd::worker::MachineStore>, Option<Vec<u32>>) {
-    let ids = load::put_graph(&s.dfs, "g.txt", g, sparse.then_some(77)).unwrap();
-    let stores = load::load_text(&s.eng, &s.dfs, "g.txt", g.weighted).unwrap();
-    (stores, ids)
+/// Load `g` through the session (optionally with sparse ids), returning
+/// the graph handle and the dense→input id mapping.
+fn load_graph<'s>(
+    s: &'s Session,
+    g: &Graph,
+    sparse: bool,
+) -> (graphd::LoadedGraph<'s>, Option<Vec<u32>>) {
+    let src = if sparse {
+        GraphSource::InMemorySparse(g, 77)
+    } else {
+        GraphSource::InMemory(g)
+    };
+    let lg = s.load(src).unwrap();
+    let ids = lg.id_map().map(<[u32]>::to_vec);
+    (lg, ids)
 }
 
 #[test]
 fn pagerank_basic_matches_reference() {
     let s = setup("pr_basic", 4, Mode::Basic);
     let g = generator::uniform(300, 1500, true, 42);
-    let (stores, ids) = load_graph(&s, &g, true);
+    let (graph, ids) = load_graph(&s, &g, true);
     let ids = ids.unwrap();
 
-    let mut cfg = s.eng.cfg.clone();
-    cfg.max_supersteps = 5;
-    let eng = Engine::new(s.eng.profile.clone(), cfg).unwrap();
-    let out = run::run_job(&eng, &stores, Arc::new(PageRank::new(5))).unwrap();
+    let out = graph
+        .job(Arc::new(PageRank::new(5)))
+        .max_supersteps(5)
+        .run()
+        .unwrap();
     assert_eq!(out.supersteps(), 5);
 
     let want = reference::pagerank(&g, 5);
@@ -82,14 +86,16 @@ fn pagerank_basic_matches_reference() {
 fn pagerank_recoded_matches_reference() {
     let s = setup("pr_rec", 4, Mode::Recoded);
     let g = generator::uniform(250, 1200, true, 43);
-    let (stores, ids) = load_graph(&s, &g, true);
+    let (mut graph, ids) = load_graph(&s, &g, true);
     let ids = ids.unwrap();
 
-    let rec = recode::recode(&s.eng, &stores, true).unwrap();
-    let mut cfg = s.eng.cfg.clone();
-    cfg.max_supersteps = 6;
-    let eng = Engine::new(s.eng.profile.clone(), cfg).unwrap();
-    let out = run::run_job(&eng, &rec, Arc::new(PageRank::new(6))).unwrap();
+    let out = graph
+        .recode()
+        .unwrap()
+        .job(Arc::new(PageRank::new(6)))
+        .max_supersteps(6)
+        .run()
+        .unwrap();
 
     let want = reference::pagerank(&g, 6);
     let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
@@ -111,19 +117,16 @@ fn sssp_basic_and_recoded_match_dijkstra() {
 
     for mode in [Mode::Basic, Mode::Recoded] {
         let s = setup(&format!("sssp_{mode:?}"), 3, mode);
-        let (stores, ids) = load_graph(&s, &g, true);
+        let (mut graph, ids) = load_graph(&s, &g, true);
         let ids = ids.unwrap();
         let source_old = ids[0];
 
-        let (stores, source_cur) = if mode == Mode::Recoded {
-            let rec = recode::recode(&s.eng, &stores, true).unwrap();
-            let src = translate(&rec, source_old);
-            (rec, src)
-        } else {
-            (stores, source_old)
-        };
+        if mode == Mode::Recoded {
+            graph.recode().unwrap();
+        }
+        let source_cur = graph.current_id_of(source_old);
 
-        let out = run::run_job(&s.eng, &stores, Arc::new(Sssp::new(source_cur))).unwrap();
+        let out = graph.run(Arc::new(Sssp::new(source_cur))).unwrap();
         let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
         for v in 0..200usize {
             let gv = got[&ids[v]];
@@ -137,15 +140,6 @@ fn sssp_basic_and_recoded_match_dijkstra() {
     }
 }
 
-/// Old→current translation for a recoded store set (owner by Hashed on old
-/// id; position by binary search; new id = pos·n + machine).
-fn translate(stores: &[graphd::worker::MachineStore], old: u32) -> u32 {
-    let n = stores.len();
-    let m = graphd::worker::Partitioning::Hashed.machine_of(old, n);
-    let pos = stores[m].ids.binary_search(&old).expect("vertex exists");
-    (pos * n + m) as u32
-}
-
 #[test]
 fn hashmin_components_both_modes() {
     let g = generator::uniform(240, 500, false, 45);
@@ -153,14 +147,12 @@ fn hashmin_components_both_modes() {
 
     for mode in [Mode::Basic, Mode::Recoded] {
         let s = setup(&format!("hm_{mode:?}"), 4, mode);
-        let (stores, ids) = load_graph(&s, &g, true);
+        let (mut graph, ids) = load_graph(&s, &g, true);
         let ids = ids.unwrap();
-        let stores = if mode == Mode::Recoded {
-            recode::recode(&s.eng, &stores, false).unwrap()
-        } else {
-            stores
-        };
-        let out = run::run_job(&s.eng, &stores, Arc::new(HashMin)).unwrap();
+        if mode == Mode::Recoded {
+            graph.recode().unwrap();
+        }
+        let out = graph.run(Arc::new(HashMin)).unwrap();
         let got: HashMap<u32, i32> = out.values_by_id().into_iter().collect();
 
         // Labels live in the current-ID space; compare *partitions*.
@@ -190,8 +182,8 @@ fn triangle_count_via_aggregator() {
     let want = reference::triangles(&g);
 
     let s = setup("tri", 3, Mode::Basic);
-    let (stores, _) = load_graph(&s, &g, false);
-    let out = run::run_job(&s.eng, &stores, Arc::new(TriangleCount)).unwrap();
+    let (graph, _) = load_graph(&s, &g, false);
+    let out = graph.run(Arc::new(TriangleCount)).unwrap();
     let got = *out.outputs[0].final_agg;
     assert_eq!(got, want, "triangles");
     // diagnostic per-vertex counts must sum to the same number
@@ -206,11 +198,11 @@ fn bfs_chain_exercises_skip_and_many_supersteps() {
     // sparse-workload worst case. skip() must dominate reads.
     let g = generator::chain(400).with_unit_weights();
     let s = setup("chain", 4, Mode::Basic);
-    let (stores, ids) = load_graph(&s, &g, true);
+    let (graph, ids) = load_graph(&s, &g, true);
     let ids = ids.unwrap();
     let source = ids[0];
 
-    let out = run::run_job(&s.eng, &stores, Arc::new(Sssp::new(source))).unwrap();
+    let out = graph.run(Arc::new(Sssp::new(source))).unwrap();
     assert_eq!(out.supersteps(), 400, "chain BFS = |V| supersteps");
     let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
     assert_eq!(got[&ids[399]], 399.0);
@@ -236,12 +228,14 @@ fn memory_stays_within_dss_bound() {
     // Lemma 1 + §3.3.3: per-machine state is O(|V|/n), NOT O(|E|/n).
     let g = generator::uniform(400, 8000, true, 47); // avg degree 20
     let s = setup("membound", 4, Mode::Recoded);
-    let (stores, _) = load_graph(&s, &g, true);
-    let rec = recode::recode(&s.eng, &stores, true).unwrap();
-    let mut cfg = s.eng.cfg.clone();
-    cfg.max_supersteps = 3;
-    let eng = Engine::new(s.eng.profile.clone(), cfg).unwrap();
-    let out = run::run_job(&eng, &rec, Arc::new(PageRank::new(3))).unwrap();
+    let (mut graph, _) = load_graph(&s, &g, true);
+    let out = graph
+        .recode()
+        .unwrap()
+        .job(Arc::new(PageRank::new(3)))
+        .max_supersteps(3)
+        .run()
+        .unwrap();
 
     let per_vertex_budget = 64; // bytes per local vertex, generous constant
     for m in &out.metrics.machines {
@@ -269,15 +263,17 @@ fn recoded_xla_block_path_matches_reference() {
     }
     let g = generator::uniform(300, 1600, true, 48);
     let s = setup("xla", 4, Mode::Recoded);
-    let (stores, ids) = load_graph(&s, &g, true);
+    let (mut graph, ids) = load_graph(&s, &g, true);
     let ids = ids.unwrap();
-    let rec = recode::recode(&s.eng, &stores, true).unwrap();
 
-    let mut cfg = s.eng.cfg.clone();
-    cfg.max_supersteps = 5;
-    cfg.use_xla = true;
-    let eng = Engine::new(s.eng.profile.clone(), cfg).unwrap();
-    let out = run::run_job(&eng, &rec, Arc::new(PageRank::new(5))).unwrap();
+    let out = graph
+        .recode()
+        .unwrap()
+        .job(Arc::new(PageRank::new(5)))
+        .max_supersteps(5)
+        .xla(graphd::Xla::On)
+        .run()
+        .unwrap();
 
     let want = reference::pagerank(&g, 5);
     let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
@@ -297,9 +293,10 @@ fn convergent_pagerank_stops_via_aggregator_and_dumps() {
     use graphd::algos::PageRankConverge;
     let s = setup("prconv", 3, Mode::Basic);
     let g = generator::uniform(200, 1200, true, 51);
-    let (stores, _) = load_graph(&s, &g, true);
+    let (graph, _) = load_graph(&s, &g, true);
 
-    let out = run::run_job(&s.eng, &stores, Arc::new(PageRankConverge { epsilon: 1e-4 }))
+    let out = graph
+        .run(Arc::new(PageRankConverge { epsilon: 1e-4 }))
         .unwrap();
     let steps = out.supersteps();
     assert!(steps > 3, "converged suspiciously fast: {steps}");
@@ -312,11 +309,11 @@ fn convergent_pagerank_stops_via_aggregator_and_dumps() {
     assert!((sum - 1.0).abs() < 0.2, "rank mass wildly off: {sum}");
 
     // results dumped to the DFS as part files (paper's final step)
-    run::dump_results(&out, &s.dfs, "out/pagerank").unwrap();
+    graphd::engine::run::dump_results(&out, s.dfs(), "out/pagerank").unwrap();
     for m in 0..3 {
-        assert!(s.dfs.exists(&format!("out/pagerank/part-{m:05}")));
+        assert!(s.dfs().exists(&format!("out/pagerank/part-{m:05}")));
     }
-    let part0 = String::from_utf8(s.dfs.get("out/pagerank/part-00000").unwrap()).unwrap();
+    let part0 = String::from_utf8(s.dfs().get("out/pagerank/part-00000").unwrap()).unwrap();
     assert!(part0.lines().next().unwrap().contains('\t'));
     cleanup(&s);
 }
@@ -327,8 +324,8 @@ fn empty_messages_terminate_immediately() {
     // (no messages, everyone halts / PageRank capped at 1).
     let g = Graph::from_adj(vec![vec![]; 50], false);
     let s = setup("noedges", 2, Mode::Basic);
-    let (stores, _) = load_graph(&s, &g, false);
-    let out = run::run_job(&s.eng, &stores, Arc::new(HashMin)).unwrap();
+    let (graph, _) = load_graph(&s, &g, false);
+    let out = graph.run(Arc::new(HashMin)).unwrap();
     assert_eq!(out.supersteps(), 1);
     // labels stay = own id
     for (id, lbl) in out.values_by_id() {

@@ -1,13 +1,12 @@
 //! Fault-tolerance integration tests (§3.4): checkpoint + recover must be
-//! exact, in both modes, for both incoming representations.
+//! exact, in both modes, for both incoming representations — driven
+//! through the session API's per-job checkpoint/resume knobs.
 
 use graphd::algos::{PageRank, Sssp};
-use graphd::config::{ClusterProfile, JobConfig, Mode};
-use graphd::dfs::Dfs;
-use graphd::engine::{load, run, Engine};
+use graphd::config::Mode;
 use graphd::ft::{self, CheckpointCfg};
 use graphd::graph::generator;
-use graphd::recode;
+use graphd::{GraphD, GraphSource};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -25,31 +24,35 @@ fn wd(name: &str) -> PathBuf {
 fn recovery_is_exact_basic_mode() {
     let d = wd("basic");
     let g = generator::uniform(300, 1500, true, 5);
-    let mut cfg = JobConfig::default();
-    cfg.workdir = d.clone();
-    cfg.max_supersteps = 8;
-    let eng = Engine::new(ClusterProfile::test(3), cfg).unwrap();
-    let dfs = Dfs::new(&d.join("dfs")).unwrap();
-    load::put_graph(&dfs, "g.txt", &g, Some(3)).unwrap();
-    let stores = load::load_text(&eng, &dfs, "g.txt", false).unwrap();
+    let session = GraphD::builder()
+        .machines(3)
+        .workdir(&d)
+        .max_supersteps(8)
+        .build()
+        .unwrap();
+    let graph = session
+        .load(GraphSource::InMemorySparse(&g, 3))
+        .unwrap();
 
-    let full = run::run_job(&eng, &stores, Arc::new(PageRank::new(8))).unwrap();
+    let full = graph.run(Arc::new(PageRank::new(8))).unwrap();
 
     let ck = CheckpointCfg {
         dir: d.join("dfs/ck"),
         every: 3,
     };
-    run::run_job_with(&eng, &stores, Arc::new(PageRank::new(8)), Some(ck.clone()), None).unwrap();
+    graph
+        .job(Arc::new(PageRank::new(8)))
+        .checkpoint(ck.clone())
+        .run()
+        .unwrap();
     let restart = ft::latest_checkpoint(&ck.dir, Some(6)).expect("checkpoint exists");
     assert_eq!(restart, 5);
-    let rec = run::run_job_with(
-        &eng,
-        &stores,
-        Arc::new(PageRank::new(8)),
-        Some(ck),
-        Some(restart),
-    )
-    .unwrap();
+    let rec = graph
+        .job(Arc::new(PageRank::new(8)))
+        .checkpoint(ck)
+        .resume(restart)
+        .run()
+        .unwrap();
     assert_eq!(rec.metrics.supersteps, 8);
 
     for ((ia, va), (ib, vb)) in full.values_by_id().iter().zip(rec.values_by_id().iter()) {
@@ -65,22 +68,28 @@ fn recovery_is_exact_recoded_mode_sssp() {
     // restore the halted bitmap, or converged vertices would re-send.
     let d = wd("rec");
     let g = generator::uniform(240, 1200, true, 6).with_unit_weights();
-    let mut cfg = JobConfig::default();
-    cfg.workdir = d.clone();
-    cfg.mode = Mode::Recoded;
-    let eng = Engine::new(ClusterProfile::test(4), cfg).unwrap();
-    let dfs = Dfs::new(&d.join("dfs")).unwrap();
-    load::put_graph(&dfs, "g.txt", &g, Some(8)).unwrap();
-    let stores = load::load_text(&eng, &dfs, "g.txt", true).unwrap();
-    let rec_stores = recode::recode(&eng, &stores, true).unwrap();
+    let session = GraphD::builder()
+        .machines(4)
+        .workdir(&d)
+        .mode(Mode::Recoded)
+        .build()
+        .unwrap();
+    let mut graph = session
+        .load(GraphSource::InMemorySparse(&g, 8))
+        .unwrap();
+    graph.recode().unwrap();
     let src = {
         // translate dense 0 -> sparse -> recoded
-        let mut ids: Vec<u32> = rec_stores.iter().flat_map(|s| s.ids.iter().copied()).collect();
+        let mut ids: Vec<u32> = graph
+            .stores()
+            .iter()
+            .flat_map(|s| s.ids.iter().copied())
+            .collect();
         ids.sort_unstable();
-        graphd::bench::translate_to_recoded(&rec_stores, ids[0])
+        graph.current_id_of(ids[0])
     };
 
-    let full = run::run_job(&eng, &rec_stores, Arc::new(Sssp::new(src))).unwrap();
+    let full = graph.run(Arc::new(Sssp::new(src))).unwrap();
     let steps = full.metrics.supersteps;
     assert!(steps > 4, "need enough steps to checkpoint, got {steps}");
 
@@ -88,17 +97,18 @@ fn recovery_is_exact_recoded_mode_sssp() {
         dir: d.join("dfs/ck"),
         every: 2,
     };
-    run::run_job_with(&eng, &rec_stores, Arc::new(Sssp::new(src)), Some(ck.clone()), None)
+    graph
+        .job(Arc::new(Sssp::new(src)))
+        .checkpoint(ck.clone())
+        .run()
         .unwrap();
     let restart = ft::latest_checkpoint(&ck.dir, Some(steps - 2)).expect("ckpt");
-    let rec = run::run_job_with(
-        &eng,
-        &rec_stores,
-        Arc::new(Sssp::new(src)),
-        Some(ck),
-        Some(restart),
-    )
-    .unwrap();
+    let rec = graph
+        .job(Arc::new(Sssp::new(src)))
+        .checkpoint(ck)
+        .resume(restart)
+        .run()
+        .unwrap();
 
     for ((ia, va), (ib, vb)) in full.values_by_id().iter().zip(rec.values_by_id().iter()) {
         assert_eq!(ia, ib);
@@ -115,15 +125,16 @@ fn message_logs_retained_for_fast_recovery() {
     // [19]-style message-log fast recovery substrate).
     let d = wd("log");
     let g = generator::uniform(120, 600, true, 7);
-    let mut cfg = JobConfig::default();
-    cfg.workdir = d.clone();
-    cfg.max_supersteps = 3;
-    cfg.keep_oms_for_recovery = true;
-    let eng = Engine::new(ClusterProfile::test(2), cfg).unwrap();
-    let dfs = Dfs::new(&d.join("dfs")).unwrap();
-    load::put_graph(&dfs, "g.txt", &g, None).unwrap();
-    let stores = load::load_text(&eng, &dfs, "g.txt", false).unwrap();
-    run::run_job(&eng, &stores, Arc::new(PageRank::new(3))).unwrap();
+    let session = GraphD::builder()
+        .machines(2)
+        .workdir(&d)
+        .max_supersteps(3)
+        .keep_oms_for_recovery(true)
+        .build()
+        .unwrap();
+    session
+        .run(GraphSource::InMemory(&g), Arc::new(PageRank::new(3)))
+        .unwrap();
 
     let mut logged = 0;
     for m in 0..2 {

@@ -1,15 +1,14 @@
 //! Cross-module property tests (proptest_lite): engine-vs-reference over
 //! random graphs, recoding invariants, and coordinator-level invariants
-//! (routing, Lemma-1 balance, message conservation).
+//! (routing, Lemma-1 balance, message conservation) — all through the
+//! session API.
 
 use graphd::algos::{HashMin, PageRank};
-use graphd::config::{ClusterProfile, JobConfig, Mode};
-use graphd::dfs::Dfs;
-use graphd::engine::{load, run, Engine};
+use graphd::config::Mode;
 use graphd::graph::{generator, reference, Graph};
-use graphd::recode;
 use graphd::util::proptest_lite::{self, Gen};
 use graphd::worker::Partitioning;
+use graphd::{GraphD, GraphSource};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -41,15 +40,18 @@ fn property_pagerank_engine_equals_reference() {
         let machines = 2 + pg.usize_in(0, 3);
         let steps = 2 + pg.usize_in(0, 4) as u64;
         let d = wd(&format!("pr{}", pg.case));
-        let mut cfg = JobConfig::default();
-        cfg.workdir = d.clone();
-        cfg.max_supersteps = steps;
-        cfg.oms_file_cap = 4096; // tiny ℬ: force many files
-        let eng = Engine::new(ClusterProfile::test(machines), cfg).unwrap();
-        let dfs = Dfs::new(&d.join("dfs")).unwrap();
-        let ids = load::put_graph(&dfs, "g.txt", &g, Some(pg.u64())).unwrap().unwrap();
-        let stores = load::load_text(&eng, &dfs, "g.txt", false).unwrap();
-        let out = run::run_job(&eng, &stores, Arc::new(PageRank::new(steps))).unwrap();
+        let session = GraphD::builder()
+            .machines(machines)
+            .workdir(&d)
+            .max_supersteps(steps)
+            .oms_file_cap(4096) // tiny ℬ: force many files
+            .build()
+            .unwrap();
+        let graph = session
+            .load(GraphSource::InMemorySparse(&g, pg.u64()))
+            .unwrap();
+        let ids = graph.id_map().unwrap().to_vec();
+        let out = graph.run(Arc::new(PageRank::new(steps))).unwrap();
         let want = reference::pagerank(&g, steps);
         let got: HashMap<u32, f32> = out.values_by_id().into_iter().collect();
         let mut ok = true;
@@ -78,17 +80,21 @@ fn property_recoding_preserves_graph() {
         let g = random_graph(pg, true);
         let machines = 2 + pg.usize_in(0, 3);
         let d = wd(&format!("rc{}", pg.case));
-        let mut cfg = JobConfig::default();
-        cfg.workdir = d.clone();
-        let eng = Engine::new(ClusterProfile::test(machines), cfg).unwrap();
-        let dfs = Dfs::new(&d.join("dfs")).unwrap();
-        let ids = load::put_graph(&dfs, "g.txt", &g, Some(pg.u64())).unwrap().unwrap();
-        let stores = load::load_text(&eng, &dfs, "g.txt", false).unwrap();
-        let rec = recode::recode(&eng, &stores, true).unwrap();
+        let session = GraphD::builder()
+            .machines(machines)
+            .workdir(&d)
+            .build()
+            .unwrap();
+        let mut graph = session
+            .load(GraphSource::InMemorySparse(&g, pg.u64()))
+            .unwrap();
+        let ids = graph.id_map().unwrap().to_vec();
+        graph.recode().unwrap();
+        let rec = graph.recoded_stores().unwrap();
 
         // old -> new map from the recoded stores
         let mut old2new: HashMap<u32, u32> = HashMap::new();
-        for s in &rec {
+        for s in rec {
             for (pos, &old) in s.ids.iter().enumerate() {
                 old2new.insert(old, (pos * machines + s.machine) as u32);
             }
@@ -104,7 +110,7 @@ fn property_recoding_preserves_graph() {
         want.sort_unstable();
         // actual recoded edge stream
         let mut got: Vec<(u32, u32)> = Vec::new();
-        for s in &rec {
+        for s in rec {
             let mut cur = graphd::worker::storage::EdgeStreamCursor::open(s, 4096).unwrap();
             let mut edges = Vec::new();
             for pos in 0..s.local_vertices() {
@@ -129,19 +135,20 @@ fn property_hashmin_partitions_match_union_find() {
         let machines = 2 + pg.usize_in(0, 2);
         let mode = if pg.bool(0.5) { Mode::Basic } else { Mode::Recoded };
         let d = wd(&format!("hm{}", pg.case));
-        let mut cfg = JobConfig::default();
-        cfg.workdir = d.clone();
-        cfg.mode = mode;
-        let eng = Engine::new(ClusterProfile::test(machines), cfg).unwrap();
-        let dfs = Dfs::new(&d.join("dfs")).unwrap();
-        let ids = load::put_graph(&dfs, "g.txt", &g, Some(pg.u64())).unwrap().unwrap();
-        let stores = load::load_text(&eng, &dfs, "g.txt", false).unwrap();
-        let stores = if mode == Mode::Recoded {
-            recode::recode(&eng, &stores, false).unwrap()
-        } else {
-            stores
-        };
-        let out = run::run_job(&eng, &stores, Arc::new(HashMin)).unwrap();
+        let session = GraphD::builder()
+            .machines(machines)
+            .workdir(&d)
+            .mode(mode)
+            .build()
+            .unwrap();
+        let mut graph = session
+            .load(GraphSource::InMemorySparse(&g, pg.u64()))
+            .unwrap();
+        let ids = graph.id_map().unwrap().to_vec();
+        if mode == Mode::Recoded {
+            graph.recode().unwrap();
+        }
+        let out = graph.run(Arc::new(HashMin)).unwrap();
         let got: HashMap<u32, i32> = out.values_by_id().into_iter().collect();
         let want = reference::components(&g);
         // same-partition iff same reference label
@@ -201,15 +208,19 @@ fn property_message_count_conserved() {
         let g = random_graph(pg, true);
         let machines = 2 + pg.usize_in(0, 3);
         let d = wd(&format!("mc{}", pg.case));
-        let mut cfg = JobConfig::default();
-        cfg.workdir = d.clone();
-        cfg.max_supersteps = 3;
-        cfg.oms_file_cap = 2048;
-        let eng = Engine::new(ClusterProfile::test(machines), cfg).unwrap();
-        let dfs = Dfs::new(&d.join("dfs")).unwrap();
-        load::put_graph(&dfs, "g.txt", &g, Some(pg.u64())).unwrap();
-        let stores = load::load_text(&eng, &dfs, "g.txt", false).unwrap();
-        let out = run::run_job(&eng, &stores, Arc::new(PageRank::new(3))).unwrap();
+        let session = GraphD::builder()
+            .machines(machines)
+            .workdir(&d)
+            .max_supersteps(3)
+            .oms_file_cap(2048)
+            .build()
+            .unwrap();
+        let out = session
+            .run(
+                GraphSource::InMemorySparse(&g, pg.u64()),
+                Arc::new(PageRank::new(3)),
+            )
+            .unwrap();
         let (mut sent, mut recv) = (0u64, 0u64);
         for m in &out.metrics.machines {
             for s in &m.steps {

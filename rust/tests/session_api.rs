@@ -1,0 +1,201 @@
+//! Integration tests for the fluent session API: builder defaults and
+//! overrides, `Mode::Auto` resolution with and without HLO artifacts,
+//! checkpoint → resume through `JobBuilder`, and the deprecation shims'
+//! parity with `Session::run`.
+
+use graphd::algos::PageRank;
+use graphd::config::Mode;
+use graphd::ft::{self, CheckpointCfg};
+use graphd::graph::generator;
+use graphd::{GraphD, GraphSource, Xla};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn wd(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "graphd_sessapi_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn builder_defaults_and_job_overrides() {
+    let d = wd("defaults");
+    let session = GraphD::builder().workdir(&d).build().unwrap();
+    // Paper-default tunables and the 4-machine test profile.
+    assert_eq!(session.profile().machines, 4);
+    assert_eq!(session.config().stream_buf, 64 * 1024);
+    assert_eq!(session.config().oms_file_cap, 8 * 1024 * 1024);
+    assert_eq!(session.config().merge_k, 1000);
+    assert_eq!(session.config().mode, Mode::Basic);
+
+    // A per-job superstep cap overrides the session default (unlimited).
+    let g = generator::uniform(100, 500, true, 2);
+    let graph = session.load(GraphSource::InMemory(&g)).unwrap();
+    let res = graph
+        .job(Arc::new(PageRank::new(4)))
+        .max_supersteps(4)
+        .run()
+        .unwrap();
+    assert_eq!(res.supersteps(), 4);
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+#[test]
+fn mode_auto_selection_with_and_without_artifacts() {
+    let d = wd("auto");
+    let arts = d.join("fake_artifacts");
+    std::fs::create_dir_all(&arts).unwrap();
+    let g = generator::uniform(150, 700, true, 3);
+
+    let session = GraphD::builder()
+        .workdir(d.join("sess"))
+        .machines(3)
+        .max_supersteps(5)
+        .artifacts_dir(&arts)
+        .build()
+        .unwrap();
+    let mut graph = session
+        .load(GraphSource::InMemorySparse(&g, 17))
+        .unwrap();
+
+    // Before recoding: Auto must fall back to IO-Basic.
+    let plan = graph.job(Arc::new(PageRank::new(5))).mode(Mode::Auto).plan();
+    assert_eq!(plan.mode, Mode::Basic);
+    assert!(!plan.use_xla);
+    let basic = graph
+        .job(Arc::new(PageRank::new(5)))
+        .mode(Mode::Auto)
+        .run()
+        .unwrap();
+
+    // After recoding, no artifacts: Auto picks IO-Recoded, scalar kernels.
+    graph.recode().unwrap();
+    let plan = graph.job(Arc::new(PageRank::new(5))).mode(Mode::Auto).plan();
+    assert_eq!(plan.mode, Mode::Recoded);
+    assert!(!plan.artifacts_present);
+    assert!(!plan.use_xla);
+    let recoded = graph
+        .job(Arc::new(PageRank::new(5)))
+        .mode(Mode::Auto)
+        .run()
+        .unwrap();
+
+    // IO-Basic and IO-Recoded agree on the ranks.
+    for ((ia, va), (ib, vb)) in basic
+        .values_by_id()
+        .iter()
+        .zip(recoded.values_by_id().iter())
+    {
+        assert_eq!(ia, ib);
+        assert!((va - vb).abs() < 1e-5 * (1.0 + va.abs()), "{ia}: {va} vs {vb}");
+    }
+
+    // With an artifact file present, Auto turns the XLA request on (plan
+    // only — the fake artifact is not executable) and Off still wins.
+    std::fs::write(arts.join("pagerank_update.hlo.txt"), "fake").unwrap();
+    let plan = graph.job(Arc::new(PageRank::new(5))).mode(Mode::Auto).plan();
+    assert_eq!(plan.mode, Mode::Recoded);
+    assert!(plan.artifacts_present);
+    assert!(plan.use_xla);
+    let plan = graph
+        .job(Arc::new(PageRank::new(5)))
+        .mode(Mode::Auto)
+        .xla(Xla::Off)
+        .plan();
+    assert!(!plan.use_xla);
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+#[test]
+fn checkpoint_resume_roundtrip_through_job_builder() {
+    let d = wd("ckpt");
+    let g = generator::uniform(200, 1000, true, 11);
+    let session = GraphD::builder()
+        .machines(3)
+        .workdir(&d)
+        .max_supersteps(6)
+        .build()
+        .unwrap();
+    let graph = session
+        .load(GraphSource::InMemorySparse(&g, 23))
+        .unwrap();
+
+    let full = graph.run(Arc::new(PageRank::new(6))).unwrap();
+
+    let ck = CheckpointCfg {
+        dir: d.join("dfs/ck"),
+        every: 2,
+    };
+    graph
+        .job(Arc::new(PageRank::new(6)))
+        .checkpoint(ck.clone())
+        .run()
+        .unwrap();
+    let restart = ft::latest_checkpoint(&ck.dir, Some(4)).expect("checkpoint exists");
+    let resumed = graph
+        .job(Arc::new(PageRank::new(6)))
+        .checkpoint(ck)
+        .resume(restart)
+        .run()
+        .unwrap();
+    assert_eq!(resumed.metrics.supersteps, 6);
+
+    for ((ia, va), (ib, vb)) in full
+        .values_by_id()
+        .iter()
+        .zip(resumed.values_by_id().iter())
+    {
+        assert_eq!(ia, ib);
+        assert!((va - vb).abs() < 1e-6, "{ia}: {va} vs {vb}");
+    }
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+#[test]
+fn deprecated_shims_match_session_run() {
+    // The old free-function pipeline and the new Session::run must produce
+    // identical values_by_id() for the same input.
+    let d = wd("shim");
+    let g = generator::uniform(180, 900, true, 29);
+
+    // Old API (deprecated shims, kept for out-of-tree code).
+    #[allow(deprecated)]
+    let old = {
+        use graphd::config::{ClusterProfile, JobConfig};
+        use graphd::dfs::Dfs;
+        use graphd::engine::{load, run, Engine};
+        let mut cfg = JobConfig::default();
+        cfg.workdir = d.join("old");
+        cfg.max_supersteps = 5;
+        let eng = Engine::new(ClusterProfile::test(3), cfg).unwrap();
+        let dfs = Dfs::new(&d.join("old/dfs")).unwrap();
+        load::put_graph(&dfs, "g.txt", &g, Some(7)).unwrap();
+        let stores = load::load_text(&eng, &dfs, "g.txt", false).unwrap();
+        run::run_job(&eng, &stores, Arc::new(PageRank::new(5)))
+            .unwrap()
+            .values_by_id()
+    };
+
+    // New API.
+    let session = GraphD::builder()
+        .machines(3)
+        .workdir(d.join("new"))
+        .max_supersteps(5)
+        .build()
+        .unwrap();
+    let new = session
+        .run(GraphSource::InMemorySparse(&g, 7), Arc::new(PageRank::new(5)))
+        .unwrap()
+        .values_by_id();
+
+    assert_eq!(old.len(), new.len());
+    for ((ia, va), (ib, vb)) in old.iter().zip(new.iter()) {
+        assert_eq!(ia, ib);
+        assert!((va - vb).abs() < 1e-6, "{ia}: {va} vs {vb}");
+    }
+    let _ = std::fs::remove_dir_all(&d);
+}
