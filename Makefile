@@ -3,7 +3,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test fmt-check ci artifacts clean
+.PHONY: build test fmt-check clippy ci artifacts clean
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -14,7 +14,10 @@ test:
 fmt-check:
 	$(CARGO) fmt --check --manifest-path $(MANIFEST)
 
-ci: build test fmt-check
+clippy:
+	$(CARGO) clippy --manifest-path $(MANIFEST) -- -D warnings
+
+ci: build test fmt-check clippy
 
 # Regenerate the AOT HLO artifacts from the python layer (needs jax).
 artifacts:

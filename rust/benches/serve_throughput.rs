@@ -1,0 +1,91 @@
+//! Serve throughput — batched k-lane queries vs sequential k=1.
+//!
+//! The serving argument in one number: a batch of point-to-point queries
+//! packed into one k-lane multi-source run streams `S^E` once per
+//! superstep for the whole batch, where k=1 sequential serving pays that
+//! edge-stream pass per query.  This bench submits the same
+//! `query_set`-generated workload both ways on a disk-throttled W^PC-style
+//! profile and reports queries/sec; the batched run should win by ≥ 3×.
+//!
+//! Env: GRAPHD_SCALE (default 1.0) scales the dataset; GRAPHD_QUERIES
+//! overrides the workload size (default 24).
+
+use graphd::config::ClusterProfile;
+use graphd::graph::generator::{self, Dataset};
+use graphd::metrics::ServeMetrics;
+use graphd::serve::ServeConfig;
+use graphd::{GraphD, GraphSource};
+
+fn serve_workload(
+    g: &graphd::graph::Graph,
+    profile: &ClusterProfile,
+    lanes: usize,
+    pairs: &[(u32, u32)],
+) -> graphd::Result<ServeMetrics> {
+    let session = GraphD::builder().profile(profile.clone()).build()?;
+    let mut graph = session.load(GraphSource::InMemory(g))?;
+    graph.recode()?;
+    let mut server = graph.serve(ServeConfig::default().lanes(lanes))?;
+    server.submit_pairs(pairs);
+    let results = server.run_pending()?;
+    assert_eq!(results.len(), pairs.len(), "every query must be answered");
+    let metrics = server.metrics().clone();
+    let _ = std::fs::remove_dir_all(session.workdir());
+    Ok(metrics)
+}
+
+fn main() {
+    let scale = graphd::bench::scale_from_env();
+    let nq: usize = std::env::var("GRAPHD_QUERIES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+
+    // W^PC-shaped profile at test size: slow shared switch + throttled
+    // disks, so edge-stream I/O dominates — the regime the paper serves in.
+    let mut profile = ClusterProfile::wpc();
+    profile.machines = 4;
+
+    let g = Dataset::WebUkS.generate_scaled(scale * 0.2);
+    let pairs = generator::query_set(g.num_vertices(), nq, 7);
+    eprintln!(
+        "serve bench: webuk-s |V|={} |E|={}, {} dist queries",
+        g.num_vertices(),
+        g.num_edges(),
+        pairs.len()
+    );
+
+    let run = |lanes: usize| -> ServeMetrics {
+        match serve_workload(&g, &profile, lanes, &pairs) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("bench failed (k={lanes}): {e}");
+                std::process::exit(1);
+            }
+        }
+    };
+
+    let seq = run(1);
+    let batched = run(8);
+
+    println!("== Serve throughput: batched k=8 vs sequential k=1 ==");
+    println!("-- k=1 sequential --\n{}", seq.report());
+    println!("-- k=8 batched --\n{}", batched.report());
+    let speedup = if seq.qps() > 0.0 {
+        batched.qps() / seq.qps()
+    } else {
+        0.0
+    };
+    let io_ratio = if batched.edge_items_read > 0 {
+        seq.edge_items_read as f64 / batched.edge_items_read as f64
+    } else {
+        0.0
+    };
+    println!(
+        "speedup            {speedup:.2}x queries/s  (edge-stream items amortised {io_ratio:.2}x)"
+    );
+    if speedup < 3.0 {
+        eprintln!("FAIL: batched k=8 must be >= 3x sequential k=1 (got {speedup:.2}x)");
+        std::process::exit(1);
+    }
+}

@@ -47,6 +47,11 @@ impl VertexProgram for HashMin {
         Some(&MinI32)
     }
 
+    /// Monotone: only a strictly smaller label changes a halted vertex.
+    fn reactivates(&self, value: &i32, msgs: &[i32]) -> bool {
+        msgs.iter().any(|m| m < value)
+    }
+
     fn block_update(&self, kern: &KernelSet, b: &mut BlockCtx<'_, Self>) -> crate::Result<bool> {
         let local = b.vals.len();
         if b.superstep == 0 {

@@ -10,16 +10,21 @@
 //! * [`triangle::TriangleCount`] — the O(|E|^1.5)-message algorithm of
 //!   [13] §3.1; *no* combiner (exercises the sorted-IMS path) and a global
 //!   SUM aggregator.
+//! * [`multisource::MultiSssp`] — K-lane multi-source BFS/SSSP with
+//!   per-lane targets and early termination; element-wise MIN combiner.
+//!   The vertex program behind the [`crate::serve`] query server.
 //!
 //! PageRank/Hash-Min/SSSP also implement `block_update`, the vectorized
 //! form executed on the AOT-compiled Pallas kernels in recoded mode.
 
 pub mod hashmin;
+pub mod multisource;
 pub mod pagerank;
 pub mod sssp;
 pub mod triangle;
 
 pub use hashmin::HashMin;
+pub use multisource::{LaneBounds, MultiSssp, NO_VERTEX};
 pub use pagerank::{PageRank, PageRankConverge};
 pub use sssp::Sssp;
 pub use triangle::TriangleCount;

@@ -1,0 +1,382 @@
+//! K-lane multi-source distance/reachability traversals — the vertex
+//! program behind the `crate::serve` query server.
+//!
+//! One run answers up to K point-to-point / single-source queries in a
+//! *single* superstep loop: `Value = [f32; K]` holds one tentative
+//! distance per lane, messages are K-lane records folded by the
+//! element-wise MIN combiner ([`crate::api::MinLanes`]).  Because the
+//! combiner applies, the recoded in-memory `A_s`/`A_r` digesting path
+//! (§5) works unchanged — the batched run streams `S^E` *once* per
+//! superstep no matter how many lanes are live, which is exactly the I/O
+//! amortisation the paper's economics reward.
+//!
+//! **Per-lane early termination.**  The aggregator carries one pruning
+//! bound per lane: the best distance observed so far at that lane's
+//! target (−∞ for reachability lanes once the target is touched, ∞ for
+//! lanes without a target).  A vertex suppresses lane-ℓ messages whose
+//! distance is ≥ the bound — with non-negative edge weights no suffix
+//! path can then improve the target, so the lane's frontier collapses as
+//! soon as its query is settled while other lanes keep running.  When
+//! every lane has settled no messages remain and the engine's ordinary
+//! termination (via the existing aggregator/sync machinery) ends the run.
+
+use crate::api::{Combiner, Context, Edge, MinLanes, VertexProgram};
+
+/// Sentinel for "no vertex" in `sources`/`targets` (no real vertex id is
+/// `u32::MAX` — graphs are loaded from dense or sparse u32 ids below it).
+pub const NO_VERTEX: u32 = u32::MAX;
+
+/// Per-lane aggregator state: the message-suppression bound of each lane
+/// (see module docs).  Merged by element-wise MIN; computing vertices fold
+/// the previous global bound back in, so the bound is carried forward
+/// across supersteps (MIN-merge is idempotent, making the fold safe).
+#[derive(Clone, Debug)]
+pub struct LaneBounds<const K: usize>(pub [f32; K]);
+
+impl<const K: usize> Default for LaneBounds<K> {
+    fn default() -> Self {
+        Self([f32::INFINITY; K])
+    }
+}
+
+/// K-lane multi-source SSSP/BFS (unit weights make it BFS).  Lanes run
+/// independently under one superstep loop; unused lanes (`NO_VERTEX`
+/// source) never activate anything and cost nothing but record width.
+#[derive(Clone, Debug)]
+pub struct MultiSssp<const K: usize> {
+    /// Per-lane source vertex (current-ID space); `NO_VERTEX` = idle lane.
+    pub sources: [u32; K],
+    /// Per-lane target for point-to-point pruning; `NO_VERTEX` = none
+    /// (single-source lane, runs to natural quiescence).
+    pub targets: [u32; K],
+    /// Reachability-only lanes settle the moment the target is first
+    /// touched (bound drops to −∞) instead of waiting for the exact
+    /// distance to converge.
+    pub reach_only: [bool; K],
+}
+
+impl<const K: usize> MultiSssp<K> {
+    /// Single-source distance lanes (no targets, no pruning).
+    pub fn new(sources: [u32; K]) -> Self {
+        Self {
+            sources,
+            targets: [NO_VERTEX; K],
+            reach_only: [false; K],
+        }
+    }
+
+    /// Point-to-point lanes: prune each lane against its target.
+    pub fn with_targets(mut self, targets: [u32; K]) -> Self {
+        self.targets = targets;
+        self
+    }
+
+    /// Mark lanes as reachability-only (early-exit on first touch).
+    pub fn with_reach_only(mut self, reach_only: [bool; K]) -> Self {
+        self.reach_only = reach_only;
+        self
+    }
+}
+
+impl<const K: usize> VertexProgram for MultiSssp<K> {
+    type Value = [f32; K];
+    type Msg = [f32; K];
+    type Agg = LaneBounds<K>;
+
+    fn init_value(&self, id: u32, _deg: u32, _nv: u64) -> [f32; K] {
+        let mut v = [f32::INFINITY; K];
+        for l in 0..K {
+            if self.sources[l] == id {
+                v[l] = 0.0;
+            }
+        }
+        v
+    }
+
+    fn initially_active(&self, id: u32) -> bool {
+        self.sources.contains(&id)
+    }
+
+    fn compute(
+        &self,
+        ctx: &mut Context<'_, [f32; K], LaneBounds<K>>,
+        id: u32,
+        value: &mut [f32; K],
+        edges: &[Edge],
+        msgs: &[[f32; K]],
+    ) {
+        // Carry the global bounds forward: every computing vertex folds the
+        // previous superstep's global into this superstep's local (MIN is
+        // idempotent, so repeated folds across vertices are harmless).
+        for l in 0..K {
+            if ctx.global_agg.0[l] < ctx.local_agg.0[l] {
+                ctx.local_agg.0[l] = ctx.global_agg.0[l];
+            }
+        }
+        let mut improved = [false; K];
+        for m in msgs {
+            for l in 0..K {
+                if m[l] < value[l] {
+                    value[l] = m[l];
+                    improved[l] = true;
+                }
+            }
+        }
+        if ctx.superstep == 0 {
+            // Sources relax on first activation (value already 0 from init).
+            for l in 0..K {
+                if self.sources[l] == id {
+                    improved[l] = true;
+                }
+            }
+        }
+        // Target bookkeeping: tighten this lane's bound.  Reach-only lanes
+        // drop it to −∞, silencing the whole lane from the next superstep.
+        for l in 0..K {
+            if self.targets[l] == id && value[l] < f32::INFINITY {
+                let b = if self.reach_only[l] {
+                    f32::NEG_INFINITY
+                } else {
+                    value[l]
+                };
+                if b < ctx.local_agg.0[l] {
+                    ctx.local_agg.0[l] = b;
+                }
+            }
+        }
+        let mut base = [f32::INFINITY; K];
+        let mut any = false;
+        for l in 0..K {
+            // Suppress lanes at/beyond the bound: with weights ≥ 0 no path
+            // through this vertex can improve the lane's target anymore.
+            let bound = ctx.global_agg.0[l].min(ctx.local_agg.0[l]);
+            if improved[l] && value[l] < bound {
+                base[l] = value[l];
+                any = true;
+            }
+        }
+        if any {
+            for e in edges {
+                let mut m = [f32::INFINITY; K];
+                for l in 0..K {
+                    m[l] = base[l] + e.weight; // ∞ + w = ∞ for silent lanes
+                }
+                ctx.send(e.nbr, m);
+            }
+        }
+        ctx.vote_to_halt();
+    }
+
+    fn combiner(&self) -> Option<&dyn Combiner<[f32; K]>> {
+        Some(&MinLanes::<K>)
+    }
+
+    fn merge_agg(&self, a: &mut LaneBounds<K>, b: &LaneBounds<K>) {
+        for l in 0..K {
+            if b.0[l] < a.0[l] {
+                a.0[l] = b.0[l];
+            }
+        }
+    }
+
+    /// A halted vertex only reactivates if some lane actually improves —
+    /// this keeps §3.2's `skip()` firing per lane: vertices touched only by
+    /// settled/stale lanes never stream their adjacency.
+    fn reactivates(&self, value: &[f32; K], msgs: &[[f32; K]]) -> bool {
+        msgs.iter().any(|m| (0..K).any(|l| m[l] < value[l]))
+    }
+
+    /// Relaxation adds the edge weight per live lane at fan-out time.
+    fn emit(&self, base: &[f32; K], edges: &[Edge], send: &mut dyn FnMut(u32, [f32; K])) {
+        for e in edges {
+            let mut m = [f32::INFINITY; K];
+            for l in 0..K {
+                m[l] = base[l] + e.weight;
+            }
+            send(e.nbr, m);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const INF: f32 = f32::INFINITY;
+
+    fn ctx_run<const K: usize>(
+        p: &MultiSssp<K>,
+        step: u64,
+        global: &LaneBounds<K>,
+        local: &mut LaneBounds<K>,
+        id: u32,
+        value: &mut [f32; K],
+        edges: &[Edge],
+        msgs: &[[f32; K]],
+    ) -> Vec<(u32, [f32; K])> {
+        let mut sent = Vec::new();
+        let mut send = |t: u32, m: [f32; K]| sent.push((t, m));
+        let mut ctx: Context<'_, [f32; K], LaneBounds<K>> =
+            Context::new(step, 10, global, local, &mut send);
+        p.compute(&mut ctx, id, value, edges, msgs);
+        assert!(ctx.halt, "multi-source vertices always vote to halt");
+        sent
+    }
+
+    #[test]
+    fn lanes_init_and_activate_independently() {
+        let p = MultiSssp::<3>::new([2, 5, NO_VERTEX]);
+        assert_eq!(p.init_value(2, 0, 10), [0.0, INF, INF]);
+        assert_eq!(p.init_value(5, 0, 10), [INF, 0.0, INF]);
+        assert_eq!(p.init_value(7, 0, 10), [INF, INF, INF]);
+        assert!(p.initially_active(2) && p.initially_active(5));
+        assert!(!p.initially_active(7));
+    }
+
+    #[test]
+    fn sources_relax_their_own_lane_only() {
+        let p = MultiSssp::<2>::new([0, 3]);
+        let g = LaneBounds::default();
+        let mut l = LaneBounds::default();
+        let mut v = p.init_value(0, 1, 10);
+        let edges = [Edge { nbr: 1, weight: 2.0 }];
+        let sent = ctx_run(&p, 0, &g, &mut l, 0, &mut v, &edges, &[]);
+        assert_eq!(sent, vec![(1, [2.0, INF])]);
+    }
+
+    #[test]
+    fn improvement_propagates_per_lane() {
+        let p = MultiSssp::<2>::new([0, 3]);
+        let g = LaneBounds::default();
+        let mut l = LaneBounds::default();
+        let mut v = [5.0, 1.0];
+        // lane 0 improves (4 < 5); lane 1 regresses (2 > 1) and stays quiet
+        let sent = ctx_run(
+            &p,
+            2,
+            &g,
+            &mut l,
+            7,
+            &mut v,
+            &[Edge { nbr: 9, weight: 1.0 }],
+            &[[4.0, 2.0]],
+        );
+        assert_eq!(v, [4.0, 1.0]);
+        assert_eq!(sent, vec![(9, [5.0, INF])]);
+    }
+
+    #[test]
+    fn target_settles_lane_and_suppresses_messages() {
+        let p = MultiSssp::<2>::new([0, 3]).with_targets([7, NO_VERTEX]);
+        let g = LaneBounds::default();
+        let mut l = LaneBounds::default();
+        let mut v = [INF, INF];
+        // the target itself improves: bound tightens to its distance and its
+        // own relaxation is suppressed (no suffix path can beat it)
+        let sent = ctx_run(
+            &p,
+            3,
+            &g,
+            &mut l,
+            7,
+            &mut v,
+            &[Edge { nbr: 9, weight: 1.0 }],
+            &[[6.0, INF]],
+        );
+        assert_eq!(l.0[0], 6.0, "bound records the target's distance");
+        assert!(sent.is_empty(), "target must not relay its own lane");
+
+        // another vertex at/beyond the (now global) bound stays silent too
+        let g2 = LaneBounds([6.0, INF]);
+        let mut l2 = LaneBounds::default();
+        let mut v2 = [INF, INF];
+        let sent2 = ctx_run(
+            &p,
+            4,
+            &g2,
+            &mut l2,
+            1,
+            &mut v2,
+            &[Edge { nbr: 2, weight: 1.0 }],
+            &[[6.5, INF]],
+        );
+        assert!(sent2.is_empty());
+        // ...but an improvement strictly inside the bound still propagates
+        let mut l3 = LaneBounds::default();
+        let mut v3 = [INF, INF];
+        let sent3 = ctx_run(
+            &p,
+            4,
+            &g2,
+            &mut l3,
+            1,
+            &mut v3,
+            &[Edge { nbr: 2, weight: 1.0 }],
+            &[[4.0, INF]],
+        );
+        assert_eq!(sent3, vec![(2, [5.0, INF])]);
+    }
+
+    #[test]
+    fn reach_only_lane_goes_fully_silent_once_touched() {
+        let p = MultiSssp::<1>::new([0])
+            .with_targets([7])
+            .with_reach_only([true]);
+        let g = LaneBounds::default();
+        let mut l = LaneBounds::default();
+        let mut v = [INF];
+        ctx_run(&p, 2, &g, &mut l, 7, &mut v, &[], &[[3.0]]);
+        assert_eq!(l.0[0], f32::NEG_INFINITY);
+        // with the −∞ bound global, even a big improvement stays silent
+        let g2 = LaneBounds([f32::NEG_INFINITY]);
+        let mut l2 = LaneBounds::default();
+        let mut v2 = [INF];
+        let sent = ctx_run(
+            &p,
+            3,
+            &g2,
+            &mut l2,
+            1,
+            &mut v2,
+            &[Edge { nbr: 2, weight: 1.0 }],
+            &[[0.5]],
+        );
+        assert!(sent.is_empty());
+    }
+
+    #[test]
+    fn computing_vertices_carry_the_global_bound_forward() {
+        let p = MultiSssp::<2>::new([0, 3]).with_targets([7, 8]);
+        let g = LaneBounds([4.0, INF]);
+        let mut l = LaneBounds::default();
+        let mut v = [INF, INF];
+        ctx_run(&p, 5, &g, &mut l, 1, &mut v, &[], &[[9.0, 9.0]]);
+        assert_eq!(l.0[0], 4.0, "global bound folded into the local agg");
+    }
+
+    #[test]
+    fn reactivates_only_on_lane_improvement() {
+        let p = MultiSssp::<2>::new([0, 3]);
+        assert!(p.reactivates(&[5.0, 1.0], &[[6.0, 0.5]]));
+        assert!(!p.reactivates(&[5.0, 1.0], &[[6.0, 1.5]]));
+        assert!(!p.reactivates(&[5.0, 1.0], &[[INF, INF]]));
+    }
+
+    #[test]
+    fn merge_agg_is_elementwise_min() {
+        let p = MultiSssp::<3>::new([0, 1, 2]);
+        let mut a = LaneBounds([3.0, INF, 1.0]);
+        p.merge_agg(&mut a, &LaneBounds([5.0, 2.0, f32::NEG_INFINITY]));
+        assert_eq!(a.0, [3.0, 2.0, f32::NEG_INFINITY]);
+    }
+
+    #[test]
+    fn emit_adds_weight_per_live_lane() {
+        let p = MultiSssp::<2>::new([0, 3]);
+        let mut sent = Vec::new();
+        let mut send = |t: u32, m: [f32; 2]| sent.push((t, m));
+        let edges = [Edge { nbr: 4, weight: 0.5 }];
+        p.emit(&[2.0, INF], &edges, &mut send);
+        assert_eq!(sent, vec![(4, [2.5, INF])]);
+    }
+}

@@ -61,6 +61,13 @@ impl VertexProgram for Sssp {
         Some(&MinF32)
     }
 
+    /// Monotone: a halted vertex only changes if some message beats its
+    /// tentative distance — otherwise the engine may skip it (and its
+    /// adjacency read) outright.
+    fn reactivates(&self, value: &f32, msgs: &[f32]) -> bool {
+        msgs.iter().any(|m| m < value)
+    }
+
     fn block_update(&self, kern: &KernelSet, b: &mut BlockCtx<'_, Self>) -> crate::Result<bool> {
         let local = b.vals.len();
         if b.superstep == 0 {

@@ -69,6 +69,24 @@ impl Combiner<i32> for MinI32 {
     }
 }
 
+/// Element-wise MIN combiner over K-lane f32 messages (k-lane batched
+/// traversals, `crate::serve`).  Each lane folds independently, so one
+/// combined record carries K queries' frontier data — this is what makes
+/// the recoded in-memory `A_s`/`A_r` path (§5) apply unchanged to batches.
+pub struct MinLanes<const K: usize>;
+impl<const K: usize> Combiner<[f32; K]> for MinLanes<K> {
+    fn combine(&self, acc: &mut [f32; K], m: &[f32; K]) {
+        for l in 0..K {
+            if m[l] < acc[l] {
+                acc[l] = m[l];
+            }
+        }
+    }
+    fn identity(&self) -> [f32; K] {
+        [f32::INFINITY; K]
+    }
+}
+
 /// Context passed to `compute`: superstep info + message emission +
 /// aggregation + halt control for the current vertex.
 pub struct Context<'a, M: Codec, A> {
@@ -184,6 +202,19 @@ pub trait VertexProgram: Send + Sync + 'static {
         None
     }
 
+    /// Monotone-workload skip hook: called for a *halted* vertex whose only
+    /// stimulus this superstep is `msgs`.  Return `false` when the messages
+    /// provably cannot change the vertex (i.e. `compute` would neither
+    /// mutate `value`, nor send, nor touch the aggregator); the engine then
+    /// leaves the vertex halted and skips its adjacency read entirely
+    /// (§3.2's `skip()`).  This is what keeps sparse skipping firing
+    /// *per lane* in k-lane multi-source runs: a vertex touched only by
+    /// non-improving lanes never streams its edges.  Default `true`
+    /// (always recompute) is safe for every program.
+    fn reactivates(&self, _value: &Self::Value, _msgs: &[Self::Msg]) -> bool {
+        true
+    }
+
     /// Merge another machine's aggregate into `a`.
     fn merge_agg(&self, _a: &mut Self::Agg, _b: &Self::Agg) {}
 
@@ -245,6 +276,20 @@ mod tests {
         let mut c = MinI32.identity();
         MinI32.combine(&mut c, &42);
         assert_eq!(c, 42);
+    }
+
+    #[test]
+    fn min_lanes_folds_elementwise() {
+        let comb = MinLanes::<3>;
+        let mut acc = comb.identity();
+        assert_eq!(acc, [f32::INFINITY; 3]);
+        comb.combine(&mut acc, &[2.0, f32::INFINITY, 5.0]);
+        comb.combine(&mut acc, &[3.0, 1.0, f32::INFINITY]);
+        assert_eq!(acc, [2.0, 1.0, 5.0]);
+        // identity law per lane
+        let mut b = comb.identity();
+        comb.combine(&mut b, &[0.5, -1.0, 7.0]);
+        assert_eq!(b, [0.5, -1.0, 7.0]);
     }
 
     #[test]

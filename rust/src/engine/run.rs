@@ -27,6 +27,13 @@ impl<P: VertexProgram> JobResult<P> {
             .flat_map(|o| o.ids.iter().copied().zip(o.values.iter().copied()))
             .collect();
         v.sort_unstable_by_key(|(id, _)| *id);
+        // A vertex id reported by two machines means the partitioner
+        // double-assigned it — without this check the duplicate row would
+        // silently survive the sort.
+        debug_assert!(
+            v.windows(2).all(|w| w[0].0 != w[1].0),
+            "duplicate vertex id across machine outputs (partitioner bug)"
+        );
         v
     }
 

@@ -174,6 +174,25 @@ pub fn random_weights(g: Graph, seed: u64) -> Graph {
     g.with_weights(w)
 }
 
+/// Deterministic query workload for the serve subsystem: `q` pseudo-random
+/// (source, target) pairs over vertex ids `[0, nv)` with `source != target`
+/// (pairs may repeat when `q` approaches `nv²`).  Same `(nv, q, seed)`
+/// always yields the same pairs — the serve bench, tests, and CLI demo all
+/// draw from here.
+pub fn query_set(nv: usize, q: usize, seed: u64) -> Vec<(u32, u32)> {
+    assert!(nv >= 2, "query_set needs at least 2 vertices");
+    let mut rng = Rng::new(seed ^ 0x5e7_9e4e5); // decouple from graph seeds
+    (0..q)
+        .map(|_| loop {
+            let s = rng.below(nv as u64) as u32;
+            let t = rng.below(nv as u64) as u32;
+            if s != t {
+                return (s, t);
+            }
+        })
+        .collect()
+}
+
 /// The five scaled-down paper analogs (Table 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dataset {
@@ -307,6 +326,19 @@ mod tests {
         let g = hub_graph(2000, 2000, 3, 500, false, 7);
         assert!(g.max_degree() >= 400);
         assert!(g.max_degree() as f64 > 20.0 * g.avg_degree());
+    }
+
+    #[test]
+    fn query_set_is_deterministic_and_valid() {
+        let a = query_set(50, 40, 9);
+        let b = query_set(50, 40, 9);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 40);
+        for &(s, t) in &a {
+            assert!(s < 50 && t < 50 && s != t);
+        }
+        // different seeds give different workloads
+        assert_ne!(query_set(50, 40, 9), query_set(50, 40, 10));
     }
 
     #[test]

@@ -5,6 +5,9 @@
 //! graphd run   --algo pagerank|hashmin|sssp --dataset NAME
 //!              [--profile wpc|whigh|test] [--steps 10] [--machines N]
 //!              [--scale F] [-c key=val ...]
+//! graphd serve --dataset NAME [--queries FILE|-] [--gen Q] [--seed S]
+//!              [--lanes 8] [--basic] [--profile NAME] [--machines N]
+//!              [--scale F] [-c key=val ...]
 //! graphd table --id 2|3|5|6|7|8 [--scale F]
 //! graphd info
 //! ```
@@ -15,8 +18,10 @@ use graphd::baselines::Algo;
 use graphd::bench;
 use graphd::config::ClusterProfile;
 use graphd::graph::formats;
-use graphd::graph::generator::Dataset;
+use graphd::graph::generator::{self, Dataset};
 use graphd::metrics::{Cell, Table};
+use graphd::serve::{self, Query, ServeConfig};
+use graphd::{GraphD, GraphSource};
 use std::collections::HashMap;
 
 /// Parse `--flag [value]` and `-c key=val` arguments.  A `--flag` followed
@@ -70,6 +75,7 @@ fn main() {
     let result = match cmd {
         "gen" => cmd_gen(&flags, scale),
         "run" => cmd_run(&flags, &cfgs, scale),
+        "serve" => cmd_serve(&flags, &cfgs, scale),
         "table" => cmd_table(&flags, scale),
         "info" => {
             cmd_info();
@@ -77,7 +83,8 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: graphd <gen|run|table|info> [flags]\n  see module docs of rust/src/main.rs"
+                "usage: graphd <gen|run|serve|table|info> [flags]\n  \
+                 see module docs of rust/src/main.rs"
             );
             Ok(())
         }
@@ -174,6 +181,85 @@ fn cmd_run(
         ],
     );
     println!("{}", t.render());
+    Ok(())
+}
+
+/// `graphd serve`: build a query server from a session over a generated
+/// dataset and answer a query file (or a generated `query_set` workload)
+/// through k-lane batched traversals.
+fn cmd_serve(
+    flags: &HashMap<String, String>,
+    cfgs: &[(String, String)],
+    scale: f64,
+) -> graphd::Result<()> {
+    let ds = dataset_by_name(flags.get("dataset").map(String::as_str).unwrap_or("btc-s"))
+        .ok_or_else(|| graphd::Error::Config("unknown dataset".into()))?;
+    let profile = ClusterProfile::by_name(
+        flags.get("profile").map(String::as_str).unwrap_or("test"),
+        flags.get("machines").and_then(|m| m.parse().ok()),
+    )?;
+    let lanes: usize = flags.get("lanes").and_then(|s| s.parse().ok()).unwrap_or(8);
+    let steps: u64 = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+    let g = ds.generate_scaled(scale);
+
+    // Workload: an explicit query file ('-' = stdin), or a deterministic
+    // generated set (`--gen Q`; also the default, with Q = 16).
+    let queries: Vec<Query> = if let Some(path) = flags.get("queries") {
+        let text = if path == "-" {
+            use std::io::Read;
+            let mut buf = String::new();
+            std::io::stdin().read_to_string(&mut buf)?;
+            buf
+        } else {
+            std::fs::read_to_string(path)?
+        };
+        let mut qs = Vec::new();
+        for line in text.lines() {
+            if let Some(q) = serve::parse_query_line(line)? {
+                qs.push(q);
+            }
+        }
+        qs
+    } else {
+        let q: usize = flags.get("gen").and_then(|s| s.parse().ok()).unwrap_or(16);
+        generator::query_set(g.num_vertices(), q, seed)
+            .into_iter()
+            .map(|(source, target)| Query::Dist { source, target })
+            .collect()
+    };
+
+    let mut b = GraphD::builder()
+        .profile(profile)
+        .use_xla(bench::use_xla_from_env());
+    for (k, v) in cfgs {
+        b = b.config(k, v);
+    }
+    let session = b.build()?;
+    let mut graph = session.load(GraphSource::InMemory(&g))?;
+    if !flags.contains_key("basic") {
+        graph.recode()?; // serve from the §5 in-memory digesting path
+    }
+    let mut server = graph
+        .serve(ServeConfig::default().lanes(lanes).max_supersteps(steps))?;
+    eprintln!(
+        "{}: |V|={} |E|={}, {} queries, k={} lanes{}",
+        ds.name(),
+        g.num_vertices(),
+        g.num_edges(),
+        queries.len(),
+        lanes,
+        if graph.is_recoded() { ", recoded" } else { "" }
+    );
+    for q in queries {
+        server.submit(q);
+    }
+    let results = server.run_pending()?;
+    for r in &results {
+        println!("{}", serve::render_result(r));
+    }
+    println!("{}", server.metrics().report());
+    let _ = std::fs::remove_dir_all(session.workdir());
     Ok(())
 }
 

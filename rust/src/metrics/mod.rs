@@ -88,6 +88,101 @@ impl JobMetrics {
     }
 }
 
+/// Serve-mode counters (the `crate::serve` query server): how many
+/// queries were answered, at what rate, and the per-query latency
+/// distribution.  Rendered as a self-describing text report so bench
+/// output explains itself.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// Queries answered (excluding rejected/unknown-vertex queries).
+    pub queries: u64,
+    /// Shared superstep-loop batches run.
+    pub batches: u64,
+    /// Total serving wall time across batches (seconds).
+    pub wall_secs: f64,
+    /// Supersteps summed over batches.
+    pub supersteps: u64,
+    /// Adjacency items streamed from `S^E`, summed over machines/batches —
+    /// the I/O the k-lane batching amortises.
+    pub edge_items_read: u64,
+    /// Per-query latency samples (submit → answered), seconds.
+    pub latencies_secs: Vec<f64>,
+}
+
+impl ServeMetrics {
+    /// Fold one batch's accounting in.
+    pub fn record_batch(&mut self, queries: u64, wall_secs: f64, job: &JobMetrics) {
+        self.queries += queries;
+        self.batches += 1;
+        self.wall_secs += wall_secs;
+        self.supersteps += job.supersteps;
+        self.edge_items_read += job
+            .machines
+            .iter()
+            .flat_map(|m| m.steps.iter())
+            .map(|s| s.edge_items_read)
+            .sum::<u64>();
+    }
+
+    /// Queries per second of serving wall time.
+    pub fn qps(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.queries as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Latency percentile in seconds (`p` in [0, 100]); 0.0 when empty.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        percentile(&self.latencies_secs, p)
+    }
+
+    /// The self-describing text report (bench + CLI output).
+    pub fn report(&self) -> String {
+        // One sort serves all three percentiles.
+        let mut sorted = self.latencies_secs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        format!(
+            "== Serve metrics ==\n\
+             queries answered   {}\n\
+             batches            {}\n\
+             supersteps         {}\n\
+             edge items read    {}\n\
+             wall time          {}\n\
+             throughput         {:.2} queries/s\n\
+             latency p50        {}\n\
+             latency p95        {}\n\
+             latency p99        {}\n",
+            self.queries,
+            self.batches,
+            self.supersteps,
+            self.edge_items_read,
+            human_secs(self.wall_secs),
+            self.qps(),
+            human_secs(percentile_sorted(&sorted, 50.0)),
+            human_secs(percentile_sorted(&sorted, 95.0)),
+            human_secs(percentile_sorted(&sorted, 99.0)),
+        )
+    }
+}
+
+/// Nearest-rank percentile over unsorted samples (`p` in [0, 100]).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    percentile_sorted(&sorted, p)
+}
+
+/// Nearest-rank percentile over already-sorted samples.
+fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// A rendered table cell: a time, a qualitative refusal, or N/A.
 #[derive(Clone, Debug)]
 pub enum Cell {
@@ -207,5 +302,46 @@ mod tests {
         assert_eq!((g, s), (3.0, 9.0));
         assert_eq!(jm.total_msgs(), 30);
         assert_eq!(jm.peak_state_bytes(), 1000);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[3.0], 99.0), 3.0);
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0]; // sorted: 1 2 3 4 5
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 95.0), 5.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn serve_metrics_accumulate_and_report() {
+        let mut sm = ServeMetrics::default();
+        let jm = JobMetrics {
+            supersteps: 4,
+            machines: vec![MachineMetrics {
+                machine: 0,
+                steps: vec![StepMetrics {
+                    edge_items_read: 100,
+                    ..Default::default()
+                }],
+                peak_state_bytes: 0,
+            }],
+            ..Default::default()
+        };
+        sm.record_batch(8, 2.0, &jm);
+        sm.record_batch(4, 1.0, &jm);
+        sm.latencies_secs.extend([0.5, 1.0, 2.0]);
+        assert_eq!(sm.queries, 12);
+        assert_eq!(sm.batches, 2);
+        assert_eq!(sm.supersteps, 8);
+        assert_eq!(sm.edge_items_read, 200);
+        assert!((sm.qps() - 4.0).abs() < 1e-9);
+        assert_eq!(sm.latency_percentile(50.0), 1.0);
+        let r = sm.report();
+        assert!(r.contains("queries answered"));
+        assert!(r.contains("queries/s"));
+        assert!(r.contains("latency p99"));
     }
 }

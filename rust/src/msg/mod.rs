@@ -68,6 +68,24 @@ impl Codec for () {
     fn decode(_buf: &[u8]) -> Self {}
 }
 
+/// K-lane f32 records (the serve subsystem's batched traversals): lane
+/// values concatenated LE, still a constant-size record per §3.1.
+impl<const K: usize> Codec for [f32; K] {
+    const SIZE: usize = 4 * K;
+    fn encode(&self, out: &mut [u8]) {
+        for (i, x) in self.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn decode(buf: &[u8]) -> Self {
+        let mut a = [0.0f32; K];
+        for (i, x) in a.iter_mut().enumerate() {
+            *x = f32::from_le_bytes(buf[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        a
+    }
+}
+
 impl<A: Codec, B: Codec> Codec for (A, B) {
     const SIZE: usize = A::SIZE + B::SIZE;
     fn encode(&self, out: &mut [u8]) {
@@ -125,6 +143,14 @@ mod tests {
         roundtrip(-2.5e300f64);
         roundtrip(());
         roundtrip((17u32, 2.5f32));
+    }
+
+    #[test]
+    fn lane_array_roundtrips() {
+        roundtrip([1.5f32, f32::INFINITY, -0.25, 4096.0]);
+        roundtrip([0.0f32; 8]);
+        assert_eq!(<[f32; 8]>::SIZE, 32);
+        assert_eq!(msg_rec_size::<[f32; 4]>(), 20);
     }
 
     #[test]

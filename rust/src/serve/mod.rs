@@ -1,0 +1,580 @@
+//! `graphd::serve` — a resident query-serving subsystem with k-lane
+//! batched traversals.
+//!
+//! GraphD's per-job economics are dominated by streaming `S^E` from local
+//! disk every superstep (§3–§4).  A query server amortises that cost: it
+//! keeps a [`crate::session::LoadedGraph`] resident, admits point-to-point
+//! / single-source distance and reachability queries into a queue, and a
+//! batch scheduler packs up to `k` pending queries into **one** k-lane
+//! multi-source run ([`crate::algos::MultiSssp`]) — one shared superstep
+//! loop, one edge-stream pass per superstep, k queries answered.  Lanes
+//! settle independently (per-lane early termination via the aggregator
+//! bounds), and the run ends through the engine's ordinary termination
+//! machinery once every lane is quiet.
+//!
+//! Entry point is the session API:
+//!
+//! ```ignore
+//! let graph = session.load(GraphSource::InMemory(&g))?;
+//! let mut server = graph.serve(ServeConfig::default())?;   // k = 8 lanes
+//! server.submit(Query::Dist { source: 3, target: 96 });
+//! server.submit(Query::Reach { source: 0, target: 41 });
+//! let results = server.run_pending()?;
+//! println!("{}", server.metrics().report());
+//! ```
+
+use crate::algos::multisource::{MultiSssp, NO_VERTEX};
+use crate::config::Mode;
+use crate::error::{Error, Result};
+use crate::metrics::{JobMetrics, ServeMetrics};
+use crate::session::LoadedGraph;
+use crate::util::timer::timed;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Lane widths the batch scheduler can dispatch (the k-lane program is
+/// monomorphised per width).
+pub const LANE_WIDTHS: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// One admitted query, in **input-space** vertex ids.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Query {
+    /// Shortest distance from `source` to `target`.
+    Dist { source: u32, target: u32 },
+    /// Is `target` reachable from `source`?  (Settles on first touch.)
+    Reach { source: u32, target: u32 },
+    /// Single-source: how many vertices are reachable from `source`
+    /// (including itself)?
+    ReachCount { source: u32 },
+}
+
+impl Query {
+    fn source(&self) -> u32 {
+        match *self {
+            Query::Dist { source, .. }
+            | Query::Reach { source, .. }
+            | Query::ReachCount { source } => source,
+        }
+    }
+
+    fn target(&self) -> Option<u32> {
+        match *self {
+            Query::Dist { target, .. } | Query::Reach { target, .. } => Some(target),
+            Query::ReachCount { .. } => None,
+        }
+    }
+}
+
+/// The answer to one query.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Answer {
+    /// `None` = unreachable.
+    Dist(Option<f32>),
+    Reach(bool),
+    ReachCount(u64),
+    /// The query referenced a vertex that is not in the graph.
+    UnknownVertex(u32),
+}
+
+/// One served query with its latency accounting.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    /// Admission id (returned by [`QueryServer::submit`]).
+    pub id: u64,
+    pub query: Query,
+    pub answer: Answer,
+    /// Submit → answered wall time (includes queueing behind earlier
+    /// batches of the same drain).
+    pub latency_secs: f64,
+    /// Sequence number of the admission batch that carried it.
+    pub batch: u64,
+    /// How many queries shared that batch's superstep loop.
+    pub lanes_in_batch: usize,
+    /// Supersteps the batch ran.
+    pub supersteps: u64,
+}
+
+/// Server configuration: lane width k, execution mode, superstep cap.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Queries packed per batch — one of [`LANE_WIDTHS`].
+    pub lanes: usize,
+    /// Execution mode per batch job ([`Mode::Auto`] picks IO-Recoded when
+    /// the graph has been recoded — `MultiSssp` always has a combiner).
+    pub mode: Mode,
+    /// Per-batch superstep cap (0 = unlimited).
+    pub max_supersteps: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            lanes: 8,
+            mode: Mode::Auto,
+            max_supersteps: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn lanes(mut self, k: usize) -> Self {
+        self.lanes = k;
+        self
+    }
+
+    pub fn mode(mut self, m: Mode) -> Self {
+        self.mode = m;
+        self
+    }
+
+    pub fn max_supersteps(mut self, n: u64) -> Self {
+        self.max_supersteps = n;
+        self
+    }
+}
+
+struct Pending {
+    id: u64,
+    query: Query,
+    submitted: Instant,
+}
+
+/// A query translated into the current ID space, ready for a lane.
+struct Prepared {
+    query: Query,
+    src_cur: u32,
+    tgt_cur: u32,
+    /// Input-space target id, for result extraction (`NO_VERTEX` = none).
+    tgt_input: u32,
+    reach: bool,
+}
+
+/// The resident query server: admission queue + batch scheduler over one
+/// [`LoadedGraph`].  Build it through [`LoadedGraph::serve`].
+pub struct QueryServer<'g, 's> {
+    graph: &'g LoadedGraph<'s>,
+    cfg: ServeConfig,
+    queue: VecDeque<Pending>,
+    next_id: u64,
+    /// Admission batches drained (every [`QueryResult::batch`] label);
+    /// engine batches actually run are counted by `metrics.batches`.
+    batches: u64,
+    metrics: ServeMetrics,
+}
+
+impl<'g, 's> QueryServer<'g, 's> {
+    pub(crate) fn new(graph: &'g LoadedGraph<'s>, cfg: ServeConfig) -> Result<Self> {
+        if !LANE_WIDTHS.contains(&cfg.lanes) {
+            return Err(Error::Config(format!(
+                "ServeConfig.lanes must be one of {LANE_WIDTHS:?}, got {}",
+                cfg.lanes
+            )));
+        }
+        Ok(Self {
+            graph,
+            cfg,
+            queue: VecDeque::new(),
+            next_id: 0,
+            batches: 0,
+            metrics: ServeMetrics::default(),
+        })
+    }
+
+    /// Admit a query; returns its admission id.
+    pub fn submit(&mut self, query: Query) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Pending {
+            id,
+            query,
+            submitted: Instant::now(),
+        });
+        id
+    }
+
+    /// Admit a set of (source, target) distance queries (the shape
+    /// produced by [`crate::graph::generator::query_set`]).
+    pub fn submit_pairs(&mut self, pairs: &[(u32, u32)]) -> Vec<u64> {
+        pairs
+            .iter()
+            .map(|&(source, target)| self.submit(Query::Dist { source, target }))
+            .collect()
+    }
+
+    /// Queries admitted but not yet served.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Serve-mode counters accumulated so far.
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Drain the admission queue: pack up to `k` queries per batch into
+    /// one k-lane run each, until the queue is empty.  Results come back
+    /// in admission order within each batch.
+    pub fn run_pending(&mut self) -> Result<Vec<QueryResult>> {
+        let mut results = Vec::new();
+        while !self.queue.is_empty() {
+            let take = self.cfg.lanes.min(self.queue.len());
+            let mut batch = Vec::with_capacity(take);
+            for _ in 0..take {
+                batch.push(self.queue.pop_front().unwrap());
+            }
+            let seq = self.batches;
+            self.batches += 1;
+
+            // Validate + translate; bad ids are answered without a lane.
+            // `slots` keeps every answer in admission order.
+            let mut slots: Vec<Option<QueryResult>> = (0..batch.len()).map(|_| None).collect();
+            let mut lanes: Vec<(usize, Prepared)> = Vec::with_capacity(batch.len());
+            for (i, p) in batch.iter().enumerate() {
+                match prepare(self.graph, p.query) {
+                    Ok(prep) => lanes.push((i, prep)),
+                    Err(bad) => {
+                        slots[i] = Some(QueryResult {
+                            id: p.id,
+                            query: p.query,
+                            answer: Answer::UnknownVertex(bad),
+                            latency_secs: p.submitted.elapsed().as_secs_f64(),
+                            batch: seq,
+                            lanes_in_batch: 0,
+                            supersteps: 0,
+                        })
+                    }
+                }
+            }
+
+            if !lanes.is_empty() {
+                let preps: Vec<&Prepared> = lanes.iter().map(|(_, p)| p).collect();
+                let (answers, supersteps, wall, job) =
+                    run_batch_any(self.graph, &self.cfg, &preps)?;
+                self.metrics.record_batch(lanes.len() as u64, wall, &job);
+                for ((i, _), answer) in lanes.iter().zip(answers) {
+                    let p = &batch[*i];
+                    let latency_secs = p.submitted.elapsed().as_secs_f64();
+                    self.metrics.latencies_secs.push(latency_secs);
+                    slots[*i] = Some(QueryResult {
+                        id: p.id,
+                        query: p.query,
+                        answer,
+                        latency_secs,
+                        batch: seq,
+                        lanes_in_batch: lanes.len(),
+                        supersteps,
+                    });
+                }
+            }
+            results.extend(slots.into_iter().flatten());
+        }
+        Ok(results)
+    }
+}
+
+/// Translate a query into the current ID space; `Err(id)` = unknown vertex.
+fn prepare(graph: &LoadedGraph<'_>, query: Query) -> std::result::Result<Prepared, u32> {
+    let src = query.source();
+    let src_cur = graph.try_current_id_of(src).ok_or(src)?;
+    let (tgt_cur, tgt_input) = match query.target() {
+        Some(t) => (graph.try_current_id_of(t).ok_or(t)?, t),
+        None => (NO_VERTEX, NO_VERTEX),
+    };
+    Ok(Prepared {
+        query,
+        src_cur,
+        tgt_cur,
+        tgt_input,
+        reach: matches!(query, Query::Reach { .. }),
+    })
+}
+
+type BatchOut = (Vec<Answer>, u64, f64, JobMetrics);
+
+/// Monomorphisation dispatch over the configured lane width.
+fn run_batch_any(
+    graph: &LoadedGraph<'_>,
+    cfg: &ServeConfig,
+    preps: &[&Prepared],
+) -> Result<BatchOut> {
+    match cfg.lanes {
+        1 => run_batch::<1>(graph, cfg, preps),
+        2 => run_batch::<2>(graph, cfg, preps),
+        4 => run_batch::<4>(graph, cfg, preps),
+        8 => run_batch::<8>(graph, cfg, preps),
+        16 => run_batch::<16>(graph, cfg, preps),
+        k => Err(Error::Config(format!("unsupported lane width {k}"))),
+    }
+}
+
+/// Run one batch as a K-lane multi-source job and extract per-lane answers.
+fn run_batch<const K: usize>(
+    graph: &LoadedGraph<'_>,
+    cfg: &ServeConfig,
+    preps: &[&Prepared],
+) -> Result<BatchOut> {
+    debug_assert!(preps.len() <= K);
+    let mut sources = [NO_VERTEX; K];
+    let mut targets = [NO_VERTEX; K];
+    let mut reach_only = [false; K];
+    for (l, p) in preps.iter().enumerate() {
+        sources[l] = p.src_cur;
+        targets[l] = p.tgt_cur;
+        reach_only[l] = p.reach;
+    }
+    let prog = Arc::new(MultiSssp::<K> {
+        sources,
+        targets,
+        reach_only,
+    });
+    let (wall, res) = timed(|| {
+        graph
+            .job(prog)
+            .mode(cfg.mode)
+            .max_supersteps(cfg.max_supersteps)
+            .run()
+    });
+    let res = res?;
+
+    // Extraction: target rows for Dist/Reach lanes, finite-lane counts for
+    // ReachCount lanes — one linear scan over the outputs.
+    let mut lanes_at: HashMap<u32, Vec<usize>> = HashMap::new();
+    let mut need_counts = false;
+    for (l, p) in preps.iter().enumerate() {
+        if p.tgt_input == NO_VERTEX {
+            need_counts = true;
+        } else {
+            lanes_at.entry(p.tgt_input).or_default().push(l);
+        }
+    }
+    let mut target_val = vec![f32::INFINITY; preps.len()];
+    let mut counts = vec![0u64; preps.len()];
+    for out in &res.outputs {
+        for (row, &id) in out.ids.iter().enumerate() {
+            let v = &out.values[row];
+            if need_counts {
+                for (l, c) in counts.iter_mut().enumerate() {
+                    if v[l].is_finite() {
+                        *c += 1;
+                    }
+                }
+            }
+            if let Some(ls) = lanes_at.get(&id) {
+                for &l in ls {
+                    target_val[l] = v[l];
+                }
+            }
+        }
+    }
+    let answers = preps
+        .iter()
+        .enumerate()
+        .map(|(l, p)| {
+            let d = target_val[l];
+            match p.query {
+                Query::Dist { .. } => Answer::Dist(d.is_finite().then_some(d)),
+                Query::Reach { .. } => Answer::Reach(d.is_finite()),
+                Query::ReachCount { .. } => Answer::ReachCount(counts[l]),
+            }
+        })
+        .collect();
+    Ok((answers, res.supersteps(), wall, res.metrics))
+}
+
+/// Parse one line of a query file (the `graphd serve` CLI format):
+///
+/// ```text
+/// dist SRC DST        # shortest distance
+/// reach SRC DST       # reachability
+/// reachcount SRC      # single-source reachable-vertex count
+/// SRC DST             # bare pair = dist
+/// SRC                 # bare id   = reachcount
+/// ```
+///
+/// Blank lines and `#` comments yield `Ok(None)`.
+pub fn parse_query_line(line: &str) -> Result<Option<Query>> {
+    let line = line.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    let bad = || Error::Config(format!("bad query line: '{line}'"));
+    let num = |s: &str| s.parse::<u32>().map_err(|_| bad());
+    let q = match toks.as_slice() {
+        ["dist", s, t] => Query::Dist {
+            source: num(s)?,
+            target: num(t)?,
+        },
+        ["reach", s, t] => Query::Reach {
+            source: num(s)?,
+            target: num(t)?,
+        },
+        ["reachcount", s] => Query::ReachCount { source: num(s)? },
+        [s, t] => Query::Dist {
+            source: num(s)?,
+            target: num(t)?,
+        },
+        [s] => Query::ReachCount { source: num(s)? },
+        _ => return Err(bad()),
+    };
+    Ok(Some(q))
+}
+
+/// Render one served query as a stable text line (CLI output).
+pub fn render_result(r: &QueryResult) -> String {
+    let q = match r.query {
+        Query::Dist { source, target } => format!("dist {source} {target}"),
+        Query::Reach { source, target } => format!("reach {source} {target}"),
+        Query::ReachCount { source } => format!("reachcount {source}"),
+    };
+    let a = match r.answer {
+        Answer::Dist(Some(d)) => format!("{d}"),
+        Answer::Dist(None) => "unreachable".to_string(),
+        Answer::Reach(true) => "yes".to_string(),
+        Answer::Reach(false) => "no".to_string(),
+        Answer::ReachCount(c) => format!("{c}"),
+        Answer::UnknownVertex(v) => format!("unknown vertex {v}"),
+    };
+    format!(
+        "{q} = {a}  ({:.1} ms, batch {} x{}, {} supersteps)",
+        r.latency_secs * 1e3,
+        r.batch,
+        r.lanes_in_batch,
+        r.supersteps
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::session::{GraphD, GraphSource};
+    use std::path::PathBuf;
+
+    fn wd(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "graphd_serve_test_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn parse_query_lines() {
+        assert_eq!(
+            parse_query_line("dist 3 9").unwrap(),
+            Some(Query::Dist { source: 3, target: 9 })
+        );
+        assert_eq!(
+            parse_query_line("reach 0 5").unwrap(),
+            Some(Query::Reach { source: 0, target: 5 })
+        );
+        assert_eq!(
+            parse_query_line("reachcount 7").unwrap(),
+            Some(Query::ReachCount { source: 7 })
+        );
+        assert_eq!(
+            parse_query_line("4 8").unwrap(),
+            Some(Query::Dist { source: 4, target: 8 })
+        );
+        assert_eq!(
+            parse_query_line("12").unwrap(),
+            Some(Query::ReachCount { source: 12 })
+        );
+        assert_eq!(parse_query_line("").unwrap(), None);
+        assert_eq!(parse_query_line("  # a comment").unwrap(), None);
+        assert_eq!(
+            parse_query_line("3 9 # trailing comment").unwrap(),
+            Some(Query::Dist { source: 3, target: 9 })
+        );
+        assert!(parse_query_line("dist x y").is_err());
+        assert!(parse_query_line("frob 1 2 3").is_err());
+    }
+
+    #[test]
+    fn lane_width_is_validated() {
+        let d = wd("lanes");
+        let g = generator::chain(20);
+        let s = GraphD::builder().workdir(&d).machines(2).build().unwrap();
+        let lg = s.load(GraphSource::InMemory(&g)).unwrap();
+        assert!(lg.serve(ServeConfig::default().lanes(3)).is_err());
+        assert!(lg.serve(ServeConfig::default().lanes(8)).is_ok());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn serves_chain_distances_and_reachability() {
+        let d = wd("chain");
+        // Directed chain 0→1→…→29: distances are exact, lanes settle at
+        // different supersteps (targets at different depths).
+        let g = generator::chain(30).with_unit_weights();
+        let s = GraphD::builder().workdir(&d).machines(2).build().unwrap();
+        let lg = s.load(GraphSource::InMemory(&g)).unwrap();
+        let mut srv = lg.serve(ServeConfig::default().lanes(4)).unwrap();
+
+        srv.submit(Query::Dist { source: 0, target: 5 });
+        srv.submit(Query::Dist { source: 2, target: 29 });
+        srv.submit(Query::Reach { source: 10, target: 3 }); // backwards: no
+        srv.submit(Query::ReachCount { source: 25 });
+        srv.submit(Query::Dist { source: 7, target: 7 }); // second batch
+        assert_eq!(srv.pending(), 5);
+
+        let rs = srv.run_pending().unwrap();
+        assert_eq!(srv.pending(), 0);
+        assert_eq!(rs.len(), 5);
+        assert_eq!(rs[0].answer, Answer::Dist(Some(5.0)));
+        assert_eq!(rs[1].answer, Answer::Dist(Some(27.0)));
+        assert_eq!(rs[2].answer, Answer::Reach(false));
+        assert_eq!(rs[3].answer, Answer::ReachCount(5)); // 25..=29
+        assert_eq!(rs[4].answer, Answer::Dist(Some(0.0)));
+        assert_eq!(rs[0].batch, 0);
+        assert_eq!(rs[0].lanes_in_batch, 4);
+        assert_eq!(rs[4].batch, 1);
+        assert_eq!(rs[4].lanes_in_batch, 1);
+        assert!(rs.iter().all(|r| r.latency_secs >= 0.0));
+
+        let m = srv.metrics();
+        assert_eq!(m.queries, 5);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.latencies_secs.len(), 5);
+        assert!(m.report().contains("queries answered   5"));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn unknown_vertices_answered_without_a_lane() {
+        let d = wd("unknown");
+        let g = generator::chain(10);
+        let s = GraphD::builder().workdir(&d).machines(2).build().unwrap();
+        let lg = s.load(GraphSource::InMemory(&g)).unwrap();
+        let mut srv = lg.serve(ServeConfig::default().lanes(2)).unwrap();
+        srv.submit(Query::Dist { source: 999, target: 3 });
+        srv.submit(Query::Dist { source: 0, target: 4 });
+        let rs = srv.run_pending().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].answer, Answer::UnknownVertex(999));
+        assert_eq!(rs[1].answer, Answer::Dist(Some(4.0)));
+        // only the valid query hit the engine
+        assert_eq!(srv.metrics().queries, 1);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn render_result_is_stable() {
+        let r = QueryResult {
+            id: 0,
+            query: Query::Dist { source: 1, target: 2 },
+            answer: Answer::Dist(None),
+            latency_secs: 0.0123,
+            batch: 3,
+            lanes_in_batch: 8,
+            supersteps: 11,
+        };
+        let s = render_result(&r);
+        assert!(s.starts_with("dist 1 2 = unreachable"));
+        assert!(s.contains("batch 3 x8"));
+    }
+}

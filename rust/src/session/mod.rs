@@ -411,18 +411,45 @@ impl<'s> LoadedGraph<'s> {
     /// identity before recoding, the §5 bijection (`pos·n + i`) after.
     /// Panics if the vertex does not exist.
     pub fn current_id_of(&self, input_id: u32) -> u32 {
+        self.try_current_id_of(input_id).expect("vertex must exist")
+    }
+
+    /// Non-panicking [`Self::current_id_of`]: `None` when `input_id` is not
+    /// a vertex of this graph (the serve subsystem's query validation).
+    pub fn try_current_id_of(&self, input_id: u32) -> Option<u32> {
         match &self.recoded {
-            None => input_id,
+            None => {
+                let n = self.stores.len();
+                let m = Partitioning::Hashed.machine_of(input_id, n);
+                self.stores[m]
+                    .ids
+                    .binary_search(&input_id)
+                    .ok()
+                    .map(|_| input_id)
+            }
             Some(rec) => {
                 let n = rec.len();
                 let m = Partitioning::Hashed.machine_of(input_id, n);
-                let pos = rec[m]
+                rec[m]
                     .ids
                     .binary_search(&input_id)
-                    .expect("vertex must exist");
-                (pos * n + m) as u32
+                    .ok()
+                    .map(|pos| (pos * n + m) as u32)
             }
         }
+    }
+
+    /// Start a resident query server over this graph (the `graphd::serve`
+    /// subsystem): point-to-point / single-source queries are admitted to a
+    /// queue and served in k-lane batched traversals that share one
+    /// superstep loop — and therefore one `S^E` stream pass per superstep.
+    /// Recode first ([`Self::recode`]) to serve from the in-memory
+    /// digesting path (§5).
+    pub fn serve(
+        &self,
+        cfg: crate::serve::ServeConfig,
+    ) -> Result<crate::serve::QueryServer<'_, 's>> {
+        crate::serve::QueryServer::new(self, cfg)
     }
 
     /// Run `program` with the session defaults (equivalent to

@@ -1040,6 +1040,13 @@ fn per_vertex_pass<P: VertexProgram>(
         msgs.clear();
         if has_msg {
             cursor.take_for(id, &mut msgs)?;
+            // A halted vertex only reactivates if the program says the
+            // messages can change it (per-lane sparse skipping; default
+            // is always-reactivate).
+            if !active && !program.reactivates(&vals[pos], &msgs) {
+                se.defer_skip(store.degs[pos]);
+                continue;
+            }
             halted.set(pos, false); // message reactivates a halted vertex
         }
         se.read_adjacency(store.degs[pos], &mut edges)?;
@@ -1130,6 +1137,13 @@ fn recoded_pass<P: VertexProgram>(
             }
             msgs.clear();
             if has_msg {
+                // Same per-lane reactivation gate as the basic path: a
+                // digested message that cannot change the vertex leaves it
+                // halted and its adjacency unread.
+                if !active && !program.reactivates(&vals[pos], &sums[pos..pos + 1]) {
+                    se.defer_skip(store.degs[pos]);
+                    continue;
+                }
                 msgs.push(sums[pos]);
                 halted.set(pos, false);
             }

@@ -1,0 +1,270 @@
+//! Serve-subsystem integration tests: k-lane multi-source correctness
+//! against the in-memory oracle, per-lane early termination, and the
+//! end-to-end query server over a `query_set` workload.
+
+use graphd::algos::multisource::{MultiSssp, NO_VERTEX};
+use graphd::config::Mode;
+use graphd::graph::{generator, reference, Graph};
+use graphd::serve::{Answer, Query, ServeConfig};
+use graphd::{GraphD, GraphSource, Session};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn fresh_workdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "graphd_serve_it_{name}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn setup(name: &str, machines: usize) -> Session {
+    GraphD::builder()
+        .machines(machines)
+        .workdir(fresh_workdir(name))
+        .oms_file_cap(16 * 1024)
+        .build()
+        .unwrap()
+}
+
+fn cleanup(s: &Session) {
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+/// A k-lane multi-source run must equal k independent single-source runs
+/// against the Dijkstra oracle — BFS flavor (unit weights), dense ids.
+#[test]
+fn klane_bfs_matches_k_single_source_oracles() {
+    let g = generator::uniform(180, 900, true, 61).with_unit_weights();
+    let sources = [3u32, 77, 144, 9];
+
+    for mode in [Mode::Basic, Mode::Recoded] {
+        let s = setup(&format!("klane_bfs_{mode:?}"), 3);
+        let mut graph = s.load(GraphSource::InMemory(&g)).unwrap();
+        if mode == Mode::Recoded {
+            graph.recode().unwrap();
+        }
+        let mut cur = [0u32; 4];
+        for (l, &src) in sources.iter().enumerate() {
+            cur[l] = graph.current_id_of(src);
+        }
+        let out = graph
+            .job(Arc::new(MultiSssp::<4>::new(cur)))
+            .mode(mode)
+            .run()
+            .unwrap();
+        let got: HashMap<u32, [f32; 4]> = out.values_by_id().into_iter().collect();
+        assert_eq!(got.len(), 180);
+        for (l, &src) in sources.iter().enumerate() {
+            let want = reference::sssp(&g, src);
+            for v in 0..180u32 {
+                let gv = got[&v][l];
+                if want[v as usize].is_infinite() {
+                    assert!(gv.is_infinite(), "{mode:?} lane {l} v={v} should be ∞");
+                } else {
+                    assert!(
+                        (gv - want[v as usize]).abs() < 1e-3,
+                        "{mode:?} lane {l} v={v}: got {gv}, want {}",
+                        want[v as usize]
+                    );
+                }
+            }
+        }
+        cleanup(&s);
+    }
+}
+
+/// Same with real SSSP weights, including an idle lane (`NO_VERTEX`).
+#[test]
+fn klane_weighted_sssp_matches_oracles_with_idle_lane() {
+    let g = generator::random_weights(generator::uniform(150, 700, true, 62), 5);
+    let sources = [0u32, 50, NO_VERTEX, 149];
+
+    for mode in [Mode::Basic, Mode::Recoded] {
+        let s = setup(&format!("klane_w_{mode:?}"), 4);
+        let mut graph = s.load(GraphSource::InMemory(&g)).unwrap();
+        if mode == Mode::Recoded {
+            graph.recode().unwrap();
+        }
+        let mut cur = [NO_VERTEX; 4];
+        for (l, &src) in sources.iter().enumerate() {
+            if src != NO_VERTEX {
+                cur[l] = graph.current_id_of(src);
+            }
+        }
+        let out = graph
+            .job(Arc::new(MultiSssp::<4>::new(cur)))
+            .mode(mode)
+            .run()
+            .unwrap();
+        let got: HashMap<u32, [f32; 4]> = out.values_by_id().into_iter().collect();
+        for (l, &src) in sources.iter().enumerate() {
+            if src == NO_VERTEX {
+                for v in 0..150u32 {
+                    assert!(got[&v][l].is_infinite(), "idle lane {l} must stay ∞");
+                }
+                continue;
+            }
+            let want = reference::sssp(&g, src);
+            for v in 0..150u32 {
+                let gv = got[&v][l];
+                if want[v as usize].is_infinite() {
+                    assert!(gv.is_infinite(), "{mode:?} lane {l} v={v} should be ∞");
+                } else {
+                    assert!(
+                        (gv - want[v as usize]).abs() < 1e-3,
+                        "{mode:?} lane {l} v={v}: got {gv}, want {}",
+                        want[v as usize]
+                    );
+                }
+            }
+        }
+        cleanup(&s);
+    }
+}
+
+/// Lanes that finish at very different depths must coexist: on a chain,
+/// a source near the end settles in a few supersteps while a source at
+/// the head needs the whole chain — the run takes max, not sum.
+#[test]
+fn klane_lanes_terminate_at_different_supersteps() {
+    let g = generator::chain(120).with_unit_weights();
+    let s = setup("klane_depths", 3);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let out = graph
+        .job(Arc::new(MultiSssp::<2>::new([0, 110])))
+        .run()
+        .unwrap();
+    // lane 0 runs the whole chain (120 supersteps), lane 1 only 10; the
+    // shared loop runs to the deepest lane.
+    assert_eq!(out.supersteps(), 120);
+    let got: HashMap<u32, [f32; 2]> = out.values_by_id().into_iter().collect();
+    assert_eq!(got[&119][0], 119.0);
+    assert_eq!(got[&119][1], 9.0);
+    assert_eq!(got[&115][1], 5.0);
+    assert!(got[&50][1].is_infinite(), "chain is directed");
+    cleanup(&s);
+}
+
+/// Per-lane early termination: a point-to-point query on a long chain
+/// must stop almost immediately after its target settles instead of
+/// traversing the whole graph.
+#[test]
+fn point_to_point_pruning_terminates_early() {
+    let g = generator::chain(300).with_unit_weights();
+    let s = setup("prune", 3);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+
+    // Without a target: the lane floods the whole chain.
+    let full = graph
+        .job(Arc::new(MultiSssp::<1>::new([0])))
+        .run()
+        .unwrap();
+    assert_eq!(full.supersteps(), 300);
+
+    // With target 12: the bound settles at distance 12 and suppresses the
+    // frontier right after.
+    let pruned = graph
+        .job(Arc::new(MultiSssp::<1>::new([0]).with_targets([12])))
+        .run()
+        .unwrap();
+    assert!(
+        pruned.supersteps() <= 15,
+        "pruning never fired: {} supersteps",
+        pruned.supersteps()
+    );
+    let got: HashMap<u32, [f32; 1]> = pruned.values_by_id().into_iter().collect();
+    assert_eq!(got[&12][0], 12.0, "target distance must still be exact");
+    cleanup(&s);
+}
+
+/// End-to-end query server over a generated `query_set` workload, checked
+/// against the oracle, in both basic and recoded serving modes.
+#[test]
+fn query_server_answers_query_set_against_oracle() {
+    let g = generator::uniform(160, 640, true, 63).with_unit_weights();
+    let pairs = generator::query_set(160, 13, 42);
+
+    for recoded in [false, true] {
+        let s = setup(&format!("qset_{recoded}"), 3);
+        let mut graph = s.load(GraphSource::InMemory(&g)).unwrap();
+        if recoded {
+            graph.recode().unwrap();
+        }
+        let mut server = graph.serve(ServeConfig::default().lanes(4)).unwrap();
+        server.submit_pairs(&pairs);
+        let results = server.run_pending().unwrap();
+        assert_eq!(results.len(), pairs.len());
+
+        for (r, &(src, tgt)) in results.iter().zip(pairs.iter()) {
+            assert_eq!(r.query, Query::Dist { source: src, target: tgt });
+            let want = reference::sssp(&g, src)[tgt as usize];
+            match r.answer {
+                Answer::Dist(Some(d)) => {
+                    assert!(
+                        (d - want).abs() < 1e-3,
+                        "recoded={recoded} {src}->{tgt}: got {d}, want {want}"
+                    );
+                }
+                Answer::Dist(None) => {
+                    assert!(want.is_infinite(), "recoded={recoded} {src}->{tgt} reachable");
+                }
+                ref a => panic!("unexpected answer {a:?}"),
+            }
+        }
+        // 13 queries at k=4 → 4 batches; metrics must be self-consistent.
+        let m = server.metrics();
+        assert_eq!(m.queries, 13);
+        assert_eq!(m.batches, 4);
+        assert_eq!(m.latencies_secs.len(), 13);
+        assert!(m.qps() > 0.0);
+        assert!(m.edge_items_read > 0);
+        cleanup(&s);
+    }
+}
+
+/// Reachability + reach-count queries against the oracle, on an
+/// undirected graph with several components.
+#[test]
+fn reachability_queries_match_components() {
+    // Two disjoint rings → reachability is "same component".
+    let mut adj = vec![Vec::new(); 40];
+    for i in 0..20u32 {
+        adj[i as usize] = vec![(i + 1) % 20, (i + 19) % 20];
+        adj[20 + i as usize] = vec![20 + (i + 1) % 20, 20 + (i + 19) % 20];
+    }
+    let g = Graph::from_adj(adj, false);
+    let s = setup("reach", 2);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let mut server = graph.serve(ServeConfig::default().lanes(4)).unwrap();
+    server.submit(Query::Reach { source: 3, target: 17 }); // same ring
+    server.submit(Query::Reach { source: 3, target: 25 }); // other ring
+    server.submit(Query::ReachCount { source: 5 });
+    server.submit(Query::ReachCount { source: 33 });
+    let rs = server.run_pending().unwrap();
+    assert_eq!(rs[0].answer, Answer::Reach(true));
+    assert_eq!(rs[1].answer, Answer::Reach(false));
+    assert_eq!(rs[2].answer, Answer::ReachCount(20));
+    assert_eq!(rs[3].answer, Answer::ReachCount(20));
+    cleanup(&s);
+}
+
+/// The serve path must also work over sparse input IDs: queries are
+/// expressed in input space and translated internally.
+#[test]
+fn serving_sparse_ids_translates_queries() {
+    let g = generator::chain(50).with_unit_weights();
+    let s = setup("sparse", 3);
+    let graph = s.load(GraphSource::InMemorySparse(&g, 31)).unwrap();
+    let ids = graph.id_map().unwrap().to_vec(); // dense → sparse input id
+    let mut server = graph.serve(ServeConfig::default().lanes(2)).unwrap();
+    server.submit(Query::Dist { source: ids[4], target: ids[9] });
+    server.submit(Query::Dist { source: ids[9], target: ids[4] });
+    let rs = server.run_pending().unwrap();
+    assert_eq!(rs[0].answer, Answer::Dist(Some(5.0)));
+    assert_eq!(rs[1].answer, Answer::Dist(None)); // directed chain
+    cleanup(&s);
+}
