@@ -2,8 +2,9 @@
 
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
+BENCH_JSON ?= BENCH_PR3.json
 
-.PHONY: build test fmt-check clippy ci artifacts clean
+.PHONY: build test fmt-check clippy ci bench-smoke artifacts clean
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -18,6 +19,17 @@ clippy:
 	$(CARGO) clippy --manifest-path $(MANIFEST) -- -D warnings
 
 ci: build test fmt-check clippy
+
+# Quick perf trajectory: spine + serve throughput in smoke mode, numbers
+# emitted to $(BENCH_JSON) (spine writes the file, serve merges into it).
+# Non-gating in CI — the asserted floors (spine >= 2x, serve >= 3x) exit
+# non-zero on regression so the step's status is still informative.
+bench-smoke:
+	GRAPHD_SMOKE=1 GRAPHD_BENCH_JSON=$(BENCH_JSON) \
+		$(CARGO) bench --bench spine_throughput --manifest-path $(MANIFEST)
+	GRAPHD_SCALE=0.5 GRAPHD_QUERIES=16 GRAPHD_BENCH_JSON=$(BENCH_JSON) \
+		$(CARGO) bench --bench serve_throughput --manifest-path $(MANIFEST)
+	@echo "bench numbers -> $(BENCH_JSON)"
 
 # Regenerate the AOT HLO artifacts from the python layer (needs jax).
 artifacts:

@@ -84,6 +84,21 @@ fn main() {
     println!(
         "speedup            {speedup:.2}x queries/s  (edge-stream items amortised {io_ratio:.2}x)"
     );
+    if let Some(path) = graphd::bench::bench_json_path() {
+        let body = format!(
+            "{{\"qps_k1\": {:.3}, \"qps_k8\": {:.3}, \"speedup\": {speedup:.3}, \
+               \"edge_items_k1\": {}, \"edge_items_k8\": {}, \
+               \"wire_bytes_k8\": {}, \"local_bytes_k8\": {}}}",
+            seq.qps(),
+            batched.qps(),
+            seq.edge_items_read,
+            batched.edge_items_read,
+            batched.wire_bytes,
+            batched.local_bytes,
+        );
+        graphd::bench::bench_json_merge(&path, "serve", &body).expect("bench json");
+        eprintln!("merged {path} (section: serve)");
+    }
     if speedup < 3.0 {
         eprintln!("FAIL: batched k=8 must be >= 3x sequential k=1 (got {speedup:.2}x)");
         std::process::exit(1);

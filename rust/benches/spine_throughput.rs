@@ -1,0 +1,262 @@
+//! Spine throughput — the zero-copy message spine vs the pre-refactor
+//! path, in two measurements:
+//!
+//! 1. **Combining kernel**: the same digest-heavy PageRank-sum message
+//!    files pushed through (a) a faithful replica of the legacy kernel —
+//!    `dyn` combiner dispatch per record, a fresh allocation per file read
+//!    and per output batch — and (b) the monomorphized, pooled
+//!    `combine_in_memory`.  Reported as msgs/sec.
+//!
+//! 2. **Engine, digest-heavy PageRank at n = 1**: every message is local,
+//!    so the local-delivery fast path must drive `Switch::total_bytes` to
+//!    **zero** and beat the pre-refactor routing (`local_fastpath(false)`:
+//!    every batch through OMS files + the simulated switch) by ≥ 2×
+//!    msgs/sec.  The bench exits non-zero otherwise.
+//!
+//! Env: `GRAPHD_SMOKE=1` shrinks the workload (the `make bench-smoke`
+//! quick mode); `GRAPHD_BENCH_JSON=path` writes the numbers as the
+//! `"spine"` section of the bench JSON (e.g. `BENCH_PR3.json`).
+
+use graphd::api::SumF32;
+use graphd::config::{ClusterProfile, Mode};
+use graphd::graph::generator;
+use graphd::msg::{encode_msg, msg_rec_size, rec_payload, rec_target, BufPool};
+use graphd::util::bitset::BitSet;
+use graphd::util::rng::Rng;
+use graphd::util::timer::timed;
+use graphd::worker::units::{combine_in_memory, TakenFile};
+use graphd::{GraphD, GraphSource};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+// ----------------------------------------------------------------- kernel
+
+/// The legacy combiner shape: object-safe, dispatched per record.
+trait DynCombiner: Sync {
+    fn combine(&self, acc: &mut f32, m: &f32);
+    fn identity(&self) -> f32;
+}
+
+struct DynSum;
+impl DynCombiner for DynSum {
+    fn combine(&self, acc: &mut f32, m: &f32) {
+        *acc += *m;
+    }
+    fn identity(&self) -> f32 {
+        0.0
+    }
+}
+
+/// Faithful replica of the pre-refactor `combine_in_memory`: virtual call
+/// per record, `std::fs::read` allocation per file, fresh output vector.
+fn legacy_combine(
+    files: &[TakenFile],
+    combiner: &dyn DynCombiner,
+    n: usize,
+    a_s: &mut [f32],
+    touched: &mut Vec<u32>,
+    bits: &mut BitSet,
+) -> Vec<u8> {
+    let rec_size = msg_rec_size::<f32>();
+    for (_, path, _) in files {
+        let data = std::fs::read(path).expect("read");
+        for rec in data.chunks_exact(rec_size) {
+            let target = rec_target(rec);
+            let pos = target as usize / n;
+            let m = rec_payload::<f32>(rec);
+            if bits.get(pos) {
+                combiner.combine(&mut a_s[pos], &m);
+            } else {
+                a_s[pos] = m;
+                bits.set(pos, true);
+                touched.push(target);
+            }
+        }
+    }
+    touched.sort_unstable();
+    let mut out = Vec::with_capacity(touched.len() * rec_size);
+    for &t in touched.iter() {
+        let pos = t as usize / n;
+        encode_msg(t, &a_s[pos], &mut out);
+        a_s[pos] = combiner.identity();
+        bits.set(pos, false);
+    }
+    touched.clear();
+    out
+}
+
+fn write_message_files(dir: &PathBuf, nmsgs: usize, local: usize, n: usize) -> Vec<TakenFile> {
+    std::fs::create_dir_all(dir).expect("mkdir");
+    let mut rng = Rng::new(7);
+    let nfiles = 16;
+    let per = nmsgs / nfiles;
+    let mut files = Vec::new();
+    for i in 0..nfiles {
+        let mut buf = Vec::with_capacity(per * 8);
+        for _ in 0..per {
+            let pos = rng.below(local as u64) as usize;
+            encode_msg((pos * n) as u32, &(rng.below(1000) as f32), &mut buf);
+        }
+        let p = dir.join(format!("f{i}"));
+        std::fs::write(&p, &buf).expect("write");
+        files.push((i as u64, p, buf.len() as u64));
+    }
+    files
+}
+
+fn kernel_bench(smoke: bool) -> (f64, f64) {
+    let nmsgs = if smoke { 400_000 } else { 2_000_000 };
+    let local = 20_000usize;
+    let n = 4usize;
+    let iters = 5;
+    let dir = std::env::temp_dir().join(format!("graphd_spine_bench_{}", std::process::id()));
+    let files = write_message_files(&dir, nmsgs, local, n);
+    let total = (iters * nmsgs) as f64;
+
+    let comb = SumF32;
+    let dyn_comb: &dyn DynCombiner = &DynSum;
+    let mut a_s = vec![0.0f32; local + 1];
+    let mut touched: Vec<u32> = Vec::new();
+    let mut bits = BitSet::new(local + 1);
+    let pool = BufPool::new(8);
+
+    // Warm both paths once (page cache, pool shelf), then measure.
+    let _ = legacy_combine(&files, dyn_comb, n, &mut a_s, &mut touched, &mut bits);
+    let _ = combine_in_memory::<f32, SumF32>(
+        &files, &comb, n, &mut a_s, &mut touched, &mut bits, &pool,
+    )
+    .expect("combine");
+
+    let (legacy_secs, ()) = timed(|| {
+        for _ in 0..iters {
+            let out = legacy_combine(&files, dyn_comb, n, &mut a_s, &mut touched, &mut bits);
+            assert!(!out.is_empty());
+        }
+    });
+    let (mono_secs, ()) = timed(|| {
+        for _ in 0..iters {
+            let out = combine_in_memory::<f32, SumF32>(
+                &files, &comb, n, &mut a_s, &mut touched, &mut bits, &pool,
+            )
+            .expect("combine");
+            assert!(!out.is_empty());
+            pool.put(out); // the receiver would recycle the wire batch
+        }
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+    (total / legacy_secs.max(1e-9), total / mono_secs.max(1e-9))
+}
+
+// ----------------------------------------------------------------- engine
+
+struct EngineRun {
+    msgs_per_sec: f64,
+    wire_bytes: u64,
+    local_bytes: u64,
+    pool_hit_rate: f64,
+}
+
+fn engine_run(g: &graphd::graph::Graph, steps: u64, fastpath: bool) -> EngineRun {
+    // One machine on a slow shared switch: digest-heavy PageRank where the
+    // pre-refactor path pays simulated wire time for every local batch.
+    let mut profile = ClusterProfile::test(1);
+    profile.net_bytes_per_sec = 16.0 * 1024.0 * 1024.0;
+    profile.latency_us = 300;
+    let session = GraphD::builder()
+        .profile(profile)
+        .max_supersteps(steps)
+        .build()
+        .expect("session");
+    let mut graph = session.load(GraphSource::InMemory(g)).expect("load");
+    graph.recode().expect("recode");
+    let res = graph
+        .job(Arc::new(graphd::algos::PageRank::new(steps)))
+        .mode(Mode::Recoded)
+        .local_fastpath(fastpath)
+        .run()
+        .expect("run");
+    let out = EngineRun {
+        msgs_per_sec: res.metrics.total_msgs() as f64 / res.metrics.compute_secs.max(1e-9),
+        wire_bytes: res.metrics.net_wire_bytes,
+        local_bytes: res.metrics.net_local_bytes,
+        pool_hit_rate: res.metrics.pool.hit_rate(),
+    };
+    let _ = std::fs::remove_dir_all(session.workdir());
+    out
+}
+
+fn main() {
+    let smoke = graphd::bench::smoke_from_env();
+    println!(
+        "== Spine throughput: monomorphized + pooled + local fast path vs legacy =={}",
+        if smoke { "  (smoke)" } else { "" }
+    );
+
+    let (legacy_mps, mono_mps) = kernel_bench(smoke);
+    let kernel_speedup = mono_mps / legacy_mps.max(1e-9);
+    println!("-- combining kernel (digest-heavy PageRank-sum files) --");
+    println!("legacy (dyn dispatch, alloc/batch)   {legacy_mps:>12.0} msgs/s");
+    println!("monomorphized + pooled               {mono_mps:>12.0} msgs/s");
+    println!("kernel speedup                       {kernel_speedup:>12.2}x");
+
+    let (nv, ne) = if smoke { (4_000, 24_000) } else { (20_000, 120_000) };
+    let g = generator::uniform(nv, ne, true, 13);
+    let steps = 5;
+    let off = engine_run(&g, steps, false);
+    let on = engine_run(&g, steps, true);
+    let engine_speedup = on.msgs_per_sec / off.msgs_per_sec.max(1e-9);
+    println!("-- engine, digest-heavy PageRank, n=1 (all traffic local) --");
+    println!(
+        "fast path off  {:>12.0} msgs/s   wire {:>10} B   local {:>10} B",
+        off.msgs_per_sec, off.wire_bytes, off.local_bytes
+    );
+    println!(
+        "fast path on   {:>12.0} msgs/s   wire {:>10} B   local {:>10} B",
+        on.msgs_per_sec, on.wire_bytes, on.local_bytes
+    );
+    println!(
+        "engine speedup {engine_speedup:>12.2}x   pool hit rate {:.1}%",
+        on.pool_hit_rate * 100.0
+    );
+
+    if let Some(path) = graphd::bench::bench_json_path() {
+        let body = format!(
+            "{{\"kernel_legacy_msgs_per_sec\": {legacy_mps:.0}, \
+               \"kernel_mono_msgs_per_sec\": {mono_mps:.0}, \
+               \"kernel_speedup\": {kernel_speedup:.3}, \
+               \"engine_fastpath_off_msgs_per_sec\": {:.0}, \
+               \"engine_fastpath_on_msgs_per_sec\": {:.0}, \
+               \"engine_speedup\": {engine_speedup:.3}, \
+               \"wire_bytes_fastpath_off\": {}, \
+               \"wire_bytes_fastpath_on\": {}, \
+               \"local_bytes_fastpath_on\": {}, \
+               \"pool_hit_rate\": {:.4}}}",
+            off.msgs_per_sec,
+            on.msgs_per_sec,
+            off.wire_bytes,
+            on.wire_bytes,
+            on.local_bytes,
+            on.pool_hit_rate,
+        );
+        graphd::bench::bench_json_write(&path, "spine", &body).expect("bench json");
+        eprintln!("wrote {path} (section: spine)");
+    }
+
+    let mut failed = false;
+    if on.wire_bytes != 0 {
+        eprintln!(
+            "FAIL: n=1 fast-path run must push 0 bytes through the switch (got {})",
+            on.wire_bytes
+        );
+        failed = true;
+    }
+    if engine_speedup < 2.0 {
+        eprintln!(
+            "FAIL: fast-path engine must be >= 2x the pre-refactor path (got {engine_speedup:.2}x)"
+        );
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -2,7 +2,7 @@
 //! every vertex repeatedly adopts the minimum label seen; labels converge
 //! to the minimum vertex ID of each component.
 
-use crate::api::{BlockCtx, Combiner, Context, Edge, MinI32, VertexProgram};
+use crate::api::{BlockCtx, Context, Edge, MinI32, VertexProgram};
 use crate::runtime::KernelSet;
 
 /// Hash-Min over an undirected graph.  MIN combiner, i32 labels
@@ -13,6 +13,7 @@ impl VertexProgram for HashMin {
     type Value = i32;
     type Msg = i32;
     type Agg = ();
+    type Comb = MinI32;
 
     fn init_value(&self, id: u32, _deg: u32, _nv: u64) -> i32 {
         id as i32
@@ -41,10 +42,6 @@ impl VertexProgram for HashMin {
             }
         }
         ctx.vote_to_halt();
-    }
-
-    fn combiner(&self) -> Option<&dyn Combiner<i32>> {
-        Some(&MinI32)
     }
 
     /// Monotone: only a strictly smaller label changes a halted vertex.

@@ -20,7 +20,7 @@
 //! every lane has settled no messages remain and the engine's ordinary
 //! termination (via the existing aggregator/sync machinery) ends the run.
 
-use crate::api::{Combiner, Context, Edge, MinLanes, VertexProgram};
+use crate::api::{Context, Edge, MinLanes, VertexProgram};
 
 /// Sentinel for "no vertex" in `sources`/`targets` (no real vertex id is
 /// `u32::MAX` — graphs are loaded from dense or sparse u32 ids below it).
@@ -82,6 +82,7 @@ impl<const K: usize> VertexProgram for MultiSssp<K> {
     type Value = [f32; K];
     type Msg = [f32; K];
     type Agg = LaneBounds<K>;
+    type Comb = MinLanes<K>;
 
     fn init_value(&self, id: u32, _deg: u32, _nv: u64) -> [f32; K] {
         let mut v = [f32::INFINITY; K];
@@ -165,10 +166,6 @@ impl<const K: usize> VertexProgram for MultiSssp<K> {
             }
         }
         ctx.vote_to_halt();
-    }
-
-    fn combiner(&self) -> Option<&dyn Combiner<[f32; K]>> {
-        Some(&MinLanes::<K>)
     }
 
     fn merge_agg(&self, a: &mut LaneBounds<K>, b: &LaneBounds<K>) {

@@ -1,7 +1,7 @@
 //! PageRank (§2.1): `a(v) = 0.15/|V| + 0.85·Σ msgs`, messages `a(v)/d(v)`.
 //! Runs a fixed number of supersteps (the paper uses 10, 5 on ClueWeb).
 
-use crate::api::{BlockCtx, Combiner, Context, Edge, SumF32, VertexProgram};
+use crate::api::{BlockCtx, Context, Edge, SumF32, VertexProgram};
 use crate::runtime::KernelSet;
 
 /// Fixed-iteration PageRank with SUM combiner + XLA block update.
@@ -21,6 +21,7 @@ impl VertexProgram for PageRank {
     type Value = f32;
     type Msg = f32;
     type Agg = ();
+    type Comb = SumF32;
 
     fn init_value(&self, _id: u32, _deg: u32, nv: u64) -> f32 {
         1.0 / nv as f32
@@ -46,10 +47,6 @@ impl VertexProgram for PageRank {
         }
         // Never votes halt: termination is the superstep cap, as in the
         // paper's fixed-iteration runs.
-    }
-
-    fn combiner(&self) -> Option<&dyn Combiner<f32>> {
-        Some(&SumF32)
     }
 
     fn block_update(&self, kern: &KernelSet, b: &mut BlockCtx<'_, Self>) -> crate::Result<bool> {
@@ -164,6 +161,7 @@ impl VertexProgram for PageRankConverge {
     type Msg = f32;
     /// Σ |Δ rank| of the previous superstep.
     type Agg = f32;
+    type Comb = SumF32;
 
     fn init_value(&self, _id: u32, _deg: u32, nv: u64) -> f32 {
         1.0 / nv as f32
@@ -194,10 +192,6 @@ impl VertexProgram for PageRankConverge {
                 ctx.send(e.nbr, share);
             }
         }
-    }
-
-    fn combiner(&self) -> Option<&dyn Combiner<f32>> {
-        Some(&SumF32)
     }
 
     fn merge_agg(&self, a: &mut f32, b: &f32) {

@@ -2,7 +2,7 @@
 //! edge weights this is BFS — the paper's hardest workload for out-of-core
 //! systems because every superstep touches only the frontier.
 
-use crate::api::{BlockCtx, Combiner, Context, Edge, MinF32, VertexProgram};
+use crate::api::{BlockCtx, Context, Edge, MinF32, VertexProgram};
 use crate::runtime::KernelSet;
 
 /// SSSP from `source` (current-ID space).  MIN combiner; vertices halt
@@ -21,6 +21,7 @@ impl VertexProgram for Sssp {
     type Value = f32;
     type Msg = f32;
     type Agg = ();
+    type Comb = MinF32;
 
     fn init_value(&self, id: u32, _deg: u32, _nv: u64) -> f32 {
         if id == self.source {
@@ -55,10 +56,6 @@ impl VertexProgram for Sssp {
             }
         }
         ctx.vote_to_halt();
-    }
-
-    fn combiner(&self) -> Option<&dyn Combiner<f32>> {
-        Some(&MinF32)
     }
 
     /// Monotone: a halted vertex only changes if some message beats its

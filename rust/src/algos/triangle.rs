@@ -5,7 +5,7 @@
 //! distinct), so this exercises the sorted-IMS path; the count is
 //! accumulated through the global aggregator.
 
-use crate::api::{Context, Edge, VertexProgram};
+use crate::api::{Context, Edge, NoCombiner, VertexProgram};
 
 /// Undirected triangle counting with a SUM aggregator.
 pub struct TriangleCount;
@@ -14,6 +14,7 @@ impl VertexProgram for TriangleCount {
     type Value = u64; // per-vertex confirmed count (diagnostic)
     type Msg = u32; // the candidate third vertex v3
     type Agg = u64; // global triangle count
+    type Comb = NoCombiner; // each membership query is distinct
 
     fn init_value(&self, _id: u32, _deg: u32, _nv: u64) -> u64 {
         0

@@ -27,43 +27,74 @@ pub struct Edge {
 
 /// Message combiner (§2.1): fold messages targeted at the same vertex.
 /// `identity()` is the paper's `e0` (§5): `combine(e0, m) == m`.
-pub trait Combiner<M: Codec>: Send + Sync {
+///
+/// Combiners are **statically dispatched**: every hot loop of the engine
+/// (the `A_s`/`A_r` digest loops, pre-send merge-sort combining, the local
+/// delivery fast path) is monomorphized over a `C: Combiner<M>`, so
+/// `combine` compiles to straight-line code — no virtual call per record.
+/// Programs without a combiner use [`NoCombiner`] (`ENABLED = false`),
+/// which lets the compiler drop the combining branches entirely.
+pub trait Combiner<M: Codec>: Send + Sync + Default + 'static {
+    /// `false` only for [`NoCombiner`]; a compile-time constant so the
+    /// monomorphized engine code can eliminate dead combining paths.
+    const ENABLED: bool = true;
     fn combine(&self, acc: &mut M, m: &M);
     fn identity(&self) -> M;
 }
 
+/// The absent-combiner slot for programs that do not combine.  Its methods
+/// are never called: engine paths are guarded by [`Combiner::ENABLED`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoCombiner;
+impl<M: Codec> Combiner<M> for NoCombiner {
+    const ENABLED: bool = false;
+    fn combine(&self, _acc: &mut M, _m: &M) {}
+    fn identity(&self) -> M {
+        unreachable!("NoCombiner::identity — combining path taken without a combiner")
+    }
+}
+
 /// Sum combiner for f32 messages (PageRank).
+#[derive(Clone, Copy, Debug, Default)]
 pub struct SumF32;
 impl Combiner<f32> for SumF32 {
+    #[inline(always)]
     fn combine(&self, acc: &mut f32, m: &f32) {
         *acc += *m;
     }
+    #[inline(always)]
     fn identity(&self) -> f32 {
         0.0
     }
 }
 
 /// Min combiner for f32 messages (SSSP).
+#[derive(Clone, Copy, Debug, Default)]
 pub struct MinF32;
 impl Combiner<f32> for MinF32 {
+    #[inline(always)]
     fn combine(&self, acc: &mut f32, m: &f32) {
         if *m < *acc {
             *acc = *m;
         }
     }
+    #[inline(always)]
     fn identity(&self) -> f32 {
         f32::INFINITY
     }
 }
 
 /// Min combiner for i32 messages (Hash-Min labels).
+#[derive(Clone, Copy, Debug, Default)]
 pub struct MinI32;
 impl Combiner<i32> for MinI32 {
+    #[inline(always)]
     fn combine(&self, acc: &mut i32, m: &i32) {
         if *m < *acc {
             *acc = *m;
         }
     }
+    #[inline(always)]
     fn identity(&self) -> i32 {
         i32::MAX
     }
@@ -73,15 +104,20 @@ impl Combiner<i32> for MinI32 {
 /// traversals, `crate::serve`).  Each lane folds independently, so one
 /// combined record carries K queries' frontier data — this is what makes
 /// the recoded in-memory `A_s`/`A_r` path (§5) apply unchanged to batches.
+#[derive(Clone, Copy, Debug, Default)]
 pub struct MinLanes<const K: usize>;
 impl<const K: usize> Combiner<[f32; K]> for MinLanes<K> {
+    /// Branch-free element-wise min over a fixed-width pair of lanes: the
+    /// loop bound is the const generic K, so it fully unrolls (and
+    /// auto-vectorizes) under monomorphization — one serve batch combine
+    /// is a handful of SIMD min ops, not K dispatched calls.
+    #[inline(always)]
     fn combine(&self, acc: &mut [f32; K], m: &[f32; K]) {
-        for l in 0..K {
-            if m[l] < acc[l] {
-                acc[l] = m[l];
-            }
+        for (a, b) in acc.iter_mut().zip(m.iter()) {
+            *a = if *b < *a { *b } else { *a };
         }
     }
+    #[inline(always)]
     fn identity(&self) -> [f32; K] {
         [f32::INFINITY; K]
     }
@@ -175,6 +211,12 @@ pub trait VertexProgram: Send + Sync + 'static {
     type Msg: Codec + PartialEq + std::fmt::Debug;
     /// Aggregator partial value (use `()` when unused).
     type Agg: Clone + Default + Send + Sync + 'static;
+    /// Statically-dispatched message combiner ([`NoCombiner`] = none).
+    /// A real combiner enables IO-Basic's pre-send combining, recoded
+    /// mode's in-memory `A_s`/`A_r` digesting, and the local-delivery
+    /// fast path; the engine's per-record loops are monomorphized over
+    /// this type so `combine` inlines.
+    type Comb: Combiner<Self::Msg>;
 
     /// Initial vertex value at load time.
     fn init_value(&self, id: u32, deg: u32, num_vertices: u64) -> Self::Value;
@@ -196,10 +238,15 @@ pub trait VertexProgram: Send + Sync + 'static {
         msgs: &[Self::Msg],
     );
 
-    /// Message combiner; `Some` enables pre-send combining and recoded
-    /// mode's in-memory digesting.
-    fn combiner(&self) -> Option<&dyn Combiner<Self::Msg>> {
-        None
+    /// The typed combiner instance (`None` when [`Self::Comb`] is
+    /// [`NoCombiner`]).  Introspection only — engine hot paths instantiate
+    /// `Self::Comb` directly and branch on [`Combiner::ENABLED`].
+    fn combiner(&self) -> Option<Self::Comb> {
+        if <Self::Comb as Combiner<Self::Msg>>::ENABLED {
+            Some(Self::Comb::default())
+        } else {
+            None
+        }
     }
 
     /// Monotone-workload skip hook: called for a *halted* vertex whose only
@@ -290,6 +337,17 @@ mod tests {
         let mut b = comb.identity();
         comb.combine(&mut b, &[0.5, -1.0, 7.0]);
         assert_eq!(b, [0.5, -1.0, 7.0]);
+    }
+
+    #[test]
+    fn combiner_slot_enabled_flag() {
+        assert!(<SumF32 as Combiner<f32>>::ENABLED);
+        assert!(<MinLanes<4> as Combiner<[f32; 4]>>::ENABLED);
+        assert!(!<NoCombiner as Combiner<f32>>::ENABLED);
+        // NoCombiner::combine is a no-op (it is never reached for folding).
+        let mut x = 1.5f32;
+        NoCombiner.combine(&mut x, &9.0);
+        assert_eq!(x, 1.5);
     }
 
     #[test]

@@ -60,6 +60,75 @@ pub fn use_xla_from_env() -> bool {
     std::env::var("GRAPHD_XLA").map_or(true, |v| v != "0")
 }
 
+/// `GRAPHD_SMOKE=1` shrinks bench workloads to CI-smoke size.
+pub fn smoke_from_env() -> bool {
+    std::env::var("GRAPHD_SMOKE").map_or(false, |v| v == "1")
+}
+
+/// Bench-JSON sink (`GRAPHD_BENCH_JSON=path`): benches emit their numbers
+/// as one section of a shared JSON object (e.g. `BENCH_PR3.json`) so future
+/// PRs have a perf trajectory to compare against.
+pub fn bench_json_path() -> Option<String> {
+    std::env::var("GRAPHD_BENCH_JSON").ok().filter(|s| !s.is_empty())
+}
+
+/// Write `path` fresh as `{"<section>": <body>}`.  `body` must be a JSON
+/// object/value rendered by the caller.
+pub fn bench_json_write(path: &str, section: &str, body: &str) -> std::io::Result<()> {
+    std::fs::write(path, format!("{{\"{section}\": {body}}}\n"))
+}
+
+/// Merge `"<section>": <body>` into the JSON object at `path` (replacing
+/// an existing entry for the same section, else appending before the final
+/// `}`); falls back to a fresh write when the file is missing or not an
+/// object.
+pub fn bench_json_merge(path: &str, section: &str, body: &str) -> std::io::Result<()> {
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let trimmed = json_remove_section(existing.trim_end(), section);
+    let trimmed = trimmed.trim_end();
+    if let Some(head) = trimmed.strip_suffix('}') {
+        if trimmed.starts_with('{') {
+            let sep = if head.trim_end().ends_with('{') { "" } else { ", " };
+            return std::fs::write(path, format!("{head}{sep}\"{section}\": {body}}}\n"));
+        }
+    }
+    bench_json_write(path, section, body)
+}
+
+/// Drop a `"<section>": <value>` entry (and one adjacent comma) from a
+/// flat bench-JSON object, so re-running a bench replaces its section
+/// instead of appending a duplicate key.  Values are brace-balanced
+/// scalars/objects without embedded braces in strings — which is all the
+/// bench emitters produce.
+fn json_remove_section(text: &str, section: &str) -> String {
+    let needle = format!("\"{section}\":");
+    let Some(start) = text.find(&needle) else {
+        return text.to_string();
+    };
+    let bytes = text.as_bytes();
+    let mut end = start + needle.len();
+    let mut depth = 0i32;
+    while end < bytes.len() {
+        match bytes[end] {
+            b'{' | b'[' => depth += 1,
+            b'}' | b']' if depth > 0 => depth -= 1,
+            b'}' | b']' | b',' if depth == 0 => break,
+            _ => {}
+        }
+        end += 1;
+    }
+    // Swallow one separating comma (trailing, else the one leading in).
+    let mut head = text[..start].trim_end().to_string();
+    let mut tail = text[end..].trim_start().to_string();
+    if let Some(t) = tail.strip_prefix(',') {
+        tail = t.trim_start().to_string();
+    } else if head.ends_with(',') {
+        head.pop();
+        head = head.trim_end().to_string();
+    }
+    format!("{head}{tail}")
+}
+
 fn workdir(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("graphd_bench_{tag}_{}", std::process::id()))
 }
@@ -421,5 +490,36 @@ mod tests {
         let g = crate::graph::generator::hub_graph(100, 50, 1, 40, false, 3);
         let s = sssp_source(&g);
         assert!(g.degree(s) >= 30);
+    }
+
+    #[test]
+    fn bench_json_write_then_merge() {
+        let p = std::env::temp_dir().join(format!("graphd_bench_json_{}", std::process::id()));
+        let p = p.to_str().unwrap();
+        bench_json_write(p, "spine", "{\"msgs_per_sec\": 10.5}").unwrap();
+        bench_json_merge(p, "serve", "{\"qps\": 3.0}").unwrap();
+        let s = std::fs::read_to_string(p).unwrap();
+        assert_eq!(
+            s.trim(),
+            "{\"spine\": {\"msgs_per_sec\": 10.5}, \"serve\": {\"qps\": 3.0}}"
+        );
+        // Re-merging the same section replaces it (no duplicate keys).
+        bench_json_merge(p, "serve", "{\"qps\": 4.5}").unwrap();
+        let s = std::fs::read_to_string(p).unwrap();
+        assert_eq!(
+            s.trim(),
+            "{\"spine\": {\"msgs_per_sec\": 10.5}, \"serve\": {\"qps\": 4.5}}"
+        );
+        bench_json_merge(p, "spine", "{\"msgs_per_sec\": 11.0}").unwrap();
+        let s = std::fs::read_to_string(p).unwrap();
+        assert_eq!(
+            s.trim(),
+            "{\"serve\": {\"qps\": 4.5}, \"spine\": {\"msgs_per_sec\": 11.0}}"
+        );
+        // Merging into a missing file degrades to a fresh write.
+        std::fs::remove_file(p).unwrap();
+        bench_json_merge(p, "serve", "1").unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap().trim(), "{\"serve\": 1}");
+        std::fs::remove_file(p).unwrap();
     }
 }

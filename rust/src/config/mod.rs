@@ -148,6 +148,14 @@ pub struct JobConfig {
     /// instead of spilling to OMSs (the "no-OMS" design the paper argues
     /// against; used by `ablation_oms`).
     pub disable_oms: bool,
+    /// Local-delivery fast path (default on): batches whose destination is
+    /// the sending machine bypass the simulated switch entirely, and — in
+    /// recoded digesting mode — messages to local vertices are folded
+    /// straight into the machine's own `A_r` shard without touching an OMS
+    /// file.  `false` restores the pre-fast-path routing (every batch
+    /// through switch + OMS), which the `spine_throughput` bench uses as
+    /// its baseline.
+    pub local_fastpath: bool,
     /// Directory holding the AOT `*.hlo.txt` artifacts for the XLA block
     /// path (`None` = [`crate::runtime::KernelSet::default_dir`]).
     pub artifacts_dir: Option<PathBuf>,
@@ -166,6 +174,7 @@ impl Default for JobConfig {
             keep_oms_for_recovery: false,
             checkpoint_every: 0,
             disable_oms: false,
+            local_fastpath: true,
             artifacts_dir: None,
         }
     }
@@ -194,6 +203,9 @@ impl JobConfig {
             "use_xla" => self.use_xla = val.parse().map_err(|_| bad(key, val))?,
             "artifacts_dir" => self.artifacts_dir = Some(PathBuf::from(val)),
             "disable_oms" => self.disable_oms = val.parse().map_err(|_| bad(key, val))?,
+            "local_fastpath" => {
+                self.local_fastpath = val.parse().map_err(|_| bad(key, val))?
+            }
             "checkpoint_every" => {
                 self.checkpoint_every = val.parse().map_err(|_| bad(key, val))?
             }
@@ -229,6 +241,9 @@ mod tests {
         assert_eq!(c.mode, Mode::Recoded);
         c.apply("oms_file_cap", "65536").unwrap();
         assert_eq!(c.oms_file_cap, 65536);
+        assert!(c.local_fastpath, "fast path defaults on");
+        c.apply("local_fastpath", "false").unwrap();
+        assert!(!c.local_fastpath);
         assert!(c.apply("mode", "weird").is_err());
         assert!(c.apply("nope", "1").is_err());
     }

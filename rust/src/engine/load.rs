@@ -53,10 +53,18 @@ pub(crate) fn load_text_impl(
 ) -> Result<Vec<MachineStore>> {
     let n = eng.profile.machines;
     let nblocks = dfs.num_blocks(name)?;
-    let endpoints = net::build(n, eng.profile.net_bytes_per_sec, eng.profile.latency_us);
+    let (endpoints, _switch) = net::build(
+        n,
+        eng.profile.net_bytes_per_sec,
+        eng.profile.latency_us,
+        eng.cfg.local_fastpath,
+    );
     let part = Partitioning::Hashed;
     let item = if weighted { 8usize } else { 4 };
     let cap = eng.cfg.oms_file_cap.max(64 * 1024);
+    // Loading also recycles its wire batches: the parser checks buffers
+    // out, the receiving half returns consumed `Payload::Load` blocks.
+    let pool = crate::msg::BufPool::new(4 * n + 8);
 
     let mut results: Vec<Option<Result<MachineStore>>> = (0..n).map(|_| None).collect();
     std::thread::scope(|scope| {
@@ -69,6 +77,7 @@ pub(crate) fn load_text_impl(
                 .profile
                 .disk_bytes_per_sec
                 .map(crate::util::diskio::DiskBw::new);
+            let pool = pool.clone();
             handles.push(scope.spawn(move || -> Result<MachineStore> {
                 let _dg = crate::util::diskio::register(disk.clone());
                 // --- parser half (own thread so receive can overlap) ---
@@ -76,23 +85,26 @@ pub(crate) fn load_text_impl(
                     let dfs = dfs.clone();
                     let name = name.clone();
                     let mut sender = sender;
+                    let pool = pool.clone();
                     std::thread::spawn(move || -> Result<()> {
                         let nmach = sender.peers();
-                        let mut bufs: Vec<Vec<u8>> = vec![Vec::new(); nmach];
+                        let mut bufs: Vec<Vec<u8>> = (0..nmach).map(|_| pool.take()).collect();
                         for blk in (i as u64..nblocks).step_by(nmach) {
                             for line in dfs.read_block_lines(&name, blk)? {
                                 let vl = formats::parse_line(&line)?;
                                 let dst = part.machine_of(vl.id, nmach);
                                 encode_vertex(&vl, weighted, &mut bufs[dst]);
                                 if bufs[dst].len() >= cap {
-                                    let b = std::mem::take(&mut bufs[dst]);
+                                    let b = std::mem::replace(&mut bufs[dst], pool.take());
                                     sender.send(dst, 0, Payload::Load(b));
                                 }
                             }
                         }
                         for dst in 0..nmach {
-                            if !bufs[dst].is_empty() {
-                                let b = std::mem::take(&mut bufs[dst]);
+                            let b = std::mem::take(&mut bufs[dst]);
+                            if b.is_empty() {
+                                pool.put(b);
+                            } else {
                                 sender.send(dst, 0, Payload::Load(b));
                             }
                             sender.send(dst, 0, Payload::LoadEnd);
@@ -129,6 +141,7 @@ pub(crate) fn load_text_impl(
                                 spill_off += adj_bytes as u64;
                                 off += 8 + adj_bytes;
                             }
+                            pool.put(data);
                         }
                         _ => return Err(Error::CorruptStream("data batch during load".into())),
                     }

@@ -102,6 +102,9 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
     let max_local = stores.iter().map(|s| s.local_vertices()).max().unwrap_or(0);
     let step_base = resume.map_or(0, |s| s + 1);
     let ckpt_dir = checkpoint.as_ref().map(|c| c.dir.clone());
+    // Job-wide buffer pool: enough shelf space for every machine's outbox
+    // batches plus in-flight wire payloads and stream-writer buffers.
+    let pool = crate::msg::BufPool::new(4 * n * n + 4 * n + 16);
     let global = JobGlobal {
         program: program.clone(),
         cfg: eng.cfg.clone(),
@@ -112,9 +115,16 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
         step_base,
         uc_rv: Rendezvous::new(n),
         ur_rv: Rendezvous::new(n),
+        ckpt_rv: Rendezvous::new(n),
+        pool: pool.clone(),
     };
 
-    let endpoints = net::build(n, eng.profile.net_bytes_per_sec, eng.profile.latency_us);
+    let (endpoints, switch) = net::build(
+        n,
+        eng.profile.net_bytes_per_sec,
+        eng.profile.latency_us,
+        eng.cfg.local_fastpath,
+    );
 
     let (compute_secs, outputs) = timed(|| -> Result<Vec<MachineOutput<P>>> {
         let mut results: Vec<Option<Result<MachineOutput<P>>>> = (0..n).map(|_| None).collect();
@@ -184,6 +194,9 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
         preprocess_secs: 0.0,
         supersteps: step_base + outputs.first().map_or(0, |o| o.supersteps),
         machines: outputs.iter().map(|o| o.metrics.clone()).collect(),
+        net_wire_bytes: switch.total_bytes(),
+        net_local_bytes: switch.local_bytes(),
+        pool: pool.stats(),
     };
     Ok(JobResult { outputs, metrics })
 }

@@ -15,8 +15,15 @@ pub struct StepMetrics {
     pub m_gene_secs: f64,
     /// U_s active transmission time.
     pub m_send_secs: f64,
+    /// Messages/bytes that crossed the (simulated) wire.
     pub msgs_sent: u64,
     pub bytes_sent: u64,
+    /// Messages/bytes delivered machine-locally through the fast path —
+    /// zero simulated wire time, and (in digesting mode) zero OMS disk
+    /// traffic.  Split out from `msgs_sent`/`bytes_sent` so the
+    /// O(|V|/n)-permitted saving is visible per superstep.
+    pub local_msgs: u64,
+    pub local_bytes: u64,
     pub msgs_recv: u64,
     /// Vertices on which compute()/block update ran.
     pub computed_vertices: u64,
@@ -49,7 +56,11 @@ impl MachineMetrics {
         self.steps.iter().map(|s| s.m_send_secs).sum()
     }
     pub fn total_msgs_sent(&self) -> u64 {
-        self.steps.iter().map(|s| s.msgs_sent).sum()
+        self.steps.iter().map(|s| s.msgs_sent + s.local_msgs).sum()
+    }
+    /// Messages delivered locally (fast path) across all supersteps.
+    pub fn total_local_msgs(&self) -> u64 {
+        self.steps.iter().map(|s| s.local_msgs).sum()
     }
 }
 
@@ -64,6 +75,12 @@ pub struct JobMetrics {
     pub preprocess_secs: f64,
     pub supersteps: u64,
     pub machines: Vec<MachineMetrics>,
+    /// Bytes that transited the shared switch during the job.
+    pub net_wire_bytes: u64,
+    /// Bytes delivered machine-locally, bypassing the switch (fast path).
+    pub net_local_bytes: u64,
+    /// Job-wide [`crate::msg::BufPool`] counters (message-spine buffers).
+    pub pool: crate::msg::PoolStats,
 }
 
 impl JobMetrics {
@@ -105,6 +122,10 @@ pub struct ServeMetrics {
     /// Adjacency items streamed from `S^E`, summed over machines/batches —
     /// the I/O the k-lane batching amortises.
     pub edge_items_read: u64,
+    /// Bytes through the shared switch, summed over batches.
+    pub wire_bytes: u64,
+    /// Bytes delivered machine-locally (fast path), summed over batches.
+    pub local_bytes: u64,
     /// Per-query latency samples (submit → answered), seconds.
     pub latencies_secs: Vec<f64>,
 }
@@ -122,6 +143,8 @@ impl ServeMetrics {
             .flat_map(|m| m.steps.iter())
             .map(|s| s.edge_items_read)
             .sum::<u64>();
+        self.wire_bytes += job.net_wire_bytes;
+        self.local_bytes += job.net_local_bytes;
     }
 
     /// Queries per second of serving wall time.
@@ -149,6 +172,8 @@ impl ServeMetrics {
              batches            {}\n\
              supersteps         {}\n\
              edge items read    {}\n\
+             wire bytes         {}\n\
+             local bytes        {}\n\
              wall time          {}\n\
              throughput         {:.2} queries/s\n\
              latency p50        {}\n\
@@ -158,6 +183,8 @@ impl ServeMetrics {
             self.batches,
             self.supersteps,
             self.edge_items_read,
+            self.wire_bytes,
+            self.local_bytes,
             human_secs(self.wall_secs),
             self.qps(),
             human_secs(percentile_sorted(&sorted, 50.0)),

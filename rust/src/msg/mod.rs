@@ -1,9 +1,124 @@
-//! Fixed-size codecs for vertex values and messages.
+//! Fixed-size codecs for vertex values and messages, plus the shared
+//! byte-buffer pool ([`BufPool`]) behind the zero-copy message spine.
 //!
 //! The paper assumes constant-size vertex-ID / value / adjacency / message
 //! types (§3.1) — so do we: every message on a stream or wire is
 //! `4 bytes target-id (LE u32) + Codec::SIZE bytes payload`, which lets the
 //! merge-sort and the in-memory A_r/A_s paths index records directly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Checkout/recycle pool of `Vec<u8>` blocks — the allocation spine of the
+/// message path.  One pool is shared by a whole job: U_c's outbox batches,
+/// U_s's OMS file reads and combined send batches, `Payload::Data` blocks
+/// on the (simulated) wire, OMS/stream writer buffers, and U_r's
+/// spill/digest buffers all check blocks out and recycle them, so the
+/// steady state allocates nothing per batch.  Buffers keep their grown
+/// capacity across checkouts, which is what retires the alloc-per-batch
+/// pattern: after warm-up every checkout is a pool hit.
+pub struct BufPool {
+    shelf: Mutex<Vec<Vec<u8>>>,
+    /// Maximum buffers retained; overflow is dropped (freed) on `put`.
+    max_retained: usize,
+    /// Buffers whose capacity exceeds this are freed instead of shelved,
+    /// bounding the pool's resident memory at
+    /// `max_retained × max_buf_bytes` (outsized one-off batches must not
+    /// pin their capacity for the whole job).
+    max_buf_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Pool counters (`hits` = checkouts served from the shelf).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PoolStats {
+    /// Fraction of checkouts served without an allocation.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Default per-buffer retention cap: 2× the paper's ℬ (an OMS file plus
+/// slack), so file-read and wire-batch buffers recycle but a pathological
+/// batch doesn't pin its capacity.
+pub const DEFAULT_MAX_BUF_BYTES: usize = 16 * 1024 * 1024;
+
+impl BufPool {
+    /// A pool retaining at most `max_retained` buffers of at most
+    /// [`DEFAULT_MAX_BUF_BYTES`] capacity each.
+    pub fn new(max_retained: usize) -> Arc<Self> {
+        Self::bounded(max_retained, DEFAULT_MAX_BUF_BYTES)
+    }
+
+    /// A pool with an explicit per-buffer capacity retention cap.
+    pub fn bounded(max_retained: usize, max_buf_bytes: usize) -> Arc<Self> {
+        Arc::new(Self {
+            shelf: Mutex::new(Vec::with_capacity(max_retained.min(64))),
+            max_retained,
+            max_buf_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// Check out an empty buffer (recycled capacity when available).
+    pub fn take(&self) -> Vec<u8> {
+        match self.shelf.lock().unwrap().pop() {
+            Some(buf) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Check out an empty buffer with at least `cap` bytes of capacity.
+    pub fn take_with_capacity(&self, cap: usize) -> Vec<u8> {
+        let mut buf = self.take();
+        buf.reserve(cap);
+        buf
+    }
+
+    /// Recycle a buffer (cleared; capacity kept).  Buffers beyond the
+    /// retention caps (count or per-buffer capacity) are dropped instead
+    /// of shelved.
+    pub fn put(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 || buf.capacity() > self.max_buf_bytes {
+            return;
+        }
+        buf.clear();
+        let mut shelf = self.shelf.lock().unwrap();
+        if shelf.len() < self.max_retained {
+            shelf.push(buf);
+        }
+    }
+
+    /// Buffers currently shelved.
+    pub fn idle(&self) -> usize {
+        self.shelf.lock().unwrap().len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
 
 /// A fixed-size binary-encodable value.
 pub trait Codec: Sized + Copy + Send + Sync + 'static {
@@ -160,6 +275,44 @@ mod tests {
         assert_eq!(buf.len(), msg_rec_size::<f32>());
         assert_eq!(rec_target(&buf), 9);
         assert_eq!(rec_payload::<f32>(&buf), 1.5);
+    }
+
+    #[test]
+    fn buf_pool_recycles_and_counts() {
+        let pool = BufPool::new(2);
+        let a = pool.take(); // miss (empty pool)
+        assert_eq!(pool.stats(), PoolStats { hits: 0, misses: 1 });
+        assert!(a.is_empty());
+        let mut b = pool.take_with_capacity(100); // miss
+        b.extend_from_slice(&[1, 2, 3]);
+        pool.put(b);
+        assert_eq!(pool.idle(), 1);
+        let c = pool.take(); // hit, cleared, capacity kept
+        assert!(c.is_empty());
+        assert!(c.capacity() >= 100);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 2));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn buf_pool_respects_retention_cap_and_drops_empty() {
+        let pool = BufPool::new(1);
+        pool.put(Vec::with_capacity(8));
+        pool.put(Vec::with_capacity(8)); // beyond count cap: dropped
+        assert_eq!(pool.idle(), 1);
+        pool.put(Vec::new()); // zero-capacity: not worth shelving
+        assert_eq!(pool.idle(), 1);
+        assert_eq!(PoolStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn buf_pool_drops_oversized_buffers() {
+        let pool = BufPool::bounded(4, 64);
+        pool.put(Vec::with_capacity(32)); // within the byte cap: shelved
+        pool.put(Vec::with_capacity(1024)); // oversized: freed, not pinned
+        assert_eq!(pool.idle(), 1);
+        assert!(pool.take().capacity() < 1024);
     }
 
     #[test]

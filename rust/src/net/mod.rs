@@ -12,16 +12,28 @@
 //! what makes "hide disk I/O inside communication" measurable in this
 //! reproduction.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// The shared medium's reservation state.  Slot reservation and byte
+/// accounting live in **one** critical section so `total_bytes` can never
+/// be observed torn against the reserved slots (a reader either sees a
+/// transmission's slot *and* its bytes, or neither).
+struct Medium {
+    next_free: Instant,
+    wire_bytes: u64,
+}
 
 /// Shared-medium bandwidth model: transmissions reserve back-to-back slots.
 pub struct Switch {
     rate: f64,
     latency: Duration,
-    next_free: Mutex<Instant>,
-    bytes: Mutex<u64>,
+    medium: Mutex<Medium>,
+    /// Bytes delivered machine-locally (the fast path): they never reserve
+    /// a slot and never sleep — counted separately from wire traffic.
+    local_bytes: AtomicU64,
 }
 
 impl Switch {
@@ -29,8 +41,11 @@ impl Switch {
         Arc::new(Self {
             rate: bytes_per_sec.max(1.0),
             latency: Duration::from_micros(latency_us),
-            next_free: Mutex::new(Instant::now()),
-            bytes: Mutex::new(0),
+            medium: Mutex::new(Medium {
+                next_free: Instant::now(),
+                wire_bytes: 0,
+            }),
+            local_bytes: AtomicU64::new(0),
         })
     }
 
@@ -39,21 +54,31 @@ impl Switch {
     pub fn transmit(&self, bytes: usize) {
         let dur = Duration::from_secs_f64(bytes as f64 / self.rate) + self.latency;
         let until = {
-            let mut nf = self.next_free.lock().unwrap();
-            let start = (*nf).max(Instant::now());
-            *nf = start + dur;
-            *nf
+            let mut m = self.medium.lock().unwrap();
+            let start = m.next_free.max(Instant::now());
+            m.next_free = start + dur;
+            m.wire_bytes += bytes as u64;
+            m.next_free
         };
-        *self.bytes.lock().unwrap() += bytes as u64;
         let now = Instant::now();
         if until > now {
             std::thread::sleep(until - now);
         }
     }
 
-    /// Total bytes pushed through the switch.
+    /// Account a locally-delivered batch: zero simulated wire time.
+    pub fn account_local(&self, bytes: usize) {
+        self.local_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Total bytes pushed through the switch (wire traffic only).
     pub fn total_bytes(&self) -> u64 {
-        *self.bytes.lock().unwrap()
+        self.medium.lock().unwrap().wire_bytes
+    }
+
+    /// Total bytes delivered machine-locally, bypassing the switch.
+    pub fn local_bytes(&self) -> u64 {
+        self.local_bytes.load(Ordering::Relaxed)
     }
 }
 
@@ -97,10 +122,17 @@ pub struct NetSender {
     switch: Arc<Switch>,
     txs: Vec<Sender<Batch>>,
     sent_bytes: u64,
+    local_bytes: u64,
+    /// Deliver `dst == me` batches without touching the switch (the
+    /// local-delivery fast path): a machine talking to itself crosses no
+    /// physical medium, so it pays zero simulated wire time.
+    local_fast: bool,
 }
 
 impl NetSender {
-    /// Simulate transmission through the shared switch, then deliver.
+    /// Simulate transmission through the shared switch, then deliver —
+    /// except batches to `self` with the fast path on, which skip the
+    /// switch entirely and are only *counted* (as local bytes).
     /// Panics if the destination has hung up (worker died — surfaced as a
     /// test failure rather than silent loss).
     pub fn send(&mut self, dst: usize, step: u64, payload: Payload) {
@@ -109,8 +141,14 @@ impl NetSender {
             step,
             payload,
         };
-        self.switch.transmit(b.wire_bytes());
-        self.sent_bytes += b.wire_bytes() as u64;
+        let bytes = b.wire_bytes();
+        if self.local_fast && dst == self.me {
+            self.switch.account_local(bytes);
+            self.local_bytes += bytes as u64;
+        } else {
+            self.switch.transmit(bytes);
+            self.sent_bytes += bytes as u64;
+        }
         if self.txs[dst].send(b).is_err() {
             panic!(
                 "peer receiver hung up: {} -> {dst} step {step} payload {:?}",
@@ -124,8 +162,19 @@ impl NetSender {
         self.txs.len()
     }
 
+    /// Is the local-delivery fast path active on this endpoint?
+    pub fn local_fast(&self) -> bool {
+        self.local_fast
+    }
+
+    /// Bytes this endpoint pushed through the switch.
     pub fn sent_bytes(&self) -> u64 {
         self.sent_bytes
+    }
+
+    /// Bytes this endpoint delivered to itself, bypassing the switch.
+    pub fn local_sent_bytes(&self) -> u64 {
+        self.local_bytes
     }
 }
 
@@ -148,10 +197,19 @@ impl NetReceiver {
 }
 
 /// Build a fully-connected simulated network of `n` machines.
-pub fn build(n: usize, bytes_per_sec: f64, latency_us: u64) -> Vec<(NetSender, NetReceiver)> {
+/// `local_fast` enables the local-delivery fast path (`dst == me` batches
+/// bypass the switch).  Also returns the shared [`Switch`] so callers can
+/// read the wire-vs-local byte split after a run.
+pub fn build(
+    n: usize,
+    bytes_per_sec: f64,
+    latency_us: u64,
+    local_fast: bool,
+) -> (Vec<(NetSender, NetReceiver)>, Arc<Switch>) {
     let switch = Switch::new(bytes_per_sec, latency_us);
     let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| channel::<Batch>()).unzip();
-    rxs.into_iter()
+    let endpoints = rxs
+        .into_iter()
         .enumerate()
         .map(|(me, rx)| {
             (
@@ -160,11 +218,14 @@ pub fn build(n: usize, bytes_per_sec: f64, latency_us: u64) -> Vec<(NetSender, N
                     switch: switch.clone(),
                     txs: txs.clone(),
                     sent_bytes: 0,
+                    local_bytes: 0,
+                    local_fast,
                 },
                 NetReceiver { me, rx },
             )
         })
-        .collect()
+        .collect();
+    (endpoints, switch)
 }
 
 #[cfg(test)]
@@ -173,7 +234,7 @@ mod tests {
 
     #[test]
     fn fifo_per_pair() {
-        let mut eps = build(2, 1e12, 0);
+        let (mut eps, _) = build(2, 1e12, 0, false);
         let (_, rx1) = eps.pop().unwrap();
         let (mut tx0, _rx0) = eps.pop().unwrap();
         for i in 0..100u64 {
@@ -188,7 +249,7 @@ mod tests {
 
     #[test]
     fn cross_clone_order_preserved_by_enqueue_time() {
-        let mut eps = build(2, 1e12, 0);
+        let (mut eps, _) = build(2, 1e12, 0, false);
         let (_, rx1) = eps.pop().unwrap();
         let (tx, _rx0) = eps.pop().unwrap();
         let mut a = tx.clone();
@@ -228,12 +289,41 @@ mod tests {
 
     #[test]
     fn loopback_delivery() {
-        let mut eps = build(1, 1e12, 0);
+        let (mut eps, _) = build(1, 1e12, 0, false);
         let (mut tx, rx) = eps.pop().unwrap();
         tx.send(0, 3, Payload::End);
         let b = rx.recv();
         assert!(matches!(b.payload, Payload::End));
         assert_eq!(b.step, 3);
+    }
+
+    #[test]
+    fn local_fast_path_bypasses_switch() {
+        // A slow switch that would take ~100ms for this batch: the local
+        // fast path must deliver instantly and charge zero wire bytes.
+        let (mut eps, switch) = build(1, 10.0 * 1024.0 * 1024.0, 0, true);
+        let (mut tx, rx) = eps.pop().unwrap();
+        let t = Instant::now();
+        tx.send(0, 0, Payload::Data(vec![0; 1024 * 1024]));
+        assert!(t.elapsed() < Duration::from_millis(50), "{:?}", t.elapsed());
+        let b = rx.recv();
+        assert!(matches!(b.payload, Payload::Data(_)));
+        assert_eq!(switch.total_bytes(), 0, "no wire traffic for dst == me");
+        assert_eq!(switch.local_bytes(), 1024 * 1024 + 16);
+        assert_eq!(tx.sent_bytes(), 0);
+        assert_eq!(tx.local_sent_bytes(), 1024 * 1024 + 16);
+        assert!(tx.local_fast());
+    }
+
+    #[test]
+    fn remote_batches_still_transit_with_fast_path_on() {
+        let (mut eps, switch) = build(2, 1e12, 0, true);
+        let (_, rx1) = eps.pop().unwrap();
+        let (mut tx0, _rx0) = eps.pop().unwrap();
+        tx0.send(1, 0, Payload::Data(vec![0; 84]));
+        assert_eq!(rx1.recv().step, 0);
+        assert_eq!(switch.total_bytes(), 100);
+        assert_eq!(switch.local_bytes(), 0);
     }
 
     #[test]

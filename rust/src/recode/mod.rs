@@ -17,7 +17,7 @@ use crate::net::{self, NetReceiver, NetSender, Payload};
 use crate::stream::{merge, StreamWriter};
 use crate::worker::storage::{item_size, EdgeStreamCursor, EdgeStreamWriter, MachineStore};
 use crate::worker::Partitioning;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 const BATCH: usize = 256 * 1024;
 
@@ -130,7 +130,12 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
     let req_size = if weighted { 12 } else { 8 }; // u_old, v_old [, w]
     let rep_size = if weighted { 12 } else { 8 }; // key, payload [, w]
 
-    let endpoints = net::build(n, eng.profile.net_bytes_per_sec, eng.profile.latency_us);
+    let (endpoints, _switch) = net::build(
+        n,
+        eng.profile.net_bytes_per_sec,
+        eng.profile.latency_us,
+        eng.cfg.local_fastpath,
+    );
     let mut results: Vec<Option<Result<MachineStore>>> = (0..n).map(|_| None).collect();
 
     std::thread::scope(|scope| {
@@ -332,7 +337,7 @@ fn receive_sorted_replies(
     n: usize,
     store: &MachineStore,
     rep_size: usize,
-    dir: &PathBuf,
+    dir: &Path,
 ) -> Result<Vec<PathBuf>> {
     let mut spills = Vec::new();
     rx.drain_phase(2, n, |data| {

@@ -160,6 +160,15 @@ impl GraphDBuilder {
         self
     }
 
+    /// Local-delivery fast path (default on): `dst == me` traffic bypasses
+    /// the simulated switch, and recoded digesting folds local messages
+    /// straight into the machine's own `A_r` shard.  Turn off to measure
+    /// the pre-fast-path routing (every batch through switch + OMS).
+    pub fn local_fastpath(mut self, on: bool) -> Self {
+        self.cfg.local_fastpath = on;
+        self
+    }
+
     /// XLA policy: `true` ⇒ [`Xla::Auto`], `false` ⇒ [`Xla::Off`].
     pub fn use_xla(mut self, on: bool) -> Self {
         self.xla = if on { Xla::Auto } else { Xla::Off };
@@ -469,6 +478,7 @@ impl<'s> LoadedGraph<'s> {
             checkpoint: None,
             resume: None,
             disable_oms: None,
+            local_fastpath: None,
         }
     }
 }
@@ -495,6 +505,7 @@ pub struct JobBuilder<'g, 's, P: VertexProgram> {
     checkpoint: Option<CheckpointCfg>,
     resume: Option<u64>,
     disable_oms: Option<bool>,
+    local_fastpath: Option<bool>,
 }
 
 impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
@@ -536,6 +547,12 @@ impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
     /// Stall-and-send ablation switch for this job.
     pub fn disable_oms(mut self, d: bool) -> Self {
         self.disable_oms = Some(d);
+        self
+    }
+
+    /// Local-delivery fast path for this job (default: the session's).
+    pub fn local_fastpath(mut self, on: bool) -> Self {
+        self.local_fastpath = Some(on);
         self
     }
 
@@ -585,6 +602,9 @@ impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
         }
         if let Some(d) = self.disable_oms {
             cfg.disable_oms = d;
+        }
+        if let Some(f) = self.local_fastpath {
+            cfg.local_fastpath = f;
         }
         // A `checkpoint_every` session/`-c` override without an explicit
         // CheckpointCfg checkpoints into the session DFS.

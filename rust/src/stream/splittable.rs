@@ -8,6 +8,7 @@
 //! counters are `files_closed` / `files_taken` here.
 
 use crate::error::Result;
+use crate::msg::BufPool;
 use crate::stream::writer::StreamWriter;
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
@@ -39,11 +40,33 @@ pub struct SplittableStream {
     shared: Mutex<Shared>,
     cond: Condvar,
     buf_size: usize,
+    /// Recycles per-file write buffers (OMS files open/close once per ≤ℬ
+    /// bytes — with the pool that costs no allocation in steady state).
+    pool: Option<Arc<BufPool>>,
 }
 
 impl SplittableStream {
     /// Create an empty splittable stream storing its files under `dir`.
     pub fn create(dir: &Path, cap: usize, buf_size: usize) -> Result<Arc<Self>> {
+        Self::create_impl(dir, cap, buf_size, None)
+    }
+
+    /// [`Self::create`] with write buffers checked out of `pool`.
+    pub fn create_pooled(
+        dir: &Path,
+        cap: usize,
+        buf_size: usize,
+        pool: Arc<BufPool>,
+    ) -> Result<Arc<Self>> {
+        Self::create_impl(dir, cap, buf_size, Some(pool))
+    }
+
+    fn create_impl(
+        dir: &Path,
+        cap: usize,
+        buf_size: usize,
+        pool: Option<Arc<BufPool>>,
+    ) -> Result<Arc<Self>> {
         std::fs::create_dir_all(dir)?;
         Ok(Arc::new(Self {
             dir: dir.to_path_buf(),
@@ -62,11 +85,26 @@ impl SplittableStream {
             }),
             cond: Condvar::new(),
             buf_size,
+            pool,
         }))
     }
 
     fn file_path(&self, idx: u64) -> PathBuf {
         self.dir.join(format!("f{idx:06}"))
+    }
+
+    fn new_writer(&self, idx: u64) -> Result<StreamWriter> {
+        match &self.pool {
+            Some(p) => StreamWriter::create_pooled(&self.file_path(idx), self.buf_size, p),
+            None => StreamWriter::create(&self.file_path(idx), self.buf_size),
+        }
+    }
+
+    fn finish_writer(&self, w: StreamWriter) -> Result<u64> {
+        match &self.pool {
+            Some(p) => w.finish_recycle(p),
+            None => w.finish(),
+        }
     }
 
     /// Append one record.  If the current file would exceed ℬ, it is closed
@@ -80,7 +118,7 @@ impl SplittableStream {
         }
         if t.writer.is_none() {
             let idx = t.file_idx;
-            t.writer = Some(StreamWriter::create(&self.file_path(idx), self.buf_size)?);
+            t.writer = Some(self.new_writer(idx)?);
             t.cur_bytes = 0;
         }
         t.writer.as_mut().unwrap().write_all(record)?;
@@ -90,7 +128,7 @@ impl SplittableStream {
 
     fn close_current(&self, t: &mut Tail) -> Result<()> {
         if let Some(w) = t.writer.take() {
-            let bytes = w.finish()?;
+            let bytes = self.finish_writer(w)?;
             let idx = t.file_idx;
             t.file_idx += 1;
             t.cur_bytes = 0;
@@ -120,7 +158,7 @@ impl SplittableStream {
             }
             if t.writer.is_none() {
                 let idx = t.file_idx;
-                t.writer = Some(StreamWriter::create(&self.file_path(idx), self.buf_size)?);
+                t.writer = Some(self.new_writer(idx)?);
                 t.cur_bytes = 0;
             }
             // Fill the current file up to its cap in one write.
@@ -353,6 +391,23 @@ mod tests {
         assert!(s.try_take_next_upto(wm0).is_none(), "f2 is step-1");
         let wm1 = s.close_current_file().unwrap();
         assert_eq!(s.try_take_all_upto(wm1).len(), 2);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn pooled_stream_recycles_file_buffers() {
+        let d = tmpdir("pooled");
+        let pool = BufPool::new(8);
+        let s = SplittableStream::create_pooled(&d, 8, 64, pool.clone()).unwrap();
+        for i in 0..8u32 {
+            s.append(&i.to_le_bytes()).unwrap(); // 2 records per file
+        }
+        s.finalize().unwrap();
+        // 4 files closed; after the first, every writer buffer is a reuse.
+        assert!(pool.stats().hits >= 3, "stats: {:?}", pool.stats());
+        let files = s.try_take_all();
+        assert_eq!(files.len(), 4);
+        assert_eq!(std::fs::read(&files[1].1).unwrap().len(), 8);
         let _ = std::fs::remove_dir_all(&d);
     }
 

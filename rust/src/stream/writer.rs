@@ -3,6 +3,7 @@
 //! sequential disk bandwidth with negligible memory).
 
 use crate::error::Result;
+use crate::msg::BufPool;
 use std::fs::File;
 use std::io::Write;
 use std::path::Path;
@@ -17,12 +18,24 @@ pub struct StreamWriter {
 
 impl StreamWriter {
     pub fn create(path: &Path, buf_size: usize) -> Result<Self> {
+        Self::with_buf(path, Vec::with_capacity(buf_size.max(16)))
+    }
+
+    /// Like [`Self::create`] but the in-memory buffer is checked out of
+    /// `pool` (recycle it back with [`Self::finish_recycle`]) — the
+    /// alloc-free form used by the OMS hot path, where files open and
+    /// close once per ≤ℬ bytes.
+    pub fn create_pooled(path: &Path, buf_size: usize, pool: &BufPool) -> Result<Self> {
+        Self::with_buf(path, pool.take_with_capacity(buf_size.max(16)))
+    }
+
+    fn with_buf(path: &Path, buf: Vec<u8>) -> Result<Self> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         Ok(Self {
             file: File::create(path)?,
-            buf: Vec::with_capacity(buf_size.max(16)),
+            buf,
             written: 0,
             flushes: 0,
         })
@@ -71,6 +84,14 @@ impl StreamWriter {
         self.file.flush()?;
         Ok(self.written)
     }
+
+    /// [`Self::finish`], returning the in-memory buffer to `pool`.
+    pub fn finish_recycle(mut self, pool: &BufPool) -> Result<u64> {
+        self.flush_buf()?;
+        self.file.flush()?;
+        pool.put(std::mem::take(&mut self.buf));
+        Ok(self.written)
+    }
 }
 
 #[cfg(test)]
@@ -105,6 +126,23 @@ mod tests {
         assert_eq!(got[0..2], [1, 2]);
         assert_eq!(got[102], 3);
         std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn pooled_writer_recycles_buffer() {
+        let pool = BufPool::new(4);
+        let p = std::env::temp_dir().join(format!("graphd_writer_pool_{}", std::process::id()));
+        let mut w = StreamWriter::create_pooled(&p, 64, &pool).unwrap();
+        w.write_all(&[7u8; 40]).unwrap();
+        assert_eq!(w.finish_recycle(&pool).unwrap(), 40);
+        assert_eq!(pool.idle(), 1);
+        // The next pooled writer reuses the shelved buffer: a pool hit.
+        let before = pool.stats().hits;
+        let w2 = StreamWriter::create_pooled(&p, 64, &pool).unwrap();
+        assert_eq!(pool.stats().hits, before + 1);
+        w2.finish_recycle(&pool).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap().len(), 0);
+        std::fs::remove_file(&p).unwrap();
     }
 
     #[test]

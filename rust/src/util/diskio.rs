@@ -76,6 +76,20 @@ pub fn charge(bytes: usize) {
     });
 }
 
+/// Read a whole file into `buf` (cleared first, capacity reused) and
+/// charge the registered disk — the pooled-buffer replacement for
+/// `std::fs::read` on the message spine's hot paths.
+pub fn read_file_into(path: &std::path::Path, buf: &mut Vec<u8>) -> crate::error::Result<usize> {
+    use std::io::Read;
+    buf.clear();
+    let mut f = std::fs::File::open(path)?;
+    let len = f.metadata()?.len() as usize;
+    buf.reserve(len);
+    f.read_to_end(buf)?;
+    charge(buf.len());
+    Ok(buf.len())
+}
+
 /// Restores the previous registration on drop.
 pub struct Guard {
     prev: Option<Arc<DiskBw>>,

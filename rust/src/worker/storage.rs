@@ -207,6 +207,9 @@ pub struct EdgeStreamCursor {
     pending_skip_items: u64,
     items_read: u64,
     items_skipped: u64,
+    /// Reusable scratch for whole-adjacency reads: one `read_exact` per
+    /// vertex instead of one per item (message-spine hot path).
+    scratch: Vec<u8>,
 }
 
 impl EdgeStreamCursor {
@@ -217,6 +220,7 @@ impl EdgeStreamCursor {
             pending_skip_items: 0,
             items_read: 0,
             items_skipped: 0,
+            scratch: Vec::new(),
         })
     }
 
@@ -237,22 +241,29 @@ impl EdgeStreamCursor {
         Ok(())
     }
 
-    /// Read the next `deg` items into `out` (cleared first).
+    /// Read the next `deg` items into `out` (cleared first): the whole
+    /// adjacency list in one buffered read, then a decode sweep.
     pub fn read_adjacency(&mut self, deg: u32, out: &mut Vec<Edge>) -> Result<()> {
         self.flush_skip()?;
         out.clear();
         out.reserve(deg as usize);
         let isz = item_size(self.weighted);
-        let mut buf = [0u8; 8];
-        for _ in 0..deg {
-            self.r.read_exact(&mut buf[..isz])?;
-            let nbr = u32::from_le_bytes(buf[..4].try_into().unwrap());
-            let weight = if self.weighted {
-                f32::from_le_bytes(buf[4..8].try_into().unwrap())
-            } else {
-                1.0
-            };
-            out.push(Edge { nbr, weight });
+        self.scratch.resize(deg as usize * isz, 0);
+        self.r.read_exact(&mut self.scratch)?;
+        if self.weighted {
+            for item in self.scratch.chunks_exact(8) {
+                out.push(Edge {
+                    nbr: u32::from_le_bytes(item[..4].try_into().unwrap()),
+                    weight: f32::from_le_bytes(item[4..8].try_into().unwrap()),
+                });
+            }
+        } else {
+            for item in self.scratch.chunks_exact(4) {
+                out.push(Edge {
+                    nbr: u32::from_le_bytes(item.try_into().unwrap()),
+                    weight: 1.0,
+                });
+            }
         }
         self.items_read += deg as u64;
         Ok(())

@@ -21,16 +21,29 @@
 //!   directly into the in-memory array `A_r` (recoded, §5), then
 //!   synchronizes with the other receiving units and unblocks sending of
 //!   the next superstep.
+//!
+//! **The zero-copy message spine.**  Three properties keep the per-record
+//! cost of this path minimal: (1) every combining loop is monomorphized
+//! over the program's [`Combiner`] type, so folds inline (no virtual call
+//! per record); (2) every byte buffer — outbox batches, OMS file
+//! reads/writes, wire payloads, U_r spill/digest — is checked out of the
+//! job's [`BufPool`] and recycled, so steady state allocates nothing per
+//! batch; (3) messages whose destination is the sending machine take the
+//! local-delivery fast path: they bypass the simulated switch, and in
+//! recoded digesting mode are folded straight into the machine's own
+//! `A_r` shard ([`LocalDigest`]) without ever being encoded to an OMS
+//! file — exactly the saving the O(|V|/n) analysis permits.
 
-use crate::api::{BlockCtx, Context, Edge, VertexProgram};
+use crate::api::{BlockCtx, Combiner, Context, Edge, VertexProgram};
 use crate::config::{JobConfig, Mode};
 use crate::error::{Error, Result};
 use crate::metrics::{MachineMetrics, StepMetrics};
-use crate::msg::{encode_msg, msg_rec_size, rec_payload, rec_target, Codec};
+use crate::msg::{encode_msg, msg_rec_size, rec_payload, rec_target, BufPool, Codec};
 use crate::net::{NetReceiver, NetSender, Payload};
 use crate::runtime::KernelSet;
 use crate::stream::{merge, SplittableStream, StreamReader, StreamWriter};
 use crate::util::bitset::BitSet;
+use crate::util::diskio::read_file_into;
 use crate::util::timer::Stopwatch;
 use crate::worker::storage::{EdgeStreamCursor, MachineStore};
 use crate::worker::sync::{MachineSync, Rendezvous};
@@ -49,13 +62,14 @@ pub enum Incoming<M> {
     Digested { ar: Vec<M>, bits: BitSet },
 }
 
-/// Step-ordered handoff U_r → U_c.
-pub struct IncomingQueue<M> {
-    q: Mutex<VecDeque<(u64, Incoming<M>)>>,
+/// Step-keyed blocking handoff queue between units (one deposit per step;
+/// `take` blocks until that step's entry arrives).
+pub struct StepQueue<T> {
+    q: Mutex<VecDeque<(u64, T)>>,
     cond: Condvar,
 }
 
-impl<M: Send> IncomingQueue<M> {
+impl<T: Send> StepQueue<T> {
     pub fn new() -> Arc<Self> {
         Arc::new(Self {
             q: Mutex::new(VecDeque::new()),
@@ -63,12 +77,12 @@ impl<M: Send> IncomingQueue<M> {
         })
     }
 
-    pub fn put(&self, step: u64, inc: Incoming<M>) {
-        self.q.lock().unwrap().push_back((step, inc));
+    pub fn put(&self, step: u64, item: T) {
+        self.q.lock().unwrap().push_back((step, item));
         self.cond.notify_all();
     }
 
-    pub fn take(&self, step: u64) -> Incoming<M> {
+    pub fn take(&self, step: u64) -> T {
         let mut q = self.q.lock().unwrap();
         loop {
             if let Some(pos) = q.iter().position(|(s, _)| *s == step) {
@@ -80,14 +94,44 @@ impl<M: Send> IncomingQueue<M> {
 
     /// Run `f` over the queued entry for `step` without consuming it
     /// (used by synchronous checkpointing).  The entry must be present.
-    pub fn peek_with<R>(&self, step: u64, f: impl FnOnce(&Incoming<M>) -> R) -> R {
+    pub fn peek_with<R>(&self, step: u64, f: impl FnOnce(&T) -> R) -> R {
         let q = self.q.lock().unwrap();
-        let (_, inc) = q
+        let (_, item) = q
             .iter()
             .find(|(s, _)| *s == step)
             .expect("peek_with: step not queued");
-        f(inc)
+        f(item)
     }
+}
+
+/// Step-ordered handoff U_r → U_c.
+pub type IncomingQueue<M> = StepQueue<Incoming<M>>;
+
+/// One superstep's locally-digested messages: `dst == me` messages folded
+/// by U_c straight into the machine's own `A_r` shard (positions of *this*
+/// machine's vertices), bypassing OMS files and the switch entirely.
+pub struct LocalDigest<M> {
+    pub ar: Vec<M>,
+    pub bits: BitSet,
+    /// Positions touched this superstep, in first-touch order — U_r folds
+    /// only these, so a sparse frontier costs O(touched), not O(|V|/n).
+    pub touched: Vec<u32>,
+    pub msgs: u64,
+}
+
+/// Step-ordered typed handoff of [`LocalDigest`]s U_c → U_r (the
+/// local-delivery fast path's replacement for the OMS → switch → wire
+/// route).  U_c deposits exactly one digest per superstep *before*
+/// publishing `compute_done`, and U_r folds it into `A_r` after the `n`
+/// end tags — by which point the deposit is guaranteed present (the
+/// machine's own end tag is only sent after `compute_done`).
+pub type LocalShard<M> = StepQueue<LocalDigest<M>>;
+
+/// Is the digesting local fast path on for this job?  Requires recoded
+/// digesting (positions are computable from IDs), the fast path enabled,
+/// and the real OMS path (the stall ablation measures stalls unmodified).
+fn local_digest_active<P: VertexProgram>(cfg: &JobConfig) -> bool {
+    cfg.mode == Mode::Recoded && P::Comb::ENABLED && cfg.local_fastpath && !cfg.disable_oms
 }
 
 /// Global (inter-machine) control report deposited by each U_c per step.
@@ -121,6 +165,12 @@ pub struct JobGlobal<P: VertexProgram> {
     pub step_base: u64,
     pub uc_rv: Arc<Rendezvous<UcReport<P::Agg>, UcDecision<P::Agg>>>,
     pub ur_rv: Arc<Rendezvous<(), ()>>,
+    /// Checkpoint barrier: no machine may publish the DONE marker before
+    /// every machine's checkpoint file is durable (§3.4).
+    pub ckpt_rv: Arc<Rendezvous<(), ()>>,
+    /// Job-wide byte-buffer pool: outbox batches, OMS file reads/writes,
+    /// wire payloads, and U_r spill/digest buffers all recycle through it.
+    pub pool: Arc<BufPool>,
 }
 
 /// Per-machine output returned by [`run_machine`].
@@ -190,17 +240,22 @@ pub fn run_machine_resumed<P: VertexProgram>(
     let msync = MachineSync::new(n);
     let incoming: Arc<IncomingQueue<P::Msg>> = IncomingQueue::new();
     let sink = MetricsSink::new();
+    // The digesting fast path's U_c → U_r handoff lane, when active.
+    let local_shard: Option<Arc<LocalShard<P::Msg>>> =
+        local_digest_active::<P>(&global.cfg).then(LocalShard::new);
 
-    // One OMS per destination machine, living for the whole job.
+    // One OMS per destination machine, living for the whole job; file
+    // write buffers recycle through the job pool.
     let job_dir = store.dir.join("job");
     let _ = std::fs::remove_dir_all(&job_dir);
     std::fs::create_dir_all(&job_dir)?;
     let mut oms = Vec::with_capacity(n);
     for d in 0..n {
-        oms.push(SplittableStream::create(
+        oms.push(SplittableStream::create_pooled(
             &job_dir.join(format!("oms_{d}")),
             global.cfg.oms_file_cap,
             global.cfg.stream_buf,
+            global.pool.clone(),
         )?);
     }
     let oms = Arc::new(oms);
@@ -232,10 +287,11 @@ pub fn run_machine_resumed<P: VertexProgram>(
             let local = store.local_vertices();
             let job_dir = job_dir.clone();
             let disk = disk.clone();
+            let shard = local_shard.clone();
             scope.spawn(move || {
                 let _dg = crate::util::diskio::register(disk);
                 let r = receiver_unit(
-                    global, me, local, receiver, msync.clone(), incoming, job_dir, sink,
+                    global, me, local, receiver, msync.clone(), incoming, shard, job_dir, sink,
                 );
                 if let Err(e) = &r {
                     eprintln!("[graphd] U_r of machine {me} failed: {e}");
@@ -249,7 +305,7 @@ pub fn run_machine_resumed<P: VertexProgram>(
             let _dg = crate::util::diskio::register(disk.clone());
             compute_unit(
                 global, store, init_values, init_halted, init_incoming, oms, msync, incoming,
-                sender, &sink,
+                local_shard, sender, &sink,
             )
         };
 
@@ -281,7 +337,8 @@ pub fn run_machine_resumed<P: VertexProgram>(
 
 // --------------------------------------------------------------------- U_s
 
-type TakenFile = (u64, PathBuf, u64);
+/// One taken OMS file: (index, path, bytes).
+pub type TakenFile = (u64, PathBuf, u64);
 
 fn sender_unit<P: VertexProgram>(
     global: &JobGlobal<P>,
@@ -294,15 +351,19 @@ fn sender_unit<P: VertexProgram>(
 ) -> Result<()> {
     let n = global.n;
     let rec_size = msg_rec_size::<P::Msg>();
-    let combiner = global.program.combiner();
-    let recoded_as = global.cfg.mode == Mode::Recoded && combiner.is_some();
+    // Monomorphized combiner: the per-record folds below compile to
+    // straight-line code, no virtual dispatch.
+    let comb = P::Comb::default();
+    let combining = P::Comb::ENABLED;
+    let recoded_as = global.cfg.mode == Mode::Recoded && combining;
+    let pool = &*global.pool;
     let tmp = job_dir.join("us_tmp");
 
     // A_s (§5): one slot per position of the destination machine; bounded
     // by max |V(W)| (Lemma 1: < 2|V|/n w.h.p.). Reused across OMSs/steps.
     let as_cap = global.max_local + 1;
     let mut a_s: Vec<P::Msg> = if recoded_as {
-        vec![combiner.unwrap().identity(); as_cap]
+        vec![comb.identity(); as_cap]
     } else {
         Vec::new()
     };
@@ -335,7 +396,10 @@ fn sender_unit<P: VertexProgram>(
                     continue;
                 }
                 let upto = marks.as_ref().map_or(u64::MAX, |m| m[j]);
-                if combiner.is_some() {
+                // Fast-path traffic to self never pays simulated wire time;
+                // account it as local, not sent (§ local-delivery).
+                let local = sender.local_fast() && j == me;
+                if combining {
                     let files = oms[j].try_take_all_upto(upto);
                     if files.is_empty() {
                         continue;
@@ -349,22 +413,25 @@ fn sender_unit<P: VertexProgram>(
                     sent_files[j] += files.len() as u64;
                     sw.start();
                     let batch = if recoded_as {
-                        combine_in_memory::<P>(
-                            &files, rec_size, combiner.unwrap(), n,
-                            &mut a_s, &mut as_touched, &mut as_bits,
+                        combine_in_memory::<P::Msg, P::Comb>(
+                            &files, &comb, n, &mut a_s, &mut as_touched, &mut as_bits, pool,
                         )?
                     } else {
-                        combine_by_mergesort::<P>(
-                            &files, rec_size, combiner.unwrap(),
-                            global.cfg.merge_k, global.cfg.stream_buf, &tmp,
+                        combine_by_mergesort::<P::Msg, P::Comb>(
+                            &files, &comb, global.cfg.merge_k, global.cfg.stream_buf, &tmp, pool,
                         )?
                     };
                     let (nbytes, nmsgs) = (batch.len() as u64, (batch.len() / rec_size) as u64);
                     sender.send(j, step, Payload::Data(batch));
                     sw.stop();
                     sink.with_step(step, |m| {
-                        m.bytes_sent += nbytes;
-                        m.msgs_sent += nmsgs;
+                        if local {
+                            m.local_bytes += nbytes;
+                            m.local_msgs += nmsgs;
+                        } else {
+                            m.bytes_sent += nbytes;
+                            m.msgs_sent += nmsgs;
+                        }
                     });
                     for (_, path, _) in &files {
                         gc(path, &global.cfg);
@@ -379,14 +446,19 @@ fn sender_unit<P: VertexProgram>(
                     }
                     sent_files[j] += 1;
                     sw.start();
-                    let data = std::fs::read(&path)?;
-                    crate::util::diskio::charge(data.len());
+                    let mut data = pool.take();
+                    read_file_into(&path, &mut data)?;
                     let (nbytes, nmsgs) = (data.len() as u64, (data.len() / rec_size) as u64);
                     sender.send(j, step, Payload::Data(data));
                     sw.stop();
                     sink.with_step(step, |m| {
-                        m.bytes_sent += nbytes;
-                        m.msgs_sent += nmsgs;
+                        if local {
+                            m.local_bytes += nbytes;
+                            m.local_msgs += nmsgs;
+                        } else {
+                            m.bytes_sent += nbytes;
+                            m.msgs_sent += nmsgs;
+                        }
                     });
                     gc(&path, &global.cfg);
                     progressed = true;
@@ -450,7 +522,7 @@ fn put_back_overshoot(
     }
 }
 
-fn gc(path: &PathBuf, cfg: &JobConfig) {
+fn gc(path: &std::path::Path, cfg: &JobConfig) {
     if !cfg.keep_oms_for_recovery {
         SplittableStream::gc_file(path);
     }
@@ -458,18 +530,24 @@ fn gc(path: &PathBuf, cfg: &JobConfig) {
 
 /// Recoded-mode in-memory combining (§5): fold every message of the taken
 /// files into `A_s[target / n]`, then emit one record per touched slot.
-fn combine_in_memory<P: VertexProgram>(
+///
+/// Monomorphized over `C: Combiner<M>` — the per-record fold in this loop
+/// is the hottest code in the crate and inlines to straight-line code.
+/// File reads and the output batch check buffers out of `pool`; the
+/// returned batch is recycled by the receiving machine after digesting.
+pub fn combine_in_memory<M: Codec, C: Combiner<M>>(
     files: &[TakenFile],
-    rec_size: usize,
-    combiner: &dyn crate::api::Combiner<P::Msg>,
+    comb: &C,
     n: usize,
-    a_s: &mut [P::Msg],
+    a_s: &mut [M],
     touched: &mut Vec<u32>,
     bits: &mut BitSet,
+    pool: &BufPool,
 ) -> Result<Vec<u8>> {
+    let rec_size = msg_rec_size::<M>();
+    let mut data = pool.take();
     for (_, path, _) in files {
-        let data = std::fs::read(path)?;
-        crate::util::diskio::charge(data.len());
+        read_file_into(path, &mut data)?;
         for rec in data.chunks_exact(rec_size) {
             let target = rec_target(rec);
             let pos = target as usize / n;
@@ -480,9 +558,9 @@ fn combine_in_memory<P: VertexProgram>(
                     data.len()
                 )));
             }
-            let m = rec_payload::<P::Msg>(rec);
+            let m = rec_payload::<M>(rec);
             if bits.get(pos) {
-                combiner.combine(&mut a_s[pos], &m);
+                comb.combine(&mut a_s[pos], &m);
             } else {
                 a_s[pos] = m;
                 bits.set(pos, true);
@@ -490,13 +568,14 @@ fn combine_in_memory<P: VertexProgram>(
             }
         }
     }
+    pool.put(data);
     // Deterministic output order helps tests; sort cost is per-send-batch.
     touched.sort_unstable();
-    let mut out = Vec::with_capacity(touched.len() * rec_size);
+    let mut out = pool.take_with_capacity(touched.len() * rec_size);
     for &t in touched.iter() {
         let pos = t as usize / n;
         encode_msg(t, &a_s[pos], &mut out);
-        a_s[pos] = combiner.identity(); // reset for the next batch (§5)
+        a_s[pos] = comb.identity(); // reset for the next batch (§5)
         bits.set(pos, false);
     }
     touched.clear();
@@ -504,26 +583,30 @@ fn combine_in_memory<P: VertexProgram>(
 }
 
 /// IO-Basic pre-send combining: in-memory sort of each ≤ℬ file, k-way
-/// merge, one combining pass (§3.3.1).
-fn combine_by_mergesort<P: VertexProgram>(
+/// merge, one combining pass (§3.3.1).  Monomorphized over the combiner
+/// like [`combine_in_memory`]; scratch and output buffers are pooled.
+pub fn combine_by_mergesort<M: Codec, C: Combiner<M>>(
     files: &[TakenFile],
-    rec_size: usize,
-    combiner: &dyn crate::api::Combiner<P::Msg>,
+    comb: &C,
     merge_k: usize,
     buf: usize,
-    tmp: &PathBuf,
+    tmp: &std::path::Path,
+    pool: &BufPool,
 ) -> Result<Vec<u8>> {
+    let rec_size = msg_rec_size::<M>();
     std::fs::create_dir_all(tmp)?;
     let mut sorted_paths = Vec::with_capacity(files.len());
+    let mut data = pool.take();
     for (i, (_, path, _)) in files.iter().enumerate() {
-        let mut data = std::fs::read(path)?;
+        read_file_into(path, &mut data)?;
         merge::sort_records(&mut data, rec_size);
         let sp = tmp.join(format!("sorted_{i}"));
         std::fs::write(&sp, &data)?;
-        crate::util::diskio::charge(2 * data.len());
+        crate::util::diskio::charge(data.len());
         sorted_paths.push(sp);
     }
-    let mut out = Vec::new();
+    pool.put(data);
+    let mut out = pool.take();
     merge::merge_combine(
         &sorted_paths,
         rec_size,
@@ -531,9 +614,9 @@ fn combine_by_mergesort<P: VertexProgram>(
         buf,
         tmp,
         |acc, pay| {
-            let mut a = P::Msg::decode(acc);
-            let b = P::Msg::decode(pay);
-            combiner.combine(&mut a, &b);
+            let mut a = M::decode(acc);
+            let b = M::decode(pay);
+            comb.combine(&mut a, &b);
             a.encode(acc);
         },
         |rec| {
@@ -557,12 +640,16 @@ fn receiver_unit<P: VertexProgram>(
     receiver: NetReceiver,
     msync: Arc<MachineSync>,
     incoming: Arc<IncomingQueue<P::Msg>>,
+    local_shard: Option<Arc<LocalShard<P::Msg>>>,
     job_dir: PathBuf,
     sink: MetricsSink,
 ) -> Result<()> {
     let n = global.n;
     let rec_size = msg_rec_size::<P::Msg>();
-    let recoded_digest = global.cfg.mode == Mode::Recoded && global.program.combiner().is_some();
+    // Monomorphized digest fold — the U_r hot loop.
+    let comb = P::Comb::default();
+    let recoded_digest = global.cfg.mode == Mode::Recoded && P::Comb::ENABLED;
+    let pool = &*global.pool;
     let part = Partitioning::Modulo;
 
     let mut step: u64 = 0;
@@ -573,7 +660,7 @@ fn receiver_unit<P: VertexProgram>(
         let mut ar: Vec<P::Msg> = Vec::new();
         let mut bits = BitSet::new(local_vertices);
         if recoded_digest {
-            ar = vec![global.program.combiner().unwrap().identity(); local_vertices];
+            ar = vec![comb.identity(); local_vertices];
         }
 
         while ends < n {
@@ -586,7 +673,6 @@ fn receiver_unit<P: VertexProgram>(
                     msgs_recv += (data.len() / rec_size) as u64;
                     if recoded_digest {
                         // §5: combine each message into A_r[pos] in memory.
-                        let comb = global.program.combiner().unwrap();
                         for rec in data.chunks_exact(rec_size) {
                             let pos = part.position_of(rec_target(rec), n);
                             let m = rec_payload::<P::Msg>(rec);
@@ -605,9 +691,28 @@ fn receiver_unit<P: VertexProgram>(
                         crate::util::diskio::charge(data.len());
                         spills.push(sp);
                     }
+                    // Wire payloads recycle into the job pool either way.
+                    pool.put(data);
                 }
                 Payload::Load(_) | Payload::LoadEnd => {
                     return Err(Error::CorruptStream("load batch during superstep".into()))
+                }
+            }
+        }
+
+        // Fold in the locally-digested shard (fast path): U_c deposited it
+        // before `compute_done`, so it is guaranteed present by now.  Only
+        // touched positions fold — O(frontier), not O(|V|/n).
+        if let Some(shard) = &local_shard {
+            let ld = shard.take(step);
+            msgs_recv += ld.msgs;
+            for &p in &ld.touched {
+                let pos = p as usize;
+                if bits.get(pos) {
+                    comb.combine(&mut ar[pos], &ld.ar[pos]);
+                } else {
+                    ar[pos] = ld.ar[pos];
+                    bits.set(pos, true);
                 }
             }
         }
@@ -669,7 +774,7 @@ struct MsgCursor<M: Codec> {
 }
 
 impl<M: Codec> MsgCursor<M> {
-    fn open(path: &PathBuf, buf: usize) -> Result<Self> {
+    fn open(path: &std::path::Path, buf: usize) -> Result<Self> {
         let reader = StreamReader::open(path, buf)?;
         let mut c = Self {
             reader: Some(reader),
@@ -718,11 +823,13 @@ impl<M: Codec> MsgCursor<M> {
 
 /// Outgoing-message sink for one superstep of U_c: raw OMS appends, or
 /// bounded in-memory buffers + synchronous (stalling) sends when the
-/// `disable_oms` ablation is active.
-struct Outbox<'a, M: Codec> {
-    _msg: std::marker::PhantomData<M>,
+/// `disable_oms` ablation is active.  Monomorphized over the program's
+/// combiner so the local fast path's fold inlines; all byte buffers
+/// recycle through the job pool.
+struct Outbox<'a, M: Codec, C: Combiner<M>> {
     part: Partitioning,
     n: usize,
+    me: usize,
     rec_size: usize,
     disable_oms: bool,
     cap: usize,
@@ -731,25 +838,53 @@ struct Outbox<'a, M: Codec> {
     stall_sender: &'a mut NetSender,
     oms: &'a [Arc<SplittableStream>],
     /// Per-destination append batches: amortizes the OMS mutex + buffered
-    /// write over ~BATCH bytes of records (perf: -40% M-Gene, see
-    /// README.md §Perf).
+    /// write over ~BATCH bytes of records (see README.md §Perf).
     batch: Vec<Vec<u8>>,
+    /// All messages emitted this superstep (wire + local) — feeds the
+    /// global continue decision, so locally-digested messages still keep
+    /// the job alive.
     msgs_sent: u64,
+    comb: C,
+    /// Local-delivery fast path (digesting mode): messages to this
+    /// machine's own vertices fold straight into the local `A_r` shard —
+    /// no encode, no OMS file, no switch.
+    local: Option<LocalDigest<M>>,
+    pool: &'a BufPool,
 }
 
 /// Outbox per-destination batch size before an OMS append (bytes).
 const OUTBOX_BATCH: usize = 8 * 1024;
 
-impl<'a, M: Codec> Outbox<'a, M> {
+impl<'a, M: Codec, C: Combiner<M>> Outbox<'a, M, C> {
     #[inline]
     fn send(&mut self, target: u32, m: M) {
         self.msgs_sent += 1;
         let dst = self.part.machine_of(target, self.n);
+        if dst == self.me {
+            if let Some(ld) = &mut self.local {
+                // Zero-copy local delivery: fold into our own A_r shard.
+                let pos = self.part.position_of(target, self.n);
+                assert!(
+                    pos < ld.ar.len(),
+                    "local A_r overflow: target {target} pos {pos} cap {}",
+                    ld.ar.len()
+                );
+                if ld.bits.get(pos) {
+                    self.comb.combine(&mut ld.ar[pos], &m);
+                } else {
+                    ld.ar[pos] = m;
+                    ld.bits.set(pos, true);
+                    ld.touched.push(pos as u32);
+                }
+                ld.msgs += 1;
+                return;
+            }
+        }
         if self.disable_oms {
             let buf = &mut self.stall_bufs[dst];
             encode_msg(target, &m, buf);
             if buf.len() + self.rec_size > self.cap {
-                let batch = std::mem::take(buf);
+                let batch = std::mem::replace(buf, self.pool.take());
                 // Synchronous send: U_c blocks for the simulated
                 // transmission — the stall the paper's OMS design avoids.
                 self.stall_sender.send(dst, self.step, Payload::Data(batch));
@@ -766,14 +901,16 @@ impl<'a, M: Codec> Outbox<'a, M> {
         }
     }
 
-    /// Flush remaining batches (end of superstep, before finalize).
+    /// Flush remaining batches (end of superstep, before finalize) and
+    /// recycle the batch buffers.
     fn flush_batches(&mut self) -> Result<()> {
         if !self.disable_oms {
             for dst in 0..self.n {
-                if !self.batch[dst].is_empty() {
-                    self.oms[dst].append_records(&self.batch[dst], self.rec_size)?;
-                    self.batch[dst].clear();
+                let buf = &mut self.batch[dst];
+                if !buf.is_empty() {
+                    self.oms[dst].append_records(buf, self.rec_size)?;
                 }
+                self.pool.put(std::mem::take(buf));
             }
         }
         Ok(())
@@ -782,9 +919,11 @@ impl<'a, M: Codec> Outbox<'a, M> {
     fn flush_stall(&mut self) {
         if self.disable_oms {
             for dst in 0..self.n {
-                if !self.stall_bufs[dst].is_empty() {
-                    let batch = std::mem::take(&mut self.stall_bufs[dst]);
-                    self.stall_sender.send(dst, self.step, Payload::Data(batch));
+                let buf = std::mem::take(&mut self.stall_bufs[dst]);
+                if buf.is_empty() {
+                    self.pool.put(buf);
+                } else {
+                    self.stall_sender.send(dst, self.step, Payload::Data(buf));
                 }
             }
         }
@@ -801,6 +940,7 @@ fn compute_unit<P: VertexProgram>(
     oms: Arc<Vec<Arc<SplittableStream>>>,
     msync: Arc<MachineSync>,
     incoming: Arc<IncomingQueue<P::Msg>>,
+    local_shard: Option<Arc<LocalShard<P::Msg>>>,
     mut stall_sender: NetSender,
     sink: &MetricsSink,
 ) -> UcResult<P> {
@@ -808,6 +948,8 @@ fn compute_unit<P: VertexProgram>(
     let me = store.machine;
     let program = &*global.program;
     let cfg = &global.cfg;
+    let pool = &*global.pool;
+    let comb = P::Comb::default();
     let local = store.local_vertices();
     let part = if store.recoded {
         Partitioning::Modulo
@@ -841,13 +983,15 @@ fn compute_unit<P: VertexProgram>(
 
     // Peak in-memory state accounting (the O(|V|/n) bound).
     let as_cap = global.max_local + 1;
-    let digesting = cfg.mode == Mode::Recoded && program.combiner().is_some();
+    let digesting = cfg.mode == Mode::Recoded && P::Comb::ENABLED;
+    let fast_digest = local_shard.is_some();
     let peak_state = (vals.len() * P::Value::SIZE) as u64
         + store.state_bytes()
         + (local as u64 / 8)
         + if digesting {
-            // A_r (U_r) + A_s (U_s) message arrays
-            ((local + as_cap) * P::Msg::SIZE) as u64
+            // A_r (U_r) + A_s (U_s) message arrays, plus the fast path's
+            // local shard when active.
+            ((local + as_cap + if fast_digest { local } else { 0 }) * P::Msg::SIZE) as u64
         } else {
             0
         };
@@ -869,28 +1013,43 @@ fn compute_unit<P: VertexProgram>(
         sw.start();
         let mut local_agg = P::Agg::default();
         let mut computed = 0u64;
-        let mut out = Outbox::<P::Msg> {
-            _msg: std::marker::PhantomData,
+        let mut out: Outbox<'_, P::Msg, P::Comb> = Outbox {
             part,
             n,
+            me,
             rec_size,
             disable_oms: cfg.disable_oms,
             cap: cfg.oms_file_cap,
             step,
-            stall_bufs: vec![Vec::new(); if cfg.disable_oms { n } else { 0 }],
+            stall_bufs: if cfg.disable_oms {
+                (0..n).map(|_| pool.take()).collect()
+            } else {
+                Vec::new()
+            },
             stall_sender: &mut stall_sender,
             oms: &oms,
-            batch: vec![Vec::with_capacity(OUTBOX_BATCH + 64); if cfg.disable_oms { 0 } else { n }],
+            batch: if cfg.disable_oms {
+                Vec::new()
+            } else {
+                (0..n)
+                    .map(|_| pool.take_with_capacity(OUTBOX_BATCH + 64))
+                    .collect()
+            },
             msgs_sent: 0,
+            comb: P::Comb::default(),
+            local: fast_digest.then(|| LocalDigest {
+                ar: vec![comb.identity(); local],
+                bits: BitSet::new(local),
+                touched: Vec::new(),
+                msgs: 0,
+            }),
+            pool,
         };
 
         if digesting {
             let (sums, bits) = match inc {
                 Some(Incoming::Digested { ar, bits }) => (ar, bits),
-                None => (
-                    vec![program.combiner().unwrap().identity(); local],
-                    BitSet::new(local),
-                ),
+                None => (vec![comb.identity(); local], BitSet::new(local)),
                 Some(Incoming::Sorted { .. }) => {
                     return Err(Error::Other("sorted incoming in recoded mode".into()))
                 }
@@ -918,7 +1077,22 @@ fn compute_unit<P: VertexProgram>(
         let msgs_sent = out.msgs_sent;
         out.flush_batches()?;
         out.flush_stall();
+        let local_digest = out.local.take();
         drop(out);
+
+        // Hand the locally-digested shard to U_r *before* publishing
+        // compute_done: our own end tag (which U_r counts) can only be
+        // sent after the watermark below, so U_r never misses the deposit.
+        if let Some(ld) = local_digest {
+            sink.with_step(step, |m| {
+                m.local_msgs += ld.msgs;
+                m.local_bytes += ld.msgs * rec_size as u64;
+            });
+            local_shard
+                .as_ref()
+                .expect("local digest without a shard lane")
+                .put(step, ld);
+        }
 
         // Finalize this superstep's OMS files; publish watermarks.
         let mut marks = Vec::with_capacity(n);
@@ -979,15 +1153,11 @@ fn compute_unit<P: VertexProgram>(
                         &ck.dir, abs_step, me, &vals, &halted, inc,
                     )
                 })?;
-                // All machines must finish writing before the marker.
-                let done = global.ur_rv.clone();
-                let _ = done; // (checkpoint completion uses its own sync)
-                let ok = global.uc_rv.exchange(
-                    me,
-                    UcReport { msgs_sent: 0, active: 0, agg: P::Agg::default() },
-                    |_| UcDecision { continues: true, agg: Arc::new(P::Agg::default()) },
-                );
-                let _ = ok;
+                // Dedicated checkpoint barrier: the DONE marker may only
+                // appear once every machine's file is durable — a resume
+                // from a marked checkpoint can then never read a partial
+                // set.
+                global.ckpt_rv.exchange(me, (), |_| ());
                 if me == 0 {
                     crate::ft::mark_done(&ck.dir, abs_step)?;
                 }
@@ -1020,7 +1190,7 @@ fn per_vertex_pass<P: VertexProgram>(
     vals: &mut [P::Value],
     halted: &mut BitSet,
     cursor: &mut MsgCursor<P::Msg>,
-    out: &mut Outbox<'_, P::Msg>,
+    out: &mut Outbox<'_, P::Msg, P::Comb>,
     computed: &mut u64,
     sink: &MetricsSink,
 ) -> Result<()> {
@@ -1089,7 +1259,7 @@ fn recoded_pass<P: VertexProgram>(
     halted: &mut BitSet,
     sums: Vec<P::Msg>,
     bits: BitSet,
-    out: &mut Outbox<'_, P::Msg>,
+    out: &mut Outbox<'_, P::Msg, P::Comb>,
     computed: &mut u64,
     sink: &MetricsSink,
 ) -> Result<()> {
@@ -1170,4 +1340,175 @@ fn recoded_pass<P: VertexProgram>(
         m.seeks += seeks;
     });
     Ok(())
+}
+
+#[cfg(test)]
+mod spine_equivalence {
+    //! Property tests: the three combining paths — in-memory `A_s`
+    //! digesting, external merge-sort combining, and the local-delivery
+    //! fast fold — must produce identical digested `A_r` contents for any
+    //! message set (PageRank-sum and SSSP-min combiners).
+
+    use super::*;
+    use crate::api::{MinF32, SumF32};
+    use crate::util::proptest_lite;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "graphd_spine_eq_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Encode `msgs` into OMS-style files under `dir` (ascending indices).
+    fn write_files(dir: &PathBuf, msgs: &[(u32, f32)], nfiles: usize) -> Vec<TakenFile> {
+        std::fs::create_dir_all(dir).unwrap();
+        let chunk = (msgs.len() / nfiles.max(1) + 1).max(1);
+        let mut files = Vec::new();
+        for (i, ch) in msgs.chunks(chunk).enumerate() {
+            let mut buf = Vec::new();
+            for &(t, v) in ch {
+                encode_msg(t, &v, &mut buf);
+            }
+            let p = dir.join(format!("f{i}"));
+            std::fs::write(&p, &buf).unwrap();
+            files.push((i as u64, p, buf.len() as u64));
+        }
+        files
+    }
+
+    /// U_r's digest fold over a combined wire batch.
+    fn digest<C: Combiner<f32>>(
+        batch: &[u8],
+        comb: &C,
+        n: usize,
+        local: usize,
+    ) -> (Vec<f32>, BitSet) {
+        let rec_size = msg_rec_size::<f32>();
+        let mut ar = vec![comb.identity(); local];
+        let mut bits = BitSet::new(local);
+        for rec in batch.chunks_exact(rec_size) {
+            let pos = rec_target(rec) as usize / n;
+            let m = rec_payload::<f32>(rec);
+            if bits.get(pos) {
+                comb.combine(&mut ar[pos], &m);
+            } else {
+                ar[pos] = m;
+                bits.set(pos, true);
+            }
+        }
+        (ar, bits)
+    }
+
+    /// The Outbox local fast path's fold, straight from raw messages.
+    fn local_fold<C: Combiner<f32>>(
+        msgs: &[(u32, f32)],
+        comb: &C,
+        n: usize,
+        local: usize,
+    ) -> (Vec<f32>, BitSet) {
+        let mut ar = vec![comb.identity(); local];
+        let mut bits = BitSet::new(local);
+        for &(t, v) in msgs {
+            let pos = t as usize / n;
+            if bits.get(pos) {
+                comb.combine(&mut ar[pos], &v);
+            } else {
+                ar[pos] = v;
+                bits.set(pos, true);
+            }
+        }
+        (ar, bits)
+    }
+
+    fn check_equivalence<C: Combiner<f32>>(comb: C, tag: &str) {
+        proptest_lite::run(40, |g| {
+            let n = g.usize_in(1, 5);
+            let j = g.usize_in(0, n); // destination machine
+            let local = g.usize_in(1, 60);
+            let nmsgs = g.usize_in(0, 400);
+            // Integer-valued payloads keep f32 sums exact regardless of
+            // fold order, so equality below can be strict.
+            let msgs: Vec<(u32, f32)> = (0..nmsgs)
+                .map(|_| {
+                    let pos = g.usize_in(0, local);
+                    ((pos * n + j) as u32, g.u32_below(1000) as f32)
+                })
+                .collect();
+            let dir = tmp(&format!("{tag}{}", g.case));
+            let pool = BufPool::new(8);
+
+            let files = write_files(&dir.join("mem"), &msgs, 4);
+            let mut a_s = vec![comb.identity(); local + 1];
+            let mut touched = Vec::new();
+            let mut as_bits = BitSet::new(local + 1);
+            let mem = combine_in_memory::<f32, C>(
+                &files, &comb, n, &mut a_s, &mut touched, &mut as_bits, &pool,
+            )
+            .unwrap();
+
+            let files2 = write_files(&dir.join("srt"), &msgs, 3);
+            let srt = combine_by_mergesort::<f32, C>(
+                &files2, &comb, 4, 256, &dir.join("tmp"), &pool,
+            )
+            .unwrap();
+
+            let (ar_mem, bits_mem) = digest(&mem, &comb, n, local);
+            let (ar_srt, bits_srt) = digest(&srt, &comb, n, local);
+            let (ar_loc, bits_loc) = local_fold(&msgs, &comb, n, local);
+            let _ = std::fs::remove_dir_all(&dir);
+
+            for pos in 0..local {
+                crate::prop_assert!(
+                    g,
+                    bits_mem.get(pos) == bits_loc.get(pos)
+                        && bits_srt.get(pos) == bits_loc.get(pos),
+                    "presence mismatch at pos {pos} (n={n}, j={j})"
+                );
+                if bits_loc.get(pos) {
+                    crate::prop_assert!(
+                        g,
+                        ar_mem[pos] == ar_loc[pos] && ar_srt[pos] == ar_loc[pos],
+                        "A_r mismatch at pos {pos}: mem {} srt {} local {}",
+                        ar_mem[pos],
+                        ar_srt[pos],
+                        ar_loc[pos]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pagerank_sum_combiner_paths_agree() {
+        check_equivalence(SumF32, "sum");
+    }
+
+    #[test]
+    fn sssp_min_combiner_paths_agree() {
+        check_equivalence(MinF32, "min");
+    }
+
+    #[test]
+    fn local_shard_hands_off_in_step_order() {
+        let shard: Arc<LocalShard<f32>> = LocalShard::new();
+        for step in [1u64, 0, 2] {
+            shard.put(
+                step,
+                LocalDigest {
+                    ar: vec![step as f32],
+                    bits: BitSet::new(1),
+                    touched: Vec::new(),
+                    msgs: step,
+                },
+            );
+        }
+        // Takes are by step, independent of deposit order.
+        assert_eq!(shard.take(0).msgs, 0);
+        assert_eq!(shard.take(2).ar, vec![2.0]);
+        assert_eq!(shard.take(1).msgs, 1);
+    }
 }

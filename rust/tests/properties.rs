@@ -224,7 +224,9 @@ fn property_message_count_conserved() {
         let (mut sent, mut recv) = (0u64, 0u64);
         for m in &out.metrics.machines {
             for s in &m.steps {
-                sent += s.msgs_sent;
+                // Wire + fast-path local traffic: conservation holds over
+                // the sum (local batches are received like any other).
+                sent += s.msgs_sent + s.local_msgs;
                 recv += s.msgs_recv;
             }
         }

@@ -1,0 +1,218 @@
+//! Integration tests for the zero-copy message spine: the local-delivery
+//! fast path (wire-vs-local byte split, value equivalence with the switch
+//! path), pooled buffers, and checkpoint/resume on the fast-path engine.
+
+use graphd::algos::{PageRank, Sssp};
+use graphd::config::Mode;
+use graphd::ft::{self, CheckpointCfg};
+use graphd::graph::generator;
+use graphd::{GraphD, GraphSource};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn wd(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "graphd_spine_{name}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// n = 1 + fast path: *every* message is local, so the job must push zero
+/// bytes through the simulated switch — and still compute the right answer.
+#[test]
+fn single_machine_fastpath_zeroes_wire_bytes() {
+    let d = wd("n1");
+    let g = generator::uniform(200, 1200, true, 11).with_unit_weights();
+    let session = GraphD::builder().machines(1).workdir(&d).build().unwrap();
+    let mut graph = session.load(GraphSource::InMemory(&g)).unwrap();
+    graph.recode().unwrap();
+    let src = graph.current_id_of(0);
+
+    let fast = graph
+        .job(Arc::new(Sssp::new(src)))
+        .mode(Mode::Recoded)
+        .run()
+        .unwrap();
+    assert_eq!(
+        fast.metrics.net_wire_bytes, 0,
+        "single-machine fast-path run must not touch the switch"
+    );
+    assert!(fast.metrics.net_local_bytes > 0, "local traffic is counted");
+
+    // Same job with the fast path off: answers identical (MIN combining is
+    // order-free), but everything transits the switch.
+    let slow = graph
+        .job(Arc::new(Sssp::new(src)))
+        .mode(Mode::Recoded)
+        .local_fastpath(false)
+        .run()
+        .unwrap();
+    assert!(slow.metrics.net_wire_bytes > 0);
+    assert_eq!(slow.metrics.net_local_bytes, 0);
+    assert_eq!(fast.values_by_id(), slow.values_by_id());
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+/// Multi-machine recoded SSSP: the fast path must change only the routing
+/// of dst == me traffic, never the results, and must cut wire bytes.
+#[test]
+fn fastpath_matches_switch_path_multi_machine() {
+    let d = wd("multi");
+    let g = generator::uniform(300, 2400, true, 23).with_unit_weights();
+    let session = GraphD::builder().machines(3).workdir(&d).build().unwrap();
+    let mut graph = session.load(GraphSource::InMemorySparse(&g, 5)).unwrap();
+    graph.recode().unwrap();
+    let src = {
+        let mut ids: Vec<u32> = graph
+            .stores()
+            .iter()
+            .flat_map(|s| s.ids.iter().copied())
+            .collect();
+        ids.sort_unstable();
+        graph.current_id_of(ids[0])
+    };
+
+    let on = graph
+        .job(Arc::new(Sssp::new(src)))
+        .mode(Mode::Recoded)
+        .run()
+        .unwrap();
+    let off = graph
+        .job(Arc::new(Sssp::new(src)))
+        .mode(Mode::Recoded)
+        .local_fastpath(false)
+        .run()
+        .unwrap();
+
+    assert_eq!(on.values_by_id(), off.values_by_id());
+    assert!(
+        on.metrics.net_wire_bytes < off.metrics.net_wire_bytes,
+        "fast path must cut wire bytes: on={} off={}",
+        on.metrics.net_wire_bytes,
+        off.metrics.net_wire_bytes
+    );
+    assert!(on.metrics.net_local_bytes > 0);
+    // Per-step metrics carry the split too (some step digested locally).
+    let local_msgs: u64 = on
+        .metrics
+        .machines
+        .iter()
+        .flat_map(|m| m.steps.iter())
+        .map(|s| s.local_msgs)
+        .sum();
+    assert!(local_msgs > 0, "uniform graph must have local edges");
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+/// Basic (non-digesting) mode: local traffic still flows through OMS
+/// files, but switch transit is skipped — results must be unchanged.
+#[test]
+fn basic_mode_fastpath_value_equivalence() {
+    let d = wd("basic");
+    let g = generator::uniform(150, 900, true, 31);
+    let session = GraphD::builder()
+        .machines(2)
+        .workdir(&d)
+        .max_supersteps(4)
+        .build()
+        .unwrap();
+    let graph = session.load(GraphSource::InMemory(&g)).unwrap();
+
+    let on = graph.run(Arc::new(PageRank::new(4))).unwrap();
+    let off = graph
+        .job(Arc::new(PageRank::new(4)))
+        .local_fastpath(false)
+        .run()
+        .unwrap();
+    for ((ia, va), (ib, vb)) in on.values_by_id().iter().zip(off.values_by_id().iter()) {
+        assert_eq!(ia, ib);
+        assert!((va - vb).abs() < 1e-6, "{ia}: {va} vs {vb}");
+    }
+    assert!(on.metrics.net_wire_bytes < off.metrics.net_wire_bytes);
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+/// Satellite: a resume after a mid-job checkpoint (now synchronized by the
+/// dedicated checkpoint barrier) must match the uninterrupted run — with
+/// the fast path on, so the checkpointed A_r includes locally-digested
+/// messages.
+#[test]
+fn checkpoint_resume_with_fastpath_matches_uninterrupted() {
+    let d = wd("ckpt");
+    let g = generator::uniform(240, 1400, true, 17);
+    let session = GraphD::builder()
+        .machines(2)
+        .workdir(&d)
+        .max_supersteps(6)
+        .build()
+        .unwrap();
+    let mut graph = session.load(GraphSource::InMemory(&g)).unwrap();
+    graph.recode().unwrap();
+
+    let full = graph
+        .job(Arc::new(PageRank::new(6)))
+        .mode(Mode::Recoded)
+        .run()
+        .unwrap();
+    assert!(full.metrics.net_wire_bytes > 0, "2 machines talk");
+
+    let ck = CheckpointCfg {
+        dir: d.join("dfs/ck"),
+        every: 2,
+    };
+    graph
+        .job(Arc::new(PageRank::new(6)))
+        .mode(Mode::Recoded)
+        .checkpoint(ck.clone())
+        .run()
+        .unwrap();
+    let restart = ft::latest_checkpoint(&ck.dir, None).expect("checkpoint written");
+    let resumed = graph
+        .job(Arc::new(PageRank::new(6)))
+        .mode(Mode::Recoded)
+        .checkpoint(ck)
+        .resume(restart)
+        .run()
+        .unwrap();
+    assert_eq!(resumed.metrics.supersteps, 6);
+    for ((ia, va), (ib, vb)) in full
+        .values_by_id()
+        .iter()
+        .zip(resumed.values_by_id().iter())
+    {
+        assert_eq!(ia, ib);
+        assert!((va - vb).abs() < 1e-6, "{ia}: {va} vs {vb}");
+    }
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+/// The job-wide buffer pool is live on the spine: after the first
+/// superstep, checkouts hit the shelf instead of allocating.
+#[test]
+fn buffer_pool_hits_are_reported() {
+    let d = wd("pool");
+    let g = generator::uniform(200, 2000, true, 41);
+    let session = GraphD::builder()
+        .machines(2)
+        .workdir(&d)
+        .max_supersteps(5)
+        .build()
+        .unwrap();
+    let mut graph = session.load(GraphSource::InMemory(&g)).unwrap();
+    graph.recode().unwrap();
+    let res = graph
+        .job(Arc::new(PageRank::new(5)))
+        .mode(Mode::Recoded)
+        .run()
+        .unwrap();
+    let pool = res.metrics.pool;
+    assert!(
+        pool.hits > 0,
+        "multi-superstep run must recycle buffers: {pool:?}"
+    );
+    assert!(pool.hit_rate() > 0.0 && pool.hit_rate() <= 1.0);
+    let _ = std::fs::remove_dir_all(&d);
+}
