@@ -13,9 +13,16 @@
 //!    every batch through OMS files + the simulated switch) by ≥ 2×
 //!    msgs/sec.  The bench exits non-zero otherwise.
 //!
+//! 3. **Engine, IO-Basic at n = 1** (same workload, no recoding): the
+//!    local spill lane must likewise drive wire bytes to zero — local
+//!    messages go straight from U_c's sorted spills into the S^I merge,
+//!    skipping OMS files, pre-send combining, and the switch.  Reported
+//!    as an off/on comparison; wire == 0 is asserted, the speedup is
+//!    informational (the off path's merge-sort work varies by machine).
+//!
 //! Env: `GRAPHD_SMOKE=1` shrinks the workload (the `make bench-smoke`
 //! quick mode); `GRAPHD_BENCH_JSON=path` writes the numbers as the
-//! `"spine"` section of the bench JSON (e.g. `BENCH_PR3.json`).
+//! `"spine"` and `"basic"` sections of the bench JSON (BENCH_PR4.json).
 
 use graphd::api::SumF32;
 use graphd::config::{ClusterProfile, Mode};
@@ -156,7 +163,7 @@ struct EngineRun {
     pool_hit_rate: f64,
 }
 
-fn engine_run(g: &graphd::graph::Graph, steps: u64, fastpath: bool) -> EngineRun {
+fn engine_run(g: &graphd::graph::Graph, steps: u64, mode: Mode, fastpath: bool) -> EngineRun {
     // One machine on a slow shared switch: digest-heavy PageRank where the
     // pre-refactor path pays simulated wire time for every local batch.
     let mut profile = ClusterProfile::test(1);
@@ -168,10 +175,12 @@ fn engine_run(g: &graphd::graph::Graph, steps: u64, fastpath: bool) -> EngineRun
         .build()
         .expect("session");
     let mut graph = session.load(GraphSource::InMemory(g)).expect("load");
-    graph.recode().expect("recode");
+    if mode == Mode::Recoded {
+        graph.recode().expect("recode");
+    }
     let res = graph
         .job(Arc::new(graphd::algos::PageRank::new(steps)))
-        .mode(Mode::Recoded)
+        .mode(mode)
         .local_fastpath(fastpath)
         .run()
         .expect("run");
@@ -202,10 +211,10 @@ fn main() {
     let (nv, ne) = if smoke { (4_000, 24_000) } else { (20_000, 120_000) };
     let g = generator::uniform(nv, ne, true, 13);
     let steps = 5;
-    let off = engine_run(&g, steps, false);
-    let on = engine_run(&g, steps, true);
+    let off = engine_run(&g, steps, Mode::Recoded, false);
+    let on = engine_run(&g, steps, Mode::Recoded, true);
     let engine_speedup = on.msgs_per_sec / off.msgs_per_sec.max(1e-9);
-    println!("-- engine, digest-heavy PageRank, n=1 (all traffic local) --");
+    println!("-- engine, digest-heavy PageRank, n=1, IO-Recoded (all traffic local) --");
     println!(
         "fast path off  {:>12.0} msgs/s   wire {:>10} B   local {:>10} B",
         off.msgs_per_sec, off.wire_bytes, off.local_bytes
@@ -218,6 +227,21 @@ fn main() {
         "engine speedup {engine_speedup:>12.2}x   pool hit rate {:.1}%",
         on.pool_hit_rate * 100.0
     );
+
+    // IO-Basic off/on: the spill lane vs the full OMS + switch route.
+    let boff = engine_run(&g, steps, Mode::Basic, false);
+    let bon = engine_run(&g, steps, Mode::Basic, true);
+    let basic_speedup = bon.msgs_per_sec / boff.msgs_per_sec.max(1e-9);
+    println!("-- engine, same workload, n=1, IO-Basic (local spill lane) --");
+    println!(
+        "spill lane off {:>12.0} msgs/s   wire {:>10} B   local {:>10} B",
+        boff.msgs_per_sec, boff.wire_bytes, boff.local_bytes
+    );
+    println!(
+        "spill lane on  {:>12.0} msgs/s   wire {:>10} B   local {:>10} B",
+        bon.msgs_per_sec, bon.wire_bytes, bon.local_bytes
+    );
+    println!("basic speedup  {basic_speedup:>12.2}x");
 
     if let Some(path) = graphd::bench::bench_json_path() {
         let body = format!(
@@ -239,7 +263,17 @@ fn main() {
             on.pool_hit_rate,
         );
         graphd::bench::bench_json_write(&path, "spine", &body).expect("bench json");
-        eprintln!("wrote {path} (section: spine)");
+        let basic_body = format!(
+            "{{\"engine_spill_off_msgs_per_sec\": {:.0}, \
+               \"engine_spill_on_msgs_per_sec\": {:.0}, \
+               \"basic_speedup\": {basic_speedup:.3}, \
+               \"wire_bytes_spill_off\": {}, \
+               \"wire_bytes_spill_on\": {}, \
+               \"local_bytes_spill_on\": {}}}",
+            boff.msgs_per_sec, bon.msgs_per_sec, boff.wire_bytes, bon.wire_bytes, bon.local_bytes,
+        );
+        graphd::bench::bench_json_merge(&path, "basic", &basic_body).expect("bench json");
+        eprintln!("wrote {path} (sections: spine, basic)");
     }
 
     let mut failed = false;
@@ -247,6 +281,13 @@ fn main() {
         eprintln!(
             "FAIL: n=1 fast-path run must push 0 bytes through the switch (got {})",
             on.wire_bytes
+        );
+        failed = true;
+    }
+    if bon.wire_bytes != 0 {
+        eprintln!(
+            "FAIL: n=1 IO-Basic spill-lane run must push 0 bytes through the switch (got {})",
+            bon.wire_bytes
         );
         failed = true;
     }

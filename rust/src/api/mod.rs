@@ -21,7 +21,9 @@ use crate::util::bitset::BitSet;
 /// unweighted graphs).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Edge {
+    /// Neighbor vertex ID (current ID space).
     pub nbr: u32,
+    /// Edge weight (1.0 on unweighted graphs).
     pub weight: f32,
 }
 
@@ -38,7 +40,9 @@ pub trait Combiner<M: Codec>: Send + Sync + Default + 'static {
     /// `false` only for [`NoCombiner`]; a compile-time constant so the
     /// monomorphized engine code can eliminate dead combining paths.
     const ENABLED: bool = true;
+    /// Fold `m` into the accumulator `acc`.
     fn combine(&self, acc: &mut M, m: &M);
+    /// The fold identity `e0`: `combine(e0, m) == m`.
     fn identity(&self) -> M;
 }
 
@@ -140,6 +144,8 @@ pub struct Context<'a, M: Codec, A> {
 }
 
 impl<'a, M: Codec, A> Context<'a, M, A> {
+    /// A context for one vertex of one superstep; `send_fn` receives every
+    /// emitted `(target, msg)` pair.
     pub fn new(
         superstep: u64,
         num_vertices: u64,
@@ -187,10 +193,15 @@ impl<'a, M: Codec, A> Context<'a, M, A> {
 /// combined incoming message (`identity` when none — the paper's
 /// `A_r[pos] = e0` convention).
 pub struct BlockCtx<'a, P: VertexProgram + ?Sized> {
+    /// Current superstep (0-based).
     pub superstep: u64,
+    /// Total number of vertices |V|.
     pub num_vertices: u64,
+    /// The machine's vertex-value array `A`, indexed by position.
     pub vals: &'a mut [P::Value],
+    /// Out-degrees, aligned with `vals`.
     pub degs: &'a [u32],
+    /// The digested incoming-message array `A_r`.
     pub sums: &'a [P::Msg],
     /// Whether each vertex was halted coming into this superstep.
     pub halted: &'a mut BitSet,

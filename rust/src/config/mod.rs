@@ -148,13 +148,16 @@ pub struct JobConfig {
     /// instead of spilling to OMSs (the "no-OMS" design the paper argues
     /// against; used by `ablation_oms`).
     pub disable_oms: bool,
-    /// Local-delivery fast path (default on): batches whose destination is
-    /// the sending machine bypass the simulated switch entirely, and — in
-    /// recoded digesting mode — messages to local vertices are folded
-    /// straight into the machine's own `A_r` shard without touching an OMS
-    /// file.  `false` restores the pre-fast-path routing (every batch
-    /// through switch + OMS), which the `spine_throughput` bench uses as
-    /// its baseline.
+    /// Local-delivery fast path (default on), governing **every** mode:
+    /// batches whose destination is the sending machine bypass the
+    /// simulated switch entirely, and messages to local vertices skip the
+    /// OMS files — folded straight into the machine's own `A_r` shard in
+    /// recoded digesting mode, or sorted-spilled through the local spill
+    /// lane and merged into `S^I` in the sorted-stream modes (IO-Basic,
+    /// recoded without a combiner).  At n=1 every message is local, so
+    /// `net_wire_bytes == 0` in both mode families.  `false` restores the
+    /// pre-fast-path routing (every batch through switch + OMS), which the
+    /// `spine_throughput` bench uses as its baseline.
     pub local_fastpath: bool,
     /// Directory holding the AOT `*.hlo.txt` artifacts for the XLA block
     /// path (`None` = [`crate::runtime::KernelSet::default_dir`]).

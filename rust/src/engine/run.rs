@@ -105,6 +105,10 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
     // Job-wide buffer pool: enough shelf space for every machine's outbox
     // batches plus in-flight wire payloads and stream-writer buffers.
     let pool = crate::msg::BufPool::new(4 * n * n + 4 * n + 16);
+    // Digest-array pool: per machine at most three O(|V|/n) arrays are in
+    // flight (U_r's A_r, U_c's consumed one, the local shard) — they
+    // ping-pong instead of reallocating every superstep.
+    let digest_pool = crate::msg::DigestPool::new(3 * n);
     let global = JobGlobal {
         program: program.clone(),
         cfg: eng.cfg.clone(),
@@ -117,6 +121,7 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
         ur_rv: Rendezvous::new(n),
         ckpt_rv: Rendezvous::new(n),
         pool: pool.clone(),
+        digest_pool: digest_pool.clone(),
     };
 
     let (endpoints, switch) = net::build(
@@ -197,6 +202,7 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
         net_wire_bytes: switch.total_bytes(),
         net_local_bytes: switch.local_bytes(),
         pool: pool.stats(),
+        digest_pool: digest_pool.stats(),
     };
     Ok(JobResult { outputs, metrics })
 }

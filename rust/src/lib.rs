@@ -28,7 +28,10 @@
 //! ```
 //!
 //! See the top-level `README.md` for the quickstart and the experiment
-//! index (tables are reproduced by `rust/benches/` and `graphd table`).
+//! index (tables are reproduced by `rust/benches/` and `graphd table`),
+//! and `DESIGN.md` for the paper-to-code architecture guide — which paper
+//! section maps to which module, and where the message spine's pools and
+//! fast paths sit.
 
 // CI runs `cargo clippy -- -D warnings`.  The engine's idiom is explicit
 // position loops over parallel arrays (A, degs, lanes, …) where the index
@@ -40,7 +43,11 @@
 #![allow(clippy::manual_div_ceil)]
 #![allow(clippy::type_complexity)]
 
+// The crate's public API surface (the modules users program against plus
+// the engine layers DESIGN.md documents) warns on undocumented public
+// items; CI runs `cargo doc --no-deps` with warnings denied.
 pub mod algos;
+#[warn(missing_docs)]
 pub mod api;
 pub mod baselines;
 pub mod bench;
@@ -51,14 +58,19 @@ pub mod error;
 pub mod ft;
 pub mod graph;
 pub mod metrics;
+#[warn(missing_docs)]
 pub mod msg;
+#[warn(missing_docs)]
 pub mod net;
 pub mod recode;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod serve;
+#[warn(missing_docs)]
 pub mod session;
 pub mod stream;
 pub mod util;
+#[warn(missing_docs)]
 pub mod worker;
 
 pub use config::Mode;

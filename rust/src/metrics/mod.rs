@@ -19,11 +19,14 @@ pub struct StepMetrics {
     pub msgs_sent: u64,
     pub bytes_sent: u64,
     /// Messages/bytes delivered machine-locally through the fast path —
-    /// zero simulated wire time, and (in digesting mode) zero OMS disk
-    /// traffic.  Split out from `msgs_sent`/`bytes_sent` so the
-    /// O(|V|/n)-permitted saving is visible per superstep.
+    /// zero simulated wire time, and zero OMS disk traffic in *both*
+    /// shapes: the recoded digest shard and the IO-Basic local spill lane.
+    /// Split out from `msgs_sent`/`bytes_sent` so the O(|V|/n)-permitted
+    /// saving is visible per superstep in every mode.
     pub local_msgs: u64,
+    /// Bytes counterpart of [`Self::local_msgs`].
     pub local_bytes: u64,
+    /// Message records U_r received (wire + local lanes).
     pub msgs_recv: u64,
     /// Vertices on which compute()/block update ran.
     pub computed_vertices: u64,
@@ -81,6 +84,11 @@ pub struct JobMetrics {
     pub net_local_bytes: u64,
     /// Job-wide [`crate::msg::BufPool`] counters (message-spine buffers).
     pub pool: crate::msg::PoolStats,
+    /// Job-wide [`crate::msg::DigestPool`] counters (the ping-pong A_r /
+    /// local-shard arrays of recoded digesting).  `hits > 0` on any
+    /// multi-superstep digesting run means the O(|V|/n) arrays recycled
+    /// instead of reallocating.
+    pub digest_pool: crate::msg::PoolStats,
 }
 
 impl JobMetrics {

@@ -1,10 +1,13 @@
-//! Fixed-size codecs for vertex values and messages, plus the shared
-//! byte-buffer pool ([`BufPool`]) behind the zero-copy message spine.
+//! Fixed-size codecs for vertex values and messages, plus the two shared
+//! pools behind the zero-copy message spine: the byte-buffer pool
+//! ([`BufPool`]) and the typed digest-array pool ([`DigestPool`]).
 //!
 //! The paper assumes constant-size vertex-ID / value / adjacency / message
 //! types (§3.1) — so do we: every message on a stream or wire is
 //! `4 bytes target-id (LE u32) + Codec::SIZE bytes payload`, which lets the
 //! merge-sort and the in-memory A_r/A_s paths index records directly.
+//!
+//! See `DESIGN.md` (repo root) for where each pool sits on the spine.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -33,7 +36,9 @@ pub struct BufPool {
 /// Pool counters (`hits` = checkouts served from the shelf).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PoolStats {
+    /// Checkouts served from the shelf (no allocation).
     pub hits: u64,
+    /// Checkouts that had to allocate a fresh buffer.
     pub misses: u64,
 }
 
@@ -112,6 +117,83 @@ impl BufPool {
         self.shelf.lock().unwrap().len()
     }
 
+    /// Hit/miss counters since the pool was created.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Checkout/recycle pool of typed digest arrays (`Vec<M>`) — the ping-pong
+/// shards behind recoded digesting.  Each superstep needs `O(|V|/n)`-sized
+/// message arrays: U_r's `A_r`, and (with the local fast path) U_c's
+/// [`crate::worker::units::LocalDigest`] shard.  Both travel between units
+/// inside [`crate::worker::units::Incoming::Digested`] /
+/// `LocalDigest` and are recycled here once consumed, so after the first
+/// two supersteps the arrays ping-pong between U_c and U_r instead of
+/// being reallocated per step.
+///
+/// `take` hands out an array of exactly `len` elements, every slot reset
+/// to the caller's `fill` value (the combiner identity `e0`, §5) — the
+/// reset is required because the XLA block-update kernels read *all*
+/// positions of `A_r`, not only the touched ones.
+pub struct DigestPool<M> {
+    shelf: Mutex<Vec<Vec<M>>>,
+    /// Maximum arrays retained; overflow is dropped (freed) on `put`.
+    max_retained: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<M: Copy + Send + 'static> DigestPool<M> {
+    /// A pool retaining at most `max_retained` arrays.
+    pub fn new(max_retained: usize) -> Arc<Self> {
+        Arc::new(Self {
+            shelf: Mutex::new(Vec::with_capacity(max_retained.min(64))),
+            max_retained,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// Check out an array of `len` elements, all equal to `fill`
+    /// (recycled capacity when available).
+    pub fn take(&self, len: usize, fill: M) -> Vec<M> {
+        match self.shelf.lock().unwrap().pop() {
+            Some(mut v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                v.clear();
+                v.resize(len, fill);
+                v
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                vec![fill; len]
+            }
+        }
+    }
+
+    /// Recycle an array (its length is irrelevant; `take` resizes).
+    /// Zero-capacity arrays and overflow beyond the retention cap are
+    /// dropped instead of shelved.
+    pub fn put(&self, v: Vec<M>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut shelf = self.shelf.lock().unwrap();
+        if shelf.len() < self.max_retained {
+            shelf.push(v);
+        }
+    }
+
+    /// Arrays currently shelved.
+    pub fn idle(&self) -> usize {
+        self.shelf.lock().unwrap().len()
+    }
+
+    /// Hit/miss counters since the pool was created.
     pub fn stats(&self) -> PoolStats {
         PoolStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -122,8 +204,11 @@ impl BufPool {
 
 /// A fixed-size binary-encodable value.
 pub trait Codec: Sized + Copy + Send + Sync + 'static {
+    /// Encoded size in bytes (a compile-time constant, §3.1).
     const SIZE: usize;
+    /// Write the value into `out[..Self::SIZE]` (little-endian).
     fn encode(&self, out: &mut [u8]);
+    /// Read a value back from `buf[..Self::SIZE]`.
     fn decode(buf: &[u8]) -> Self;
 }
 
@@ -313,6 +398,28 @@ mod tests {
         pool.put(Vec::with_capacity(1024)); // oversized: freed, not pinned
         assert_eq!(pool.idle(), 1);
         assert!(pool.take().capacity() < 1024);
+    }
+
+    #[test]
+    fn digest_pool_recycles_and_resets() {
+        let pool: Arc<DigestPool<f32>> = DigestPool::new(2);
+        let mut a = pool.take(4, f32::INFINITY); // miss
+        assert_eq!(a, vec![f32::INFINITY; 4]);
+        a[2] = 1.5; // dirty it, then recycle
+        pool.put(a);
+        assert_eq!(pool.idle(), 1);
+        // Hit: different length, every slot reset to the new fill.
+        let b = pool.take(6, 0.0f32);
+        assert_eq!(b, vec![0.0; 6]);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        // Retention cap + zero-capacity drop mirror BufPool.
+        pool.put(Vec::with_capacity(1));
+        pool.put(Vec::with_capacity(1));
+        pool.put(Vec::with_capacity(1)); // beyond cap: dropped
+        assert_eq!(pool.idle(), 2);
+        pool.put(Vec::new());
+        assert_eq!(pool.idle(), 2);
     }
 
     #[test]

@@ -37,6 +37,8 @@ pub struct Switch {
 }
 
 impl Switch {
+    /// A shared medium transmitting at `bytes_per_sec` with a fixed
+    /// per-batch latency.
     pub fn new(bytes_per_sec: f64, latency_us: u64) -> Arc<Self> {
         Arc::new(Self {
             rate: bytes_per_sec.max(1.0),
@@ -98,12 +100,16 @@ pub enum Payload {
 /// A framed batch on the wire.
 #[derive(Debug)]
 pub struct Batch {
+    /// Sending machine.
     pub src: usize,
+    /// Superstep (or recoding phase) the batch belongs to.
     pub step: u64,
+    /// What the batch carries.
     pub payload: Payload,
 }
 
 impl Batch {
+    /// Bytes the batch occupies on the wire: a 16-byte frame + the data.
     pub fn wire_bytes(&self) -> usize {
         16 + match &self.payload {
             Payload::Data(d) | Payload::Load(d) => d.len(),
@@ -118,6 +124,7 @@ impl Batch {
 /// so the FIFO property §4 relies on still holds.
 #[derive(Clone)]
 pub struct NetSender {
+    /// This endpoint's machine index.
     pub me: usize,
     switch: Arc<Switch>,
     txs: Vec<Sender<Batch>>,
@@ -158,6 +165,7 @@ impl NetSender {
         }
     }
 
+    /// Number of machines in the network (including this one).
     pub fn peers(&self) -> usize {
         self.txs.len()
     }
@@ -180,6 +188,7 @@ impl NetSender {
 
 /// Receiving half of a machine's endpoint (owned by U_r).
 pub struct NetReceiver {
+    /// This endpoint's machine index.
     pub me: usize,
     rx: Receiver<Batch>,
 }

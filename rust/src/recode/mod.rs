@@ -13,30 +13,37 @@
 
 use crate::engine::Engine;
 use crate::error::{Error, Result};
+use crate::msg::BufPool;
 use crate::net::{self, NetReceiver, NetSender, Payload};
 use crate::stream::{merge, StreamWriter};
 use crate::worker::storage::{item_size, EdgeStreamCursor, EdgeStreamWriter, MachineStore};
 use crate::worker::Partitioning;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 const BATCH: usize = 256 * 1024;
 
 /// Batched per-destination sender used by every recoding phase.  Batches
 /// carry the phase number in the `step` field so receivers can tell a
 /// fast neighbor's phase-2 replies from their own pending phase-1 traffic.
+/// Wire blocks check out of the shared [`BufPool`] and are recycled by the
+/// receiving [`PhaseRx`], so steady-state recoding allocates nothing per
+/// exchange — the same discipline as the job-time message spine.
 struct PhaseTx {
     sender: NetSender,
     phase: u64,
     bufs: Vec<Vec<u8>>,
+    pool: Arc<BufPool>,
 }
 
 impl PhaseTx {
-    fn new(sender: NetSender, phase: u64) -> Self {
+    fn new(sender: NetSender, phase: u64, pool: Arc<BufPool>) -> Self {
         let n = sender.peers();
         Self {
             sender,
             phase,
-            bufs: vec![Vec::new(); n],
+            bufs: (0..n).map(|_| pool.take()).collect(),
+            pool,
         }
     }
 
@@ -44,15 +51,17 @@ impl PhaseTx {
         let buf = &mut self.bufs[dst];
         buf.extend_from_slice(rec);
         if buf.len() >= BATCH {
-            let b = std::mem::take(buf);
+            let b = std::mem::replace(buf, self.pool.take());
             self.sender.send(dst, self.phase, Payload::Load(b));
         }
     }
 
     fn finish(mut self) {
         for dst in 0..self.bufs.len() {
-            if !self.bufs[dst].is_empty() {
-                let b = std::mem::take(&mut self.bufs[dst]);
+            let b = std::mem::take(&mut self.bufs[dst]);
+            if b.is_empty() {
+                self.pool.put(b);
+            } else {
                 self.sender.send(dst, self.phase, Payload::Load(b));
             }
             self.sender.send(dst, self.phase, Payload::LoadEnd);
@@ -62,26 +71,30 @@ impl PhaseTx {
 
 /// Phase-aware receiver: machines drift (one can finish phase p and start
 /// sending phase p+1 while a neighbor is still collecting phase-p end
-/// tags), so out-of-phase batches are stashed, never dropped.
+/// tags), so out-of-phase batches are stashed, never dropped.  Consumed
+/// wire blocks are recycled into the shared pool.
 struct PhaseRx<'a> {
     receiver: &'a NetReceiver,
     stash: std::collections::VecDeque<crate::net::Batch>,
+    pool: Arc<BufPool>,
 }
 
 impl<'a> PhaseRx<'a> {
-    fn new(receiver: &'a NetReceiver) -> Self {
+    fn new(receiver: &'a NetReceiver, pool: Arc<BufPool>) -> Self {
         Self {
             receiver,
             stash: Default::default(),
+            pool,
         }
     }
 
-    /// Receive phase `phase` until `n` end tags, handing batches to `f`.
+    /// Receive phase `phase` until `n` end tags, handing batches to `f`
+    /// and recycling each block afterwards.
     fn drain_phase(
         &mut self,
         phase: u64,
         n: usize,
-        mut f: impl FnMut(Vec<u8>) -> Result<()>,
+        mut f: impl FnMut(&[u8]) -> Result<()>,
     ) -> Result<()> {
         let mut ends = 0;
         while ends < n {
@@ -99,7 +112,10 @@ impl<'a> PhaseRx<'a> {
             };
             match b.payload {
                 Payload::LoadEnd => ends += 1,
-                Payload::Load(data) => f(data)?,
+                Payload::Load(data) => {
+                    f(&data)?;
+                    self.pool.put(data);
+                }
                 _ => return Err(Error::CorruptStream("unexpected payload in recode".into())),
             }
         }
@@ -136,6 +152,9 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
         eng.profile.latency_us,
         eng.cfg.local_fastpath,
     );
+    // One pool for the whole preprocessing: request/reply wire blocks and
+    // reply-spill scratch recycle across machines and phases.
+    let pool = BufPool::new(4 * n + 8);
     let mut results: Vec<Option<Result<MachineStore>>> = (0..n).map(|_| None).collect();
 
     std::thread::scope(|scope| {
@@ -145,13 +164,14 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
             let rec_dir = eng.store_dir(i, "rec");
             let stream_buf = eng.cfg.stream_buf;
             let merge_k = eng.cfg.merge_k;
+            let pool = pool.clone();
             let disk = eng
                 .profile
                 .disk_bytes_per_sec
                 .map(crate::util::diskio::DiskBw::new);
             handles.push(scope.spawn(move || -> Result<MachineStore> {
                 let _dg = crate::util::diskio::register(disk.clone());
-                let mut rx = PhaseRx::new(&receiver);
+                let mut rx = PhaseRx::new(&receiver, pool.clone());
                 let _ = std::fs::remove_dir_all(&rec_dir);
                 std::fs::create_dir_all(&rec_dir)?;
 
@@ -163,7 +183,7 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
                     {
                         let parser = {
                             let store = store.clone();
-                            let mut tx = PhaseTx::new(sender.clone(), 1);
+                            let mut tx = PhaseTx::new(sender.clone(), 1, pool.clone());
                             std::thread::spawn(move || -> Result<()> {
                                 let mut se = EdgeStreamCursor::open(&store, stream_buf)?;
                                 let mut edges = Vec::new();
@@ -185,7 +205,7 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
                             })
                         };
                         let mut w = StreamWriter::create(&req_file, stream_buf)?;
-                        rx.drain_phase(1, n, |data| w.write_all(&data))?;
+                        rx.drain_phase(1, n, |data| w.write_all(data))?;
                         w.finish()?;
                         parser.join().map_err(|e| Error::WorkerPanic {
                             machine: i,
@@ -198,7 +218,7 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
                     let spills = {
                         let responder = {
                             let store = store.clone();
-                            let mut tx = PhaseTx::new(sender.clone(), 2);
+                            let mut tx = PhaseTx::new(sender.clone(), 2, pool.clone());
                             let req_file = req_file.clone();
                             std::thread::spawn(move || -> Result<()> {
                                 let mut r =
@@ -239,7 +259,7 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
                     let spills = {
                         let announcer = {
                             let store = store.clone();
-                            let mut tx = PhaseTx::new(sender.clone(), 2);
+                            let mut tx = PhaseTx::new(sender.clone(), 2, pool.clone());
                             std::thread::spawn(move || -> Result<()> {
                                 let mut se = EdgeStreamCursor::open(&store, stream_buf)?;
                                 let mut edges = Vec::new();
@@ -332,6 +352,7 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
 
 /// Receive reply records, translate the old target ID into the local array
 /// position, sort each batch by position and spill — the IMS pattern.
+/// The translation scratch buffer recycles through the phase pool.
 fn receive_sorted_replies(
     rx: &mut PhaseRx<'_>,
     n: usize,
@@ -340,8 +361,11 @@ fn receive_sorted_replies(
     dir: &Path,
 ) -> Result<Vec<PathBuf>> {
     let mut spills = Vec::new();
+    let pool = rx.pool.clone();
+    let mut out = pool.take();
     rx.drain_phase(2, n, |data| {
-        let mut out = Vec::with_capacity(data.len());
+        out.clear();
+        out.reserve(data.len());
         for rec in data.chunks_exact(rep_size) {
             let v_old = u32::from_le_bytes(rec[..4].try_into().unwrap());
             let pos = store
@@ -358,6 +382,7 @@ fn receive_sorted_replies(
         spills.push(sp);
         Ok(())
     })?;
+    pool.put(out);
     Ok(spills)
 }
 

@@ -71,7 +71,9 @@ impl Query {
 pub enum Answer {
     /// `None` = unreachable.
     Dist(Option<f32>),
+    /// Is the target reachable?
     Reach(bool),
+    /// Vertices reachable from the source (including itself).
     ReachCount(u64),
     /// The query referenced a vertex that is not in the graph.
     UnknownVertex(u32),
@@ -82,7 +84,9 @@ pub enum Answer {
 pub struct QueryResult {
     /// Admission id (returned by [`QueryServer::submit`]).
     pub id: u64,
+    /// The query as admitted.
     pub query: Query,
+    /// Its answer.
     pub answer: Answer,
     /// Submit → answered wall time (includes queueing behind earlier
     /// batches of the same drain).
@@ -118,16 +122,19 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
+    /// Set the lane width k (one of [`LANE_WIDTHS`]).
     pub fn lanes(mut self, k: usize) -> Self {
         self.lanes = k;
         self
     }
 
+    /// Set the per-batch execution mode.
     pub fn mode(mut self, m: Mode) -> Self {
         self.mode = m;
         self
     }
 
+    /// Set the per-batch superstep cap (0 = unlimited).
     pub fn max_supersteps(mut self, n: u64) -> Self {
         self.max_supersteps = n;
         self

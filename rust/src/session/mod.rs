@@ -160,10 +160,12 @@ impl GraphDBuilder {
         self
     }
 
-    /// Local-delivery fast path (default on): `dst == me` traffic bypasses
-    /// the simulated switch, and recoded digesting folds local messages
-    /// straight into the machine's own `A_r` shard.  Turn off to measure
-    /// the pre-fast-path routing (every batch through switch + OMS).
+    /// Local-delivery fast path (default on), in every mode: `dst == me`
+    /// traffic bypasses the simulated switch and the OMS files — recoded
+    /// digesting folds local messages straight into the machine's own
+    /// `A_r` shard, and the sorted-`S^I` modes route them through the
+    /// local spill lane.  Turn off to measure the pre-fast-path routing
+    /// (every batch through switch + OMS).
     pub fn local_fastpath(mut self, on: bool) -> Self {
         self.cfg.local_fastpath = on;
         self
@@ -257,6 +259,7 @@ pub struct Session {
 }
 
 impl Session {
+    /// The simulated cluster profile this session runs on.
     pub fn profile(&self) -> &ClusterProfile {
         &self.profile
     }
@@ -267,10 +270,12 @@ impl Session {
         &self.cfg
     }
 
+    /// The session's simulated DFS.
     pub fn dfs(&self) -> &Dfs {
         &self.dfs
     }
 
+    /// The session's working-directory root.
     pub fn workdir(&self) -> &Path {
         &self.cfg.workdir
     }
@@ -371,14 +376,17 @@ impl<'s> LoadedGraph<'s> {
         self.recoded.as_deref()
     }
 
+    /// Has [`Self::recode`] produced the recoded store generation?
     pub fn is_recoded(&self) -> bool {
         self.recoded.is_some()
     }
 
+    /// Was the input graph directed?
     pub fn directed(&self) -> bool {
         self.directed
     }
 
+    /// Does the input graph carry edge weights?
     pub fn weighted(&self) -> bool {
         self.weighted
     }

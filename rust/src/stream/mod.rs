@@ -10,6 +10,9 @@
 //!   from the head while computation appends at the tail.
 //! * [`merge`] — k-way external merge-sort (k = 1000) used to combine OMS
 //!   files before sending and to build the sorted IMS (§3.3.1–3.3.2).
+//!   The same sorted-run format backs the local spill lane's `lsp_*`
+//!   files (`dst == me` traffic in the sorted-`S^I` modes), which U_r
+//!   feeds into the `S^I` merge alongside the remote spills.
 
 pub mod merge;
 pub mod reader;

@@ -21,11 +21,14 @@ pub use storage::{EdgeStreamWriter, MachineStore};
 /// and array position are computable from the ID alone (§5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Partitioning {
+    /// Fibonacci multiplicative hash over arbitrary (sparse) input IDs.
     Hashed,
+    /// `id mod n` over dense recoded IDs (§5).
     Modulo,
 }
 
 impl Partitioning {
+    /// Which machine owns vertex `id` in an `n`-machine cluster.
     #[inline]
     pub fn machine_of(&self, id: u32, n: usize) -> usize {
         match self {

@@ -28,11 +28,15 @@ pub const fn item_size(weighted: bool) -> usize {
 /// Metadata + in-memory state array of one machine's graph partition.
 #[derive(Clone, Debug)]
 pub struct MachineStore {
+    /// Store directory (`<workdir>/m<i>/<store>/`).
     pub dir: PathBuf,
+    /// This machine's index.
     pub machine: usize,
+    /// Cluster size n.
     pub num_machines: usize,
     /// Total vertices across the cluster.
     pub total_vertices: u64,
+    /// Does `se.bin` carry per-edge weights?
     pub weighted: bool,
     /// Dense recoded IDs? (implicit `pos·n + i`.)
     pub recoded: bool,
@@ -40,14 +44,17 @@ pub struct MachineStore {
     /// the *old* IDs (kept for reporting results in the input ID space);
     /// it may be empty if the input was already dense.
     pub ids: Vec<u32>,
+    /// Out-degrees, aligned with positions (and `ids` when present).
     pub degs: Vec<u32>,
 }
 
 impl MachineStore {
+    /// Path of the edge stream `S^E`.
     pub fn se_path(&self) -> PathBuf {
         self.dir.join("se.bin")
     }
 
+    /// Vertices assigned to this machine, |V(W)|.
     pub fn local_vertices(&self) -> usize {
         self.degs.len()
     }
@@ -170,6 +177,7 @@ pub struct EdgeStreamWriter {
 }
 
 impl EdgeStreamWriter {
+    /// Start writing `se.bin` under `store_dir`.
     pub fn create(store_dir: &Path, weighted: bool, buf: usize) -> Result<Self> {
         Ok(Self {
             w: StreamWriter::create(&store_dir.join("se.bin"), buf)?,
@@ -178,6 +186,7 @@ impl EdgeStreamWriter {
         })
     }
 
+    /// Append one adjacency item (weight ignored on unweighted stores).
     #[inline]
     pub fn push(&mut self, nbr: u32, weight: f32) -> Result<()> {
         self.w.write_all(&nbr.to_le_bytes())?;
@@ -188,10 +197,12 @@ impl EdgeStreamWriter {
         Ok(())
     }
 
+    /// Items written so far.
     pub fn items(&self) -> u64 {
         self.items
     }
 
+    /// Flush and close; returns the item count.
     pub fn finish(self) -> Result<u64> {
         self.w.finish()?;
         Ok(self.items)
@@ -213,6 +224,7 @@ pub struct EdgeStreamCursor {
 }
 
 impl EdgeStreamCursor {
+    /// Open the store's `S^E` with a `buf`-byte read buffer.
     pub fn open(store: &MachineStore, buf: usize) -> Result<Self> {
         Ok(Self {
             r: StreamReader::open(&store.se_path(), buf)?,

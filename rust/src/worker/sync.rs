@@ -46,6 +46,7 @@ struct State {
 }
 
 impl MachineSync {
+    /// Fresh coordination state for one machine of an `n`-machine job.
     pub fn new(num_machines: usize) -> Arc<Self> {
         Arc::new(Self {
             state: Mutex::new(State {
@@ -137,8 +138,14 @@ impl MachineSync {
     /// Sleep until new OMS files may exist (notified on every publish);
     /// bounded wait keeps the sender responsive to progress it can't
     /// observe through this condvar (file closes inside SplittableStream).
+    /// Panics when the machine is poisoned — the sender's scan loop polls
+    /// through here, so this is where it observes a dead sibling instead
+    /// of spinning forever on a step that will never complete.
     pub fn idle_wait(&self) {
         let st = self.state.lock().unwrap();
+        if let Some(cause) = &st.failed {
+            panic!("sibling unit failed: {cause}");
+        }
         let _ = self
             .cond
             .wait_timeout(st, std::time::Duration::from_micros(500))
@@ -187,6 +194,7 @@ struct RvState<T, R> {
 }
 
 impl<T, R: Clone> Rendezvous<T, R> {
+    /// An `n`-party barrier.
     pub fn new(n: usize) -> Arc<Self> {
         Arc::new(Self {
             n,

@@ -22,23 +22,32 @@
 //!   synchronizes with the other receiving units and unblocks sending of
 //!   the next superstep.
 //!
-//! **The zero-copy message spine.**  Three properties keep the per-record
+//! **The zero-copy message spine.**  Four properties keep the per-record
 //! cost of this path minimal: (1) every combining loop is monomorphized
 //! over the program's [`Combiner`] type, so folds inline (no virtual call
 //! per record); (2) every byte buffer — outbox batches, OMS file
 //! reads/writes, wire payloads, U_r spill/digest — is checked out of the
-//! job's [`BufPool`] and recycled, so steady state allocates nothing per
-//! batch; (3) messages whose destination is the sending machine take the
-//! local-delivery fast path: they bypass the simulated switch, and in
-//! recoded digesting mode are folded straight into the machine's own
-//! `A_r` shard ([`LocalDigest`]) without ever being encoded to an OMS
-//! file — exactly the saving the O(|V|/n) analysis permits.
+//! job's [`BufPool`] and recycled, and the `O(|V|/n)` digest *message*
+//! arrays ping-pong through the job's [`DigestPool`], so steady state
+//! allocates nothing per batch and no message array per superstep (the
+//! 32×-smaller received bitmaps are still fresh each step — see ROADMAP);
+//! (3) in recoded digesting mode,
+//! messages whose destination is the sending machine bypass the simulated
+//! switch and are folded straight into the machine's own `A_r` shard
+//! ([`LocalDigest`]) without ever being encoded to an OMS file; (4) in the
+//! sorted-`S^I` modes (IO-Basic, recoded-without-combiner), the same
+//! `dst == me` traffic takes the **local spill lane** ([`LocalSpill`]):
+//! U_c sorts and spills it to local files directly, and U_r merges those
+//! files with the remote spills into `S^I` — no OMS file, no encode →
+//! wire → decode round trip, no switch transit.  Exactly the saving the
+//! O(|V|/n) analysis permits, now in every execution mode (see
+//! `DESIGN.md`).
 
 use crate::api::{BlockCtx, Combiner, Context, Edge, VertexProgram};
 use crate::config::{JobConfig, Mode};
 use crate::error::{Error, Result};
 use crate::metrics::{MachineMetrics, StepMetrics};
-use crate::msg::{encode_msg, msg_rec_size, rec_payload, rec_target, BufPool, Codec};
+use crate::msg::{encode_msg, msg_rec_size, rec_payload, rec_target, BufPool, Codec, DigestPool};
 use crate::net::{NetReceiver, NetSender, Payload};
 use crate::runtime::KernelSet;
 use crate::stream::{merge, SplittableStream, StreamReader, StreamWriter};
@@ -55,11 +64,21 @@ use std::sync::{Arc, Condvar, Mutex};
 /// Messages of one finished superstep, handed from U_r to U_c.
 pub enum Incoming<M> {
     /// IO-Basic: a single sorted message stream `S^I` on disk.
-    Sorted { path: PathBuf, msgs: u64 },
+    Sorted {
+        /// Path of the merged `S^I` file.
+        path: PathBuf,
+        /// Message records in the stream.
+        msgs: u64,
+    },
     /// Recoded: combined messages in memory (`A_r`), plus a received
     /// bitmap (strictly more precise than the paper's `A_r[pos] != e0`
     /// convention; same asymptotic memory).
-    Digested { ar: Vec<M>, bits: BitSet },
+    Digested {
+        /// The combined message array, one slot per local position.
+        ar: Vec<M>,
+        /// Which positions actually received a message.
+        bits: BitSet,
+    },
 }
 
 /// Step-keyed blocking handoff queue between units (one deposit per step;
@@ -70,6 +89,7 @@ pub struct StepQueue<T> {
 }
 
 impl<T: Send> StepQueue<T> {
+    /// An empty queue.
     pub fn new() -> Arc<Self> {
         Arc::new(Self {
             q: Mutex::new(VecDeque::new()),
@@ -77,11 +97,13 @@ impl<T: Send> StepQueue<T> {
         })
     }
 
+    /// Deposit `item` for `step` (exactly one deposit per step).
     pub fn put(&self, step: u64, item: T) {
         self.q.lock().unwrap().push_back((step, item));
         self.cond.notify_all();
     }
 
+    /// Block until the deposit for `step` arrives, then consume it.
     pub fn take(&self, step: u64) -> T {
         let mut q = self.q.lock().unwrap();
         loop {
@@ -111,11 +133,15 @@ pub type IncomingQueue<M> = StepQueue<Incoming<M>>;
 /// by U_c straight into the machine's own `A_r` shard (positions of *this*
 /// machine's vertices), bypassing OMS files and the switch entirely.
 pub struct LocalDigest<M> {
+    /// The machine's own `A_r` shard (one slot per local position),
+    /// checked out of the job's [`DigestPool`] and recycled by U_r.
     pub ar: Vec<M>,
+    /// Which positions the fold actually touched.
     pub bits: BitSet,
     /// Positions touched this superstep, in first-touch order — U_r folds
     /// only these, so a sparse frontier costs O(touched), not O(|V|/n).
     pub touched: Vec<u32>,
+    /// Messages folded into the shard.
     pub msgs: u64,
 }
 
@@ -127,6 +153,23 @@ pub struct LocalDigest<M> {
 /// machine's own end tag is only sent after `compute_done`).
 pub type LocalShard<M> = StepQueue<LocalDigest<M>>;
 
+/// One superstep's local spill lane output (IO-Basic / non-digesting
+/// recoded): `dst == me` messages that U_c sorted and spilled straight to
+/// local files, bypassing the Outbox's OMS, U_s, and the switch entirely.
+/// U_r merges these files together with the remote spills into `S^I`.
+pub struct LocalSpill {
+    /// Sorted spill files (each ≤ℬ of records), in write order.
+    pub paths: Vec<PathBuf>,
+    /// Message records across the files.
+    pub msgs: u64,
+}
+
+/// Step-ordered handoff of [`LocalSpill`]s U_c → U_r — the sorted-`S^I`
+/// modes' counterpart of [`LocalShard`], with the same ordering argument:
+/// U_c deposits before publishing `compute_done`, and U_r only looks after
+/// the `n` end tags (our own end tag is sent after `compute_done`).
+pub type SpillLane = StepQueue<LocalSpill>;
+
 /// Is the digesting local fast path on for this job?  Requires recoded
 /// digesting (positions are computable from IDs), the fast path enabled,
 /// and the real OMS path (the stall ablation measures stalls unmodified).
@@ -134,25 +177,42 @@ fn local_digest_active<P: VertexProgram>(cfg: &JobConfig) -> bool {
     cfg.mode == Mode::Recoded && P::Comb::ENABLED && cfg.local_fastpath && !cfg.disable_oms
 }
 
+/// Is the IO-Basic local spill lane on for this job?  Active in exactly
+/// the modes that build a sorted `S^I` (everything [`local_digest_active`]
+/// does not cover), under the same `local_fastpath` knob and the same
+/// real-OMS requirement.  At most one of the two lanes is live per job.
+fn local_spill_active<P: VertexProgram>(cfg: &JobConfig) -> bool {
+    !(cfg.mode == Mode::Recoded && P::Comb::ENABLED) && cfg.local_fastpath && !cfg.disable_oms
+}
+
 /// Global (inter-machine) control report deposited by each U_c per step.
 pub struct UcReport<A> {
+    /// Messages this machine emitted (wire + local).
     pub msgs_sent: u64,
+    /// Vertices still active after the superstep.
     pub active: u64,
+    /// This machine's aggregator contribution.
     pub agg: A,
 }
 
 /// Leader verdict broadcast back to every U_c.
 #[derive(Clone)]
 pub struct UcDecision<A> {
+    /// Does the job continue past this superstep?
     pub continues: bool,
+    /// The globally merged aggregate.
     pub agg: Arc<A>,
 }
 
 /// Everything shared across the machines of one job.
 pub struct JobGlobal<P: VertexProgram> {
+    /// The vertex program.
     pub program: Arc<P>,
+    /// Job tunables (mode, ℬ, b, fast-path knob, …).
     pub cfg: JobConfig,
+    /// Number of machines.
     pub n: usize,
+    /// Total vertices |V| across the cluster.
     pub total_vertices: u64,
     /// max over machines of |V(W)| — sizes A_s (§5). Note recoded IDs are
     /// `n·pos + i`, so with uneven partitions they range up to
@@ -163,7 +223,9 @@ pub struct JobGlobal<P: VertexProgram> {
     /// Absolute superstep number of local step 0 (0 for fresh jobs,
     /// `ckpt_step + 1` when resuming).
     pub step_base: u64,
+    /// The early aggregator/control barrier among compute units.
     pub uc_rv: Arc<Rendezvous<UcReport<P::Agg>, UcDecision<P::Agg>>>,
+    /// The late transmission-completion barrier among receiving units.
     pub ur_rv: Arc<Rendezvous<(), ()>>,
     /// Checkpoint barrier: no machine may publish the DONE marker before
     /// every machine's checkpoint file is durable (§3.4).
@@ -171,14 +233,23 @@ pub struct JobGlobal<P: VertexProgram> {
     /// Job-wide byte-buffer pool: outbox batches, OMS file reads/writes,
     /// wire payloads, and U_r spill/digest buffers all recycle through it.
     pub pool: Arc<BufPool>,
+    /// Job-wide digest-array pool: U_r's `A_r` and U_c's [`LocalDigest`]
+    /// shard ping-pong through it instead of reallocating `O(|V|/n)`
+    /// arrays every superstep.
+    pub digest_pool: Arc<DigestPool<P::Msg>>,
 }
 
 /// Per-machine output returned by [`run_machine`].
 pub struct MachineOutput<P: VertexProgram> {
+    /// Which machine produced this output.
     pub machine: usize,
+    /// Input-space vertex IDs, aligned with `values`.
     pub ids: Vec<u32>,
+    /// Final vertex values.
     pub values: Vec<P::Value>,
+    /// Per-superstep counters for this machine.
     pub metrics: MachineMetrics,
+    /// Supersteps this machine ran.
     pub supersteps: u64,
     /// Globally merged aggregate of the final superstep.
     pub final_agg: Arc<P::Agg>,
@@ -189,10 +260,12 @@ pub struct MachineOutput<P: VertexProgram> {
 pub struct MetricsSink(Arc<Mutex<Vec<StepMetrics>>>);
 
 impl MetricsSink {
+    /// An empty sink.
     pub fn new() -> Self {
         Self(Arc::new(Mutex::new(Vec::new())))
     }
 
+    /// Run `f` over the (lazily created) entry for `step`.
     pub fn with_step(&self, step: u64, f: impl FnOnce(&mut StepMetrics)) {
         let mut v = self.0.lock().unwrap();
         while v.len() <= step as usize {
@@ -205,6 +278,7 @@ impl MetricsSink {
         f(&mut v[step as usize]);
     }
 
+    /// Clone out all per-step entries recorded so far.
     pub fn snapshot(&self) -> Vec<StepMetrics> {
         self.0.lock().unwrap().clone()
     }
@@ -240,9 +314,12 @@ pub fn run_machine_resumed<P: VertexProgram>(
     let msync = MachineSync::new(n);
     let incoming: Arc<IncomingQueue<P::Msg>> = IncomingQueue::new();
     let sink = MetricsSink::new();
-    // The digesting fast path's U_c → U_r handoff lane, when active.
+    // The fast path's U_c → U_r handoff lane, when active: the digesting
+    // shard in recoded-combining mode, the spill lane in sorted-S^I modes.
     let local_shard: Option<Arc<LocalShard<P::Msg>>> =
         local_digest_active::<P>(&global.cfg).then(LocalShard::new);
+    let local_spill: Option<Arc<SpillLane>> =
+        local_spill_active::<P>(&global.cfg).then(SpillLane::new);
 
     // One OMS per destination machine, living for the whole job; file
     // write buffers recycle through the job pool.
@@ -288,10 +365,12 @@ pub fn run_machine_resumed<P: VertexProgram>(
             let job_dir = job_dir.clone();
             let disk = disk.clone();
             let shard = local_shard.clone();
+            let spill = local_spill.clone();
             scope.spawn(move || {
                 let _dg = crate::util::diskio::register(disk);
                 let r = receiver_unit(
-                    global, me, local, receiver, msync.clone(), incoming, shard, job_dir, sink,
+                    global, me, local, receiver, msync.clone(), incoming, shard, spill, job_dir,
+                    sink,
                 );
                 if let Err(e) = &r {
                     eprintln!("[graphd] U_r of machine {me} failed: {e}");
@@ -304,21 +383,35 @@ pub fn run_machine_resumed<P: VertexProgram>(
         let uc_out = {
             let _dg = crate::util::diskio::register(disk.clone());
             compute_unit(
-                global, store, init_values, init_halted, init_incoming, oms, msync, incoming,
-                local_shard, sender, &sink,
+                global, store, init_values, init_halted, init_incoming, oms, msync.clone(),
+                incoming, local_shard, local_spill, sender, &sink,
             )
         };
+        if let Err(e) = &uc_out {
+            // Poison the machine like U_s/U_r do: siblings blocked on the
+            // *sync state* panic instead of spinning on a step that will
+            // never complete.  (At n=1 this fully unwinds — U_s dies, the
+            // last senders drop, U_r's recv panics.  At n>1 a machine
+            // failure still wedges peers at the rendezvous barriers, a
+            // pre-existing limitation shared with U_s/U_r failures; see
+            // ROADMAP "distributed failure propagation".)
+            eprintln!("[graphd] U_c of machine {me} failed: {e}");
+            msync.fail(format!("U_c: {e}"));
+        }
 
-        us_handle.join().map_err(|e| Error::WorkerPanic {
+        // Join both siblings first, but report U_c's *typed* error ahead
+        // of the opaque panic the poisoning induces in them.
+        let us_res = us_handle.join();
+        let ur_res = ur_handle.join();
+        let (ids, values, peak_state, supersteps, final_agg) = uc_out?;
+        us_res.map_err(|e| Error::WorkerPanic {
             machine: me,
             cause: format!("U_s: {e:?}"),
         })??;
-        ur_handle.join().map_err(|e| Error::WorkerPanic {
+        ur_res.map_err(|e| Error::WorkerPanic {
             machine: me,
             cause: format!("U_r: {e:?}"),
         })??;
-
-        let (ids, values, peak_state, supersteps, final_agg) = uc_out?;
         let metrics = MachineMetrics {
             machine: me,
             steps: sink.snapshot(),
@@ -582,6 +675,18 @@ pub fn combine_in_memory<M: Codec, C: Combiner<M>>(
     Ok(out)
 }
 
+/// The decode → combine → encode payload fold used wherever a merge
+/// combines equal-key record runs (U_s's pre-send combining and U_r's
+/// spill-lane `S^I` merge share it, so the two paths cannot diverge).
+fn payload_fold<M: Codec, C: Combiner<M>>(comb: &C) -> impl FnMut(&mut [u8], &[u8]) + '_ {
+    move |acc, pay| {
+        let mut a = M::decode(acc);
+        let b = M::decode(pay);
+        comb.combine(&mut a, &b);
+        a.encode(acc);
+    }
+}
+
 /// IO-Basic pre-send combining: in-memory sort of each ≤ℬ file, k-way
 /// merge, one combining pass (§3.3.1).  Monomorphized over the combiner
 /// like [`combine_in_memory`]; scratch and output buffers are pooled.
@@ -613,12 +718,7 @@ pub fn combine_by_mergesort<M: Codec, C: Combiner<M>>(
         merge_k,
         buf,
         tmp,
-        |acc, pay| {
-            let mut a = M::decode(acc);
-            let b = M::decode(pay);
-            comb.combine(&mut a, &b);
-            a.encode(acc);
-        },
+        payload_fold::<M, C>(comb),
         |rec| {
             out.extend_from_slice(rec);
             Ok(())
@@ -641,6 +741,7 @@ fn receiver_unit<P: VertexProgram>(
     msync: Arc<MachineSync>,
     incoming: Arc<IncomingQueue<P::Msg>>,
     local_shard: Option<Arc<LocalShard<P::Msg>>>,
+    local_spill: Option<Arc<SpillLane>>,
     job_dir: PathBuf,
     sink: MetricsSink,
 ) -> Result<()> {
@@ -660,7 +761,9 @@ fn receiver_unit<P: VertexProgram>(
         let mut ar: Vec<P::Msg> = Vec::new();
         let mut bits = BitSet::new(local_vertices);
         if recoded_digest {
-            ar = vec![comb.identity(); local_vertices];
+            // Pooled: after the first couple of supersteps this is a
+            // recycled array, not a fresh O(|V|/n) allocation.
+            ar = global.digest_pool.take(local_vertices, comb.identity());
         }
 
         while ends < n {
@@ -685,10 +788,8 @@ fn receiver_unit<P: VertexProgram>(
                         }
                     } else {
                         // §3.3.2: sort the batch, spill to disk.
-                        merge::sort_records(&mut data, rec_size);
                         let sp = job_dir.join(format!("imsp_{step}_{}", spills.len()));
-                        std::fs::write(&sp, &data)?;
-                        crate::util::diskio::charge(data.len());
+                        write_sorted_spill(&sp, &mut data, rec_size)?;
                         spills.push(sp);
                     }
                     // Wire payloads recycle into the job pool either way.
@@ -715,6 +816,19 @@ fn receiver_unit<P: VertexProgram>(
                     bits.set(pos, true);
                 }
             }
+            // The shard's array ping-pongs back through the pool.
+            global.digest_pool.put(ld.ar);
+        }
+
+        // Local spill lane (sorted-S^I modes): U_c deposited its sorted
+        // `lsp_*` files before `compute_done`, so — by the same end-tag
+        // argument as the digest shard — the deposit is present by now.
+        // The files merge into S^I exactly like remote spills.
+        let mut local_paths: Vec<PathBuf> = Vec::new();
+        if let Some(lane) = &local_spill {
+            let ls = lane.take(step);
+            msgs_recv += ls.msgs;
+            local_paths = ls.paths;
         }
 
         let inc = if recoded_digest {
@@ -722,17 +836,50 @@ fn receiver_unit<P: VertexProgram>(
         } else {
             let si = job_dir.join(format!("si_{step}"));
             let mut w = StreamWriter::create(&si, global.cfg.stream_buf)?;
-            merge::merge_streams(
-                &spills,
-                rec_size,
-                global.cfg.merge_k,
-                global.cfg.stream_buf,
-                &job_dir,
-                |rec| w.write_all(rec),
-            )?;
+            let all_spills: Vec<PathBuf> = spills
+                .iter()
+                .chain(local_paths.iter())
+                .cloned()
+                .collect();
+            if P::Comb::ENABLED && local_spill.is_some() {
+                // Combine equal-key runs while building S^I: local spill
+                // records arrive raw (the lane skips U_s's pre-send
+                // combining), and equal targets from different machines'
+                // batches fold here too — S^I stays O(distinct targets),
+                // not O(messages).  Monomorphized like every other fold.
+                // Gated on the lane so `local_fastpath(false)` restores
+                // the pre-fast-path routing bit-for-bit.
+                merge::merge_combine(
+                    &all_spills,
+                    rec_size,
+                    global.cfg.merge_k,
+                    global.cfg.stream_buf,
+                    &job_dir,
+                    payload_fold::<P::Msg, P::Comb>(&comb),
+                    |rec| w.write_all(rec),
+                )?;
+            } else {
+                merge::merge_streams(
+                    &all_spills,
+                    rec_size,
+                    global.cfg.merge_k,
+                    global.cfg.stream_buf,
+                    &job_dir,
+                    |rec| w.write_all(rec),
+                )?;
+            }
             w.finish()?;
             for sp in &spills {
                 let _ = std::fs::remove_file(sp);
+            }
+            // Parity with kept OMS files: retained for observation when
+            // `keep_oms_for_recovery` is set (like the OMS retention, the
+            // next job's job-dir wipe reclaims them — no reader exists in
+            // ft/ yet); otherwise gc them too.
+            if !global.cfg.keep_oms_for_recovery {
+                for sp in &local_paths {
+                    let _ = std::fs::remove_file(sp);
+                }
             }
             Incoming::Sorted {
                 path: si,
@@ -849,7 +996,49 @@ struct Outbox<'a, M: Codec, C: Combiner<M>> {
     /// machine's own vertices fold straight into the local `A_r` shard —
     /// no encode, no OMS file, no switch.
     local: Option<LocalDigest<M>>,
+    /// Local spill lane (sorted-S^I modes): messages to this machine's own
+    /// vertices are encoded into a pooled buffer and sorted-spilled to
+    /// `lsp_*` files at ℬ boundaries — no OMS file, no switch, no
+    /// encode → wire → decode round trip, no U_r re-sort.
+    spill: Option<SpillState>,
     pool: &'a BufPool,
+}
+
+/// The Outbox's local spill lane state (see [`LocalSpill`]).
+struct SpillState {
+    dir: PathBuf,
+    /// Spill-file size bound — the same ℬ the OMS files use.
+    cap: usize,
+    buf: Vec<u8>,
+    paths: Vec<PathBuf>,
+    msgs: u64,
+    /// A flush failure deferred out of the infallible `send` hot path;
+    /// surfaced by [`Outbox::take_spill`] at end of superstep.
+    err: Option<Error>,
+}
+
+impl SpillState {
+    /// Sort the pending records and write them out as one spill file.
+    fn flush(&mut self, rec_size: usize, step: u64) -> Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("lsp_{step}_{}", self.paths.len()));
+        write_sorted_spill(&path, &mut self.buf, rec_size)?;
+        self.paths.push(path);
+        self.buf.clear();
+        Ok(())
+    }
+}
+
+/// Sort one batch of records and persist it as a spill file, charging the
+/// simulated disk — shared by U_r's received-batch spills (`imsp_*`) and
+/// the local spill lane (`lsp_*`).
+fn write_sorted_spill(path: &std::path::Path, data: &mut Vec<u8>, rec_size: usize) -> Result<()> {
+    merge::sort_records(data, rec_size);
+    std::fs::write(path, &data[..])?;
+    crate::util::diskio::charge(data.len());
+    Ok(())
 }
 
 /// Outbox per-destination batch size before an OMS append (bytes).
@@ -877,6 +1066,26 @@ impl<'a, M: Codec, C: Combiner<M>> Outbox<'a, M, C> {
                     ld.touched.push(pos as u32);
                 }
                 ld.msgs += 1;
+                return;
+            }
+            if let Some(sp) = &mut self.spill {
+                // Local spill lane: encode once into the lane buffer;
+                // sorted spill files go straight to U_r's S^I merge.
+                // A flush failure is deferred (not panicked) so the I/O
+                // error propagates through `take_spill`; once it is set
+                // the superstep is doomed, so further records are dropped
+                // instead of growing the buffer without bound.
+                if sp.err.is_some() {
+                    return;
+                }
+                encode_msg(target, &m, &mut sp.buf);
+                sp.msgs += 1;
+                if sp.buf.len() + self.rec_size > sp.cap {
+                    if let Err(e) = sp.flush(self.rec_size, self.step) {
+                        sp.err = Some(e);
+                        sp.buf.clear();
+                    }
+                }
                 return;
             }
         }
@@ -928,6 +1137,32 @@ impl<'a, M: Codec, C: Combiner<M>> Outbox<'a, M, C> {
             }
         }
     }
+
+    /// Close out the local spill lane for this superstep: spill the final
+    /// partial buffer, recycle it, and hand the file set back for the
+    /// U_c → U_r deposit.
+    fn take_spill(&mut self) -> Result<Option<LocalSpill>> {
+        match self.spill.take() {
+            None => Ok(None),
+            Some(mut sp) => {
+                if let Some(e) = sp.err.take() {
+                    // The superstep is failing: gc the spill files that
+                    // did land and recycle the buffer before surfacing.
+                    for p in &sp.paths {
+                        let _ = std::fs::remove_file(p);
+                    }
+                    self.pool.put(sp.buf);
+                    return Err(e);
+                }
+                sp.flush(self.rec_size, self.step)?;
+                self.pool.put(sp.buf);
+                Ok(Some(LocalSpill {
+                    paths: sp.paths,
+                    msgs: sp.msgs,
+                }))
+            }
+        }
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -941,6 +1176,7 @@ fn compute_unit<P: VertexProgram>(
     msync: Arc<MachineSync>,
     incoming: Arc<IncomingQueue<P::Msg>>,
     local_shard: Option<Arc<LocalShard<P::Msg>>>,
+    local_spill: Option<Arc<SpillLane>>,
     mut stall_sender: NetSender,
     sink: &MetricsSink,
 ) -> UcResult<P> {
@@ -985,6 +1221,8 @@ fn compute_unit<P: VertexProgram>(
     let as_cap = global.max_local + 1;
     let digesting = cfg.mode == Mode::Recoded && P::Comb::ENABLED;
     let fast_digest = local_shard.is_some();
+    let fast_spill = local_spill.is_some();
+    let job_dir = store.dir.join("job");
     let peak_state = (vals.len() * P::Value::SIZE) as u64
         + store.state_bytes()
         + (local as u64 / 8)
@@ -1038,10 +1276,18 @@ fn compute_unit<P: VertexProgram>(
             msgs_sent: 0,
             comb: P::Comb::default(),
             local: fast_digest.then(|| LocalDigest {
-                ar: vec![comb.identity(); local],
+                ar: global.digest_pool.take(local, comb.identity()),
                 bits: BitSet::new(local),
                 touched: Vec::new(),
                 msgs: 0,
+            }),
+            spill: fast_spill.then(|| SpillState {
+                dir: job_dir.clone(),
+                cap: cfg.oms_file_cap,
+                buf: pool.take(),
+                paths: Vec::new(),
+                msgs: 0,
+                err: None,
             }),
             pool,
         };
@@ -1049,16 +1295,18 @@ fn compute_unit<P: VertexProgram>(
         if digesting {
             let (sums, bits) = match inc {
                 Some(Incoming::Digested { ar, bits }) => (ar, bits),
-                None => (vec![comb.identity(); local], BitSet::new(local)),
+                None => (global.digest_pool.take(local, comb.identity()), BitSet::new(local)),
                 Some(Incoming::Sorted { .. }) => {
                     return Err(Error::Other("sorted incoming in recoded mode".into()))
                 }
             };
             recoded_pass::<P>(
                 program, &kern, &store, cfg, abs_step, global.total_vertices, &global_agg,
-                &mut local_agg, &mut vals, &mut halted, sums, bits, &mut out, &mut computed,
+                &mut local_agg, &mut vals, &mut halted, &sums, bits, &mut out, &mut computed,
                 sink,
             )?;
+            // A_r consumed: ping-pong it back for a later superstep.
+            global.digest_pool.put(sums);
         } else {
             let mut cursor = match inc {
                 Some(Incoming::Sorted { path, .. }) => MsgCursor::open(&path, cfg.stream_buf)?,
@@ -1078,11 +1326,13 @@ fn compute_unit<P: VertexProgram>(
         out.flush_batches()?;
         out.flush_stall();
         let local_digest = out.local.take();
+        let spill_out = out.take_spill()?;
         drop(out);
 
-        // Hand the locally-digested shard to U_r *before* publishing
-        // compute_done: our own end tag (which U_r counts) can only be
-        // sent after the watermark below, so U_r never misses the deposit.
+        // Hand the locally-digested shard / spill files to U_r *before*
+        // publishing compute_done: our own end tag (which U_r counts) can
+        // only be sent after the watermark below, so U_r never misses the
+        // deposit.
         if let Some(ld) = local_digest {
             sink.with_step(step, |m| {
                 m.local_msgs += ld.msgs;
@@ -1092,6 +1342,16 @@ fn compute_unit<P: VertexProgram>(
                 .as_ref()
                 .expect("local digest without a shard lane")
                 .put(step, ld);
+        }
+        if let Some(ls) = spill_out {
+            sink.with_step(step, |m| {
+                m.local_msgs += ls.msgs;
+                m.local_bytes += ls.msgs * rec_size as u64;
+            });
+            local_spill
+                .as_ref()
+                .expect("local spill without a lane")
+                .put(step, ls);
         }
 
         // Finalize this superstep's OMS files; publish watermarks.
@@ -1244,7 +1504,9 @@ fn per_vertex_pass<P: VertexProgram>(
 }
 
 /// Recoded-mode pass fed by the digested A_r: vectorized block update (XLA
-/// kernels) with scalar per-vertex fallback.
+/// kernels) with scalar per-vertex fallback.  `sums` is borrowed so the
+/// caller can recycle the array through the job's [`DigestPool`] after the
+/// pass.
 #[allow(clippy::too_many_arguments)]
 fn recoded_pass<P: VertexProgram>(
     program: &P,
@@ -1257,7 +1519,7 @@ fn recoded_pass<P: VertexProgram>(
     local_agg: &mut P::Agg,
     vals: &mut Vec<P::Value>,
     halted: &mut BitSet,
-    sums: Vec<P::Msg>,
+    sums: &[P::Msg],
     bits: BitSet,
     out: &mut Outbox<'_, P::Msg, P::Comb>,
     computed: &mut u64,
@@ -1271,7 +1533,7 @@ fn recoded_pass<P: VertexProgram>(
             num_vertices: nv,
             vals,
             degs: &store.degs,
-            sums: &sums,
+            sums,
             halted,
             out_base: &mut out_base,
             global_agg,

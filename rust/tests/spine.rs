@@ -1,6 +1,8 @@
 //! Integration tests for the zero-copy message spine: the local-delivery
-//! fast path (wire-vs-local byte split, value equivalence with the switch
-//! path), pooled buffers, and checkpoint/resume on the fast-path engine.
+//! fast path in both shapes — the recoded `A_r` fold and the IO-Basic
+//! local spill lane — (wire-vs-local byte split, value equivalence with
+//! the switch path), pooled buffers + digest-array ping-pong, and
+//! checkpoint/resume on the fast-path engine.
 
 use graphd::algos::{PageRank, Sssp};
 use graphd::config::Mode;
@@ -107,8 +109,76 @@ fn fastpath_matches_switch_path_multi_machine() {
     let _ = std::fs::remove_dir_all(&d);
 }
 
-/// Basic (non-digesting) mode: local traffic still flows through OMS
-/// files, but switch transit is skipped — results must be unchanged.
+/// IO-Basic at n = 1 with the spill lane: *every* message rides the local
+/// spill lane straight into the S^I merge, so the job must push zero
+/// bytes through the simulated switch — and still compute the right
+/// answer (SSSP min-folds are order-free, so equality is exact).
+#[test]
+fn basic_mode_n1_spill_lane_zeroes_wire_bytes() {
+    let d = wd("basic_n1");
+    let g = generator::uniform(200, 1200, true, 11).with_unit_weights();
+    let session = GraphD::builder().machines(1).workdir(&d).build().unwrap();
+    let graph = session.load(GraphSource::InMemory(&g)).unwrap();
+
+    let fast = graph.run(Arc::new(Sssp::new(0))).unwrap();
+    assert_eq!(
+        fast.metrics.net_wire_bytes, 0,
+        "n=1 IO-Basic with the spill lane must not touch the switch"
+    );
+    assert!(fast.metrics.net_local_bytes > 0, "local traffic is counted");
+    let local_msgs: u64 = fast
+        .metrics
+        .machines
+        .iter()
+        .flat_map(|m| m.steps.iter())
+        .map(|s| s.local_msgs)
+        .sum();
+    assert!(local_msgs > 0, "spill-lane messages show up as local");
+
+    let slow = graph
+        .job(Arc::new(Sssp::new(0)))
+        .local_fastpath(false)
+        .run()
+        .unwrap();
+    assert!(slow.metrics.net_wire_bytes > 0);
+    assert_eq!(slow.metrics.net_local_bytes, 0);
+    assert_eq!(fast.values_by_id(), slow.values_by_id());
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+/// Multi-machine IO-Basic SSSP: the spill lane must change only the
+/// routing of `dst == me` traffic, never the results (exactly — MIN is
+/// order-free), and must cut wire bytes (mirrors the recoded case above).
+#[test]
+fn basic_mode_spill_lane_matches_switch_path_multi_machine() {
+    let d = wd("basic_multi");
+    let g = generator::uniform(300, 2400, true, 23).with_unit_weights();
+    let session = GraphD::builder().machines(3).workdir(&d).build().unwrap();
+    let graph = session.load(GraphSource::InMemory(&g)).unwrap();
+
+    let on = graph.run(Arc::new(Sssp::new(0))).unwrap();
+    let off = graph
+        .job(Arc::new(Sssp::new(0)))
+        .local_fastpath(false)
+        .run()
+        .unwrap();
+
+    assert_eq!(on.values_by_id(), off.values_by_id());
+    assert!(
+        on.metrics.net_wire_bytes < off.metrics.net_wire_bytes,
+        "spill lane must cut wire bytes: on={} off={}",
+        on.metrics.net_wire_bytes,
+        off.metrics.net_wire_bytes
+    );
+    assert!(on.metrics.net_local_bytes > 0);
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+/// Basic (non-digesting) mode, sum-combining program: with the fast path
+/// on, local traffic rides the spill lane raw and is combined during the
+/// S^I merge; off, it is pre-send merge-combined and transits the switch.
+/// Results must agree to float tolerance (sum order differs), and wire
+/// bytes must drop.
 #[test]
 fn basic_mode_fastpath_value_equivalence() {
     let d = wd("basic");
@@ -214,5 +284,44 @@ fn buffer_pool_hits_are_reported() {
         "multi-superstep run must recycle buffers: {pool:?}"
     );
     assert!(pool.hit_rate() > 0.0 && pool.hit_rate() <= 1.0);
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+/// The digest-array pool ping-pongs the O(|V|/n) A_r shards between U_c
+/// and U_r: a multi-superstep digesting run must serve later supersteps'
+/// arrays from the pool instead of reallocating, and a basic-mode run
+/// must not touch the pool at all.
+#[test]
+fn digest_pool_reuses_across_supersteps() {
+    let d = wd("digestpool");
+    let g = generator::uniform(200, 2000, true, 53);
+    let session = GraphD::builder()
+        .machines(2)
+        .workdir(&d)
+        .max_supersteps(5)
+        .build()
+        .unwrap();
+    let mut graph = session.load(GraphSource::InMemory(&g)).unwrap();
+
+    // IO-Basic never digests: the pool stays untouched.
+    let basic = graph.run(Arc::new(PageRank::new(5))).unwrap();
+    assert_eq!(basic.metrics.digest_pool.hits, 0);
+    assert_eq!(basic.metrics.digest_pool.misses, 0);
+
+    graph.recode().unwrap();
+    let res = graph
+        .job(Arc::new(PageRank::new(5)))
+        .mode(Mode::Recoded)
+        .run()
+        .unwrap();
+    let dp = res.metrics.digest_pool;
+    assert!(
+        dp.hits > 0,
+        "5 supersteps of digesting must recycle A_r arrays: {dp:?}"
+    );
+    assert!(
+        dp.misses > 0 && dp.misses <= 3 * 2,
+        "only the warm-up arrays may allocate (3 per machine): {dp:?}"
+    );
     let _ = std::fs::remove_dir_all(&d);
 }
