@@ -3,14 +3,18 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 BENCH_JSON ?= BENCH_PR4.json
+# Hang-proofing: the engine is a barrier machine; a failure-propagation
+# regression deadlocks rather than fails.  Bound the test step like CI does
+# (no-op where coreutils `timeout` is unavailable).
+TIMEOUT := $(shell command -v timeout >/dev/null 2>&1 && echo "timeout 600")
 
-.PHONY: build test fmt-check clippy doc ci bench-smoke artifacts clean
+.PHONY: build test fmt-check clippy doc check-xla ci bench-smoke artifacts clean
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
 
 test:
-	$(CARGO) test -q --manifest-path $(MANIFEST)
+	$(TIMEOUT) $(CARGO) test -q --manifest-path $(MANIFEST)
 
 fmt-check:
 	$(CARGO) fmt --check --manifest-path $(MANIFEST)
@@ -23,7 +27,12 @@ clippy:
 doc:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --manifest-path $(MANIFEST)
 
-ci: build test fmt-check clippy doc
+# Typecheck the off-by-default XLA bridge against the vendored stubs
+# (lib + tests + benches) so the feature-gated code cannot silently rot.
+check-xla:
+	$(CARGO) check --all-targets --features xla --manifest-path $(MANIFEST)
+
+ci: build test fmt-check clippy doc check-xla
 
 # Quick perf trajectory: spine + serve throughput in smoke mode, numbers
 # emitted to $(BENCH_JSON) (spine writes the file with its "spine" and

@@ -13,7 +13,9 @@ use crate::error::{Error, Result};
 use crate::graph::formats;
 use crate::net::{self, Payload};
 use crate::worker::storage::{EdgeStreamWriter, MachineStore};
+use crate::worker::sync::JobAbort;
 use crate::worker::Partitioning;
+use std::sync::atomic::AtomicU64;
 
 /// Wire format of one loading record:
 /// `id u32 | deg u32 | deg × (nbr u32 [, w f32])`.
@@ -53,11 +55,17 @@ pub(crate) fn load_text_impl(
 ) -> Result<Vec<MachineStore>> {
     let n = eng.profile.machines;
     let nblocks = dfs.num_blocks(name)?;
+    // Loading has the same deadlock shape as the superstep loop: a parser
+    // that dies (bad input line, DFS error) never sends its LoadEnd tags,
+    // wedging every receiver — so the phase gets its own abort latch,
+    // observed by the channel waits.
+    let abort = JobAbort::new();
     let (endpoints, _switch) = net::build(
         n,
         eng.profile.net_bytes_per_sec,
         eng.profile.latency_us,
         eng.cfg.local_fastpath,
+        Some(abort.clone()),
     );
     let part = Partitioning::Hashed;
     let item = if weighted { 8usize } else { 4 };
@@ -78,6 +86,7 @@ pub(crate) fn load_text_impl(
                 .disk_bytes_per_sec
                 .map(crate::util::diskio::DiskBw::new);
             let pool = pool.clone();
+            let abort = abort.clone();
             handles.push(scope.spawn(move || -> Result<MachineStore> {
                 let _dg = crate::util::diskio::register(disk.clone());
                 // --- parser half (own thread so receive can overlap) ---
@@ -86,115 +95,127 @@ pub(crate) fn load_text_impl(
                     let name = name.clone();
                     let mut sender = sender;
                     let pool = pool.clone();
+                    let abort = abort.clone();
                     std::thread::spawn(move || -> Result<()> {
-                        let nmach = sender.peers();
-                        let mut bufs: Vec<Vec<u8>> = (0..nmach).map(|_| pool.take()).collect();
-                        for blk in (i as u64..nblocks).step_by(nmach) {
-                            for line in dfs.read_block_lines(&name, blk)? {
-                                let vl = formats::parse_line(&line)?;
-                                let dst = part.machine_of(vl.id, nmach);
-                                encode_vertex(&vl, weighted, &mut bufs[dst]);
-                                if bufs[dst].len() >= cap {
-                                    let b = std::mem::replace(&mut bufs[dst], pool.take());
-                                    sender.send(dst, 0, Payload::Load(b));
+                        // guard(): a parser that errors (or panics) before
+                        // sending its LoadEnd tags trips the abort so every
+                        // blocked receiver unblocks typed.
+                        let phase = AtomicU64::new(0);
+                        abort.guard(i, "load", &phase, || {
+                            let nmach = sender.peers();
+                            let mut bufs: Vec<Vec<u8>> =
+                                (0..nmach).map(|_| pool.take()).collect();
+                            for blk in (i as u64..nblocks).step_by(nmach) {
+                                for line in dfs.read_block_lines(&name, blk)? {
+                                    let vl = formats::parse_line(&line)?;
+                                    let dst = part.machine_of(vl.id, nmach);
+                                    encode_vertex(&vl, weighted, &mut bufs[dst]);
+                                    if bufs[dst].len() >= cap {
+                                        let b =
+                                            std::mem::replace(&mut bufs[dst], pool.take());
+                                        sender.send(dst, 0, Payload::Load(b))?;
+                                    }
                                 }
                             }
-                        }
-                        for dst in 0..nmach {
-                            let b = std::mem::take(&mut bufs[dst]);
-                            if b.is_empty() {
-                                pool.put(b);
-                            } else {
-                                sender.send(dst, 0, Payload::Load(b));
+                            for dst in 0..nmach {
+                                let b = std::mem::take(&mut bufs[dst]);
+                                if b.is_empty() {
+                                    pool.put(b);
+                                } else {
+                                    sender.send(dst, 0, Payload::Load(b))?;
+                                }
+                                sender.send(dst, 0, Payload::LoadEnd)?;
                             }
-                            sender.send(dst, 0, Payload::LoadEnd);
-                        }
-                        Ok(())
+                            Ok(())
+                        })
                     })
                 };
 
                 // --- receiver half: spill, index, sort, split ---
-                let _ = std::fs::remove_dir_all(&store_dir);
-                std::fs::create_dir_all(&store_dir)?;
-                let spill_path = store_dir.join("load_spill");
-                let mut spill = std::io::BufWriter::new(std::fs::File::create(&spill_path)?);
-                // (id, deg, byte offset of adjacency in spill)
-                let mut index: Vec<(u32, u32, u64)> = Vec::new();
-                let mut spill_off = 0u64;
-                let mut ends = 0usize;
-                let nmach = n;
-                while ends < nmach {
-                    let b = receiver.recv();
-                    match b.payload {
-                        Payload::LoadEnd => ends += 1,
-                        Payload::Load(data) => {
-                            let mut off = 0usize;
-                            while off < data.len() {
-                                let id = u32::from_le_bytes(data[off..off + 4].try_into().unwrap());
-                                let deg =
-                                    u32::from_le_bytes(data[off + 4..off + 8].try_into().unwrap());
-                                let adj_bytes = deg as usize * item;
-                                let adj = &data[off + 8..off + 8 + adj_bytes];
-                                use std::io::Write;
-                                spill.write_all(adj)?;
-                                index.push((id, deg, spill_off));
-                                spill_off += adj_bytes as u64;
-                                off += 8 + adj_bytes;
+                let phase = AtomicU64::new(0);
+                abort.guard(i, "load", &phase, || {
+                    let _ = std::fs::remove_dir_all(&store_dir);
+                    std::fs::create_dir_all(&store_dir)?;
+                    let spill_path = store_dir.join("load_spill");
+                    let mut spill = std::io::BufWriter::new(std::fs::File::create(&spill_path)?);
+                    // (id, deg, byte offset of adjacency in spill)
+                    let mut index: Vec<(u32, u32, u64)> = Vec::new();
+                    let mut spill_off = 0u64;
+                    let mut ends = 0usize;
+                    let nmach = n;
+                    while ends < nmach {
+                        let b = receiver.recv()?;
+                        match b.payload {
+                            Payload::LoadEnd => ends += 1,
+                            Payload::Load(data) => {
+                                let mut off = 0usize;
+                                while off < data.len() {
+                                    let id = u32::from_le_bytes(data[off..off + 4].try_into().unwrap());
+                                    let deg =
+                                        u32::from_le_bytes(data[off + 4..off + 8].try_into().unwrap());
+                                    let adj_bytes = deg as usize * item;
+                                    let adj = &data[off + 8..off + 8 + adj_bytes];
+                                    use std::io::Write;
+                                    spill.write_all(adj)?;
+                                    index.push((id, deg, spill_off));
+                                    spill_off += adj_bytes as u64;
+                                    off += 8 + adj_bytes;
+                                }
+                                pool.put(data);
                             }
-                            pool.put(data);
+                            _ => return Err(Error::CorruptStream("data batch during load".into())),
                         }
-                        _ => return Err(Error::CorruptStream("data batch during load".into())),
                     }
-                }
-                {
-                    use std::io::Write;
-                    spill.flush()?;
-                }
-                parser
-                    .join()
-                    .map_err(|e| Error::WorkerPanic { machine: i, cause: format!("{e:?}") })??;
-
-                // Sort the state array by vertex ID; S^E follows A's order.
-                index.sort_unstable_by_key(|r| r.0);
-                if let Some(w) = index.windows(2).find(|w| w[0].0 == w[1].0) {
-                    return Err(Error::CorruptStream(format!(
-                        "duplicate vertex id {} in input",
-                        w[0].0
-                    )));
-                }
-                let ids: Vec<u32> = index.iter().map(|r| r.0).collect();
-                let degs: Vec<u32> = index.iter().map(|r| r.1).collect();
-                let mut se = EdgeStreamWriter::create(&store_dir, weighted, eng.cfg.stream_buf)?;
-                let spill_file = std::fs::File::open(&spill_path)?;
-                let mut adj_buf = Vec::new();
-                for &(_, deg, off) in &index {
-                    let adj_bytes = deg as usize * item;
-                    adj_buf.resize(adj_bytes, 0);
-                    read_exact_at(&spill_file, &mut adj_buf, off)?;
-                    for chunk in adj_buf.chunks_exact(item) {
-                        let nbr = u32::from_le_bytes(chunk[..4].try_into().unwrap());
-                        let w = if weighted {
-                            f32::from_le_bytes(chunk[4..8].try_into().unwrap())
-                        } else {
-                            1.0
-                        };
-                        se.push(nbr, w)?;
+                    {
+                        use std::io::Write;
+                        spill.flush()?;
                     }
-                }
-                se.finish()?;
-                let _ = std::fs::remove_file(&spill_path);
+                    parser
+                        .join()
+                        .map_err(|e| Error::WorkerPanic { machine: i, cause: format!("{e:?}") })??;
 
-                let store = MachineStore {
-                    dir: store_dir,
-                    machine: i,
-                    num_machines: nmach,
-                    total_vertices: 0, // fixed below
-                    weighted,
-                    recoded: false,
-                    ids,
-                    degs,
-                };
-                Ok(store)
+                    // Sort the state array by vertex ID; S^E follows A's order.
+                    index.sort_unstable_by_key(|r| r.0);
+                    if let Some(w) = index.windows(2).find(|w| w[0].0 == w[1].0) {
+                        return Err(Error::CorruptStream(format!(
+                            "duplicate vertex id {} in input",
+                            w[0].0
+                        )));
+                    }
+                    let ids: Vec<u32> = index.iter().map(|r| r.0).collect();
+                    let degs: Vec<u32> = index.iter().map(|r| r.1).collect();
+                    let mut se = EdgeStreamWriter::create(&store_dir, weighted, eng.cfg.stream_buf)?;
+                    let spill_file = std::fs::File::open(&spill_path)?;
+                    let mut adj_buf = Vec::new();
+                    for &(_, deg, off) in &index {
+                        let adj_bytes = deg as usize * item;
+                        adj_buf.resize(adj_bytes, 0);
+                        read_exact_at(&spill_file, &mut adj_buf, off)?;
+                        for chunk in adj_buf.chunks_exact(item) {
+                            let nbr = u32::from_le_bytes(chunk[..4].try_into().unwrap());
+                            let w = if weighted {
+                                f32::from_le_bytes(chunk[4..8].try_into().unwrap())
+                            } else {
+                                1.0
+                            };
+                            se.push(nbr, w)?;
+                        }
+                    }
+                    se.finish()?;
+                    let _ = std::fs::remove_file(&spill_path);
+
+                    let store = MachineStore {
+                        dir: store_dir,
+                        machine: i,
+                        num_machines: nmach,
+                        total_vertices: 0, // fixed below
+                        weighted,
+                        recoded: false,
+                        ids,
+                        degs,
+                    };
+                    Ok(store)
+                })
             }));
         }
         for (i, h) in handles.into_iter().enumerate() {
@@ -204,10 +225,12 @@ pub(crate) fn load_text_impl(
         }
     });
 
-    let mut stores: Vec<MachineStore> = results
-        .into_iter()
-        .map(|r| r.unwrap())
-        .collect::<Result<_>>()?;
+    let collected: Result<Vec<MachineStore>> =
+        results.into_iter().map(|r| r.unwrap()).collect();
+    let mut stores = match collected {
+        Ok(s) => s,
+        Err(e) => return Err(abort.first_cause_or(e)),
+    };
     let total: u64 = stores.iter().map(|s| s.ids.len() as u64).sum();
     for s in &mut stores {
         s.total_vertices = total;

@@ -8,8 +8,8 @@ use crate::metrics::JobMetrics;
 use crate::net;
 use crate::util::timer::timed;
 use crate::worker::storage::MachineStore;
-use crate::worker::sync::Rendezvous;
-use crate::worker::units::{run_machine, JobGlobal, MachineOutput};
+use crate::worker::sync::{AbortCause, JobAbort, Poisonable, Rendezvous};
+use crate::worker::units::{run_machine, JobGlobal, MachineOutput, UcDecision, UcReport};
 use std::sync::Arc;
 
 /// Result of one GraphD job.
@@ -109,6 +109,18 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
     // flight (U_r's A_r, U_c's consumed one, the local shard) — they
     // ping-pong instead of reallocating every superstep.
     let digest_pool = crate::msg::DigestPool::new(3 * n);
+    // Failure propagation: the job abort latch poisons every inter-machine
+    // barrier (registered here) and every machine's own sync (registered by
+    // run_machine), and is polled by the channel/switch waits in `net` —
+    // so one dead unit surfaces as Error::JobFailed at every machine
+    // instead of wedging the survivors.
+    let abort = JobAbort::new();
+    let uc_rv: Arc<Rendezvous<UcReport<P::Agg>, UcDecision<P::Agg>>> = Rendezvous::new(n);
+    let ur_rv: Arc<Rendezvous<(), ()>> = Rendezvous::new(n);
+    let ckpt_rv: Arc<Rendezvous<(), ()>> = Rendezvous::new(n);
+    abort.register(uc_rv.clone() as Arc<dyn Poisonable>);
+    abort.register(ur_rv.clone() as Arc<dyn Poisonable>);
+    abort.register(ckpt_rv.clone() as Arc<dyn Poisonable>);
     let global = JobGlobal {
         program: program.clone(),
         cfg: eng.cfg.clone(),
@@ -117,11 +129,12 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
         max_local,
         checkpoint,
         step_base,
-        uc_rv: Rendezvous::new(n),
-        ur_rv: Rendezvous::new(n),
-        ckpt_rv: Rendezvous::new(n),
+        uc_rv,
+        ur_rv,
+        ckpt_rv,
         pool: pool.clone(),
         digest_pool: digest_pool.clone(),
+        abort: abort.clone(),
     };
 
     let (endpoints, switch) = net::build(
@@ -129,6 +142,7 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
         eng.profile.net_bytes_per_sec,
         eng.profile.latency_us,
         eng.cfg.local_fastpath,
+        Some(abort.clone()),
     );
 
     let (compute_secs, outputs) = timed(|| -> Result<Vec<MachineOutput<P>>> {
@@ -146,52 +160,71 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
                     .map(crate::util::diskio::DiskBw::new);
                 let ckpt_dir = ckpt_dir.clone();
                 handles.push(scope.spawn(move || -> Result<MachineOutput<P>> {
-                    if let Some(rs) = resume {
-                        // Recovery: reload values/halted/IMS from the
-                        // checkpoint; the store (A + S^E) is reloaded from
-                        // its durable on-disk form by the caller already.
-                        let dir = ckpt_dir
-                            .as_ref()
-                            .ok_or_else(|| Error::Config("resume without checkpoint dir".into()))?;
-                        let scratch = store.dir.join("recovery");
-                        let rec: crate::ft::Recovered<P::Value, P::Msg> =
-                            crate::ft::read_machine_checkpoint(dir, rs, i, &scratch)?;
-                        return crate::worker::units::run_machine_resumed(
-                            global,
-                            store,
-                            rec.vals,
-                            Some(rec.halted),
-                            Some(rec.incoming),
-                            sender,
-                            receiver,
-                            disk,
-                        );
-                    }
-                    // Initial values from the program (cheap, O(|V|/n)).
-                    let init: Vec<P::Value> = (0..store.local_vertices())
-                        .map(|pos| {
-                            program.init_value(
-                                store.id_at(pos),
-                                store.degs[pos],
-                                store.total_vertices,
-                            )
-                        })
-                        .collect();
-                    run_machine(global, store, init, sender, receiver, disk)
+                    // Outer guard: catches failures *outside* the unit
+                    // loops (job-dir setup, checkpoint reads on resume) so
+                    // even a machine that dies before its units start trips
+                    // the abort instead of wedging its siblings.  Unit
+                    // failures arrive here already converted to JobFailed
+                    // and pass through without re-tripping.
+                    let beacon = std::sync::atomic::AtomicU64::new(step_base);
+                    global.abort.guard(i, "U_c", &beacon, || {
+                        if let Some(rs) = resume {
+                            // Recovery: reload values/halted/IMS from the
+                            // checkpoint; the store (A + S^E) is reloaded
+                            // from its durable on-disk form by the caller
+                            // already.
+                            let dir = ckpt_dir.as_ref().ok_or_else(|| {
+                                Error::Config("resume without checkpoint dir".into())
+                            })?;
+                            let scratch = store.dir.join("recovery");
+                            let rec: crate::ft::Recovered<P::Value, P::Msg> =
+                                crate::ft::read_machine_checkpoint(dir, rs, i, &scratch)?;
+                            return crate::worker::units::run_machine_resumed(
+                                global,
+                                store,
+                                rec.vals,
+                                Some(rec.halted),
+                                Some(rec.incoming),
+                                sender,
+                                receiver,
+                                disk,
+                            );
+                        }
+                        // Initial values from the program (cheap, O(|V|/n)).
+                        let init: Vec<P::Value> = (0..store.local_vertices())
+                            .map(|pos| {
+                                program.init_value(
+                                    store.id_at(pos),
+                                    store.degs[pos],
+                                    store.total_vertices,
+                                )
+                            })
+                            .collect();
+                        run_machine(global, store, init, sender, receiver, disk)
+                    })
                 }));
             }
             for (i, h) in handles.into_iter().enumerate() {
                 results[i] = Some(h.join().unwrap_or_else(|e| {
-                    Err(Error::WorkerPanic {
+                    // Residual machine-thread panics (unit panics are
+                    // already caught and converted by the abort guards):
+                    // trip the latch so surviving machines unblock too.
+                    let cause = abort.trip(AbortCause {
                         machine: i,
-                        cause: format!("{e:?}"),
-                    })
+                        unit: "U_c",
+                        superstep: 0,
+                        cause: format!("machine thread panicked: {e:?}"),
+                    });
+                    Err(cause.to_error())
                 }));
             }
         });
         results.into_iter().map(|r| r.unwrap()).collect()
     });
-    let outputs = outputs?;
+    let outputs: Vec<MachineOutput<P>> = match outputs {
+        Ok(o) => o,
+        Err(e) => return Err(abort.first_cause_or(e)),
+    };
 
     let metrics = JobMetrics {
         load_secs: 0.0,

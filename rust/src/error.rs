@@ -25,6 +25,26 @@ pub enum Error {
 
     WorkerPanic { machine: usize, cause: String },
 
+    /// A distributed job died: one unit failed (panic or I/O error) and the
+    /// failure was propagated through the poisoned barriers and channel
+    /// waits to every machine, so the job surfaces this typed error instead
+    /// of deadlocking at `Rendezvous`/`recv` (paper §6, Fault Tolerance: a
+    /// failure must be *observed* before recovery can start).  `machine`,
+    /// `unit` and `superstep` identify the **first** failing unit — every
+    /// machine of the job reports the same origin, not its own echo.
+    JobFailed {
+        /// Machine index of the first failing unit.
+        machine: usize,
+        /// Which unit died: `"U_c"`, `"U_s"`, `"U_r"`, `"load"`, `"recode"`.
+        unit: &'static str,
+        /// Superstep (or preprocessing phase) that unit was executing.
+        superstep: u64,
+        /// The underlying failure, rendered.  When checkpointing was
+        /// enabled, the session layer appends the last durable superstep
+        /// usable with `JobBuilder::resume`.
+        cause: String,
+    },
+
     Other(String),
 }
 
@@ -46,6 +66,15 @@ impl fmt::Display for Error {
             Error::WorkerPanic { machine, cause } => {
                 write!(f, "worker {machine} panicked: {cause}")
             }
+            Error::JobFailed {
+                machine,
+                unit,
+                superstep,
+                cause,
+            } => write!(
+                f,
+                "job failed: {unit} of machine {machine} died at superstep {superstep}: {cause}"
+            ),
             Error::Other(s) => write!(f, "{s}"),
         }
     }
@@ -90,5 +119,19 @@ mod tests {
         assert_eq!(e.to_string(), "worker 3 panicked: boom");
         let io = Error::from(std::io::Error::new(std::io::ErrorKind::Other, "x"));
         assert!(io.to_string().starts_with("I/O error:"));
+    }
+
+    #[test]
+    fn job_failed_display_names_origin() {
+        let e = Error::JobFailed {
+            machine: 2,
+            unit: "U_r",
+            superstep: 7,
+            cause: "disk full".into(),
+        };
+        assert_eq!(
+            e.to_string(),
+            "job failed: U_r of machine 2 died at superstep 7: disk full"
+        );
     }
 }

@@ -191,6 +191,17 @@ pub fn read_machine_checkpoint<V: Codec, M: Codec>(
     })
 }
 
+/// The superstep a failed job can resume from: the latest checkpoint in
+/// `dir` whose DONE marker landed.  DONE only appears after *every*
+/// machine's file went durable (the `ckpt_rv` barrier in the engine — a
+/// poisoned barrier round never marks DONE), so a resume from this step
+/// can never read a partial checkpoint set.  The session layer folds this
+/// into the `cause` of [`crate::error::Error::JobFailed`] when a
+/// checkpointed job dies.
+pub fn resume_hint(dir: &Path) -> Option<u64> {
+    latest_checkpoint(dir, None)
+}
+
 /// Latest completed checkpoint at or below `upto` (None = any).
 pub fn latest_checkpoint(dir: &Path, upto: Option<u64>) -> Option<u64> {
     let mut best = None;

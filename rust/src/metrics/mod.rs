@@ -123,6 +123,9 @@ pub struct ServeMetrics {
     pub queries: u64,
     /// Shared superstep-loop batches run.
     pub batches: u64,
+    /// Batches whose job died (`Answer::Failed` queries): the failure is
+    /// isolated to the batch, the server keeps serving.
+    pub failed_batches: u64,
     /// Total serving wall time across batches (seconds).
     pub wall_secs: f64,
     /// Supersteps summed over batches.
@@ -178,6 +181,7 @@ impl ServeMetrics {
             "== Serve metrics ==\n\
              queries answered   {}\n\
              batches            {}\n\
+             failed batches     {}\n\
              supersteps         {}\n\
              edge items read    {}\n\
              wire bytes         {}\n\
@@ -189,6 +193,7 @@ impl ServeMetrics {
              latency p99        {}\n",
             self.queries,
             self.batches,
+            self.failed_batches,
             self.supersteps,
             self.edge_items_read,
             self.wire_bytes,

@@ -12,10 +12,24 @@
 //! what makes "hide disk I/O inside communication" measurable in this
 //! reproduction.
 
+//! **Failure observation.**  When a [`crate::worker::sync::JobAbort`] is
+//! attached at [`build`] time, every potentially-unbounded wait in this
+//! module observes it: [`NetReceiver::recv`] polls the abort flag while
+//! blocked (a dead sender can never deliver the end tags it owes us),
+//! [`NetSender::send`] surfaces the abort cause instead of panicking when
+//! the peer hung up, and [`Switch::transmit`] breaks out of long simulated
+//! transmissions once the job is dead — so no unit can outlive a poisoned
+//! job inside the network layer.
+
+use crate::error::{Error, Result};
+use crate::worker::sync::JobAbort;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// How often blocked channel/switch waits re-check the abort flag.
+const ABORT_POLL: Duration = Duration::from_millis(10);
 
 /// The shared medium's reservation state.  Slot reservation and byte
 /// accounting live in **one** critical section so `total_bytes` can never
@@ -34,12 +48,25 @@ pub struct Switch {
     /// Bytes delivered machine-locally (the fast path): they never reserve
     /// a slot and never sleep — counted separately from wire traffic.
     local_bytes: AtomicU64,
+    /// Job-abort latch: long simulated transmissions break out early once
+    /// the job is dead (`None` = no abort observation, seed behaviour).
+    abort: Option<Arc<JobAbort>>,
 }
 
 impl Switch {
     /// A shared medium transmitting at `bytes_per_sec` with a fixed
     /// per-batch latency.
     pub fn new(bytes_per_sec: f64, latency_us: u64) -> Arc<Self> {
+        Self::with_abort(bytes_per_sec, latency_us, None)
+    }
+
+    /// Like [`Switch::new`], with an abort latch the simulated
+    /// transmission sleeps observe.
+    pub fn with_abort(
+        bytes_per_sec: f64,
+        latency_us: u64,
+        abort: Option<Arc<JobAbort>>,
+    ) -> Arc<Self> {
         Arc::new(Self {
             rate: bytes_per_sec.max(1.0),
             latency: Duration::from_micros(latency_us),
@@ -48,11 +75,15 @@ impl Switch {
                 wire_bytes: 0,
             }),
             local_bytes: AtomicU64::new(0),
+            abort,
         })
     }
 
     /// Block for the simulated transmission time of `bytes` through the
-    /// shared medium (serialized with all other transmissions).
+    /// shared medium (serialized with all other transmissions).  With an
+    /// abort latch attached, the sleep is sliced so a poisoned job stops
+    /// paying simulated wire time (the byte accounting stays — the bytes
+    /// were already committed to the medium).
     pub fn transmit(&self, bytes: usize) {
         let dur = Duration::from_secs_f64(bytes as f64 / self.rate) + self.latency;
         let until = {
@@ -62,9 +93,19 @@ impl Switch {
             m.wire_bytes += bytes as u64;
             m.next_free
         };
-        let now = Instant::now();
-        if until > now {
-            std::thread::sleep(until - now);
+        loop {
+            let now = Instant::now();
+            if until <= now {
+                return;
+            }
+            if let Some(a) = &self.abort {
+                if a.aborted() {
+                    return;
+                }
+                std::thread::sleep((until - now).min(ABORT_POLL));
+            } else {
+                std::thread::sleep(until - now);
+            }
         }
     }
 
@@ -134,15 +175,20 @@ pub struct NetSender {
     /// local-delivery fast path): a machine talking to itself crosses no
     /// physical medium, so it pays zero simulated wire time.
     local_fast: bool,
+    /// Job-abort latch: a hung-up peer reports the abort cause instead of
+    /// an opaque channel error.
+    abort: Option<Arc<JobAbort>>,
 }
 
 impl NetSender {
     /// Simulate transmission through the shared switch, then deliver —
     /// except batches to `self` with the fast path on, which skip the
     /// switch entirely and are only *counted* (as local bytes).
-    /// Panics if the destination has hung up (worker died — surfaced as a
-    /// test failure rather than silent loss).
-    pub fn send(&mut self, dst: usize, step: u64, payload: Payload) {
+    /// Errors if the destination has hung up: with the job's abort latch
+    /// tripped this surfaces the original failure cause (typed
+    /// [`Error::JobFailed`]); without one, a hung-up peer is a corrupt
+    /// cluster state in its own right.
+    pub fn send(&mut self, dst: usize, step: u64, payload: Payload) -> Result<()> {
         let b = Batch {
             src: self.me,
             step,
@@ -157,12 +203,15 @@ impl NetSender {
             self.sent_bytes += bytes as u64;
         }
         if self.txs[dst].send(b).is_err() {
-            panic!(
-                "peer receiver hung up: {} -> {dst} step {step} payload {:?}",
-                self.me,
-                "dropped"
-            );
+            if let Some(c) = self.abort.as_ref().and_then(|a| a.cause()) {
+                return Err(c.to_error());
+            }
+            return Err(Error::CorruptStream(format!(
+                "peer receiver hung up: {} -> {dst} step {step}",
+                self.me
+            )));
         }
+        Ok(())
     }
 
     /// Number of machines in the network (including this one).
@@ -191,12 +240,40 @@ pub struct NetReceiver {
     /// This endpoint's machine index.
     pub me: usize,
     rx: Receiver<Batch>,
+    abort: Option<Arc<JobAbort>>,
 }
 
 impl NetReceiver {
-    /// Blocking receive.
-    pub fn recv(&self) -> Batch {
-        self.rx.recv().expect("all senders hung up")
+    /// Blocking receive.  With the job's abort latch attached, the block
+    /// is sliced so a tripped abort surfaces as its typed error — the end
+    /// tags a dead machine owes us will never arrive, and this is the wait
+    /// every surviving U_r wedges in without it.
+    pub fn recv(&self) -> Result<Batch> {
+        let Some(a) = &self.abort else {
+            return self
+                .rx
+                .recv()
+                .map_err(|_| Error::CorruptStream("all senders hung up".into()));
+        };
+        loop {
+            // Hot path: one atomic flag read per batch; the cause Mutex is
+            // only touched once the latch actually tripped.
+            if a.aborted() {
+                if let Some(c) = a.cause() {
+                    return Err(c.to_error());
+                }
+            }
+            match self.rx.recv_timeout(ABORT_POLL) {
+                Ok(b) => return Ok(b),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(match a.cause() {
+                        Some(c) => c.to_error(),
+                        None => Error::CorruptStream("all senders hung up".into()),
+                    })
+                }
+            }
+        }
     }
 
     /// Receive with timeout (used by failure detection in ft tests).
@@ -207,15 +284,18 @@ impl NetReceiver {
 
 /// Build a fully-connected simulated network of `n` machines.
 /// `local_fast` enables the local-delivery fast path (`dst == me` batches
-/// bypass the switch).  Also returns the shared [`Switch`] so callers can
-/// read the wire-vs-local byte split after a run.
+/// bypass the switch).  `abort` attaches the job's abort latch so channel
+/// and switch waits observe a dead sibling (pass `None` for abort-free
+/// micro-benchmarks/tests).  Also returns the shared [`Switch`] so callers
+/// can read the wire-vs-local byte split after a run.
 pub fn build(
     n: usize,
     bytes_per_sec: f64,
     latency_us: u64,
     local_fast: bool,
+    abort: Option<Arc<JobAbort>>,
 ) -> (Vec<(NetSender, NetReceiver)>, Arc<Switch>) {
-    let switch = Switch::new(bytes_per_sec, latency_us);
+    let switch = Switch::with_abort(bytes_per_sec, latency_us, abort.clone());
     let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| channel::<Batch>()).unzip();
     let endpoints = rxs
         .into_iter()
@@ -229,8 +309,13 @@ pub fn build(
                     sent_bytes: 0,
                     local_bytes: 0,
                     local_fast,
+                    abort: abort.clone(),
                 },
-                NetReceiver { me, rx },
+                NetReceiver {
+                    me,
+                    rx,
+                    abort: abort.clone(),
+                },
             )
         })
         .collect();
@@ -243,14 +328,14 @@ mod tests {
 
     #[test]
     fn fifo_per_pair() {
-        let (mut eps, _) = build(2, 1e12, 0, false);
+        let (mut eps, _) = build(2, 1e12, 0, false, None);
         let (_, rx1) = eps.pop().unwrap();
         let (mut tx0, _rx0) = eps.pop().unwrap();
         for i in 0..100u64 {
-            tx0.send(1, i, Payload::Data(vec![i as u8]));
+            tx0.send(1, i, Payload::Data(vec![i as u8])).unwrap();
         }
         for i in 0..100u64 {
-            let b = rx1.recv();
+            let b = rx1.recv().unwrap();
             assert_eq!(b.step, i);
             assert_eq!(b.src, 0);
         }
@@ -258,17 +343,17 @@ mod tests {
 
     #[test]
     fn cross_clone_order_preserved_by_enqueue_time() {
-        let (mut eps, _) = build(2, 1e12, 0, false);
+        let (mut eps, _) = build(2, 1e12, 0, false, None);
         let (_, rx1) = eps.pop().unwrap();
         let (tx, _rx0) = eps.pop().unwrap();
         let mut a = tx.clone();
         let mut b = tx;
-        a.send(1, 1, Payload::Data(vec![]));
-        b.send(1, 2, Payload::Data(vec![]));
-        a.send(1, 3, Payload::End);
-        assert_eq!(rx1.recv().step, 1);
-        assert_eq!(rx1.recv().step, 2);
-        assert_eq!(rx1.recv().step, 3);
+        a.send(1, 1, Payload::Data(vec![])).unwrap();
+        b.send(1, 2, Payload::Data(vec![])).unwrap();
+        a.send(1, 3, Payload::End).unwrap();
+        assert_eq!(rx1.recv().unwrap().step, 1);
+        assert_eq!(rx1.recv().unwrap().step, 2);
+        assert_eq!(rx1.recv().unwrap().step, 3);
     }
 
     #[test]
@@ -298,10 +383,10 @@ mod tests {
 
     #[test]
     fn loopback_delivery() {
-        let (mut eps, _) = build(1, 1e12, 0, false);
+        let (mut eps, _) = build(1, 1e12, 0, false, None);
         let (mut tx, rx) = eps.pop().unwrap();
-        tx.send(0, 3, Payload::End);
-        let b = rx.recv();
+        tx.send(0, 3, Payload::End).unwrap();
+        let b = rx.recv().unwrap();
         assert!(matches!(b.payload, Payload::End));
         assert_eq!(b.step, 3);
     }
@@ -310,12 +395,12 @@ mod tests {
     fn local_fast_path_bypasses_switch() {
         // A slow switch that would take ~100ms for this batch: the local
         // fast path must deliver instantly and charge zero wire bytes.
-        let (mut eps, switch) = build(1, 10.0 * 1024.0 * 1024.0, 0, true);
+        let (mut eps, switch) = build(1, 10.0 * 1024.0 * 1024.0, 0, true, None);
         let (mut tx, rx) = eps.pop().unwrap();
         let t = Instant::now();
-        tx.send(0, 0, Payload::Data(vec![0; 1024 * 1024]));
+        tx.send(0, 0, Payload::Data(vec![0; 1024 * 1024])).unwrap();
         assert!(t.elapsed() < Duration::from_millis(50), "{:?}", t.elapsed());
-        let b = rx.recv();
+        let b = rx.recv().unwrap();
         assert!(matches!(b.payload, Payload::Data(_)));
         assert_eq!(switch.total_bytes(), 0, "no wire traffic for dst == me");
         assert_eq!(switch.local_bytes(), 1024 * 1024 + 16);
@@ -326,13 +411,37 @@ mod tests {
 
     #[test]
     fn remote_batches_still_transit_with_fast_path_on() {
-        let (mut eps, switch) = build(2, 1e12, 0, true);
+        let (mut eps, switch) = build(2, 1e12, 0, true, None);
         let (_, rx1) = eps.pop().unwrap();
         let (mut tx0, _rx0) = eps.pop().unwrap();
-        tx0.send(1, 0, Payload::Data(vec![0; 84]));
-        assert_eq!(rx1.recv().step, 0);
+        tx0.send(1, 0, Payload::Data(vec![0; 84])).unwrap();
+        assert_eq!(rx1.recv().unwrap().step, 0);
         assert_eq!(switch.total_bytes(), 100);
         assert_eq!(switch.local_bytes(), 0);
+    }
+
+    #[test]
+    fn recv_unblocks_on_abort_with_typed_cause() {
+        use crate::worker::sync::AbortCause;
+        let abort = JobAbort::new();
+        let (mut eps, _) = build(2, 1e12, 0, false, Some(abort.clone()));
+        let (_, rx1) = eps.pop().unwrap();
+        // Keep machine 0's sender alive so the channel never disconnects:
+        // the only way out of the blocked recv is the abort flag.
+        let (_tx0, _rx0) = eps.pop().unwrap();
+        let t = std::thread::spawn(move || rx1.recv());
+        std::thread::sleep(Duration::from_millis(30));
+        abort.trip(AbortCause {
+            machine: 1,
+            unit: "U_c",
+            superstep: 2,
+            cause: "boom".into(),
+        });
+        let err = t.join().unwrap().unwrap_err();
+        assert!(matches!(
+            err,
+            Error::JobFailed { machine: 1, superstep: 2, .. }
+        ));
     }
 
     #[test]

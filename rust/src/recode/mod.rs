@@ -17,8 +17,10 @@ use crate::msg::BufPool;
 use crate::net::{self, NetReceiver, NetSender, Payload};
 use crate::stream::{merge, StreamWriter};
 use crate::worker::storage::{item_size, EdgeStreamCursor, EdgeStreamWriter, MachineStore};
+use crate::worker::sync::JobAbort;
 use crate::worker::Partitioning;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 const BATCH: usize = 256 * 1024;
@@ -47,25 +49,27 @@ impl PhaseTx {
         }
     }
 
-    fn push(&mut self, dst: usize, rec: &[u8]) {
+    fn push(&mut self, dst: usize, rec: &[u8]) -> Result<()> {
         let buf = &mut self.bufs[dst];
         buf.extend_from_slice(rec);
         if buf.len() >= BATCH {
             let b = std::mem::replace(buf, self.pool.take());
-            self.sender.send(dst, self.phase, Payload::Load(b));
+            self.sender.send(dst, self.phase, Payload::Load(b))?;
         }
+        Ok(())
     }
 
-    fn finish(mut self) {
+    fn finish(mut self) -> Result<()> {
         for dst in 0..self.bufs.len() {
             let b = std::mem::take(&mut self.bufs[dst]);
             if b.is_empty() {
                 self.pool.put(b);
             } else {
-                self.sender.send(dst, self.phase, Payload::Load(b));
+                self.sender.send(dst, self.phase, Payload::Load(b))?;
             }
-            self.sender.send(dst, self.phase, Payload::LoadEnd);
+            self.sender.send(dst, self.phase, Payload::LoadEnd)?;
         }
+        Ok(())
     }
 }
 
@@ -101,7 +105,7 @@ impl<'a> PhaseRx<'a> {
             let b = match self.stash.iter().position(|b| b.step == phase) {
                 Some(i) => self.stash.remove(i).unwrap(),
                 None => {
-                    let b = self.receiver.recv();
+                    let b = self.receiver.recv()?;
                     if b.step != phase {
                         debug_assert!(b.step > phase, "batch from completed phase");
                         self.stash.push_back(b);
@@ -146,11 +150,18 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
     let req_size = if weighted { 12 } else { 8 }; // u_old, v_old [, w]
     let rep_size = if weighted { 12 } else { 8 }; // key, payload [, w]
 
+    // Recoding is itself a distributed message-exchange job, with the same
+    // deadlock shape: a machine that errors mid-phase never sends its end
+    // tags, wedging every sibling's drain — so preprocessing gets its own
+    // abort latch, observed by the channel waits and tripped by any phase
+    // thread's failure.
+    let abort = JobAbort::new();
     let (endpoints, _switch) = net::build(
         n,
         eng.profile.net_bytes_per_sec,
         eng.profile.latency_us,
         eng.cfg.local_fastpath,
+        Some(abort.clone()),
     );
     // One pool for the whole preprocessing: request/reply wire blocks and
     // reply-spill scratch recycle across machines and phases.
@@ -165,176 +176,199 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
             let stream_buf = eng.cfg.stream_buf;
             let merge_k = eng.cfg.merge_k;
             let pool = pool.clone();
+            let abort = abort.clone();
             let disk = eng
                 .profile
                 .disk_bytes_per_sec
                 .map(crate::util::diskio::DiskBw::new);
             handles.push(scope.spawn(move || -> Result<MachineStore> {
                 let _dg = crate::util::diskio::register(disk.clone());
-                let mut rx = PhaseRx::new(&receiver, pool.clone());
-                let _ = std::fs::remove_dir_all(&rec_dir);
-                std::fs::create_dir_all(&rec_dir)?;
+                // The beacon tracks the protocol phase (1 = request,
+                // 2 = reply/announce, 3 = merge) for failure attribution;
+                // guard() trips the shared abort on any error or panic so
+                // sibling machines' drains unblock typed.
+                let phase = AtomicU64::new(1);
+                abort.guard(i, "recode", &phase, || {
+                    let mut rx = PhaseRx::new(&receiver, pool.clone());
+                    let _ = std::fs::remove_dir_all(&rec_dir);
+                    std::fs::create_dir_all(&rec_dir)?;
 
-                let reply_spills: Vec<PathBuf>;
-                if directed {
-                    // ---- Superstep 1: each v asks owner(u) for new id(u),
-                    // for every out-neighbor u.
-                    let req_file = rec_dir.join("requests");
-                    {
-                        let parser = {
-                            let store = store.clone();
-                            let mut tx = PhaseTx::new(sender.clone(), 1, pool.clone());
-                            std::thread::spawn(move || -> Result<()> {
-                                let mut se = EdgeStreamCursor::open(&store, stream_buf)?;
-                                let mut edges = Vec::new();
-                                for pos in 0..store.local_vertices() {
-                                    let v_old = store.ids[pos];
-                                    se.read_adjacency(store.degs[pos], &mut edges)?;
-                                    for e in &edges {
-                                        let mut rec = [0u8; 12];
-                                        rec[..4].copy_from_slice(&e.nbr.to_le_bytes());
-                                        rec[4..8].copy_from_slice(&v_old.to_le_bytes());
-                                        if weighted {
-                                            rec[8..12].copy_from_slice(&e.weight.to_le_bytes());
+                    let reply_spills: Vec<PathBuf>;
+                    if directed {
+                        // ---- Superstep 1: each v asks owner(u) for new id(u),
+                        // for every out-neighbor u.
+                        let req_file = rec_dir.join("requests");
+                        {
+                            let parser = {
+                                let store = store.clone();
+                                let mut tx = PhaseTx::new(sender.clone(), 1, pool.clone());
+                                let abort = abort.clone();
+                                std::thread::spawn(move || -> Result<()> {
+                                    let ph = AtomicU64::new(1);
+                                    abort.guard(i, "recode", &ph, || {
+                                        let mut se = EdgeStreamCursor::open(&store, stream_buf)?;
+                                        let mut edges = Vec::new();
+                                        for pos in 0..store.local_vertices() {
+                                            let v_old = store.ids[pos];
+                                            se.read_adjacency(store.degs[pos], &mut edges)?;
+                                            for e in &edges {
+                                                let mut rec = [0u8; 12];
+                                                rec[..4].copy_from_slice(&e.nbr.to_le_bytes());
+                                                rec[4..8].copy_from_slice(&v_old.to_le_bytes());
+                                                if weighted {
+                                                    rec[8..12]
+                                                        .copy_from_slice(&e.weight.to_le_bytes());
+                                                }
+                                                tx.push(part.machine_of(e.nbr, n), &rec[..req_size])?;
+                                            }
                                         }
-                                        tx.push(part.machine_of(e.nbr, n), &rec[..req_size]);
-                                    }
-                                }
-                                tx.finish();
-                                Ok(())
-                            })
+                                        tx.finish()
+                                    })
+                                })
+                            };
+                            let mut w = StreamWriter::create(&req_file, stream_buf)?;
+                            rx.drain_phase(1, n, |data| w.write_all(data))?;
+                            w.finish()?;
+                            parser.join().map_err(|e| Error::WorkerPanic {
+                                machine: i,
+                                cause: format!("{e:?}"),
+                            })??;
+                        }
+
+                        // ---- Superstep 2: u replies (v_old, new_id(u)) to
+                        // owner(v_old); replies are sorted-spilled by target pos.
+                        phase.store(2, Ordering::Relaxed);
+                        let spills = {
+                            let responder = {
+                                let store = store.clone();
+                                let mut tx = PhaseTx::new(sender.clone(), 2, pool.clone());
+                                let req_file = req_file.clone();
+                                let abort = abort.clone();
+                                std::thread::spawn(move || -> Result<()> {
+                                    let ph = AtomicU64::new(2);
+                                    abort.guard(i, "recode", &ph, || {
+                                        let mut r = crate::stream::StreamReader::open(
+                                            &req_file, stream_buf,
+                                        )?;
+                                        let mut rec = vec![0u8; req_size];
+                                        while r.remaining() >= req_size as u64 {
+                                            r.read_exact(&mut rec)?;
+                                            let u_old =
+                                                u32::from_le_bytes(rec[..4].try_into().unwrap());
+                                            let v_old =
+                                                u32::from_le_bytes(rec[4..8].try_into().unwrap());
+                                            let u_new = new_id_of(&store.ids, u_old, i, n)?;
+                                            let mut rep = [0u8; 12];
+                                            rep[..4].copy_from_slice(&v_old.to_le_bytes());
+                                            rep[4..8].copy_from_slice(&u_new.to_le_bytes());
+                                            if weighted {
+                                                rep[8..12].copy_from_slice(&rec[8..12]);
+                                            }
+                                            tx.push(part.machine_of(v_old, n), &rep[..rep_size])?;
+                                        }
+                                        tx.finish()
+                                    })
+                                })
+                            };
+                            let spills =
+                                receive_sorted_replies(&mut rx, n, &store, rep_size, &rec_dir)?;
+                            responder.join().map_err(|e| Error::WorkerPanic {
+                                machine: i,
+                                cause: format!("{e:?}"),
+                            })??;
+                            let _ = std::fs::remove_file(&req_file);
+                            spills
                         };
-                        let mut w = StreamWriter::create(&req_file, stream_buf)?;
-                        rx.drain_phase(1, n, |data| w.write_all(data))?;
-                        w.finish()?;
-                        parser.join().map_err(|e| Error::WorkerPanic {
-                            machine: i,
-                            cause: format!("{e:?}"),
-                        })??;
+                        reply_spills = spills;
+                    } else {
+                        // ---- Undirected 1-round: v sends new_id(v) to each
+                        // neighbor u (owner(u) records it under u's position).
+                        phase.store(2, Ordering::Relaxed);
+                        let spills = {
+                            let announcer = {
+                                let store = store.clone();
+                                let mut tx = PhaseTx::new(sender.clone(), 2, pool.clone());
+                                let abort = abort.clone();
+                                std::thread::spawn(move || -> Result<()> {
+                                    let ph = AtomicU64::new(2);
+                                    abort.guard(i, "recode", &ph, || {
+                                        let mut se = EdgeStreamCursor::open(&store, stream_buf)?;
+                                        let mut edges = Vec::new();
+                                        for pos in 0..store.local_vertices() {
+                                            let v_new = (pos * n + i) as u32;
+                                            se.read_adjacency(store.degs[pos], &mut edges)?;
+                                            for e in &edges {
+                                                let mut rec = [0u8; 12];
+                                                rec[..4].copy_from_slice(&e.nbr.to_le_bytes());
+                                                rec[4..8].copy_from_slice(&v_new.to_le_bytes());
+                                                if weighted {
+                                                    rec[8..12]
+                                                        .copy_from_slice(&e.weight.to_le_bytes());
+                                                }
+                                                tx.push(part.machine_of(e.nbr, n), &rec[..rep_size])?;
+                                            }
+                                        }
+                                        tx.finish()
+                                    })
+                                })
+                            };
+                            let spills =
+                                receive_sorted_replies(&mut rx, n, &store, rep_size, &rec_dir)?;
+                            announcer.join().map_err(|e| Error::WorkerPanic {
+                                machine: i,
+                                cause: format!("{e:?}"),
+                            })??;
+                            spills
+                        };
+                        reply_spills = spills;
                     }
 
-                    // ---- Superstep 2: u replies (v_old, new_id(u)) to
-                    // owner(v_old); replies are sorted-spilled by target pos.
-                    let spills = {
-                        let responder = {
-                            let store = store.clone();
-                            let mut tx = PhaseTx::new(sender.clone(), 2, pool.clone());
-                            let req_file = req_file.clone();
-                            std::thread::spawn(move || -> Result<()> {
-                                let mut r =
-                                    crate::stream::StreamReader::open(&req_file, stream_buf)?;
-                                let mut rec = vec![0u8; req_size];
-                                while r.remaining() >= req_size as u64 {
-                                    r.read_exact(&mut rec)?;
-                                    let u_old =
-                                        u32::from_le_bytes(rec[..4].try_into().unwrap());
-                                    let v_old =
-                                        u32::from_le_bytes(rec[4..8].try_into().unwrap());
-                                    let u_new = new_id_of(&store.ids, u_old, i, n)?;
-                                    let mut rep = [0u8; 12];
-                                    rep[..4].copy_from_slice(&v_old.to_le_bytes());
-                                    rep[4..8].copy_from_slice(&u_new.to_le_bytes());
-                                    if weighted {
-                                        rep[8..12].copy_from_slice(&rec[8..12]);
-                                    }
-                                    tx.push(part.machine_of(v_old, n), &rep[..rep_size]);
-                                }
-                                tx.finish();
-                                Ok(())
-                            })
-                        };
-                        let spills =
-                            receive_sorted_replies(&mut rx, n, &store, rep_size, &rec_dir)?;
-                        responder.join().map_err(|e| Error::WorkerPanic {
-                            machine: i,
-                            cause: format!("{e:?}"),
-                        })??;
-                        let _ = std::fs::remove_file(&req_file);
-                        spills
-                    };
-                    reply_spills = spills;
-                } else {
-                    // ---- Undirected 1-round: v sends new_id(v) to each
-                    // neighbor u (owner(u) records it under u's position).
-                    let spills = {
-                        let announcer = {
-                            let store = store.clone();
-                            let mut tx = PhaseTx::new(sender.clone(), 2, pool.clone());
-                            std::thread::spawn(move || -> Result<()> {
-                                let mut se = EdgeStreamCursor::open(&store, stream_buf)?;
-                                let mut edges = Vec::new();
-                                for pos in 0..store.local_vertices() {
-                                    let v_new = (pos * n + i) as u32;
-                                    se.read_adjacency(store.degs[pos], &mut edges)?;
-                                    for e in &edges {
-                                        let mut rec = [0u8; 12];
-                                        rec[..4].copy_from_slice(&e.nbr.to_le_bytes());
-                                        rec[4..8].copy_from_slice(&v_new.to_le_bytes());
-                                        if weighted {
-                                            rec[8..12].copy_from_slice(&e.weight.to_le_bytes());
-                                        }
-                                        tx.push(part.machine_of(e.nbr, n), &rec[..rep_size]);
-                                    }
-                                }
-                                tx.finish();
-                                Ok(())
-                            })
-                        };
-                        let spills =
-                            receive_sorted_replies(&mut rx, n, &store, rep_size, &rec_dir)?;
-                        announcer.join().map_err(|e| Error::WorkerPanic {
-                            machine: i,
-                            cause: format!("{e:?}"),
-                        })??;
-                        spills
-                    };
-                    reply_spills = spills;
-                }
+                    // ---- Superstep 3 / final: merge reply spills by position
+                    // and append the recoded adjacency lists to S^E_rec.
+                    phase.store(3, Ordering::Relaxed);
+                    let mut se = EdgeStreamWriter::create(&rec_dir, weighted, stream_buf)?;
+                    let mut counts = vec![0u32; store.local_vertices()];
+                    merge::merge_streams(
+                        &reply_spills,
+                        rep_size,
+                        merge_k,
+                        stream_buf,
+                        &rec_dir,
+                        |rec| {
+                            let pos = u32::from_le_bytes(rec[..4].try_into().unwrap()) as usize;
+                            let u_new = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+                            let w = if weighted {
+                                f32::from_le_bytes(rec[8..12].try_into().unwrap())
+                            } else {
+                                1.0
+                            };
+                            counts[pos] += 1;
+                            se.push(u_new, w)
+                        },
+                    )?;
+                    se.finish()?;
+                    for sp in &reply_spills {
+                        let _ = std::fs::remove_file(sp);
+                    }
+                    if counts != store.degs {
+                        return Err(Error::CorruptStream(format!(
+                            "recode degree mismatch on machine {i}"
+                        )));
+                    }
 
-                // ---- Superstep 3 / final: merge reply spills by position
-                // and append the recoded adjacency lists to S^E_rec.
-                let mut se = EdgeStreamWriter::create(&rec_dir, weighted, stream_buf)?;
-                let mut counts = vec![0u32; store.local_vertices()];
-                merge::merge_streams(
-                    &reply_spills,
-                    rep_size,
-                    merge_k,
-                    stream_buf,
-                    &rec_dir,
-                    |rec| {
-                        let pos = u32::from_le_bytes(rec[..4].try_into().unwrap()) as usize;
-                        let u_new = u32::from_le_bytes(rec[4..8].try_into().unwrap());
-                        let w = if weighted {
-                            f32::from_le_bytes(rec[8..12].try_into().unwrap())
-                        } else {
-                            1.0
-                        };
-                        counts[pos] += 1;
-                        se.push(u_new, w)
-                    },
-                )?;
-                se.finish()?;
-                for sp in &reply_spills {
-                    let _ = std::fs::remove_file(sp);
-                }
-                if counts != store.degs {
-                    return Err(Error::CorruptStream(format!(
-                        "recode degree mismatch on machine {i}"
-                    )));
-                }
-
-                let rec_store = MachineStore {
-                    dir: rec_dir,
-                    machine: i,
-                    num_machines: n,
-                    total_vertices: store.total_vertices,
-                    weighted,
-                    recoded: true,
-                    ids: store.ids.clone(), // old IDs kept for reporting
-                    degs: store.degs.clone(),
-                };
-                rec_store.save()?;
-                Ok(rec_store)
+                    let rec_store = MachineStore {
+                        dir: rec_dir,
+                        machine: i,
+                        num_machines: n,
+                        total_vertices: store.total_vertices,
+                        weighted,
+                        recoded: true,
+                        ids: store.ids.clone(), // old IDs kept for reporting
+                        degs: store.degs.clone(),
+                    };
+                    rec_store.save()?;
+                    Ok(rec_store)
+                })
             }));
         }
         for (i, h) in handles.into_iter().enumerate() {
@@ -347,7 +381,9 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
         }
     });
 
-    results.into_iter().map(|r| r.unwrap()).collect()
+    let collected: Result<Vec<MachineStore>> =
+        results.into_iter().map(|r| r.unwrap()).collect();
+    collected.map_err(|e| abort.first_cause_or(e))
 }
 
 /// Receive reply records, translate the old target ID into the local array

@@ -7,9 +7,13 @@
 //! with bit-identical semantics — used when artifacts are absent, by the
 //! `use_xla=false` ablation, and as a correctness oracle in tests.
 //!
-//! The PJRT path is behind the `xla` cargo feature (it needs the external
-//! `xla`/`anyhow` crates and a PJRT plugin, which the offline build does
-//! not carry).  Without the feature [`KernelSet::load`] yields an empty
+//! The PJRT path is behind the `xla` cargo feature.  The feature compiles
+//! everywhere — offline builds link the compile-only stubs under
+//! `rust/vendor/` (CI's `cargo check --features xla` keeps this bridge
+//! from rotting), and loading an artifact against the stubs fails with a
+//! typed [`crate::error::Error::Xla`]; executing for real requires the
+//! actual `xla`/`anyhow` crates plus a PJRT plugin (see README.md).
+//! Without the feature [`KernelSet::load`] yields an empty
 //! set and every update runs on the scalar path — numerics are identical,
 //! so callers and tests need no gating.
 //!

@@ -77,6 +77,11 @@ pub enum Answer {
     ReachCount(u64),
     /// The query referenced a vertex that is not in the graph.
     UnknownVertex(u32),
+    /// The batch job running this query died (e.g. a worker failure
+    /// surfaced as [`crate::error::Error::JobFailed`]).  The failure is
+    /// scoped to the batch: the server stays up and later batches are
+    /// served; the cause is in [`QueryResult::error`].
+    Failed,
 }
 
 /// One served query with its latency accounting.
@@ -97,6 +102,8 @@ pub struct QueryResult {
     pub lanes_in_batch: usize,
     /// Supersteps the batch ran.
     pub supersteps: u64,
+    /// The rendered batch error when `answer` is [`Answer::Failed`].
+    pub error: Option<String>,
 }
 
 /// Server configuration: lane width k, execution mode, superstep cap.
@@ -249,6 +256,7 @@ impl<'g, 's> QueryServer<'g, 's> {
                             batch: seq,
                             lanes_in_batch: 0,
                             supersteps: 0,
+                            error: None,
                         })
                     }
                 }
@@ -256,22 +264,46 @@ impl<'g, 's> QueryServer<'g, 's> {
 
             if !lanes.is_empty() {
                 let preps: Vec<&Prepared> = lanes.iter().map(|(_, p)| p).collect();
-                let (answers, supersteps, wall, job) =
-                    run_batch_any(self.graph, &self.cfg, &preps)?;
-                self.metrics.record_batch(lanes.len() as u64, wall, &job);
-                for ((i, _), answer) in lanes.iter().zip(answers) {
-                    let p = &batch[*i];
-                    let latency_secs = p.submitted.elapsed().as_secs_f64();
-                    self.metrics.latencies_secs.push(latency_secs);
-                    slots[*i] = Some(QueryResult {
-                        id: p.id,
-                        query: p.query,
-                        answer,
-                        latency_secs,
-                        batch: seq,
-                        lanes_in_batch: lanes.len(),
-                        supersteps,
-                    });
+                match run_batch_any(self.graph, &self.cfg, &preps) {
+                    Ok((answers, supersteps, wall, job)) => {
+                        self.metrics.record_batch(lanes.len() as u64, wall, &job);
+                        for ((i, _), answer) in lanes.iter().zip(answers) {
+                            let p = &batch[*i];
+                            let latency_secs = p.submitted.elapsed().as_secs_f64();
+                            self.metrics.latencies_secs.push(latency_secs);
+                            slots[*i] = Some(QueryResult {
+                                id: p.id,
+                                query: p.query,
+                                answer,
+                                latency_secs,
+                                batch: seq,
+                                lanes_in_batch: lanes.len(),
+                                supersteps,
+                                error: None,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        // Failure isolation: the batch's queries fail with
+                        // the typed cause, the queue keeps draining, and
+                        // the server survives for future submissions.
+                        let msg = e.to_string();
+                        eprintln!("[graphd::serve] batch {seq} failed: {msg}");
+                        self.metrics.failed_batches += 1;
+                        for (i, _) in &lanes {
+                            let p = &batch[*i];
+                            slots[*i] = Some(QueryResult {
+                                id: p.id,
+                                query: p.query,
+                                answer: Answer::Failed,
+                                latency_secs: p.submitted.elapsed().as_secs_f64(),
+                                batch: seq,
+                                lanes_in_batch: lanes.len(),
+                                supersteps: 0,
+                                error: Some(msg.clone()),
+                            });
+                        }
+                    }
                 }
             }
             results.extend(slots.into_iter().flatten());
@@ -442,6 +474,10 @@ pub fn render_result(r: &QueryResult) -> String {
         Answer::Reach(false) => "no".to_string(),
         Answer::ReachCount(c) => format!("{c}"),
         Answer::UnknownVertex(v) => format!("unknown vertex {v}"),
+        Answer::Failed => match &r.error {
+            Some(e) => format!("failed ({e})"),
+            None => "failed".to_string(),
+        },
     };
     format!(
         "{q} = {a}  ({:.1} ms, batch {} x{}, {} supersteps)",
@@ -579,6 +615,7 @@ mod tests {
             batch: 3,
             lanes_in_batch: 8,
             supersteps: 11,
+            error: None,
         };
         let s = render_result(&r);
         assert!(s.starts_with("dist 1 2 = unreachable"));

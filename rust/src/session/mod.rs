@@ -628,8 +628,37 @@ impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
             (None, _) => None,
         };
         let eng = Engine::new(self.graph.engine.profile.clone(), cfg)?;
-        let mut res =
-            engine_run::run_job_with_impl(&eng, stores, self.program, checkpoint, self.resume)?;
+        let run =
+            engine_run::run_job_with_impl(&eng, stores, self.program, checkpoint.clone(), self.resume);
+        let mut res = match run {
+            // Failed checkpointed job: report the last durable superstep so
+            // the caller can recover with `.checkpoint(..).resume(s)` —
+            // the paper's §3.4 restart, now reachable from a typed error.
+            Err(Error::JobFailed {
+                machine,
+                unit,
+                superstep,
+                cause,
+            }) => {
+                let cause = match checkpoint
+                    .as_ref()
+                    .and_then(|ck| crate::ft::resume_hint(&ck.dir))
+                {
+                    Some(s) => format!(
+                        "{cause}; last durable checkpoint: superstep {s} \
+                         (recover with .checkpoint(..).resume({s}))"
+                    ),
+                    None => cause,
+                };
+                return Err(Error::JobFailed {
+                    machine,
+                    unit,
+                    superstep,
+                    cause,
+                });
+            }
+            r => r?,
+        };
         res.metrics.load_secs = self.graph.load_secs;
         if plan.mode == Mode::Recoded {
             res.metrics.preprocess_secs = self.graph.recode_secs.unwrap_or(0.0);

@@ -17,8 +17,188 @@
 //! through a [`Rendezvous`] barrier (the paper's two independent
 //! synchronizations: aggregator/control among U_c's — early; transmission
 //! completion among U_r's — late).
+//!
+//! **Failure propagation.**  Every blocking primitive in this module is
+//! *poisonable*: the first unit to die anywhere in the job trips the shared
+//! [`JobAbort`], which broadcasts the [`AbortCause`] to every registered
+//! [`MachineSync`] and [`Rendezvous`] (and is polled by the channel waits
+//! in [`crate::net`]).  All current **and future** waiters unblock with a
+//! typed [`crate::error::Error::JobFailed`] instead of wedging — the
+//! observability §6's recovery story presumes (see `DESIGN.md`,
+//! "Failure propagation").
 
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Why a job died: filled in exactly once by the first failing unit and
+/// broadcast through [`JobAbort`] to every barrier and channel wait.
+#[derive(Clone, Debug)]
+pub struct AbortCause {
+    /// Machine index of the failing unit.
+    pub machine: usize,
+    /// Which unit died: `"U_c"`, `"U_s"`, `"U_r"`, `"load"`, `"recode"`.
+    pub unit: &'static str,
+    /// Superstep (or preprocessing phase) the unit was executing.
+    pub superstep: u64,
+    /// The underlying failure, rendered.
+    pub cause: String,
+}
+
+impl AbortCause {
+    /// The typed error every poisoned wait surfaces.
+    pub fn to_error(&self) -> Error {
+        Error::JobFailed {
+            machine: self.machine,
+            unit: self.unit,
+            superstep: self.superstep,
+            cause: self.cause.clone(),
+        }
+    }
+}
+
+/// Error payload of a poisoned [`Rendezvous::exchange`].
+#[derive(Clone, Debug)]
+pub struct Poisoned(
+    /// The broadcast abort cause.
+    pub Arc<AbortCause>,
+);
+
+impl From<Poisoned> for Error {
+    fn from(p: Poisoned) -> Self {
+        p.0.to_error()
+    }
+}
+
+/// Anything that can be unblocked with a cause when the job aborts.
+pub trait Poisonable: Send + Sync {
+    /// Wake all current and future waiters with `cause`.  Idempotent: the
+    /// first cause wins, later poisons are no-ops.
+    fn poison(&self, cause: Arc<AbortCause>);
+}
+
+/// The job-wide abort latch: one per job, shared by every machine.
+///
+/// The first failing unit calls [`JobAbort::trip`]; every registered
+/// [`Poisonable`] (each machine's [`MachineSync`], the inter-machine
+/// [`Rendezvous`] barriers) is poisoned, and the flag is polled by the
+/// channel/switch waits in [`crate::net`].  Trips after the first keep the
+/// original cause — every machine reports the same failure origin.
+pub struct JobAbort {
+    tripped: AtomicBool,
+    cause: Mutex<Option<Arc<AbortCause>>>,
+    listeners: Mutex<Vec<Arc<dyn Poisonable>>>,
+}
+
+impl JobAbort {
+    /// A fresh, untripped latch.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            tripped: AtomicBool::new(false),
+            cause: Mutex::new(None),
+            listeners: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Register a barrier/sync for poisoning.  If the latch already
+    /// tripped, the listener is poisoned immediately (registration race:
+    /// a machine may start after a sibling died).
+    pub fn register(&self, l: Arc<dyn Poisonable>) {
+        self.listeners.lock().unwrap().push(l.clone());
+        if let Some(c) = self.cause.lock().unwrap().clone() {
+            l.poison(c);
+        }
+    }
+
+    /// Record `cause` (first trip wins) and poison every registered
+    /// listener.  Returns the *winning* cause — the one every wait in the
+    /// job will report, which may be an earlier trip from another machine.
+    pub fn trip(&self, cause: AbortCause) -> Arc<AbortCause> {
+        let winner = {
+            let mut c = self.cause.lock().unwrap();
+            match &*c {
+                Some(existing) => existing.clone(),
+                None => {
+                    let a = Arc::new(cause);
+                    *c = Some(a.clone());
+                    a
+                }
+            }
+        };
+        self.tripped.store(true, Ordering::Release);
+        let listeners: Vec<Arc<dyn Poisonable>> =
+            self.listeners.lock().unwrap().clone();
+        for l in listeners {
+            l.poison(winner.clone());
+        }
+        winner
+    }
+
+    /// Has any unit tripped the latch?  (Polled by the channel waits.)
+    pub fn aborted(&self) -> bool {
+        self.tripped.load(Ordering::Acquire)
+    }
+
+    /// The recorded cause, if tripped.
+    pub fn cause(&self) -> Option<Arc<AbortCause>> {
+        self.cause.lock().unwrap().clone()
+    }
+
+    /// The typed error for the recorded *first* cause, or `fallback` when
+    /// the latch never tripped.  The per-phase drivers (run/load/recode)
+    /// report through this so a propagated echo from whichever machine
+    /// happened to be joined first never shadows the failure origin.
+    pub fn first_cause_or(&self, fallback: Error) -> Error {
+        match self.cause() {
+            Some(c) => c.to_error(),
+            None => fallback,
+        }
+    }
+
+    /// Run one unit's body with full failure capture: panics are caught
+    /// and converted, any first-order error trips the latch (a propagated
+    /// [`Error::JobFailed`] is someone else's abort echoing back — it is
+    /// returned as-is, without re-tripping).  `superstep` is the unit's
+    /// progress beacon, read at failure time for the [`AbortCause`].
+    pub fn guard<T>(
+        &self,
+        machine: usize,
+        unit: &'static str,
+        superstep: &AtomicU64,
+        f: impl FnOnce() -> Result<T>,
+    ) -> Result<T> {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).unwrap_or_else(|p| {
+            Err(Error::WorkerPanic {
+                machine,
+                cause: format!("{unit} panicked: {}", panic_message(&p)),
+            })
+        });
+        match r {
+            Ok(v) => Ok(v),
+            Err(e @ Error::JobFailed { .. }) => Err(e),
+            Err(e) => {
+                eprintln!("[graphd] {unit} of machine {machine} failed: {e}");
+                let winner = self.trip(AbortCause {
+                    machine,
+                    unit,
+                    superstep: superstep.load(Ordering::Relaxed),
+                    cause: e.to_string(),
+                });
+                Err(winner.to_error())
+            }
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Per-machine unit coordination state.
 #[derive(Debug)]
@@ -40,9 +220,9 @@ struct State {
     /// Per-destination OMS file watermarks, one entry pushed per superstep:
     /// `watermarks[dst][s]` = first file index NOT belonging to steps ≤ s.
     watermarks: Vec<Vec<u64>>,
-    /// A unit died with an error; waiting units panic instead of
-    /// deadlocking (the error itself is propagated by the joiner).
-    failed: Option<String>,
+    /// A unit died somewhere in the job; waiting units return the typed
+    /// error instead of deadlocking.
+    failed: Option<Arc<AbortCause>>,
 }
 
 impl MachineSync {
@@ -67,23 +247,28 @@ impl MachineSync {
         self.cond.notify_all();
     }
 
-    fn wait_until<T>(&self, mut pred: impl FnMut(&State) -> Option<T>) -> T {
+    fn wait_until<T>(&self, mut pred: impl FnMut(&State) -> Option<T>) -> Result<T> {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(cause) = &st.failed {
-                panic!("sibling unit failed: {cause}");
+                return Err(cause.to_error());
             }
             if let Some(v) = pred(&st) {
-                return v;
+                return Ok(v);
             }
             st = self.cond.wait(st).unwrap();
         }
     }
 
-    /// Poison the machine: a unit died; wake all waiters so they panic
-    /// instead of deadlocking.
-    pub fn fail(&self, cause: String) {
-        self.update(|st| st.failed = Some(cause));
+    /// Poison the machine: a unit died somewhere in the job; wake all
+    /// waiters so they surface the typed error instead of deadlocking.
+    /// First cause wins (idempotent).
+    pub fn fail(&self, cause: Arc<AbortCause>) {
+        self.update(|st| {
+            if st.failed.is_none() {
+                st.failed = Some(cause);
+            }
+        });
     }
 
     // ---- U_c side ----
@@ -109,20 +294,20 @@ impl MachineSync {
     }
 
     /// U_c blocks until all superstep-`s` messages for this machine arrived.
-    pub fn wait_recv_done(&self, s: u64) {
-        self.wait_until(|st| (st.recv_done >= s as i64).then_some(()));
+    pub fn wait_recv_done(&self, s: u64) -> Result<()> {
+        self.wait_until(|st| (st.recv_done >= s as i64).then_some(()))
     }
 
     // ---- U_s side ----
 
     /// U_s blocks until it may transmit superstep-`s` messages.
-    pub fn wait_send_allowed(&self, s: u64) {
-        self.wait_until(|st| (st.send_allowed >= s as i64).then_some(()));
+    pub fn wait_send_allowed(&self, s: u64) -> Result<()> {
+        self.wait_until(|st| (st.send_allowed >= s as i64).then_some(()))
     }
 
     /// U_s blocks until U_c finished superstep `s`, returning the OMS
     /// watermarks for `s` (so it can tell step-s files from step-(s+1)).
-    pub fn wait_compute_done(&self, s: u64) -> Vec<u64> {
+    pub fn wait_compute_done(&self, s: u64) -> Result<Vec<u64>> {
         self.wait_until(|st| {
             (st.compute_done >= s as i64)
                 .then(|| st.watermarks.iter().map(|w| w[s as usize]).collect())
@@ -138,18 +323,25 @@ impl MachineSync {
     /// Sleep until new OMS files may exist (notified on every publish);
     /// bounded wait keeps the sender responsive to progress it can't
     /// observe through this condvar (file closes inside SplittableStream).
-    /// Panics when the machine is poisoned — the sender's scan loop polls
+    /// Errors when the machine is poisoned — the sender's scan loop polls
     /// through here, so this is where it observes a dead sibling instead
-    /// of spinning forever on a step that will never complete.
-    pub fn idle_wait(&self) {
+    /// of spinning forever on a step that will never complete.  The poison
+    /// flag is checked on entry **and** after the timed wait: a poison that
+    /// lands while the sender sleeps must not buy it another scan pass over
+    /// a step that will never finish.
+    pub fn idle_wait(&self) -> Result<()> {
         let st = self.state.lock().unwrap();
         if let Some(cause) = &st.failed {
-            panic!("sibling unit failed: {cause}");
+            return Err(cause.to_error());
         }
-        let _ = self
+        let (st, _timeout) = self
             .cond
             .wait_timeout(st, std::time::Duration::from_micros(500))
             .unwrap();
+        if let Some(cause) = &st.failed {
+            return Err(cause.to_error());
+        }
+        Ok(())
     }
 
     /// Wake any unit in `idle_wait` (U_c calls this after closing OMS files).
@@ -172,14 +364,26 @@ impl MachineSync {
     /// Block until the control decision for superstep `s` is published;
     /// returns whether the job continues *past superstep s* (the verdict
     /// for exactly step `s`, even if later steps were already decided).
-    pub fn wait_decided(&self, s: u64) -> bool {
+    pub fn wait_decided(&self, s: u64) -> Result<bool> {
         self.wait_until(|st| st.verdicts.get(s as usize).copied())
+    }
+}
+
+impl Poisonable for MachineSync {
+    fn poison(&self, cause: Arc<AbortCause>) {
+        self.fail(cause);
     }
 }
 
 /// Reusable N-party barrier with a leader section: all parties deposit,
 /// one (the last to arrive) runs `leader` over the deposits, then everyone
 /// observes the result.  (std's Barrier has no deposit/result phase.)
+///
+/// The barrier is *poisonable*: once any party (or the job's [`JobAbort`])
+/// calls [`Rendezvous::poison`], every current and future
+/// [`Rendezvous::exchange`] returns `Err(Poisoned)` with the cause — this
+/// is what converts "a sibling machine died mid-superstep" from a
+/// permanent wedge into a typed error at every surviving machine.
 pub struct Rendezvous<T, R> {
     n: usize,
     state: Mutex<RvState<T, R>>,
@@ -191,6 +395,7 @@ struct RvState<T, R> {
     deposits: Vec<Option<T>>,
     result: Option<R>,
     left: usize,
+    poisoned: Option<Arc<AbortCause>>,
 }
 
 impl<T, R: Clone> Rendezvous<T, R> {
@@ -203,17 +408,41 @@ impl<T, R: Clone> Rendezvous<T, R> {
                 deposits: (0..n).map(|_| None).collect(),
                 result: None,
                 left: 0,
+                poisoned: None,
             }),
             cond: Condvar::new(),
         })
     }
 
+    /// Poison the barrier with `cause`: all current and future parties
+    /// unblock with `Err(Poisoned)`.  First cause wins (idempotent).
+    pub fn poison(&self, cause: Arc<AbortCause>) {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned.is_none() {
+            st.poisoned = Some(cause);
+        }
+        self.cond.notify_all();
+    }
+
     /// Deposit `value` for `who`, run `leader` once all `n` deposited, and
-    /// return the (cloned) leader result to every party.
-    pub fn exchange(&self, who: usize, value: T, leader: impl FnOnce(Vec<T>) -> R) -> R {
+    /// return the (cloned) leader result to every party — or
+    /// `Err(Poisoned)` if the barrier was poisoned before, while, or after
+    /// this party arrived (a dead sibling can never complete the round).
+    pub fn exchange(
+        &self,
+        who: usize,
+        value: T,
+        leader: impl FnOnce(Vec<T>) -> R,
+    ) -> std::result::Result<R, Poisoned> {
         let mut st = self.state.lock().unwrap();
         // Wait for the previous round's stragglers to pick up their result.
-        while st.left > 0 {
+        loop {
+            if let Some(c) = &st.poisoned {
+                return Err(Poisoned(c.clone()));
+            }
+            if st.left == 0 {
+                break;
+            }
             st = self.cond.wait(st).unwrap();
         }
         let round = st.round;
@@ -227,10 +456,13 @@ impl<T, R: Clone> Rendezvous<T, R> {
             st.left = self.n - 1;
             st.round += 1;
             self.cond.notify_all();
-            return r;
+            return Ok(r);
         }
         loop {
             st = self.cond.wait(st).unwrap();
+            if let Some(c) = &st.poisoned {
+                return Err(Poisoned(c.clone()));
+            }
             if st.round > round {
                 let r = st.result.as_ref().unwrap().clone();
                 st.left -= 1;
@@ -238,9 +470,15 @@ impl<T, R: Clone> Rendezvous<T, R> {
                     st.result = None;
                     self.cond.notify_all();
                 }
-                return r;
+                return Ok(r);
             }
         }
+    }
+}
+
+impl<T: Send, R: Send + Clone> Poisonable for Rendezvous<T, R> {
+    fn poison(&self, cause: Arc<AbortCause>) {
+        Rendezvous::poison(self, cause);
     }
 }
 
@@ -254,8 +492,8 @@ mod tests {
         let ms = MachineSync::new(2);
         let ms2 = ms.clone();
         let t = std::thread::spawn(move || {
-            ms2.wait_recv_done(0);
-            ms2.wait_send_allowed(1);
+            ms2.wait_recv_done(0).unwrap();
+            ms2.wait_send_allowed(1).unwrap();
             true
         });
         ms.set_recv_done(0);
@@ -267,21 +505,21 @@ mod tests {
     fn watermarks_per_step() {
         let ms = MachineSync::new(3);
         ms.set_compute_done(0, vec![2, 0, 1]);
-        let m = ms.wait_compute_done(0);
+        let m = ms.wait_compute_done(0).unwrap();
         assert_eq!(m, vec![2, 0, 1]);
         assert_eq!(ms.try_watermark(0, 0), Some(2));
         assert_eq!(ms.try_watermark(0, 1), None);
         ms.set_compute_done(1, vec![5, 1, 1]);
-        assert_eq!(ms.wait_compute_done(1), vec![5, 1, 1]);
+        assert_eq!(ms.wait_compute_done(1).unwrap(), vec![5, 1, 1]);
     }
 
     #[test]
     fn decided_carries_verdict() {
         let ms = MachineSync::new(1);
         ms.set_decided(0, true);
-        assert!(ms.wait_decided(0));
+        assert!(ms.wait_decided(0).unwrap());
         ms.set_decided(1, false);
-        assert!(!ms.wait_decided(1));
+        assert!(!ms.wait_decided(1).unwrap());
     }
 
     #[test]
@@ -293,7 +531,7 @@ mod tests {
                 let rv = rv.clone();
                 let total = &total;
                 s.spawn(move || {
-                    let r = rv.exchange(who, who as u64 + 1, |vs| vs.iter().sum());
+                    let r = rv.exchange(who, who as u64 + 1, |vs| vs.iter().sum()).unwrap();
                     total.fetch_add(r, Ordering::SeqCst);
                 });
             }
@@ -310,14 +548,145 @@ mod tests {
                 let rv = rv.clone();
                 s.spawn(move || {
                     for round in 0..50u64 {
-                        let r = rv.exchange(who, round, |vs| {
-                            assert!(vs.iter().all(|&v| v == round));
-                            round * 3
-                        });
+                        let r = rv
+                            .exchange(who, round, |vs| {
+                                assert!(vs.iter().all(|&v| v == round));
+                                round * 3
+                            })
+                            .unwrap();
                         assert_eq!(r, round * 3);
                     }
                 });
             }
         });
+    }
+
+    fn cause(tag: &str) -> Arc<AbortCause> {
+        Arc::new(AbortCause {
+            machine: 2,
+            unit: "U_c",
+            superstep: 7,
+            cause: tag.to_string(),
+        })
+    }
+
+    #[test]
+    fn rendezvous_poison_before_arrival() {
+        let rv: Arc<Rendezvous<u64, u64>> = Rendezvous::new(3);
+        rv.poison(cause("pre"));
+        // Every party that arrives after the poison errors immediately.
+        for who in 0..3 {
+            let err = rv.exchange(who, 0, |_| 0).unwrap_err();
+            assert_eq!(err.0.cause, "pre");
+            assert_eq!(err.0.machine, 2);
+        }
+    }
+
+    #[test]
+    fn rendezvous_poison_unblocks_waiting_party() {
+        let rv: Arc<Rendezvous<u64, u64>> = Rendezvous::new(2);
+        let rv2 = rv.clone();
+        let t = std::thread::spawn(move || rv2.exchange(0, 1, |_| 0));
+        // Give the party time to block, then poison instead of arriving.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        rv.poison(cause("mid"));
+        let err = t.join().unwrap().unwrap_err();
+        assert_eq!(err.0.cause, "mid");
+        // And the barrier stays dead for later rounds.
+        assert!(rv.exchange(1, 9, |_| 0).is_err());
+    }
+
+    #[test]
+    fn rendezvous_poison_after_completed_round() {
+        let rv: Arc<Rendezvous<u64, u64>> = Rendezvous::new(2);
+        std::thread::scope(|s| {
+            for who in 0..2 {
+                let rv = rv.clone();
+                s.spawn(move || {
+                    assert_eq!(rv.exchange(who, 1, |vs| vs.iter().sum()).unwrap(), 2);
+                });
+            }
+        });
+        // A poison landing after a clean round still kills future rounds.
+        rv.poison(cause("post"));
+        let err = rv.exchange(0, 1, |_| 0u64).unwrap_err();
+        assert_eq!(err.0.cause, "post");
+        assert_eq!(err.0.superstep, 7);
+    }
+
+    #[test]
+    fn rendezvous_first_poison_wins() {
+        let rv: Arc<Rendezvous<u64, u64>> = Rendezvous::new(2);
+        rv.poison(cause("first"));
+        rv.poison(cause("second"));
+        let err = rv.exchange(0, 0, |_| 0).unwrap_err();
+        assert_eq!(err.0.cause, "first");
+    }
+
+    #[test]
+    fn machine_sync_poison_unblocks_and_sticks() {
+        let ms = MachineSync::new(2);
+        let ms2 = ms.clone();
+        let t = std::thread::spawn(move || ms2.wait_recv_done(0));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        ms.fail(cause("dead sibling"));
+        let err = t.join().unwrap().unwrap_err();
+        assert!(matches!(err, crate::error::Error::JobFailed { machine: 2, .. }));
+        // idle_wait observes the poison too (entry check).
+        assert!(ms.idle_wait().is_err());
+        // Future waits fail as well, even for already-published steps.
+        ms.set_recv_done(3);
+        assert!(ms.wait_recv_done(3).is_err());
+    }
+
+    #[test]
+    fn idle_wait_observes_poison_after_timeout() {
+        // Poison lands while the sender sleeps inside idle_wait: the
+        // post-timeout re-check must surface it on that same call.
+        let ms = MachineSync::new(1);
+        let ms2 = ms.clone();
+        let t = std::thread::spawn(move || -> crate::error::Result<()> {
+            // Loop like the sender's scan loop does; the poison must break
+            // us out with an error, not let us spin.
+            loop {
+                ms2.idle_wait()?;
+            }
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        ms.fail(cause("late"));
+        assert!(t.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn job_abort_trips_once_and_poisons_registered() {
+        let abort = JobAbort::new();
+        let rv: Arc<Rendezvous<u64, u64>> = Rendezvous::new(2);
+        let ms = MachineSync::new(1);
+        abort.register(rv.clone());
+        abort.register(ms.clone());
+        assert!(!abort.aborted());
+        let w = abort.trip(AbortCause {
+            machine: 0,
+            unit: "U_r",
+            superstep: 3,
+            cause: "io".into(),
+        });
+        assert_eq!(w.cause, "io");
+        assert!(abort.aborted());
+        // Both listeners are poisoned with the tripped cause.
+        assert!(rv.exchange(0, 0, |_| 0).is_err());
+        assert!(ms.wait_recv_done(0).is_err());
+        // Second trip keeps the first cause.
+        let w2 = abort.trip(AbortCause {
+            machine: 1,
+            unit: "U_s",
+            superstep: 4,
+            cause: "later".into(),
+        });
+        assert_eq!(w2.cause, "io");
+        // Late registration is poisoned immediately.
+        let late = MachineSync::new(1);
+        abort.register(late.clone());
+        assert!(late.wait_recv_done(0).is_err());
     }
 }

@@ -55,10 +55,11 @@ use crate::util::bitset::BitSet;
 use crate::util::diskio::read_file_into;
 use crate::util::timer::Stopwatch;
 use crate::worker::storage::{EdgeStreamCursor, MachineStore};
-use crate::worker::sync::{MachineSync, Rendezvous};
+use crate::worker::sync::{JobAbort, MachineSync, Rendezvous};
 use crate::worker::Partitioning;
 use std::collections::VecDeque;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Messages of one finished superstep, handed from U_r to U_c.
@@ -237,6 +238,12 @@ pub struct JobGlobal<P: VertexProgram> {
     /// shard ping-pong through it instead of reallocating `O(|V|/n)`
     /// arrays every superstep.
     pub digest_pool: Arc<DigestPool<P::Msg>>,
+    /// The job-wide abort latch: the first failing unit anywhere trips it,
+    /// poisoning every machine's [`MachineSync`], all three [`Rendezvous`]
+    /// barriers, and the channel waits in [`crate::net`] — converting every
+    /// "sibling died" scenario from deadlock to a typed
+    /// [`Error::JobFailed`].
+    pub abort: Arc<JobAbort>,
 }
 
 /// Per-machine output returned by [`run_machine`].
@@ -312,6 +319,10 @@ pub fn run_machine_resumed<P: VertexProgram>(
     let me = store.machine;
     let n = global.n;
     let msync = MachineSync::new(n);
+    // Every machine's sync is poisoned when any unit of any machine trips
+    // the job abort; register() also handles the race where a sibling died
+    // before this machine even started.
+    global.abort.register(msync.clone());
     let incoming: Arc<IncomingQueue<P::Msg>> = IncomingQueue::new();
     let sink = MetricsSink::new();
     // The fast path's U_c → U_r handoff lane, when active: the digesting
@@ -337,6 +348,13 @@ pub fn run_machine_resumed<P: VertexProgram>(
     }
     let oms = Arc::new(oms);
 
+    // Per-unit progress beacons: each unit publishes the superstep it is
+    // executing so a failure can be attributed to the step it happened in
+    // (the `superstep` field of [`Error::JobFailed`]).
+    let us_step = Arc::new(AtomicU64::new(0));
+    let ur_step = Arc::new(AtomicU64::new(0));
+    let uc_step = Arc::new(AtomicU64::new(0));
+
     std::thread::scope(|scope| -> Result<MachineOutput<P>> {
         let us_handle = {
             let oms = oms.clone();
@@ -345,16 +363,17 @@ pub fn run_machine_resumed<P: VertexProgram>(
             let sender = sender.clone();
             let job_dir = job_dir.clone();
             let disk = disk.clone();
+            let beacon = us_step.clone();
             scope.spawn(move || {
                 let _dg = crate::util::diskio::register(disk);
-                let r = sender_unit(global, me, oms, msync.clone(), sender, job_dir, sink);
-                if let Err(e) = &r {
-                    // Surface immediately and poison the machine: U_c may
-                    // be blocked and would otherwise deadlock.
-                    eprintln!("[graphd] U_s of machine {me} failed: {e}");
-                    msync.fail(format!("U_s: {e}"));
-                }
-                r
+                // guard(): catches panics, trips the job abort on any
+                // first-order failure (poisoning every machine), and lets a
+                // propagated JobFailed pass through untouched.  U_c may be
+                // blocked on this machine's sync and every peer at a
+                // barrier or channel — all of them unblock typed.
+                global.abort.guard(me, "U_s", &beacon, || {
+                    sender_unit(global, me, oms, msync, sender, job_dir, sink, &beacon)
+                })
             })
         };
         let ur_handle = {
@@ -366,41 +385,35 @@ pub fn run_machine_resumed<P: VertexProgram>(
             let disk = disk.clone();
             let shard = local_shard.clone();
             let spill = local_spill.clone();
+            let beacon = ur_step.clone();
             scope.spawn(move || {
                 let _dg = crate::util::diskio::register(disk);
-                let r = receiver_unit(
-                    global, me, local, receiver, msync.clone(), incoming, shard, spill, job_dir,
-                    sink,
-                );
-                if let Err(e) = &r {
-                    eprintln!("[graphd] U_r of machine {me} failed: {e}");
-                    msync.fail(format!("U_r: {e}"));
-                }
-                r
+                global.abort.guard(me, "U_r", &beacon, || {
+                    receiver_unit(
+                        global, me, local, receiver, msync, incoming, shard, spill, job_dir,
+                        sink, &beacon,
+                    )
+                })
             })
         };
 
         let uc_out = {
             let _dg = crate::util::diskio::register(disk.clone());
-            compute_unit(
-                global, store, init_values, init_halted, init_incoming, oms, msync.clone(),
-                incoming, local_shard, local_spill, sender, &sink,
-            )
+            // Same guard inline: a panic in `program.compute` (or any U_c
+            // error) trips the abort before we block joining the siblings
+            // below — without it the scope join itself would deadlock on
+            // the blocked U_s/U_r threads.
+            global.abort.guard(me, "U_c", &uc_step, || {
+                compute_unit(
+                    global, store, init_values, init_halted, init_incoming, oms,
+                    msync.clone(), incoming, local_shard, local_spill, sender, &sink,
+                    &uc_step,
+                )
+            })
         };
-        if let Err(e) = &uc_out {
-            // Poison the machine like U_s/U_r do: siblings blocked on the
-            // *sync state* panic instead of spinning on a step that will
-            // never complete.  (At n=1 this fully unwinds — U_s dies, the
-            // last senders drop, U_r's recv panics.  At n>1 a machine
-            // failure still wedges peers at the rendezvous barriers, a
-            // pre-existing limitation shared with U_s/U_r failures; see
-            // ROADMAP "distributed failure propagation".)
-            eprintln!("[graphd] U_c of machine {me} failed: {e}");
-            msync.fail(format!("U_c: {e}"));
-        }
 
-        // Join both siblings first, but report U_c's *typed* error ahead
-        // of the opaque panic the poisoning induces in them.
+        // Join both siblings, then report U_c's error ahead of the
+        // siblings' (all three carry the same propagated first cause).
         let us_res = us_handle.join();
         let ur_res = ur_handle.join();
         let (ids, values, peak_state, supersteps, final_agg) = uc_out?;
@@ -433,6 +446,7 @@ pub fn run_machine_resumed<P: VertexProgram>(
 /// One taken OMS file: (index, path, bytes).
 pub type TakenFile = (u64, PathBuf, u64);
 
+#[allow(clippy::too_many_arguments)]
 fn sender_unit<P: VertexProgram>(
     global: &JobGlobal<P>,
     me: usize,
@@ -441,6 +455,7 @@ fn sender_unit<P: VertexProgram>(
     mut sender: NetSender,
     job_dir: PathBuf,
     sink: MetricsSink,
+    beacon: &AtomicU64,
 ) -> Result<()> {
     let n = global.n;
     let rec_size = msg_rec_size::<P::Msg>();
@@ -469,7 +484,10 @@ fn sender_unit<P: VertexProgram>(
 
     let mut step: u64 = 0;
     loop {
-        msync.wait_send_allowed(step);
+        // Beacons carry *absolute* supersteps so resumed jobs attribute
+        // failures in the same space as the checkpoints they resume from.
+        beacon.store(global.step_base + step, Ordering::Relaxed);
+        msync.wait_send_allowed(step)?;
         let mut sw = Stopwatch::new();
         let mut marks: Option<Vec<u64>> = None;
         let mut end_sent = vec![false; n];
@@ -515,7 +533,7 @@ fn sender_unit<P: VertexProgram>(
                         )?
                     };
                     let (nbytes, nmsgs) = (batch.len() as u64, (batch.len() / rec_size) as u64);
-                    sender.send(j, step, Payload::Data(batch));
+                    sender.send(j, step, Payload::Data(batch))?;
                     sw.stop();
                     sink.with_step(step, |m| {
                         if local {
@@ -542,7 +560,7 @@ fn sender_unit<P: VertexProgram>(
                     let mut data = pool.take();
                     read_file_into(&path, &mut data)?;
                     let (nbytes, nmsgs) = (data.len() as u64, (data.len() / rec_size) as u64);
-                    sender.send(j, step, Payload::Data(data));
+                    sender.send(j, step, Payload::Data(data))?;
                     sw.stop();
                     sink.with_step(step, |m| {
                         if local {
@@ -563,7 +581,7 @@ fn sender_unit<P: VertexProgram>(
                 if let Some(m) = &marks {
                     for j in 0..n {
                         if !end_sent[j] && sent_files[j] == m[j] {
-                            sw.time(|| sender.send(j, step, Payload::End));
+                            sw.time(|| sender.send(j, step, Payload::End))?;
                             end_sent[j] = true;
                             ends_left -= 1;
                         }
@@ -572,11 +590,11 @@ fn sender_unit<P: VertexProgram>(
                         break;
                     }
                 }
-                msync.idle_wait();
+                msync.idle_wait()?;
             }
         }
         sink.with_step(step, |m| m.m_send_secs += sw.secs());
-        if !msync.wait_decided(step) {
+        if !msync.wait_decided(step)? {
             return Ok(());
         }
         step += 1;
@@ -744,6 +762,7 @@ fn receiver_unit<P: VertexProgram>(
     local_spill: Option<Arc<SpillLane>>,
     job_dir: PathBuf,
     sink: MetricsSink,
+    beacon: &AtomicU64,
 ) -> Result<()> {
     let n = global.n;
     let rec_size = msg_rec_size::<P::Msg>();
@@ -755,6 +774,8 @@ fn receiver_unit<P: VertexProgram>(
 
     let mut step: u64 = 0;
     loop {
+        // Absolute superstep, like the U_s/U_c beacons.
+        beacon.store(global.step_base + step, Ordering::Relaxed);
         let mut ends = 0usize;
         let mut msgs_recv = 0u64;
         let mut spills: Vec<PathBuf> = Vec::new();
@@ -767,7 +788,7 @@ fn receiver_unit<P: VertexProgram>(
         }
 
         while ends < n {
-            let b = receiver.recv();
+            let b = receiver.recv()?;
             debug_assert_eq!(b.step, step, "out-of-step batch from {}", b.src);
             match b.payload {
                 Payload::End => ends += 1,
@@ -892,10 +913,10 @@ fn receiver_unit<P: VertexProgram>(
 
         // Synchronize with the receiving units of all machines, then allow
         // next-superstep transmission (§4).
-        global.ur_rv.exchange(me, (), |_| ());
+        global.ur_rv.exchange(me, (), |_| ())?;
         msync.set_send_allowed(step + 1);
 
-        if !msync.wait_decided(step) {
+        if !msync.wait_decided(step)? {
             return Ok(());
         }
         step += 1;
@@ -1001,6 +1022,11 @@ struct Outbox<'a, M: Codec, C: Combiner<M>> {
     /// `lsp_*` files at ℬ boundaries — no OMS file, no switch, no
     /// encode → wire → decode round trip, no U_r re-sort.
     spill: Option<SpillState>,
+    /// A synchronous-send failure (stall ablation) deferred out of the
+    /// infallible `send` hot path; surfaced by [`Outbox::flush_stall`] at
+    /// end of superstep.  Once set, further stall records are dropped —
+    /// the superstep is already doomed.
+    net_err: Option<Error>,
     pool: &'a BufPool,
 }
 
@@ -1090,13 +1116,19 @@ impl<'a, M: Codec, C: Combiner<M>> Outbox<'a, M, C> {
             }
         }
         if self.disable_oms {
+            if self.net_err.is_some() {
+                return;
+            }
             let buf = &mut self.stall_bufs[dst];
             encode_msg(target, &m, buf);
             if buf.len() + self.rec_size > self.cap {
                 let batch = std::mem::replace(buf, self.pool.take());
                 // Synchronous send: U_c blocks for the simulated
                 // transmission — the stall the paper's OMS design avoids.
-                self.stall_sender.send(dst, self.step, Payload::Data(batch));
+                // A hung-up peer's error is deferred to flush_stall.
+                if let Err(e) = self.stall_sender.send(dst, self.step, Payload::Data(batch)) {
+                    self.net_err = Some(e);
+                }
             }
         } else {
             let buf = &mut self.batch[dst];
@@ -1125,16 +1157,21 @@ impl<'a, M: Codec, C: Combiner<M>> Outbox<'a, M, C> {
         Ok(())
     }
 
-    fn flush_stall(&mut self) {
+    /// Flush the stall-mode buffers and surface any deferred send error.
+    fn flush_stall(&mut self) -> Result<()> {
         if self.disable_oms {
             for dst in 0..self.n {
                 let buf = std::mem::take(&mut self.stall_bufs[dst]);
-                if buf.is_empty() {
+                if buf.is_empty() || self.net_err.is_some() {
                     self.pool.put(buf);
-                } else {
-                    self.stall_sender.send(dst, self.step, Payload::Data(buf));
+                } else if let Err(e) = self.stall_sender.send(dst, self.step, Payload::Data(buf)) {
+                    self.net_err = Some(e);
                 }
             }
+        }
+        match self.net_err.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
         }
     }
 
@@ -1179,6 +1216,7 @@ fn compute_unit<P: VertexProgram>(
     local_spill: Option<Arc<SpillLane>>,
     mut stall_sender: NetSender,
     sink: &MetricsSink,
+    beacon: &AtomicU64,
 ) -> UcResult<P> {
     let n = global.n;
     let me = store.machine;
@@ -1238,11 +1276,15 @@ fn compute_unit<P: VertexProgram>(
     let mut step: u64 = 0;
     let supersteps;
     loop {
+        beacon.store(global.step_base + step, Ordering::Relaxed);
         let inc: Option<Incoming<P::Msg>> = if step == 0 {
             // fresh job: no messages; resumed job: the checkpointed IMS
             init_incoming.take()
         } else {
-            msync.wait_recv_done(step - 1);
+            // (incoming.take can only block if the deposit is missing, and
+            // wait_recv_done returning Ok guarantees it was made — so the
+            // StepQueue itself needs no poisoning.)
+            msync.wait_recv_done(step - 1)?;
             Some(incoming.take(step - 1))
         };
         let abs_step = global.step_base + step;
@@ -1274,6 +1316,7 @@ fn compute_unit<P: VertexProgram>(
                     .collect()
             },
             msgs_sent: 0,
+            net_err: None,
             comb: P::Comb::default(),
             local: fast_digest.then(|| LocalDigest {
                 ar: global.digest_pool.take(local, comb.identity()),
@@ -1324,7 +1367,7 @@ fn compute_unit<P: VertexProgram>(
 
         let msgs_sent = out.msgs_sent;
         out.flush_batches()?;
-        out.flush_stall();
+        out.flush_stall()?;
         let local_digest = out.local.take();
         let spill_out = out.take_spill()?;
         drop(out);
@@ -1399,7 +1442,7 @@ fn compute_unit<P: VertexProgram>(
                     agg: Arc::new(agg),
                 }
             },
-        );
+        )?;
         global_agg = decision.agg.clone();
         msync.set_decided(step, decision.continues);
 
@@ -1407,7 +1450,7 @@ fn compute_unit<P: VertexProgram>(
         // values + halted + the incoming messages of step s+1.
         if let Some(ck) = &global.checkpoint {
             if decision.continues && ck.every > 0 && (abs_step + 1) % ck.every == 0 {
-                msync.wait_recv_done(step);
+                msync.wait_recv_done(step)?;
                 incoming.peek_with(step, |inc| {
                     crate::ft::write_machine_checkpoint(
                         &ck.dir, abs_step, me, &vals, &halted, inc,
@@ -1416,8 +1459,9 @@ fn compute_unit<P: VertexProgram>(
                 // Dedicated checkpoint barrier: the DONE marker may only
                 // appear once every machine's file is durable — a resume
                 // from a marked checkpoint can then never read a partial
-                // set.
-                global.ckpt_rv.exchange(me, (), |_| ());
+                // set.  Poisoned = a sibling died before its file landed;
+                // this checkpoint must then never be marked DONE.
+                global.ckpt_rv.exchange(me, (), |_| ())?;
                 if me == 0 {
                     crate::ft::mark_done(&ck.dir, abs_step)?;
                 }

@@ -1,0 +1,249 @@
+//! Failure-injection tests for distributed failure propagation: a unit
+//! that dies at any machine, in any mode, must surface as a typed
+//! `Error::JobFailed` from `JobBuilder::run` within bounded wall-clock —
+//! never a hang.  This is the paper's §6 precondition: recovery can only
+//! start once a failure is *observed*.
+//!
+//! The injection hook is a test-only `VertexProgram` that panics when it
+//! computes a chosen vertex at a chosen superstep, killing that vertex's
+//! owner machine's U_c mid-pass; the poisoned barriers and abort-aware
+//! channel waits must then unwedge every other unit of every machine.
+
+use graphd::api::{Context, Edge, SumF32, VertexProgram};
+use graphd::config::Mode;
+use graphd::ft::CheckpointCfg;
+use graphd::graph::generator;
+use graphd::serve::ServeConfig;
+use graphd::{Answer, Error, GraphD, GraphSource, Query, Session};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Generous bound for "failed fast, did not hang": the jobs here finish in
+/// milliseconds when healthy; CI's per-step timeout is the backstop.
+const FAIL_WITHIN: Duration = Duration::from_secs(60);
+
+fn wd(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "graphd_failure_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// PageRank-shaped program (sum combiner, never halts, messages every
+/// neighbor) that panics when computing `victim` at superstep `at_step`.
+/// `victim` is in the *current* ID space of the job (translate through
+/// `LoadedGraph::current_id_of` for recoded runs).
+struct PanicAt {
+    victim: u32,
+    at_step: u64,
+}
+
+impl VertexProgram for PanicAt {
+    type Value = f32;
+    type Msg = f32;
+    type Agg = ();
+    type Comb = SumF32;
+
+    fn init_value(&self, _id: u32, _deg: u32, nv: u64) -> f32 {
+        1.0 / nv as f32
+    }
+
+    fn compute(
+        &self,
+        ctx: &mut Context<'_, f32, ()>,
+        id: u32,
+        value: &mut f32,
+        edges: &[Edge],
+        msgs: &[f32],
+    ) {
+        if ctx.superstep == self.at_step && id == self.victim {
+            panic!(
+                "injected unit failure: vertex {id} at superstep {}",
+                ctx.superstep
+            );
+        }
+        if ctx.superstep > 0 {
+            *value = 0.15 / ctx.num_vertices as f32 + 0.85 * msgs.iter().sum::<f32>();
+        }
+        if !edges.is_empty() {
+            let share = *value / edges.len() as f32;
+            for e in edges {
+                ctx.send(e.nbr, share);
+            }
+        }
+    }
+}
+
+fn session(tag: &str, machines: usize) -> Session {
+    GraphD::builder()
+        .machines(machines)
+        .workdir(wd(tag))
+        .max_supersteps(6)
+        .oms_file_cap(16 * 1024)
+        .build()
+        .unwrap()
+}
+
+fn assert_job_failed(err: Error, elapsed: Duration) {
+    assert!(
+        elapsed < FAIL_WITHIN,
+        "failure took {elapsed:?} to surface — the barriers are wedging"
+    );
+    match err {
+        Error::JobFailed {
+            unit, ref cause, ..
+        } => {
+            assert_eq!(unit, "U_c", "origin unit: {cause}");
+            assert!(
+                cause.contains("injected unit failure"),
+                "cause must be the injected panic, got: {cause}"
+            );
+        }
+        other => panic!("expected Error::JobFailed, got: {other}"),
+    }
+}
+
+#[test]
+fn basic_mode_panic_at_any_machine_surfaces_typed_error() {
+    let s = session("basic_any", 4);
+    let g = generator::uniform(200, 1200, true, 7);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    // Four victims spread over the id space: their owners cover several
+    // machines, so the dead unit is exercised at more than one position
+    // (whichever machine owns the victim, its siblings must unwedge).
+    for victim in [0u32, 51, 102, 153] {
+        let t = Instant::now();
+        let err = graph
+            .job(Arc::new(PanicAt { victim, at_step: 1 }))
+            .mode(Mode::Basic)
+            .run()
+            .unwrap_err();
+        assert_job_failed(err, t.elapsed());
+    }
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+#[test]
+fn recoded_mode_panic_surfaces_typed_error() {
+    let s = session("recoded", 4);
+    let g = generator::uniform(160, 900, false, 11);
+    let mut graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    graph.recode().unwrap();
+    // Recoded jobs address vertices in the recoded ID space.
+    let victim = graph.current_id_of(40);
+    let t = Instant::now();
+    let err = graph
+        .job(Arc::new(PanicAt { victim, at_step: 2 }))
+        .mode(Mode::Recoded)
+        .run()
+        .unwrap_err();
+    assert_job_failed(err, t.elapsed());
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+#[test]
+fn panic_at_superstep_zero_does_not_wedge() {
+    // The hardest spot: U_c dies before the very first compute_done, so no
+    // watermark, no end tags, nothing downstream ever published.
+    let s = session("step0", 4);
+    let g = generator::uniform(120, 700, true, 3);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let t = Instant::now();
+    let err = graph
+        .job(Arc::new(PanicAt {
+            victim: 17,
+            at_step: 0,
+        }))
+        .run()
+        .unwrap_err();
+    assert_job_failed(err, t.elapsed());
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+#[test]
+fn failed_job_is_rerunnable_on_the_same_graph() {
+    // The graph handle survives a failed job: stores are intact, a healthy
+    // program runs to completion afterwards.
+    let s = session("rerun", 2);
+    let g = generator::uniform(100, 500, true, 5);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let err = graph
+        .job(Arc::new(PanicAt {
+            victim: 9,
+            at_step: 1,
+        }))
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, Error::JobFailed { .. }), "{err}");
+    let ok = graph
+        .job(Arc::new(graphd::algos::PageRank::new(3)))
+        .max_supersteps(3)
+        .run()
+        .unwrap();
+    assert_eq!(ok.supersteps(), 3);
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+#[test]
+fn checkpointed_failure_reports_last_durable_superstep() {
+    let s = session("ckpt", 2);
+    let g = generator::uniform(100, 600, true, 9);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let ckdir = s.workdir().join("dfs").join("failure_ckpt");
+    let t = Instant::now();
+    let err = graph
+        .job(Arc::new(PanicAt {
+            victim: 23,
+            at_step: 3,
+        }))
+        .checkpoint(CheckpointCfg::every(&ckdir, 1))
+        .run()
+        .unwrap_err();
+    assert!(t.elapsed() < FAIL_WITHIN);
+    match err {
+        Error::JobFailed { ref cause, .. } => {
+            // every=1 → checkpoints completed after steps 0, 1 and 2; the
+            // step-3 failure must point at superstep 2 for recovery.
+            assert!(
+                cause.contains("last durable checkpoint: superstep 2"),
+                "resume hint missing or wrong: {cause}"
+            );
+            assert!(cause.contains("resume(2)"), "{cause}");
+        }
+        other => panic!("expected JobFailed, got {other}"),
+    }
+    assert_eq!(graphd::ft::resume_hint(&ckdir), Some(2));
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+#[test]
+fn serve_failed_batch_fails_queries_not_the_server() {
+    let s = session("serve", 2);
+    let g = generator::chain(20).with_unit_weights();
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    // Mode::Recoded without recode(): every batch job dies with a config
+    // error — the batch's queries fail typed, the server keeps serving.
+    let mut srv = graph
+        .serve(ServeConfig::default().lanes(2).mode(Mode::Recoded))
+        .unwrap();
+    srv.submit(Query::Dist { source: 0, target: 5 });
+    srv.submit(Query::Dist { source: 1, target: 6 });
+    srv.submit(Query::ReachCount { source: 0 }); // second batch
+    let rs = srv.run_pending().unwrap();
+    assert_eq!(rs.len(), 3);
+    for r in &rs {
+        assert_eq!(r.answer, Answer::Failed);
+        assert!(r.error.as_deref().unwrap_or("").contains("recode"));
+    }
+    assert_eq!(srv.metrics().failed_batches, 2);
+    // The server is still alive: later submissions drain too.
+    srv.submit(Query::Dist { source: 0, target: 3 });
+    let rs = srv.run_pending().unwrap();
+    assert_eq!(rs.len(), 1);
+    assert_eq!(rs[0].answer, Answer::Failed);
+    let _ = std::fs::remove_dir_all(s.workdir());
+}

@@ -1,0 +1,69 @@
+//! Compile-only stand-in for the `anyhow` crate.
+//!
+//! The offline build carries no external dependencies, but CI still wants
+//! `cargo check --features xla` to catch rot in the feature-gated PJRT
+//! bridge (`graphd::runtime::pjrt`).  This stub mirrors the minimal
+//! `anyhow` surface that code uses — an opaque [`Error`] convertible from
+//! any `std::error::Error`, with `{:#}` Display — so the bridge
+//! *typechecks* everywhere.  Executing it requires swapping in the real
+//! `anyhow` (and `xla`) crates; see the workspace README.
+//!
+//! Mirrors anyhow's design point: [`Error`] deliberately does **not**
+//! implement `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` impl coherent.
+
+use std::fmt;
+
+/// Opaque error: a rendered message (the stub never carries rich chains).
+pub struct Error(String);
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` (anyhow's chain format) and `{}` both print the message.
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// `anyhow::Result`, defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_alternate_agree() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+
+    #[test]
+    fn converts_from_std_errors() {
+        fn f() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "io"))?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "io");
+    }
+}

@@ -1,0 +1,122 @@
+//! Compile-only stand-in for the `xla` PJRT-bindings crate.
+//!
+//! Mirrors the subset of the API that `graphd::runtime::pjrt` and the AOT
+//! round-trip test use — client/compile/execute plus [`Literal`]
+//! marshalling — so `cargo check --features xla` keeps the feature-gated
+//! bridge honest on machines (and CI runners) that have neither the real
+//! bindings nor a PJRT plugin.  Every entry point that would touch PJRT
+//! returns [`stub_err`] at runtime: the feature *compiles* everywhere,
+//! *executes* only against the real crate (swap the path dependency in
+//! rust/Cargo.toml, see README.md §XLA).
+
+const STUB_MSG: &str = "xla-stub: PJRT runtime not linked — replace the vendored \
+     xla-stub/anyhow-stub path dependencies with the real `xla` and `anyhow` \
+     crates to execute HLO artifacts";
+
+fn stub_err() -> anyhow::Error {
+    anyhow::Error::msg(STUB_MSG)
+}
+
+/// Element types a [`Literal`] can be built from (stub: f32/i32, the two
+/// the artifacts use).
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait ArrayElement: Copy {}
+impl ArrayElement for f32 {}
+impl ArrayElement for i32 {}
+
+/// A PJRT CPU client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Construct a CPU client.  Stub: always fails.
+    pub fn cpu() -> anyhow::Result<Self> {
+        Err(stub_err())
+    }
+
+    /// Compile a computation for this client.  Stub: always fails.
+    pub fn compile(&self, _c: &XlaComputation) -> anyhow::Result<PjRtLoadedExecutable> {
+        Err(stub_err())
+    }
+}
+
+/// A parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.  Stub: always fails.
+    pub fn from_text_file(_path: &str) -> anyhow::Result<Self> {
+        Err(stub_err())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_p: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments, yielding per-device, per-output
+    /// buffers.  Stub: always fails (unreachable in practice — a stub
+    /// executable cannot be constructed).
+    pub fn execute<T>(&self, _args: &[T]) -> anyhow::Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err())
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host [`Literal`].  Stub: always fails.
+    pub fn to_literal_sync(&self) -> anyhow::Result<Literal> {
+        Err(stub_err())
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Destructure a tuple literal.  Stub: always fails.
+    pub fn to_tuple(self) -> anyhow::Result<Vec<Literal>> {
+        Err(stub_err())
+    }
+
+    /// Read the literal back as a host vector.  Stub: always fails.
+    pub fn to_vec<T: ArrayElement>(&self) -> anyhow::Result<Vec<T>> {
+        Err(stub_err())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_runtime_entry_fails_with_the_stub_message() {
+        assert!(format!("{}", PjRtClient::cpu().unwrap_err()).contains("xla-stub"));
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(Literal.to_tuple().is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+    }
+}
