@@ -1,4 +1,15 @@
 # Repo-level convenience targets.  `make ci` mirrors .github/workflows/ci.yml.
+#
+#   make build       release build
+#   make test        tier-1 tests (bounded by `timeout` where available)
+#   make analyze     repo-native invariant lints (graphd-analyze): poison-
+#                    safety, barrier-registration, pool-leak, sleep-slicing,
+#                    panic-hygiene.  Suppress a reviewed site with a reasoned
+#                    pragma: `// analyze:allow(rule-id): why`.  Exit 1 on
+#                    findings; `cargo run --bin analyze -- --rules` lists them.
+#   make ci          everything CI gates on
+#   make bench-smoke quick perf trajectory (non-gating floors)
+#   make clean       cargo clean + stale bench JSON tmp files
 
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
@@ -8,13 +19,19 @@ BENCH_JSON ?= BENCH_PR4.json
 # (no-op where coreutils `timeout` is unavailable).
 TIMEOUT := $(shell command -v timeout >/dev/null 2>&1 && echo "timeout 600")
 
-.PHONY: build test fmt-check clippy doc check-xla ci bench-smoke artifacts clean
+.PHONY: build test analyze fmt-check clippy doc check-xla ci bench-smoke artifacts clean
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
 
 test:
 	$(TIMEOUT) $(CARGO) test -q --manifest-path $(MANIFEST)
+
+# Static invariant lints over rust/src (the fixture corpus under
+# rust/tests/analyze_fixtures is deliberately dirty and is exercised by
+# `cargo test` instead).
+analyze:
+	$(CARGO) run -q --release --manifest-path $(MANIFEST) --bin analyze -- rust/src
 
 fmt-check:
 	$(CARGO) fmt --check --manifest-path $(MANIFEST)
@@ -32,7 +49,7 @@ doc:
 check-xla:
 	$(CARGO) check --all-targets --features xla --manifest-path $(MANIFEST)
 
-ci: build test fmt-check clippy doc check-xla
+ci: build test analyze fmt-check clippy doc check-xla
 
 # Quick perf trajectory: spine + serve throughput in smoke mode, numbers
 # emitted to $(BENCH_JSON) (spine writes the file with its "spine" and
@@ -51,5 +68,9 @@ bench-smoke:
 artifacts:
 	python3 python/compile/aot.py --out rust/artifacts
 
+# `cargo clean` drops all build artifacts (including the analyze bin and
+# anything cached for the fixture-driven tests); also sweep stale bench
+# JSON scratch files that bench-smoke runs leave at the repo root.
 clean:
 	$(CARGO) clean --manifest-path $(MANIFEST)
+	rm -f BENCH_*.json.tmp BENCH_*.json.partial

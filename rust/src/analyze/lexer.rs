@@ -1,0 +1,323 @@
+//! Hand-rolled Rust token scanner for the invariant analyzer.
+//!
+//! This is **not** a full Rust lexer — it is the minimal scanner the
+//! [`super::rules`] passes need: identifiers, single-char punctuation, and
+//! opaque literals, with comments and string/char literals stripped so the
+//! rules can never match text inside them.  It follows the repo's
+//! vendor-everything rule (zero dependencies, no `syn`/`proc-macro2`), and
+//! it is deliberately forgiving: on malformed input it produces *some*
+//! token stream rather than erroring, because a lint must never block the
+//! build on code rustc itself will reject moments later.
+//!
+//! Handled explicitly (each has a unit test below):
+//! * line comments (where `analyze:allow` pragmas live — collected by
+//!   [`super::scan_pragmas`] from the raw text, not from tokens) and
+//!   nested block comments;
+//! * string literals with escapes, byte strings, raw (byte) strings with
+//!   any number of `#`s, raw identifiers (`r#type`);
+//! * char literals vs. lifetimes (`'a'` is a literal, `'a` is not).
+
+/// What a token is, at the granularity the rules care about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (`fn`, `unwrap`, `Rendezvous`, …).
+    Ident,
+    /// A single punctuation character (`.`, `(`, `{`, `!`, `:`, …).
+    Punct,
+    /// An opaque literal: string/char/number/lifetime.  Never matched by
+    /// name; only present so neighbourhood checks stay aligned.
+    Lit,
+}
+
+/// One scanned token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// Token class.
+    pub kind: Kind,
+    /// Source text (single char for [`Kind::Punct`]).
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+impl Tok {
+    /// Is this the punctuation character `c`?
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+
+    /// Is this exactly the identifier `s`?
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+}
+
+/// Scan `src` into tokens, stripping comments and collapsing literals.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+            while i < b.len() && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if c == '"' {
+            let start_line = line;
+            i = skip_string(&b, i, &mut line);
+            toks.push(lit(start_line));
+            continue;
+        }
+        if c == '\'' {
+            let start_line = line;
+            i = skip_char_or_lifetime(&b, i, &mut line);
+            toks.push(lit(start_line));
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            let s: String = b[start..i].iter().collect();
+            // String-ish prefixes: r"", r#""#, br"", b"", b''  — and raw
+            // identifiers (r#type), which stay identifiers.
+            if (s == "r" || s == "br") && i < b.len() && (b[i] == '"' || b[i] == '#') {
+                let mut j = i;
+                while j < b.len() && b[j] == '#' {
+                    j += 1;
+                }
+                if j < b.len() && b[j] == '"' {
+                    let start_line = line;
+                    i = skip_raw_string(&b, i, &mut line);
+                    toks.push(lit(start_line));
+                    continue;
+                }
+                if s == "r" && j < b.len() && (b[j].is_alphabetic() || b[j] == '_') {
+                    // raw identifier r#type: token is the bare name.
+                    let mut k = j;
+                    while k < b.len() && (b[k].is_alphanumeric() || b[k] == '_') {
+                        k += 1;
+                    }
+                    toks.push(Tok {
+                        kind: Kind::Ident,
+                        text: b[j..k].iter().collect(),
+                        line,
+                    });
+                    i = k;
+                    continue;
+                }
+                // Lone `r`/`br` before stray hashes: fall through as ident.
+            } else if s == "b" && i < b.len() && b[i] == '"' {
+                let start_line = line;
+                i = skip_string(&b, i, &mut line);
+                toks.push(lit(start_line));
+                continue;
+            } else if s == "b" && i < b.len() && b[i] == '\'' {
+                let start_line = line;
+                i = skip_char_or_lifetime(&b, i, &mut line);
+                toks.push(lit(start_line));
+                continue;
+            }
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text: s,
+                line,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            // Numbers (incl. hex/suffixes); `.` is left out so ranges and
+            // method calls after numbers stay separate tokens.
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(lit(line));
+            continue;
+        }
+        toks.push(Tok {
+            kind: Kind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    toks
+}
+
+fn lit(line: u32) -> Tok {
+    Tok {
+        kind: Kind::Lit,
+        text: String::new(),
+        line,
+    }
+}
+
+/// `i` points at the opening `"`; returns the index just past the close.
+fn skip_string(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            '\\' => {
+                if i + 1 < b.len() && b[i + 1] == '\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// `i` points at the first `#` or the `"` after an `r`/`br` prefix.
+fn skip_raw_string(b: &[char], mut i: usize, line: &mut u32) -> usize {
+    let mut hashes = 0usize;
+    while i < b.len() && b[i] == '#' {
+        hashes += 1;
+        i += 1;
+    }
+    debug_assert!(i < b.len() && b[i] == '"');
+    i += 1;
+    while i < b.len() {
+        if b[i] == '\n' {
+            *line += 1;
+        } else if b[i] == '"' && b[i + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes
+        {
+            return i + 1 + hashes;
+        }
+        i += 1;
+    }
+    i
+}
+
+/// `i` points at a `'`: either a char literal (`'x'`, `'\n'`, `'\u{1F}'`)
+/// or a lifetime (`'a`, `'static`, `'_`).
+fn skip_char_or_lifetime(b: &[char], i: usize, line: &mut u32) -> usize {
+    if i + 1 < b.len() && b[i + 1] == '\\' {
+        // Escaped char literal: scan to the closing quote.
+        let mut j = i + 2;
+        while j < b.len() && b[j] != '\'' {
+            if b[j] == '\n' {
+                *line += 1;
+            }
+            j += 1;
+        }
+        return (j + 1).min(b.len());
+    }
+    if i + 2 < b.len() && b[i + 2] == '\'' {
+        return i + 3; // plain 'x'
+    }
+    // Lifetime: consume the label.
+    let mut j = i + 1;
+    while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+        j += 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_stripped() {
+        let src = r##"
+            // unwrap() in a line comment
+            /* unwrap() in /* a nested */ block */
+            let s = "rv.exchange(0).unwrap()";
+            let r = r#"lock().unwrap()"#;
+            call();
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"call".to_string()));
+        assert!(!ids.contains(&"unwrap".to_string()));
+        assert!(!ids.contains(&"exchange".to_string()));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = 'x'; let n = '\\n'; c }";
+        let ids = idents(src);
+        assert_eq!(
+            ids,
+            vec!["fn", "f", "x", "str", "char", "let", "c", "let", "n", "c"]
+        );
+    }
+
+    #[test]
+    fn raw_identifiers_keep_their_name() {
+        let ids = idents("let r#type = 1;");
+        assert!(ids.contains(&"type".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_everywhere() {
+        let src = "a\n\"two\nline\"\nb /* c\nd */ e";
+        let toks = lex(src);
+        let a = toks.iter().find(|t| t.is_ident("a")).unwrap();
+        let b = toks.iter().find(|t| t.is_ident("b")).unwrap();
+        let e = toks.iter().find(|t| t.is_ident("e")).unwrap();
+        assert_eq!(a.line, 1);
+        assert_eq!(b.line, 4);
+        assert_eq!(e.line, 5);
+    }
+
+    #[test]
+    fn method_chain_tokens_align() {
+        let toks = lex("self.state.lock().unwrap();");
+        let texts: Vec<&str> = toks
+            .iter()
+            .map(|t| if t.kind == Kind::Lit { "<lit>" } else { t.text.as_str() })
+            .collect();
+        assert_eq!(
+            texts,
+            vec!["self", ".", "state", ".", "lock", "(", ")", ".", "unwrap", "(", ")", ";"]
+        );
+    }
+}

@@ -1,0 +1,397 @@
+//! `graphd-analyze` — repo-native invariant lints for the GraphD tree.
+//!
+//! GraphD's performance story (fully overlapping computation with
+//! communication, §3–§4) rests on hand-rolled concurrency: poisonable
+//! [`crate::worker::sync::Rendezvous`]/[`crate::worker::sync::MachineSync`]
+//! barriers, the [`crate::worker::sync::JobAbort`] latch, abort-aware
+//! [`crate::net`] waits, and checkout/recycle [`crate::msg::BufPool`]/
+//! [`crate::msg::DigestPool`] buffers.  PR 5 exists because one missed
+//! barrier registration deadlocked the whole cluster on failure.  This
+//! module turns those conventions into machine-checked rules: a
+//! zero-dependency scanner (a hand-rolled lexer, per the repo's
+//! vendor-everything rule) walks `rust/src/**/*.rs` and emits typed
+//! `file:line` diagnostics for the five rules documented in [`Rule`].
+//!
+//! Run it via `make analyze` (part of `make ci`) or directly:
+//!
+//! ```text
+//! cargo run --bin analyze -- rust/src          # lint the tree (exit 1 on findings)
+//! cargo run --bin analyze -- --rules           # print the rule table
+//! ```
+//!
+//! # Suppressions
+//!
+//! Every accepted violation must carry an explicit, reasoned pragma in a
+//! plain `//` comment — the reason is mandatory, so each suppression
+//! documents *why* the invariant holds at that site:
+//!
+//! ```text
+//! // analyze:allow(sleep-slicing): bounded ≤10ms settle in a simulator with no abort latch
+//! std::thread::sleep(poll);
+//! ```
+//!
+//! A trailing pragma on the offending line suppresses that line; a
+//! standalone pragma line suppresses the statement that follows it.  A
+//! pragma with an unknown rule-id or without a `: reason` suppresses
+//! nothing and is itself reported (as `bad-pragma`).
+
+mod lexer;
+mod rules;
+
+use std::fmt;
+use std::path::Path;
+
+/// The invariant rules the analyzer enforces (see `DESIGN.md`,
+/// "Invariants & static analysis", for the full rationale of each).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// `.unwrap()`/`.expect()` on a poisonable wait's `Result` inside
+    /// `worker/`, `engine/`, `net/`, `recode/`, `serve/` — `Poisoned`/
+    /// abort must propagate as [`crate::error::Error::JobFailed`].
+    PoisonSafety,
+    /// `Rendezvous::new`/`MachineSync::new` without a `JobAbort`
+    /// registration in the enclosing fn (the PR 5 deadlock class).
+    BarrierRegistration,
+    /// A `BufPool`/`DigestPool` checkout with no lexical recycle or
+    /// approved handoff (`LocalShard`/`SpillLane`/wire payload).
+    PoolLeak,
+    /// Raw `thread::sleep` outside the sliced-wait helpers — a sleeping
+    /// unit cannot observe `JobAbort`.
+    SleepSlicing,
+    /// `todo!`/`unimplemented!`/stray `panic!` outside `#[cfg(test)]`.
+    PanicHygiene,
+    /// A malformed suppression: unknown rule-id or missing `: reason`.
+    BadPragma,
+}
+
+impl Rule {
+    /// The stable rule-id used in diagnostics and `analyze:allow(..)`.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Rule::PoisonSafety => "poison-safety",
+            Rule::BarrierRegistration => "barrier-registration",
+            Rule::PoolLeak => "pool-leak",
+            Rule::SleepSlicing => "sleep-slicing",
+            Rule::PanicHygiene => "panic-hygiene",
+            Rule::BadPragma => "bad-pragma",
+        }
+    }
+
+    /// Parse a *suppressible* rule-id (`bad-pragma` is not suppressible).
+    pub fn from_id(s: &str) -> Option<Rule> {
+        match s {
+            "poison-safety" => Some(Rule::PoisonSafety),
+            "barrier-registration" => Some(Rule::BarrierRegistration),
+            "pool-leak" => Some(Rule::PoolLeak),
+            "sleep-slicing" => Some(Rule::SleepSlicing),
+            "panic-hygiene" => Some(Rule::PanicHygiene),
+            _ => None,
+        }
+    }
+
+    /// Every suppressible rule, for `--rules` output and docs.
+    pub fn all() -> &'static [Rule] {
+        &[
+            Rule::PoisonSafety,
+            Rule::BarrierRegistration,
+            Rule::PoolLeak,
+            Rule::SleepSlicing,
+            Rule::PanicHygiene,
+        ]
+    }
+
+    /// One-line description, for `--rules` output.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Rule::PoisonSafety => {
+                "no .unwrap()/.expect() on poisonable waits (Rendezvous::exchange, \
+                 MachineSync waits, NetSender::send/NetReceiver::recv, Mutex/Condvar) \
+                 in worker/, engine/, net/, recode/, serve/"
+            }
+            Rule::BarrierRegistration => {
+                "every Rendezvous::new/MachineSync::new pairs with a JobAbort \
+                 registration in the enclosing fn"
+            }
+            Rule::PoolLeak => {
+                "every BufPool/DigestPool checkout pairs with .put()/finish_recycle/\
+                 create_pooled or a LocalShard/SpillLane/wire handoff"
+            }
+            Rule::SleepSlicing => {
+                "no raw thread::sleep outside the sliced-wait helpers (sleeps must \
+                 observe JobAbort in <=ABORT_POLL slices)"
+            }
+            Rule::PanicHygiene => {
+                "no todo!/unimplemented!/stray panic! outside #[cfg(test)]"
+            }
+            Rule::BadPragma => "malformed analyze:allow pragma",
+        }
+    }
+}
+
+/// One finding, addressed `file:line` with its rule and message.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// The violated rule.
+    pub rule: Rule,
+    /// Human-readable explanation with the repair direction.
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule.id(), self.msg)
+    }
+}
+
+/// Result of analyzing one file.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    /// Unsuppressed findings (including any `bad-pragma`s).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Findings silenced by a valid, reasoned pragma.
+    pub suppressed: usize,
+}
+
+/// Result of analyzing a directory tree.
+#[derive(Debug, Default)]
+pub struct TreeReport {
+    /// `.rs` files scanned.
+    pub files: usize,
+    /// Unsuppressed findings across all files, in path order.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Findings silenced by valid pragmas across all files.
+    pub suppressed: usize,
+}
+
+/// A parsed `// analyze:allow(rule-id): reason` pragma.
+struct Pragma {
+    line: u32,
+    rule: Option<Rule>,
+    raw_id: String,
+    reason_ok: bool,
+    /// Inclusive 1-based line range this pragma suppresses.
+    window: (u32, u32),
+}
+
+/// Extract pragmas from raw source lines.  Pragmas live in plain `//`
+/// comments only — doc comments (`///`, `//!`) are ignored so rustdoc
+/// examples of the syntax never act as live suppressions.
+fn scan_pragmas(src: &str) -> Vec<Pragma> {
+    const NEEDLE: &str = "analyze:allow(";
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (idx, l) in lines.iter().enumerate() {
+        let Some(cpos) = l.find("//") else { continue };
+        let comment = &l[cpos..];
+        if comment.starts_with("///") || comment.starts_with("//!") {
+            continue;
+        }
+        let Some(p) = comment.find(NEEDLE) else { continue };
+        let rest = &comment[p + NEEDLE.len()..];
+        let line = (idx + 1) as u32;
+        let (raw_id, reason_ok) = match rest.find(')') {
+            None => (rest.trim().to_string(), false),
+            Some(close) => {
+                let after = rest[close + 1..].trim_start();
+                let ok = after.starts_with(':')
+                    && !after[1..].trim().is_empty();
+                (rest[..close].trim().to_string(), ok)
+            }
+        };
+        let has_code_before = !l[..cpos].trim().is_empty();
+        let window = if has_code_before {
+            (line, line)
+        } else {
+            statement_window(&lines, idx)
+        };
+        out.push(Pragma {
+            line,
+            rule: Rule::from_id(&raw_id),
+            raw_id,
+            reason_ok,
+            window,
+        });
+    }
+    out
+}
+
+/// The statement following a standalone pragma line: from the next
+/// non-blank, non-comment line through the first line whose code part
+/// contains `;`, `{` or `}` (capped at 10 lines — statements in this tree
+/// are short, and an unbounded window would hide later violations).
+fn statement_window(lines: &[&str], pragma_idx: usize) -> (u32, u32) {
+    let mut s = pragma_idx + 1;
+    while s < lines.len() {
+        let t = lines[s].trim();
+        if !t.is_empty() && !t.starts_with("//") {
+            break;
+        }
+        s += 1;
+    }
+    let mut e = s;
+    while e < lines.len() && e - s < 9 {
+        let code = lines[e].split("//").next().unwrap_or("");
+        if code.contains(';') || code.contains('{') || code.contains('}') {
+            break;
+        }
+        e += 1;
+    }
+    ((s + 1) as u32, (e + 1).min(lines.len()) as u32)
+}
+
+/// Analyze one file's source.  `rel_path` is the path relative to the
+/// scanned root with `/` separators — rule scoping (e.g. `poison-safety`'s
+/// `worker/`…`serve/` restriction) matches against it.
+pub fn analyze_source(rel_path: &str, src: &str) -> FileReport {
+    let toks = lexer::lex(src);
+    let ctx = rules::Ctx::new(&toks);
+    let found = rules::run_all(rel_path, &ctx);
+    let pragmas = scan_pragmas(src);
+
+    let mut report = FileReport::default();
+    for d in found {
+        let suppressed = pragmas.iter().any(|p| {
+            p.reason_ok
+                && p.rule == Some(d.rule)
+                && p.window.0 <= d.line
+                && d.line <= p.window.1
+        });
+        if suppressed {
+            report.suppressed += 1;
+        } else {
+            report.diagnostics.push(d);
+        }
+    }
+    for p in &pragmas {
+        let msg = if p.rule.is_none() {
+            format!(
+                "unknown rule-id `{}` in analyze:allow — known: {}",
+                p.raw_id,
+                Rule::all()
+                    .iter()
+                    .map(|r| r.id())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        } else if !p.reason_ok {
+            format!(
+                "analyze:allow({}) without `: reason` — every suppression must say why",
+                p.raw_id
+            )
+        } else {
+            continue;
+        };
+        report.diagnostics.push(Diagnostic {
+            file: rel_path.to_string(),
+            line: p.line,
+            rule: Rule::BadPragma,
+            msg,
+        });
+    }
+    report.diagnostics.sort_by_key(|d| (d.line, d.rule));
+    report
+}
+
+/// Analyze every `.rs` file under `root` (recursively, path-sorted).
+pub fn analyze_tree(root: &Path) -> std::io::Result<TreeReport> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut report = TreeReport::default();
+    for f in files {
+        let src = std::fs::read_to_string(&f)?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(&f)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let fr = analyze_source(&rel, &src);
+        report.files += 1;
+        report.suppressed += fr.suppressed;
+        report.diagnostics.extend(fr.diagnostics);
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trailing_pragma_suppresses_its_line() {
+        let src = "fn f(m: &Mutex<u32>) -> u32 {\n    \
+                   *m.lock().unwrap() // analyze:allow(poison-safety): test double, single thread\n\
+                   }\n";
+        let r = analyze_source("worker/x.rs", src);
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn standalone_pragma_covers_following_statement() {
+        let src = "fn f() {\n    // analyze:allow(sleep-slicing): bounded settle, no latch\n    \
+                   std::thread::sleep(\n        poll,\n    );\n}\n";
+        let r = analyze_source("a.rs", src);
+        assert!(r.diagnostics.is_empty(), "{:?}", r.diagnostics);
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn reasonless_pragma_reports_and_does_not_suppress() {
+        // The needle is split so scanning *this* file never sees a
+        // malformed pragma in the test string.
+        let src = format!(
+            "fn f() {{\n    // analyze:{}(sleep-slicing)\n    std::thread::sleep(poll);\n}}\n",
+            "allow"
+        );
+        let r = analyze_source("a.rs", &src);
+        let rules: Vec<Rule> = r.diagnostics.iter().map(|d| d.rule).collect();
+        assert!(rules.contains(&Rule::BadPragma));
+        assert!(rules.contains(&Rule::SleepSlicing));
+        assert_eq!(r.suppressed, 0);
+    }
+
+    #[test]
+    fn unknown_rule_id_is_reported() {
+        // Needle split: same self-scan consideration as above.
+        let src = format!("// analyze:{}(no-such-rule): whatever\nfn f() {{}}\n", "allow");
+        let r = analyze_source("a.rs", &src);
+        assert_eq!(r.diagnostics.len(), 1);
+        assert_eq!(r.diagnostics[0].rule, Rule::BadPragma);
+    }
+
+    #[test]
+    fn doc_comment_examples_are_inert() {
+        let src = "/// // analyze:allow(sleep-slicing): doc example\nfn f() {}\n";
+        let r = analyze_source("a.rs", src);
+        assert!(r.diagnostics.is_empty());
+    }
+
+    #[test]
+    fn pragma_for_wrong_rule_does_not_suppress() {
+        let src = "fn f() {\n    // analyze:allow(panic-hygiene): wrong rule\n    \
+                   std::thread::sleep(poll);\n}\n";
+        let r = analyze_source("a.rs", src);
+        assert_eq!(r.diagnostics.len(), 1);
+        assert_eq!(r.diagnostics[0].rule, Rule::SleepSlicing);
+    }
+}

@@ -1,0 +1,456 @@
+//! The five invariant rules, evaluated over the token stream.
+//!
+//! Each rule encodes a convention PRs 3–5 established by hand (see
+//! `DESIGN.md`, "Invariants & static analysis"):
+//!
+//! * `poison-safety` — the `Result`s of the poisonable waits
+//!   ([`crate::worker::sync::Rendezvous::exchange`], the
+//!   [`crate::worker::sync::MachineSync`] waits, `NetSender::send` /
+//!   `NetReceiver::recv`, and std `Mutex`/`Condvar` waits) must propagate,
+//!   not be `.unwrap()`/`.expect()`ed, inside the concurrency-bearing
+//!   modules (`worker/`, `engine/`, `net/`, `recode/`, `serve/`).
+//! * `barrier-registration` — every `Rendezvous::new`/`MachineSync::new`
+//!   must be paired with a `JobAbort` registration in the enclosing
+//!   function (the exact PR 5 deadlock class).
+//! * `pool-leak` — every `BufPool`/`DigestPool` checkout must be lexically
+//!   paired with a recycle (`.put`, `finish_recycle`, `create_pooled`) or
+//!   an approved handoff (`LocalShard`/`SpillLane`, or the wire via
+//!   `Payload::Data`/`Payload::Load`, whose receiver recycles).
+//! * `sleep-slicing` — no raw `thread::sleep` outside the sliced-wait
+//!   helpers (a sleeping unit cannot observe `JobAbort`).
+//! * `panic-hygiene` — no `todo!`/`unimplemented!`/stray `panic!` outside
+//!   `#[cfg(test)]` (typed errors carry machine/unit/superstep; panics
+//!   lose that and lean on `catch_unwind`).
+//!
+//! All rules skip `#[cfg(test)]` regions: test code asserting on these
+//! `Result`s via unwrap *is* the idiom there.
+
+use super::lexer::{Kind, Tok};
+use super::{Diagnostic, Rule};
+
+/// Directories (relative to the scanned root) where `poison-safety`
+/// applies: the modules that participate in job-abort propagation.
+const POISON_SCOPE: &[&str] = &["worker/", "engine/", "net/", "recode/", "serve/"];
+
+/// Callees whose `Result` carries poison/abort and must propagate.
+const POISON_CALLEES: &[&str] = &[
+    "exchange",
+    "wait_recv_done",
+    "wait_send_allowed",
+    "wait_compute_done",
+    "wait_decided",
+    "idle_wait",
+    "send",
+    "recv",
+    "lock",
+    "wait",
+    "wait_timeout",
+];
+
+/// Token-stream context shared by the rule passes: which tokens sit in
+/// `#[cfg(test)]`/`#[test]` items, and the function spans for the
+/// lexical-pairing rules.
+pub struct Ctx<'a> {
+    toks: &'a [Tok],
+    in_test: Vec<bool>,
+    /// `(body_open, body_close)` token indices of every `fn` body,
+    /// including nested ones.
+    fns: Vec<(usize, usize)>,
+}
+
+impl<'a> Ctx<'a> {
+    /// Precompute test regions and fn spans for `toks`.
+    pub fn new(toks: &'a [Tok]) -> Self {
+        Self {
+            in_test: test_mask(toks),
+            fns: fn_spans(toks),
+            toks,
+        }
+    }
+
+    /// The *outermost* fn body containing token `i`, if any.
+    fn enclosing_fn(&self, i: usize) -> Option<(usize, usize)> {
+        self.fns
+            .iter()
+            .filter(|&&(o, c)| o <= i && i <= c)
+            .min_by_key(|&&(o, _)| o)
+            .copied()
+    }
+}
+
+/// Find the matching `close` for the `open` delimiter at `open_idx`.
+/// Returns the last token index if unbalanced (forgiving, like the lexer).
+fn match_delim(toks: &[Tok], open_idx: usize, open: char, close: char) -> usize {
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open_idx) {
+        if t.is_punct(open) {
+            depth += 1;
+        } else if t.is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Mark every token inside a `#[cfg(test)]`- or `#[test]`-attributed item.
+fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if !(toks[i].is_punct('#') && toks[i + 1].is_punct('[')) {
+            i += 1;
+            continue;
+        }
+        let close = match_delim(toks, i + 1, '[', ']');
+        let inner = &toks[i + 2..close];
+        let has = |s: &str| inner.iter().any(|t| t.is_ident(s));
+        // `#[test]`, `#[cfg(test)]`, `#[cfg(any(test, …))]` — but not
+        // `#[cfg(not(test))]`, which means the opposite.
+        let is_test = match inner.first() {
+            Some(t) if t.is_ident("test") && inner.len() == 1 => true,
+            Some(t) if t.is_ident("cfg") => has("test") && !has("not"),
+            _ => false,
+        };
+        if !is_test {
+            i = close + 1;
+            continue;
+        }
+        // Skip any stacked attributes, then mark the item body.
+        let mut j = close + 1;
+        while j + 1 < toks.len() && toks[j].is_punct('#') && toks[j + 1].is_punct('[') {
+            j = match_delim(toks, j + 1, '[', ']') + 1;
+        }
+        let mut pd = 0usize;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.is_punct('(') {
+                pd += 1;
+            } else if t.is_punct(')') {
+                pd = pd.saturating_sub(1);
+            } else if pd == 0 && t.is_punct(';') {
+                break; // item without a body (e.g. `#[cfg(test)] mod t;`)
+            } else if pd == 0 && t.is_punct('{') {
+                let end = match_delim(toks, j, '{', '}');
+                for m in mask.iter_mut().take(end + 1).skip(i) {
+                    *m = true;
+                }
+                j = end;
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// Collect `(body_open, body_close)` for every `fn` item (incl. nested).
+fn fn_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        // `fn name…` — skip fn-pointer types (`fn(` with no name).
+        if toks[i].is_ident("fn") && toks[i + 1].kind == Kind::Ident {
+            let mut j = i + 2;
+            let mut pd = 0usize;
+            while j < toks.len() {
+                let t = &toks[j];
+                if t.is_punct('(') {
+                    pd += 1;
+                } else if t.is_punct(')') {
+                    pd = pd.saturating_sub(1);
+                } else if pd == 0 && t.is_punct(';') {
+                    break; // trait method declaration — no body
+                } else if pd == 0 && t.is_punct('{') {
+                    spans.push((j, match_delim(toks, j, '{', '}')));
+                    break;
+                }
+                j += 1;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Does the span contain a `.name(` method call?
+fn span_has_method(toks: &[Tok], span: (usize, usize), name: &str) -> bool {
+    (span.0..span.1).any(|k| {
+        toks[k].is_punct('.')
+            && toks.get(k + 1).is_some_and(|t| t.is_ident(name))
+            && toks.get(k + 2).is_some_and(|t| t.is_punct('('))
+    })
+}
+
+/// Does the span mention identifier `name` at all?
+fn span_has_ident(toks: &[Tok], span: (usize, usize), name: &str) -> bool {
+    (span.0..span.1).any(|k| toks[k].is_ident(name))
+}
+
+/// Run every rule over `toks` for the file at `rel` (path relative to the
+/// scanned root, `/`-separated).
+pub fn run_all(rel: &str, ctx: &Ctx<'_>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    poison_safety(rel, ctx, &mut out);
+    barrier_registration(rel, ctx, &mut out);
+    pool_leak(rel, ctx, &mut out);
+    sleep_slicing(rel, ctx, &mut out);
+    panic_hygiene(rel, ctx, &mut out);
+    out.sort_by_key(|d| (d.line, d.rule.id()));
+    out
+}
+
+/// `poison-safety`: `.unwrap()`/`.expect(…)` on a watched callee's Result.
+fn poison_safety(rel: &str, ctx: &Ctx<'_>, out: &mut Vec<Diagnostic>) {
+    if !POISON_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    let toks = ctx.toks;
+    for i in 1..toks.len() {
+        if ctx.in_test[i]
+            || toks[i].kind != Kind::Ident
+            || !POISON_CALLEES.contains(&toks[i].text.as_str())
+        {
+            continue;
+        }
+        // Method or path call only: `.callee(` / `::callee(`.
+        if !(toks[i - 1].is_punct('.') || toks[i - 1].is_punct(':')) {
+            continue;
+        }
+        if !toks.get(i + 1).is_some_and(|t| t.is_punct('(')) {
+            continue;
+        }
+        let close = match_delim(toks, i + 1, '(', ')');
+        let (Some(dot), Some(m), Some(paren)) =
+            (toks.get(close + 1), toks.get(close + 2), toks.get(close + 3))
+        else {
+            continue;
+        };
+        if dot.is_punct('.')
+            && (m.is_ident("unwrap") || m.is_ident("expect"))
+            && paren.is_punct('(')
+        {
+            out.push(Diagnostic {
+                file: rel.to_string(),
+                line: m.line,
+                rule: Rule::PoisonSafety,
+                msg: format!(
+                    "`.{}()` on the Result of `{}` swallows poison/abort — propagate with \
+                     `?` so `Error::JobFailed` reaches the driver",
+                    m.text, toks[i].text
+                ),
+            });
+        }
+    }
+}
+
+/// `barrier-registration`: `Rendezvous::new`/`MachineSync::new` without a
+/// `.register(` in the enclosing fn.
+fn barrier_registration(rel: &str, ctx: &Ctx<'_>, out: &mut Vec<Diagnostic>) {
+    let toks = ctx.toks;
+    for i in 0..toks.len() {
+        if ctx.in_test[i] {
+            continue;
+        }
+        let ty = &toks[i];
+        if !(ty.is_ident("Rendezvous") || ty.is_ident("MachineSync")) {
+            continue;
+        }
+        let qualified = toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+            && toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+            && toks.get(i + 3).is_some_and(|t| t.is_ident("new"))
+            && toks.get(i + 4).is_some_and(|t| t.is_punct('('));
+        if !qualified {
+            continue;
+        }
+        let registered = ctx
+            .enclosing_fn(i)
+            .is_some_and(|span| span_has_method(toks, span, "register"));
+        if !registered {
+            out.push(Diagnostic {
+                file: rel.to_string(),
+                line: ty.line,
+                rule: Rule::BarrierRegistration,
+                msg: format!(
+                    "`{}::new` with no `JobAbort::register` in the enclosing fn — an \
+                     unregistered barrier wedges every sibling when a unit dies (the \
+                     PR 5 deadlock class)",
+                    ty.text
+                ),
+            });
+        }
+    }
+}
+
+/// `pool-leak`: `<…pool>.take(…)`/`.take_with_capacity(…)` in a fn with no
+/// recycle or approved handoff.
+fn pool_leak(rel: &str, ctx: &Ctx<'_>, out: &mut Vec<Diagnostic>) {
+    let toks = ctx.toks;
+    for i in 1..toks.len() {
+        if ctx.in_test[i] || !toks[i].is_punct('.') {
+            continue;
+        }
+        let recv_is_pool = toks[i - 1].kind == Kind::Ident && toks[i - 1].text.contains("pool");
+        let call = toks.get(i + 1).is_some_and(|t| {
+            t.is_ident("take") || t.is_ident("take_with_capacity")
+        }) && toks.get(i + 2).is_some_and(|t| t.is_punct('('));
+        if !(recv_is_pool && call) {
+            continue;
+        }
+        let paired = ctx.enclosing_fn(i).is_some_and(|span| {
+            span_has_method(toks, span, "put")
+                || span_has_ident(toks, span, "finish_recycle")
+                || span_has_ident(toks, span, "create_pooled")
+                || span_has_ident(toks, span, "LocalShard")
+                || span_has_ident(toks, span, "SpillLane")
+                || wire_handoff(toks, span)
+        });
+        if !paired {
+            out.push(Diagnostic {
+                file: rel.to_string(),
+                line: toks[i + 1].line,
+                rule: Rule::PoolLeak,
+                msg: "pool checkout with no recycle/handoff in the enclosing fn — pair it \
+                      with `.put(..)`/`finish_recycle`, or hand the buffer off via \
+                      LocalShard/SpillLane/`Payload::{Data,Load}`"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// `Payload::Data(` / `Payload::Load(` — ownership moves onto the wire and
+/// the receiving unit recycles the block (the spine's documented protocol).
+fn wire_handoff(toks: &[Tok], span: (usize, usize)) -> bool {
+    (span.0..span.1).any(|k| {
+        toks[k].is_ident("Payload")
+            && toks.get(k + 1).is_some_and(|t| t.is_punct(':'))
+            && toks.get(k + 2).is_some_and(|t| t.is_punct(':'))
+            && toks
+                .get(k + 3)
+                .is_some_and(|t| t.is_ident("Data") || t.is_ident("Load"))
+    })
+}
+
+/// `sleep-slicing`: raw `thread::sleep(...)` outside the sliced helpers.
+fn sleep_slicing(rel: &str, ctx: &Ctx<'_>, out: &mut Vec<Diagnostic>) {
+    let toks = ctx.toks;
+    for i in 3..toks.len() {
+        if ctx.in_test[i] {
+            continue;
+        }
+        if toks[i].is_ident("sleep")
+            && toks.get(i + 1).is_some_and(|t| t.is_punct('('))
+            && toks[i - 1].is_punct(':')
+            && toks[i - 2].is_punct(':')
+            && toks[i - 3].is_ident("thread")
+        {
+            out.push(Diagnostic {
+                file: rel.to_string(),
+                line: toks[i].line,
+                rule: Rule::SleepSlicing,
+                msg: "raw `thread::sleep` cannot observe `JobAbort` — slice the wait \
+                      (bounded ≤ABORT_POLL chunks that re-check the flag) or use a \
+                      poisonable primitive"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// `panic-hygiene`: `todo!`/`unimplemented!`/`panic!` outside tests.
+fn panic_hygiene(rel: &str, ctx: &Ctx<'_>, out: &mut Vec<Diagnostic>) {
+    let toks = ctx.toks;
+    for i in 0..toks.len() {
+        if ctx.in_test[i] {
+            continue;
+        }
+        let t = &toks[i];
+        let is_macro = (t.is_ident("panic") || t.is_ident("todo") || t.is_ident("unimplemented"))
+            && toks.get(i + 1).is_some_and(|n| n.is_punct('!'));
+        if is_macro {
+            out.push(Diagnostic {
+                file: rel.to_string(),
+                line: t.line,
+                rule: Rule::PanicHygiene,
+                msg: format!(
+                    "`{}!` outside #[cfg(test)] — return a typed `Error` instead: panics \
+                     lose the machine/unit/superstep attribution `JobFailed` carries",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::lexer::lex;
+
+    fn diags(rel: &str, src: &str) -> Vec<Diagnostic> {
+        let toks = lex(src);
+        let ctx = Ctx::new(&toks);
+        run_all(rel, &ctx)
+    }
+
+    #[test]
+    fn poison_safety_scoped_to_watched_dirs() {
+        let src = "fn f(m: &Mutex<u32>) -> u32 { *m.lock().unwrap() }";
+        assert_eq!(diags("worker/x.rs", src).len(), 1);
+        assert_eq!(diags("util/x.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn poison_safety_spares_propagation_and_tests() {
+        let ok = "fn f(ms: &MachineSync) -> Result<()> { ms.wait_recv_done(0)?; Ok(()) }";
+        assert!(diags("worker/x.rs", ok).is_empty());
+        let test = "#[cfg(test)]\nmod t { fn f(r: &R) { r.exchange(0, 1, |v| v).unwrap(); } }";
+        assert!(diags("worker/x.rs", test).is_empty());
+    }
+
+    #[test]
+    fn unregistered_barrier_fires_registered_does_not() {
+        let bad = "fn f(n: usize) { let rv = Rendezvous::new(n); }";
+        let d = diags("a.rs", bad);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, Rule::BarrierRegistration);
+        let good = "fn f(n: usize, a: &JobAbort) { let rv = Rendezvous::new(n); \
+                    a.register(rv.clone()); }";
+        assert!(diags("a.rs", good).is_empty());
+    }
+
+    #[test]
+    fn pool_take_needs_put_or_handoff() {
+        let bad = "fn f(pool: &BufPool) -> usize { let b = pool.take(); b.len() }";
+        assert_eq!(diags("a.rs", bad).len(), 1);
+        let put = "fn f(pool: &BufPool) { let b = pool.take(); pool.put(b); }";
+        assert!(diags("a.rs", put).is_empty());
+        let wire = "fn f(pool: &BufPool, tx: &mut NetSender) -> Result<()> { \
+                    let b = pool.take(); tx.send(0, 0, Payload::Data(b)) }";
+        assert!(diags("a.rs", wire).is_empty());
+        // `std::mem::take` and iterator `.take(n)` never match: the
+        // receiver must be a *pool*.
+        let non_pool = "fn f(v: &mut Vec<u8>) { let b = std::mem::take(v); drop(b); }";
+        assert!(diags("a.rs", non_pool).is_empty());
+    }
+
+    #[test]
+    fn sleeps_and_panics_fire_outside_tests_only() {
+        let src = "fn f() { std::thread::sleep(D); }\nfn g() { todo!() }\n\
+                   #[cfg(test)]\nmod t { fn h() { std::thread::sleep(D); panic!(); } }";
+        let d = diags("a.rs", src);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].rule, Rule::SleepSlicing);
+        assert_eq!(d[1].rule, Rule::PanicHygiene);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nfn f() { panic!(\"x\") }";
+        assert_eq!(diags("a.rs", src).len(), 1);
+    }
+}

@@ -75,6 +75,9 @@ pub fn run(g: &Graph, algo: Algo, profile: &ClusterProfile) -> Result<BaselineRu
                     });
                 }
             });
+            // analyze:allow(sleep-slicing): baseline simulator — models
+            // Pregelix's fixed per-superstep framework overhead; baselines
+            // run standalone with no JobAbort latch to observe.
             std::thread::sleep(std::time::Duration::from_secs_f64(overhead));
         }
     });

@@ -1,0 +1,94 @@
+//! `graphd-analyze` — repo-native invariant lints (see `graphd::analyze`).
+//!
+//! ```text
+//! analyze [ROOT...]        lint the tree(s); default root: rust/src (or src)
+//! analyze --rules          print the rule table and exit
+//! ```
+//!
+//! Exit codes: `0` clean, `1` violations found, `2` usage or I/O error.
+//! Suppressions are explicit and reasoned — `// analyze:allow(rule-id): why`
+//! — so every accepted violation documents itself (`bad-pragma` reports
+//! reasonless or misspelled ones).
+
+use graphd::analyze::{analyze_tree, Rule};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() {
+    eprintln!("usage: analyze [ROOT...]   (default root: rust/src, falling back to src)");
+    eprintln!("       analyze --rules     print the rule table");
+}
+
+fn print_rules() {
+    // The pragma needle is split so the analyzer's own self-scan never
+    // parses this help string as a (malformed) suppression.
+    println!(
+        "graphd-analyze rules (suppress with `// analyze:{}(rule-id): reason`):",
+        "allow"
+    );
+    for r in Rule::all() {
+        println!("  {:<21} {}", r.id(), r.describe());
+    }
+}
+
+fn main() -> ExitCode {
+    let mut roots: Vec<PathBuf> = Vec::new();
+    for a in std::env::args().skip(1) {
+        match a.as_str() {
+            "--help" | "-h" => {
+                usage();
+                return ExitCode::SUCCESS;
+            }
+            "--rules" => {
+                print_rules();
+                return ExitCode::SUCCESS;
+            }
+            _ if a.starts_with('-') => {
+                eprintln!("analyze: unknown flag `{a}`");
+                usage();
+                return ExitCode::from(2);
+            }
+            _ => roots.push(PathBuf::from(a)),
+        }
+    }
+    if roots.is_empty() {
+        // `make analyze` runs from the repo root; `cargo run` from rust/.
+        for cand in ["rust/src", "src"] {
+            if PathBuf::from(cand).is_dir() {
+                roots.push(PathBuf::from(cand));
+                break;
+            }
+        }
+    }
+    if roots.is_empty() {
+        eprintln!("analyze: no root given and neither rust/src nor src exists");
+        return ExitCode::from(2);
+    }
+
+    let (mut files, mut violations, mut suppressed) = (0usize, 0usize, 0usize);
+    for root in &roots {
+        match analyze_tree(root) {
+            Ok(rep) => {
+                for d in &rep.diagnostics {
+                    println!("{d}");
+                }
+                files += rep.files;
+                violations += rep.diagnostics.len();
+                suppressed += rep.suppressed;
+            }
+            Err(e) => {
+                eprintln!("analyze: {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    eprintln!(
+        "graphd-analyze: {files} file(s) scanned, {violations} violation(s), \
+         {suppressed} reasoned suppression(s)"
+    );
+    if violations > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

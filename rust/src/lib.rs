@@ -48,6 +48,8 @@
 // items; CI runs `cargo doc --no-deps` with warnings denied.
 pub mod algos;
 #[warn(missing_docs)]
+pub mod analyze;
+#[warn(missing_docs)]
 pub mod api;
 pub mod baselines;
 pub mod bench;

@@ -44,6 +44,10 @@ impl PhaseTx {
         Self {
             sender,
             phase,
+            // analyze:allow(pool-leak): checkouts live in self.bufs for the
+            // phase; push() hands full blocks to the wire and finish()
+            // recycles or sends the rest — the pairing spans the PhaseTx
+            // impl, not this constructor.
             bufs: (0..n).map(|_| pool.take()).collect(),
             pool,
         }

@@ -26,6 +26,9 @@ impl StreamWriter {
     /// alloc-free form used by the OMS hot path, where files open and
     /// close once per ≤ℬ bytes.
     pub fn create_pooled(path: &Path, buf_size: usize, pool: &BufPool) -> Result<Self> {
+        // analyze:allow(pool-leak): this IS the pooled-checkout constructor
+        // the rule whitelists at call sites — the buffer lives in the
+        // writer until finish_recycle() returns it to the pool.
         Self::with_buf(path, pool.take_with_capacity(buf_size.max(16)))
     }
 

@@ -46,6 +46,11 @@ impl DiskBw {
         *self.bytes.lock().unwrap() += bytes as u64;
         let now = Instant::now();
         if until > now {
+            // analyze:allow(sleep-slicing): single-transfer nap, bounded by
+            // one block's simulated disk time (≤ℬ bytes / rate); the abort
+            // latch is observed at the next poisonable wait, and a 10ms
+            // poll quantum on every stream read would dominate the disk
+            // model's hot path.
             std::thread::sleep(until - now);
         }
     }

@@ -93,6 +93,10 @@ pub fn run(cases: u64, mut prop: impl FnMut(&mut Gen)) {
                     best = (size, m);
                 }
             }
+            // analyze:allow(panic-hygiene): property-failure reporting IS
+            // this harness's contract — it only ever runs inside #[test]
+            // fns, where the panic drives the libtest failure path with the
+            // seed/size needed to replay the case.
             panic!(
                 "proptest_lite: case {case} failed (seed={seed:#x}, size={}):\n{}",
                 best.0, best.1

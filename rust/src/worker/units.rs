@@ -55,7 +55,7 @@ use crate::util::bitset::BitSet;
 use crate::util::diskio::read_file_into;
 use crate::util::timer::Stopwatch;
 use crate::worker::storage::{EdgeStreamCursor, MachineStore};
-use crate::worker::sync::{JobAbort, MachineSync, Rendezvous};
+use crate::worker::sync::{lock_clean, wait_clean, JobAbort, MachineSync, Rendezvous};
 use crate::worker::Partitioning;
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -100,25 +100,25 @@ impl<T: Send> StepQueue<T> {
 
     /// Deposit `item` for `step` (exactly one deposit per step).
     pub fn put(&self, step: u64, item: T) {
-        self.q.lock().unwrap().push_back((step, item));
+        lock_clean(&self.q).push_back((step, item));
         self.cond.notify_all();
     }
 
     /// Block until the deposit for `step` arrives, then consume it.
     pub fn take(&self, step: u64) -> T {
-        let mut q = self.q.lock().unwrap();
+        let mut q = lock_clean(&self.q);
         loop {
             if let Some(pos) = q.iter().position(|(s, _)| *s == step) {
                 return q.remove(pos).unwrap().1;
             }
-            q = self.cond.wait(q).unwrap();
+            q = wait_clean(&self.cond, q);
         }
     }
 
     /// Run `f` over the queued entry for `step` without consuming it
     /// (used by synchronous checkpointing).  The entry must be present.
     pub fn peek_with<R>(&self, step: u64, f: impl FnOnce(&T) -> R) -> R {
-        let q = self.q.lock().unwrap();
+        let q = lock_clean(&self.q);
         let (_, item) = q
             .iter()
             .find(|(s, _)| *s == step)
@@ -274,7 +274,7 @@ impl MetricsSink {
 
     /// Run `f` over the (lazily created) entry for `step`.
     pub fn with_step(&self, step: u64, f: impl FnOnce(&mut StepMetrics)) {
-        let mut v = self.0.lock().unwrap();
+        let mut v = lock_clean(&self.0);
         while v.len() <= step as usize {
             let s = v.len() as u64;
             v.push(StepMetrics {
@@ -287,7 +287,7 @@ impl MetricsSink {
 
     /// Clone out all per-step entries recorded so far.
     pub fn snapshot(&self) -> Vec<StepMetrics> {
-        self.0.lock().unwrap().clone()
+        lock_clean(&self.0).clone()
     }
 }
 

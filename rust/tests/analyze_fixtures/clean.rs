@@ -1,0 +1,17 @@
+// Fixture: a clean file — no rule fires, nothing is suppressed.
+
+fn propagate(ms: &MachineSync) -> Result<()> {
+    ms.wait_recv_done(0)?;
+    Ok(())
+}
+
+fn paired(pool: &BufPool) {
+    let b = pool.take();
+    pool.put(b);
+}
+
+fn registered(n: usize, abort: &JobAbort) -> Arc<Rendezvous<u64, u64>> {
+    let rv = Rendezvous::new(n);
+    abort.register(rv.clone());
+    rv
+}

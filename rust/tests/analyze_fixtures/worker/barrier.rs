@@ -1,0 +1,16 @@
+// Fixture: barrier-registration — barriers built with no JobAbort
+// registration in the enclosing fn (the PR 5 deadlock class).
+
+fn build(n: usize) -> Arc<Rendezvous<u64, u64>> {
+    Rendezvous::new(n)
+}
+
+fn build_sync(n: usize) -> Arc<MachineSync> {
+    MachineSync::new(n)
+}
+
+fn registered(n: usize, abort: &JobAbort) -> Arc<MachineSync> {
+    let ms = MachineSync::new(n);
+    abort.register(ms.clone());
+    ms
+}

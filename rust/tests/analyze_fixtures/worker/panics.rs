@@ -1,0 +1,18 @@
+// Fixture: panic-hygiene — stray panics outside #[cfg(test)].
+
+fn unfinished() {
+    todo!()
+}
+
+fn stray(x: u32) {
+    if x > 3 {
+        panic!("boom");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    fn fine() {
+        panic!("tests may panic");
+    }
+}

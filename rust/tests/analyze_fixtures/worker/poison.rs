@@ -1,0 +1,15 @@
+// Fixture: poison-safety — unwrap on a poisonable wait's Result.
+// Never compiled; scanned by tests/analyze.rs.
+
+fn swallow(rv: &Rendezvous<u64, u64>) -> u64 {
+    rv.exchange(0, 1, |vs| vs.iter().sum()).unwrap()
+}
+
+fn swallow_lock(m: &Mutex<u64>) -> u64 {
+    *m.lock().expect("poisoned")
+}
+
+fn propagates(ms: &MachineSync) -> Result<()> {
+    ms.wait_recv_done(0)?;
+    Ok(())
+}

@@ -1,0 +1,16 @@
+// Fixture: pool-leak — a checkout with no recycle or approved handoff.
+
+fn leak(pool: &BufPool) -> usize {
+    let b = pool.take();
+    b.len()
+}
+
+fn recycled(pool: &BufPool) {
+    let b = pool.take();
+    pool.put(b);
+}
+
+fn wire(pool: &BufPool, tx: &mut NetSender) -> Result<()> {
+    let b = pool.take();
+    tx.send(0, 0, Payload::Data(b))
+}

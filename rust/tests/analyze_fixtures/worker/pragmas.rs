@@ -1,0 +1,20 @@
+// Fixture: pragma engine — reasoned pragmas suppress, malformed ones report.
+
+fn sliced_helper() {
+    // analyze:allow(sleep-slicing): fixture — pretend this is the sliced helper
+    std::thread::sleep(POLL);
+}
+
+fn trailing(m: &Mutex<u64>) -> u64 {
+    *m.lock().unwrap() // analyze:allow(poison-safety): fixture — single-threaded probe
+}
+
+fn reasonless() {
+    // analyze:allow(sleep-slicing)
+    std::thread::sleep(POLL);
+}
+
+fn unknown_id() {
+    // analyze:allow(sleep-slicing-typo): misspelled rule id
+    std::thread::sleep(POLL);
+}

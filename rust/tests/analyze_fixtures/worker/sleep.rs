@@ -1,0 +1,5 @@
+// Fixture: sleep-slicing — a raw sleep that cannot observe JobAbort.
+
+fn nap() {
+    std::thread::sleep(std::time::Duration::from_millis(50));
+}
