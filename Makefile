@@ -4,22 +4,26 @@
 #   make test        tier-1 tests (bounded by `timeout` where available)
 #   make analyze     repo-native invariant lints (graphd-analyze): poison-
 #                    safety, barrier-registration, pool-leak, sleep-slicing,
-#                    panic-hygiene.  Suppress a reviewed site with a reasoned
+#                    panic-hygiene, print-hygiene.  Suppress a reviewed site
+#                    with a reasoned
 #                    pragma: `// analyze:allow(rule-id): why`.  Exit 1 on
 #                    findings; `cargo run --bin analyze -- --rules` lists them.
 #   make ci          everything CI gates on
+#   make trace-smoke end-to-end Chrome-trace export: tiny traced run, then
+#                    validate the JSON parses and every span track balances
 #   make bench-smoke quick perf trajectory (non-gating floors)
 #   make clean       cargo clean + stale bench JSON tmp files
 
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 BENCH_JSON ?= BENCH_PR4.json
+TRACE_JSON ?= /tmp/graphd_trace_smoke.json
 # Hang-proofing: the engine is a barrier machine; a failure-propagation
 # regression deadlocks rather than fails.  Bound the test step like CI does
 # (no-op where coreutils `timeout` is unavailable).
 TIMEOUT := $(shell command -v timeout >/dev/null 2>&1 && echo "timeout 600")
 
-.PHONY: build test analyze fmt-check clippy doc check-xla ci bench-smoke artifacts clean
+.PHONY: build test analyze fmt-check clippy doc check-xla ci trace-smoke bench-smoke artifacts clean
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -49,7 +53,17 @@ doc:
 check-xla:
 	$(CARGO) check --all-targets --features xla --manifest-path $(MANIFEST)
 
-ci: build test analyze fmt-check clippy doc check-xla
+ci: build test analyze fmt-check clippy doc check-xla trace-smoke
+
+# End-to-end flight-recorder smoke: run a tiny traced job through the CLI,
+# then check the Chrome-trace export is valid JSON whose B/E span events
+# balance on every (pid, tid) track — i.e. Perfetto will actually load it.
+trace-smoke: build
+	$(TIMEOUT) ./rust/target/release/graphd run --algo hashmin \
+		--dataset btc-s --profile test --machines 2 --scale 0.05 \
+		--trace $(TRACE_JSON)
+	python3 scripts/check_trace.py $(TRACE_JSON)
+	rm -f $(TRACE_JSON)
 
 # Quick perf trajectory: spine + serve throughput in smoke mode, numbers
 # emitted to $(BENCH_JSON) (spine writes the file with its "spine" and

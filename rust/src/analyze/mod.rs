@@ -10,7 +10,7 @@
 //! module turns those conventions into machine-checked rules: a
 //! zero-dependency scanner (a hand-rolled lexer, per the repo's
 //! vendor-everything rule) walks `rust/src/**/*.rs` and emits typed
-//! `file:line` diagnostics for the five rules documented in [`Rule`].
+//! `file:line` diagnostics for the six rules documented in [`Rule`].
 //!
 //! Run it via `make analyze` (part of `make ci`) or directly:
 //!
@@ -60,6 +60,10 @@ pub enum Rule {
     SleepSlicing,
     /// `todo!`/`unimplemented!`/stray `panic!` outside `#[cfg(test)]`.
     PanicHygiene,
+    /// Raw `eprintln!`/`println!` in `worker/`, `engine/`, `net/`,
+    /// `serve/` outside tests — diagnostics must route through
+    /// [`crate::trace::diag`] so tests can assert on them.
+    PrintHygiene,
     /// A malformed suppression: unknown rule-id or missing `: reason`.
     BadPragma,
 }
@@ -73,6 +77,7 @@ impl Rule {
             Rule::PoolLeak => "pool-leak",
             Rule::SleepSlicing => "sleep-slicing",
             Rule::PanicHygiene => "panic-hygiene",
+            Rule::PrintHygiene => "print-hygiene",
             Rule::BadPragma => "bad-pragma",
         }
     }
@@ -85,6 +90,7 @@ impl Rule {
             "pool-leak" => Some(Rule::PoolLeak),
             "sleep-slicing" => Some(Rule::SleepSlicing),
             "panic-hygiene" => Some(Rule::PanicHygiene),
+            "print-hygiene" => Some(Rule::PrintHygiene),
             _ => None,
         }
     }
@@ -97,6 +103,7 @@ impl Rule {
             Rule::PoolLeak,
             Rule::SleepSlicing,
             Rule::PanicHygiene,
+            Rule::PrintHygiene,
         ]
     }
 
@@ -122,6 +129,10 @@ impl Rule {
             }
             Rule::PanicHygiene => {
                 "no todo!/unimplemented!/stray panic! outside #[cfg(test)]"
+            }
+            Rule::PrintHygiene => {
+                "no raw eprintln!/println! in worker/, engine/, net/, serve/ \
+                 outside tests (route diagnostics through trace::diag)"
             }
             Rule::BadPragma => "malformed analyze:allow pragma",
         }

@@ -1,4 +1,4 @@
-//! The five invariant rules, evaluated over the token stream.
+//! The six invariant rules, evaluated over the token stream.
 //!
 //! Each rule encodes a convention PRs 3–5 established by hand (see
 //! `DESIGN.md`, "Invariants & static analysis"):
@@ -21,6 +21,11 @@
 //! * `panic-hygiene` — no `todo!`/`unimplemented!`/stray `panic!` outside
 //!   `#[cfg(test)]` (typed errors carry machine/unit/superstep; panics
 //!   lose that and lean on `catch_unwind`).
+//! * `print-hygiene` — no raw `eprintln!`/`println!` in `worker/`,
+//!   `engine/`, `net/`, `serve/` outside tests: diagnostics route through
+//!   [`crate::trace::diag`], which mirrors to stderr *and* a bounded ring
+//!   tests can assert on.  (`trace/` itself is the sanctioned sink, and
+//!   the CLI at the src root stays free to print.)
 //!
 //! All rules skip `#[cfg(test)]` regions: test code asserting on these
 //! `Result`s via unwrap *is* the idiom there.
@@ -31,6 +36,12 @@ use super::{Diagnostic, Rule};
 /// Directories (relative to the scanned root) where `poison-safety`
 /// applies: the modules that participate in job-abort propagation.
 const POISON_SCOPE: &[&str] = &["worker/", "engine/", "net/", "recode/", "serve/"];
+
+/// Directories where `print-hygiene` applies: the engine modules whose
+/// diagnostics must flow through `trace::diag`.  Narrower than
+/// [`POISON_SCOPE`]: `recode/` has no diagnostics, and `trace/` (the sink)
+/// plus the CLI at the src root are exempt by construction.
+const PRINT_SCOPE: &[&str] = &["worker/", "engine/", "net/", "serve/"];
 
 /// Callees whose `Result` carries poison/abort and must propagate.
 const POISON_CALLEES: &[&str] = &[
@@ -199,6 +210,7 @@ pub fn run_all(rel: &str, ctx: &Ctx<'_>) -> Vec<Diagnostic> {
     pool_leak(rel, ctx, &mut out);
     sleep_slicing(rel, ctx, &mut out);
     panic_hygiene(rel, ctx, &mut out);
+    print_hygiene(rel, ctx, &mut out);
     out.sort_by_key(|d| (d.line, d.rule.id()));
     out
 }
@@ -386,6 +398,34 @@ fn panic_hygiene(rel: &str, ctx: &Ctx<'_>, out: &mut Vec<Diagnostic>) {
     }
 }
 
+/// `print-hygiene`: raw `eprintln!`/`println!` in the engine modules.
+fn print_hygiene(rel: &str, ctx: &Ctx<'_>, out: &mut Vec<Diagnostic>) {
+    if !PRINT_SCOPE.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    let toks = ctx.toks;
+    for i in 0..toks.len() {
+        if ctx.in_test[i] {
+            continue;
+        }
+        let t = &toks[i];
+        let is_print = (t.is_ident("eprintln") || t.is_ident("println"))
+            && toks.get(i + 1).is_some_and(|n| n.is_punct('!'));
+        if is_print {
+            out.push(Diagnostic {
+                file: rel.to_string(),
+                line: t.line,
+                rule: Rule::PrintHygiene,
+                msg: format!(
+                    "raw `{}!` in an engine module — route it through `trace::diag` so \
+                     tests can assert on it (the stderr mirror is kept)",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -452,5 +492,19 @@ mod tests {
     fn cfg_not_test_is_not_a_test_region() {
         let src = "#[cfg(not(test))]\nfn f() { panic!(\"x\") }";
         assert_eq!(diags("a.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn prints_fire_in_engine_modules_only() {
+        let src = "fn f() { eprintln!(\"x\"); }\nfn g() { println!(\"y\"); }";
+        let d = diags("worker/x.rs", src);
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|d| d.rule == Rule::PrintHygiene));
+        // Out of scope: the CLI, util, and the trace sink itself.
+        assert!(diags("util/x.rs", src).is_empty());
+        assert!(diags("trace/mod.rs", src).is_empty());
+        // Test code prints freely.
+        let test = "#[cfg(test)]\nmod t { fn f() { println!(\"ok\"); } }";
+        assert!(diags("serve/x.rs", test).is_empty());
     }
 }

@@ -162,6 +162,13 @@ pub struct JobConfig {
     /// Directory holding the AOT `*.hlo.txt` artifacts for the XLA block
     /// path (`None` = [`crate::runtime::KernelSet::default_dir`]).
     pub artifacts_dir: Option<PathBuf>,
+    /// Flight-recorder tracing (see [`crate::trace`]): off by default.
+    /// When enabled, every unit records spans into per-thread ring
+    /// buffers; a finished job exports Chrome-trace JSON
+    /// (`trace.path`, default `<workdir>/trace.json`) and a failed one
+    /// dumps `flightrec_<machine>.log` files beside it.  CLI:
+    /// `-c trace=true`, `-c trace_path=…`, `-c trace_capacity=…`.
+    pub trace: crate::trace::TraceConfig,
 }
 
 impl Default for JobConfig {
@@ -179,6 +186,7 @@ impl Default for JobConfig {
             disable_oms: false,
             local_fastpath: true,
             artifacts_dir: None,
+            trace: crate::trace::TraceConfig::default(),
         }
     }
 }
@@ -211,6 +219,15 @@ impl JobConfig {
             }
             "checkpoint_every" => {
                 self.checkpoint_every = val.parse().map_err(|_| bad(key, val))?
+            }
+            "trace" => self.trace.enabled = val.parse().map_err(|_| bad(key, val))?,
+            "trace_path" => {
+                // A path implies intent to trace.
+                self.trace.enabled = true;
+                self.trace.path = Some(PathBuf::from(val));
+            }
+            "trace_capacity" => {
+                self.trace.capacity = val.parse().map_err(|_| bad(key, val))?
             }
             _ => return Err(Error::Config(format!("unknown config key '{key}'"))),
         }
@@ -249,6 +266,21 @@ mod tests {
         assert!(!c.local_fastpath);
         assert!(c.apply("mode", "weird").is_err());
         assert!(c.apply("nope", "1").is_err());
+    }
+
+    #[test]
+    fn job_config_trace_keys() {
+        let mut c = JobConfig::default();
+        assert!(!c.trace.enabled, "tracing defaults off");
+        c.apply("trace", "true").unwrap();
+        assert!(c.trace.enabled);
+        c.apply("trace_capacity", "128").unwrap();
+        assert_eq!(c.trace.capacity, 128);
+        let mut c2 = JobConfig::default();
+        c2.apply("trace_path", "/tmp/t.json").unwrap();
+        assert!(c2.trace.enabled, "trace_path implies enabled");
+        assert_eq!(c2.trace.path.as_deref(), Some(std::path::Path::new("/tmp/t.json")));
+        assert!(c.apply("trace", "weird").is_err());
     }
 
     #[test]

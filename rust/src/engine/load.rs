@@ -73,6 +73,9 @@ pub(crate) fn load_text_impl(
     // Loading also recycles its wire batches: the parser checks buffers
     // out, the receiving half returns consumed `Payload::Load` blocks.
     let pool = crate::msg::BufPool::new(4 * n + 8);
+    // Load-phase tracer: one "load" track per machine, exported to
+    // `<workdir>/trace_load.json`; on failure the rings dump beside it.
+    let tracer = std::sync::Arc::new(crate::trace::Tracer::new(eng.cfg.trace.clone()));
 
     let mut results: Vec<Option<Result<MachineStore>>> = (0..n).map(|_| None).collect();
     std::thread::scope(|scope| {
@@ -87,6 +90,7 @@ pub(crate) fn load_text_impl(
                 .map(crate::util::diskio::DiskBw::new);
             let pool = pool.clone();
             let abort = abort.clone();
+            let tracer = tracer.clone();
             handles.push(scope.spawn(move || -> Result<MachineStore> {
                 let _dg = crate::util::diskio::register(disk.clone());
                 // --- parser half (own thread so receive can overlap) ---
@@ -133,7 +137,10 @@ pub(crate) fn load_text_impl(
 
                 // --- receiver half: spill, index, sort, split ---
                 let phase = AtomicU64::new(0);
-                abort.guard(i, "load", &phase, || {
+                // Load spans: arg 1 = receive/spill, arg 2 = sort/split.
+                let mut tr = tracer.unit(i, "load");
+                let out = abort.guard(i, "load", &phase, || {
+                    tr.begin(crate::trace::EventKind::Load, 1);
                     let _ = std::fs::remove_dir_all(&store_dir);
                     std::fs::create_dir_all(&store_dir)?;
                     let spill_path = store_dir.join("load_spill");
@@ -173,6 +180,8 @@ pub(crate) fn load_text_impl(
                     parser
                         .join()
                         .map_err(|e| Error::WorkerPanic { machine: i, cause: format!("{e:?}") })??;
+                    tr.end(crate::trace::EventKind::Load, 1);
+                    tr.begin(crate::trace::EventKind::Load, 2);
 
                     // Sort the state array by vertex ID; S^E follows A's order.
                     index.sort_unstable_by_key(|r| r.0);
@@ -214,8 +223,11 @@ pub(crate) fn load_text_impl(
                         ids,
                         degs,
                     };
+                    tr.end(crate::trace::EventKind::Load, 2);
                     Ok(store)
-                })
+                });
+                tr.finish();
+                out
             }));
         }
         for (i, h) in handles.into_iter().enumerate() {
@@ -229,8 +241,17 @@ pub(crate) fn load_text_impl(
         results.into_iter().map(|r| r.unwrap()).collect();
     let mut stores = match collected {
         Ok(s) => s,
-        Err(e) => return Err(abort.first_cause_or(e)),
+        Err(e) => {
+            let e = abort.first_cause_or(e);
+            if tracer.enabled() {
+                let _ = tracer.flight_record(&eng.cfg.workdir, &e.to_string());
+            }
+            return Err(e);
+        }
     };
+    if tracer.enabled() {
+        tracer.export_chrome(&eng.cfg.workdir.join("trace_load.json"))?;
+    }
     let total: u64 = stores.iter().map(|s| s.ids.len() as u64).sum();
     for s in &mut stores {
         s.total_vertices = total;

@@ -121,6 +121,9 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
     abort.register(uc_rv.clone() as Arc<dyn Poisonable>);
     abort.register(ur_rv.clone() as Arc<dyn Poisonable>);
     abort.register(ckpt_rv.clone() as Arc<dyn Poisonable>);
+    // Flight recorder / Chrome-trace collector: disabled configs hand out
+    // no-op unit tracers, so the superstep loop pays one branch per event.
+    let tracer = Arc::new(crate::trace::Tracer::new(eng.cfg.trace.clone()));
     let global = JobGlobal {
         program: program.clone(),
         cfg: eng.cfg.clone(),
@@ -135,6 +138,7 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
         pool: pool.clone(),
         digest_pool: digest_pool.clone(),
         abort: abort.clone(),
+        tracer: tracer.clone(),
     };
 
     let (endpoints, switch) = net::build(
@@ -223,8 +227,27 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
     });
     let outputs: Vec<MachineOutput<P>> = match outputs {
         Ok(o) => o,
-        Err(e) => return Err(abort.first_cause_or(e)),
+        Err(e) => {
+            let e = abort.first_cause_or(e);
+            // Flight recorder: drain every unit's ring into
+            // `flightrec_<machine>.log` before surfacing the typed failure,
+            // so post-mortems see what each unit was doing when the first
+            // cause tripped.  Best-effort — the job error wins.
+            if tracer.enabled() {
+                let _ = tracer.flight_record(&eng.cfg.workdir, &e.to_string());
+            }
+            return Err(e);
+        }
     };
+    if tracer.enabled() {
+        let path = eng
+            .cfg
+            .trace
+            .path
+            .clone()
+            .unwrap_or_else(|| eng.cfg.workdir.join("trace.json"));
+        tracer.export_chrome(&path)?;
+    }
 
     let metrics = JobMetrics {
         load_secs: 0.0,

@@ -71,11 +71,14 @@ pub mod serve;
 #[warn(missing_docs)]
 pub mod session;
 pub mod stream;
+#[warn(missing_docs)]
+pub mod trace;
 pub mod util;
 #[warn(missing_docs)]
 pub mod worker;
 
 pub use config::Mode;
 pub use error::{Error, Result};
-pub use serve::{Answer, Query, QueryResult, QueryServer, ServeConfig};
+pub use serve::{Answer, Query, QueryResult, QueryServer, ServeConfig, ServeStats};
 pub use session::{GraphD, GraphSource, JobBuilder, JobPlan, LoadedGraph, Session, Xla};
+pub use trace::TraceConfig;

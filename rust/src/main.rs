@@ -4,10 +4,10 @@
 //! graphd gen   --dataset webuk-s [--scale 1.0] [--out PATH]
 //! graphd run   --algo pagerank|hashmin|sssp --dataset NAME
 //!              [--profile wpc|whigh|test] [--steps 10] [--machines N]
-//!              [--scale F] [-c key=val ...]
+//!              [--scale F] [--trace [PATH]] [-c key=val ...]
 //! graphd serve --dataset NAME [--queries FILE|-] [--gen Q] [--seed S]
 //!              [--lanes 8] [--basic] [--profile NAME] [--machines N]
-//!              [--scale F] [-c key=val ...]
+//!              [--scale F] [--trace] [-c key=val ...]
 //! graphd table --id 2|3|5|6|7|8 [--scale F]
 //! graphd info
 //! ```
@@ -144,14 +144,32 @@ fn cmd_run(
         other => return Err(graphd::Error::Config(format!("unknown algo {other}"))),
     };
 
+    // `--trace [PATH]` turns on the flight-recorder span layer and routes
+    // the Chrome-trace export to PATH (default `trace.json` in the current
+    // directory) — the bench workdir is deleted after the run, so the
+    // export must land outside it.  The harness runs the IO-Basic and
+    // IO-Recoded jobs back to back; each export rewrites PATH, so the file
+    // left behind covers the *last* job (IO-Recoded).
+    let mut cfgs = cfgs.to_vec();
+    if let Some(path) = flags.get("trace") {
+        let path = if path.is_empty() { "trace.json" } else { path.as_str() };
+        cfgs.push(("trace".into(), "true".into()));
+        cfgs.push(("trace_path".into(), path.to_string()));
+        eprintln!("tracing supersteps to {path} (load https://ui.perfetto.dev)");
+    }
+
     let gd = bench::run_graphd_cfg(
         "cli",
         &g,
         algo,
         &profile,
         bench::use_xla_from_env(),
-        cfgs,
+        &cfgs,
     )?;
+    if let Some(json) = bench::bench_json_path() {
+        bench::bench_json_merge(&json, "cli_run_basic", &gd.basic_metrics.to_json())?;
+        bench::bench_json_merge(&json, "cli_run_recoded", &gd.recoded_metrics.to_json())?;
+    }
     let mut t = Table::new(
         &format!("{} / {} on {}", ds.name(), algo.name(), profile.name),
         &["Preprocess", "Load", "Compute"],
@@ -232,6 +250,13 @@ fn cmd_serve(
     let mut b = GraphD::builder()
         .profile(profile)
         .use_xla(bench::use_xla_from_env());
+    // `--trace` turns on the span layer for the serve session: batch spans
+    // land in `<workdir>/trace_serve.json` (and the load/recode phases in
+    // their own files next to it), so the workdir is kept after the run.
+    let traced = flags.contains_key("trace");
+    if traced {
+        b = b.config("trace", "true");
+    }
     for (k, v) in cfgs {
         b = b.config(k, v);
     }
@@ -254,12 +279,37 @@ fn cmd_serve(
     for q in queries {
         server.submit(q);
     }
-    let results = server.run_pending()?;
+    // One status line per drained batch: live introspection of the lane
+    // scheduler without attaching a debugger to the serve loop.
+    let results = server.run_pending_with(|st| {
+        eprintln!(
+            "serve: queued={} in-flight={} batches={} failed={} queries={} \
+             qps={:.1} p50={:.1}ms p99={:.1}ms",
+            st.queued,
+            st.in_flight,
+            st.batches,
+            st.failed_batches,
+            st.queries,
+            st.qps,
+            st.p50_secs * 1e3,
+            st.p99_secs * 1e3,
+        );
+    })?;
     for r in &results {
         println!("{}", serve::render_result(r));
     }
     println!("{}", server.metrics().report());
-    let _ = std::fs::remove_dir_all(session.workdir());
+    if let Some(json) = bench::bench_json_path() {
+        bench::bench_json_merge(&json, "cli_serve", &server.metrics().to_json())?;
+    }
+    if traced {
+        eprintln!(
+            "trace: {} (load https://ui.perfetto.dev)",
+            session.workdir().join("trace_serve.json").display()
+        );
+    } else {
+        let _ = std::fs::remove_dir_all(session.workdir());
+    }
     Ok(())
 }
 

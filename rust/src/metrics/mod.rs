@@ -40,6 +40,18 @@ pub struct StepMetrics {
     pub seeks: u64,
     /// OMS files closed this superstep.
     pub oms_files: u64,
+    /// Wall time this machine's units spent blocked in `Rendezvous`
+    /// barriers (`uc_rv`/`ur_rv`/`ckpt_rv` exchanges) this superstep.
+    /// Near-zero barrier wait on a balanced multi-machine run is the
+    /// measurable form of the paper's "fully overlaps computation with
+    /// communication" claim; a large value names the straggler step.
+    pub barrier_wait_secs: f64,
+    /// Wall time spent blocked in `MachineSync` waits — U_c waiting for
+    /// U_r's handoff (`wait_recv_done`) and U_s waiting for the send
+    /// gate (`wait_send_allowed`). The intra-machine counterpart of
+    /// [`Self::barrier_wait_secs`]: this is pipeline stall, not cluster
+    /// skew.
+    pub stall_wait_secs: f64,
 }
 
 /// Whole-job metrics for one machine.
@@ -64,6 +76,16 @@ impl MachineMetrics {
     /// Messages delivered locally (fast path) across all supersteps.
     pub fn total_local_msgs(&self) -> u64 {
         self.steps.iter().map(|s| s.local_msgs).sum()
+    }
+    /// Barrier wait across all supersteps (see
+    /// [`StepMetrics::barrier_wait_secs`]).
+    pub fn total_barrier_wait(&self) -> f64 {
+        self.steps.iter().map(|s| s.barrier_wait_secs).sum()
+    }
+    /// `MachineSync` stall wait across all supersteps (see
+    /// [`StepMetrics::stall_wait_secs`]).
+    pub fn total_stall_wait(&self) -> f64 {
+        self.steps.iter().map(|s| s.stall_wait_secs).sum()
     }
 }
 
@@ -110,6 +132,74 @@ impl JobMetrics {
             .map(|m| m.peak_state_bytes)
             .max()
             .unwrap_or(0)
+    }
+
+    /// Barrier wait summed over every machine and superstep.
+    pub fn barrier_wait_secs(&self) -> f64 {
+        self.machines.iter().map(|m| m.total_barrier_wait()).sum()
+    }
+
+    /// `MachineSync` stall wait summed over every machine and superstep.
+    pub fn stall_wait_secs(&self) -> f64 {
+        self.machines.iter().map(|m| m.total_stall_wait()).sum()
+    }
+
+    /// Machine-readable form for the `bench::bench_json_*` writers and
+    /// the CLI's `GRAPHD_BENCH_JSON` emission. Flat JSON object; schema
+    /// (all numbers):
+    ///
+    /// ```json
+    /// {"load_secs": f, "compute_secs": f, "preprocess_secs": f,
+    ///  "supersteps": n, "machines": n,
+    ///  "net_wire_bytes": n, "net_local_bytes": n,
+    ///  "total_msgs": n, "peak_state_bytes": n,
+    ///  "m_gene_secs": f, "m_send_secs": f,
+    ///  "barrier_wait_secs": f, "stall_wait_secs": f,
+    ///  "pool_hits": n, "pool_misses": n,
+    ///  "digest_pool_hits": n, "digest_pool_misses": n}
+    /// ```
+    ///
+    /// `m_gene_secs`/`m_send_secs` are the machine-0 Table-4 totals
+    /// ([`Self::m_gene_m_send`]); the wait counters are job-wide sums.
+    pub fn to_json(&self) -> String {
+        let (g, s) = self.m_gene_m_send();
+        format!(
+            "{{\"load_secs\": {}, \"compute_secs\": {}, \"preprocess_secs\": {}, \
+             \"supersteps\": {}, \"machines\": {}, \
+             \"net_wire_bytes\": {}, \"net_local_bytes\": {}, \
+             \"total_msgs\": {}, \"peak_state_bytes\": {}, \
+             \"m_gene_secs\": {}, \"m_send_secs\": {}, \
+             \"barrier_wait_secs\": {}, \"stall_wait_secs\": {}, \
+             \"pool_hits\": {}, \"pool_misses\": {}, \
+             \"digest_pool_hits\": {}, \"digest_pool_misses\": {}}}",
+            json_f64(self.load_secs),
+            json_f64(self.compute_secs),
+            json_f64(self.preprocess_secs),
+            self.supersteps,
+            self.machines.len(),
+            self.net_wire_bytes,
+            self.net_local_bytes,
+            self.total_msgs(),
+            self.peak_state_bytes(),
+            json_f64(g),
+            json_f64(s),
+            json_f64(self.barrier_wait_secs()),
+            json_f64(self.stall_wait_secs()),
+            self.pool.hits,
+            self.pool.misses,
+            self.digest_pool.hits,
+            self.digest_pool.misses,
+        )
+    }
+}
+
+/// Render an `f64` as a JSON number (JSON has no NaN/∞ — they collapse
+/// to 0, which no metric legitimately produces as NaN anyway).
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".to_string()
     }
 }
 
@@ -168,15 +258,24 @@ impl ServeMetrics {
     }
 
     /// Latency percentile in seconds (`p` in [0, 100]); 0.0 when empty.
+    /// For several percentiles over the same samples, take one
+    /// [`Self::latency_snapshot`] and query it instead — this sorts per
+    /// call.
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        percentile(&self.latencies_secs, p)
+        self.latency_snapshot().percentile(p)
+    }
+
+    /// Sort the latency samples once; the snapshot answers any number of
+    /// percentile queries without re-sorting (used by [`Self::report`],
+    /// [`Self::to_json`], and the serve `stats()` path).
+    pub fn latency_snapshot(&self) -> LatencySnapshot {
+        LatencySnapshot::new(&self.latencies_secs)
     }
 
     /// The self-describing text report (bench + CLI output).
     pub fn report(&self) -> String {
         // One sort serves all three percentiles.
-        let mut sorted = self.latencies_secs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let lat = self.latency_snapshot();
         format!(
             "== Serve metrics ==\n\
              queries answered   {}\n\
@@ -200,27 +299,87 @@ impl ServeMetrics {
             self.local_bytes,
             human_secs(self.wall_secs),
             self.qps(),
-            human_secs(percentile_sorted(&sorted, 50.0)),
-            human_secs(percentile_sorted(&sorted, 95.0)),
-            human_secs(percentile_sorted(&sorted, 99.0)),
+            human_secs(lat.percentile(50.0)),
+            human_secs(lat.percentile(95.0)),
+            human_secs(lat.percentile(99.0)),
+        )
+    }
+
+    /// Machine-readable form for the `bench::bench_json_*` writers and
+    /// the CLI's `GRAPHD_BENCH_JSON` emission. Flat JSON object; schema
+    /// (all numbers):
+    ///
+    /// ```json
+    /// {"queries": n, "batches": n, "failed_batches": n, "supersteps": n,
+    ///  "edge_items_read": n, "wire_bytes": n, "local_bytes": n,
+    ///  "wall_secs": f, "qps": f,
+    ///  "p50_secs": f, "p95_secs": f, "p99_secs": f}
+    /// ```
+    pub fn to_json(&self) -> String {
+        let lat = self.latency_snapshot();
+        format!(
+            "{{\"queries\": {}, \"batches\": {}, \"failed_batches\": {}, \
+             \"supersteps\": {}, \"edge_items_read\": {}, \
+             \"wire_bytes\": {}, \"local_bytes\": {}, \
+             \"wall_secs\": {}, \"qps\": {}, \
+             \"p50_secs\": {}, \"p95_secs\": {}, \"p99_secs\": {}}}",
+            self.queries,
+            self.batches,
+            self.failed_batches,
+            self.supersteps,
+            self.edge_items_read,
+            self.wire_bytes,
+            self.local_bytes,
+            json_f64(self.wall_secs),
+            json_f64(self.qps()),
+            json_f64(lat.percentile(50.0)),
+            json_f64(lat.percentile(95.0)),
+            json_f64(lat.percentile(99.0)),
         )
     }
 }
 
-/// Nearest-rank percentile over unsorted samples (`p` in [0, 100]).
-pub fn percentile(samples: &[f64], p: f64) -> f64 {
-    let mut sorted: Vec<f64> = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    percentile_sorted(&sorted, p)
+/// Sorted-once percentile snapshot: the single place latency samples get
+/// sorted. [`ServeMetrics::report`], [`ServeMetrics::latency_percentile`],
+/// and the serve `stats()` snapshot all query one of these instead of
+/// each keeping a private sort (the pre-PR 7 duplication).
+#[derive(Clone, Debug)]
+pub struct LatencySnapshot {
+    sorted: Vec<f64>,
 }
 
-/// Nearest-rank percentile over already-sorted samples.
-fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
+impl LatencySnapshot {
+    /// Sort `samples` once (NaNs order as equal — no metric emits them).
+    pub fn new(samples: &[f64]) -> Self {
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        Self { sorted }
     }
-    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
-    sorted[rank.clamp(1, sorted.len()) - 1]
+
+    /// Nearest-rank percentile (`p` in [0, 100]); 0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.sorted.len() as f64).ceil() as usize;
+        self.sorted[rank.clamp(1, self.sorted.len()) - 1]
+    }
+
+    /// Number of samples behind the snapshot.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// True when there are no samples.
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+}
+
+/// Nearest-rank percentile over unsorted samples (`p` in [0, 100]).
+/// One-shot convenience over [`LatencySnapshot`].
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    LatencySnapshot::new(samples).percentile(p)
 }
 
 /// A rendered table cell: a time, a qualitative refusal, or N/A.
@@ -333,6 +492,8 @@ mod tests {
                     m_gene_secs: 2.0,
                     m_send_secs: 5.0,
                     msgs_sent: 20,
+                    barrier_wait_secs: 0.25,
+                    stall_wait_secs: 0.5,
                     ..Default::default()
                 },
             ],
@@ -342,6 +503,43 @@ mod tests {
         assert_eq!((g, s), (3.0, 9.0));
         assert_eq!(jm.total_msgs(), 30);
         assert_eq!(jm.peak_state_bytes(), 1000);
+        assert_eq!(jm.barrier_wait_secs(), 0.25);
+        assert_eq!(jm.stall_wait_secs(), 0.5);
+    }
+
+    #[test]
+    fn job_and_serve_json_are_flat_objects() {
+        let jm = JobMetrics {
+            supersteps: 3,
+            net_wire_bytes: 64,
+            ..Default::default()
+        };
+        let j = jm.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        assert!(j.contains("\"supersteps\": 3"), "{j}");
+        assert!(j.contains("\"net_wire_bytes\": 64"), "{j}");
+        assert!(j.contains("\"barrier_wait_secs\": 0"), "{j}");
+        let sm = ServeMetrics {
+            queries: 5,
+            wall_secs: 2.5,
+            latencies_secs: vec![0.5, 1.0],
+            ..Default::default()
+        };
+        let s = sm.to_json();
+        assert!(s.contains("\"queries\": 5"), "{s}");
+        assert!(s.contains("\"qps\": 2"), "{s}");
+        assert!(s.contains("\"p99_secs\": 1"), "{s}");
+    }
+
+    #[test]
+    fn latency_snapshot_sorts_once_and_matches_percentile() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        let snap = LatencySnapshot::new(&xs);
+        assert_eq!(snap.len(), 5);
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            assert_eq!(snap.percentile(p), percentile(&xs, p));
+        }
+        assert_eq!(LatencySnapshot::new(&[]).percentile(50.0), 0.0);
     }
 
     #[test]

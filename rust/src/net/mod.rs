@@ -85,6 +85,10 @@ impl Switch {
     /// paying simulated wire time promptly (the byte accounting stays —
     /// the bytes were already committed to the medium); without an abort
     /// latch the slicing just re-checks the clock.
+    ///
+    /// This window is exactly what a U_s track's `transmit` span measures
+    /// in the Chrome-trace export ([`crate::trace`]): [`NetSender::send`]
+    /// blocks here synchronously, so span length = queueing + wire time.
     pub fn transmit(&self, bytes: usize) {
         let dur = Duration::from_secs_f64(bytes as f64 / self.rate) + self.latency;
         let until = {

@@ -170,6 +170,9 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
     // One pool for the whole preprocessing: request/reply wire blocks and
     // reply-spill scratch recycle across machines and phases.
     let pool = BufPool::new(4 * n + 8);
+    // Recode-phase tracer: one "recode" track per machine, exported to
+    // `<workdir>/trace_recode.json`; on failure the rings dump beside it.
+    let tracer = std::sync::Arc::new(crate::trace::Tracer::new(eng.cfg.trace.clone()));
     let mut results: Vec<Option<Result<MachineStore>>> = (0..n).map(|_| None).collect();
 
     std::thread::scope(|scope| {
@@ -181,6 +184,7 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
             let merge_k = eng.cfg.merge_k;
             let pool = pool.clone();
             let abort = abort.clone();
+            let tracer = tracer.clone();
             let disk = eng
                 .profile
                 .disk_bytes_per_sec
@@ -192,7 +196,11 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
                 // guard() trips the shared abort on any error or panic so
                 // sibling machines' drains unblock typed.
                 let phase = AtomicU64::new(1);
-                abort.guard(i, "recode", &phase, || {
+                // Recode spans: arg = protocol phase (1 request,
+                // 2 reply/announce, 3 merge), matching the failure beacon.
+                let mut tr = tracer.unit(i, "recode");
+                let out = abort.guard(i, "recode", &phase, || {
+                    tr.begin(crate::trace::EventKind::Recode, 1);
                     let mut rx = PhaseRx::new(&receiver, pool.clone());
                     let _ = std::fs::remove_dir_all(&rec_dir);
                     std::fs::create_dir_all(&rec_dir)?;
@@ -242,6 +250,8 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
                         // ---- Superstep 2: u replies (v_old, new_id(u)) to
                         // owner(v_old); replies are sorted-spilled by target pos.
                         phase.store(2, Ordering::Relaxed);
+                        tr.end(crate::trace::EventKind::Recode, 1);
+                        tr.begin(crate::trace::EventKind::Recode, 2);
                         let spills = {
                             let responder = {
                                 let store = store.clone();
@@ -288,6 +298,8 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
                         // ---- Undirected 1-round: v sends new_id(v) to each
                         // neighbor u (owner(u) records it under u's position).
                         phase.store(2, Ordering::Relaxed);
+                        tr.end(crate::trace::EventKind::Recode, 1);
+                        tr.begin(crate::trace::EventKind::Recode, 2);
                         let spills = {
                             let announcer = {
                                 let store = store.clone();
@@ -330,6 +342,8 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
                     // ---- Superstep 3 / final: merge reply spills by position
                     // and append the recoded adjacency lists to S^E_rec.
                     phase.store(3, Ordering::Relaxed);
+                    tr.end(crate::trace::EventKind::Recode, 2);
+                    tr.begin(crate::trace::EventKind::Recode, 3);
                     let mut se = EdgeStreamWriter::create(&rec_dir, weighted, stream_buf)?;
                     let mut counts = vec![0u32; store.local_vertices()];
                     merge::merge_streams(
@@ -371,8 +385,11 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
                         degs: store.degs.clone(),
                     };
                     rec_store.save()?;
+                    tr.end(crate::trace::EventKind::Recode, 3);
                     Ok(rec_store)
-                })
+                });
+                tr.finish();
+                out
             }));
         }
         for (i, h) in handles.into_iter().enumerate() {
@@ -387,7 +404,20 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
 
     let collected: Result<Vec<MachineStore>> =
         results.into_iter().map(|r| r.unwrap()).collect();
-    collected.map_err(|e| abort.first_cause_or(e))
+    let stores = match collected {
+        Ok(s) => s,
+        Err(e) => {
+            let e = abort.first_cause_or(e);
+            if tracer.enabled() {
+                let _ = tracer.flight_record(&eng.cfg.workdir, &e.to_string());
+            }
+            return Err(e);
+        }
+    };
+    if tracer.enabled() {
+        tracer.export_chrome(&eng.cfg.workdir.join("trace_recode.json"))?;
+    }
+    Ok(stores)
 }
 
 /// Receive reply records, translate the old target ID into the local array

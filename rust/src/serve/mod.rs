@@ -30,6 +30,7 @@ use crate::metrics::{JobMetrics, ServeMetrics};
 use crate::session::LoadedGraph;
 use crate::util::timer::timed;
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -164,6 +165,30 @@ struct Prepared {
     reach: bool,
 }
 
+/// A point-in-time introspection snapshot of a [`QueryServer`]
+/// ([`QueryServer::stats`]): queue depth, in-flight lanes, and rolling
+/// throughput/latency figures from [`ServeMetrics`].  The seed of the
+/// ROADMAP's daemon `/stats` endpoint.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeStats {
+    /// Queries admitted but not yet packed into a batch.
+    pub queued: usize,
+    /// Lanes of the batch currently being served (0 between batches).
+    pub in_flight: usize,
+    /// Admission batches drained so far.
+    pub batches: u64,
+    /// Batches that failed with a typed engine error.
+    pub failed_batches: u64,
+    /// Queries answered so far.
+    pub queries: u64,
+    /// Rolling queries/second over the served wall time.
+    pub qps: f64,
+    /// Median end-to-end query latency, seconds.
+    pub p50_secs: f64,
+    /// 99th-percentile end-to-end query latency, seconds.
+    pub p99_secs: f64,
+}
+
 /// The resident query server: admission queue + batch scheduler over one
 /// [`LoadedGraph`].  Build it through [`LoadedGraph::serve`].
 pub struct QueryServer<'g, 's> {
@@ -175,6 +200,14 @@ pub struct QueryServer<'g, 's> {
     /// engine batches actually run are counted by `metrics.batches`.
     batches: u64,
     metrics: ServeMetrics,
+    /// Lanes of the batch currently dispatched ([`ServeStats::in_flight`]).
+    in_flight: usize,
+    /// Serve-side tracer (session `-c trace=true`): admission instants and
+    /// batch spans on one "serve" track, rewritten to
+    /// `<workdir>/trace_serve.json` at the end of every queue drain.
+    tracer: Arc<crate::trace::Tracer>,
+    tr: crate::trace::UnitTracer,
+    trace_out: PathBuf,
 }
 
 impl<'g, 's> QueryServer<'g, 's> {
@@ -185,6 +218,10 @@ impl<'g, 's> QueryServer<'g, 's> {
                 cfg.lanes
             )));
         }
+        let scfg = graph.session_cfg();
+        let tracer = Arc::new(crate::trace::Tracer::new(scfg.trace.clone()));
+        let tr = tracer.unit(0, "serve");
+        let trace_out = scfg.workdir.join("trace_serve.json");
         Ok(Self {
             graph,
             cfg,
@@ -192,6 +229,10 @@ impl<'g, 's> QueryServer<'g, 's> {
             next_id: 0,
             batches: 0,
             metrics: ServeMetrics::default(),
+            in_flight: 0,
+            tracer,
+            tr,
+            trace_out,
         })
     }
 
@@ -199,6 +240,7 @@ impl<'g, 's> QueryServer<'g, 's> {
     pub fn submit(&mut self, query: Query) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
+        self.tr.instant(crate::trace::EventKind::ServeBatch, id);
         self.queue.push_back(Pending {
             id,
             query,
@@ -226,10 +268,37 @@ impl<'g, 's> QueryServer<'g, 's> {
         &self.metrics
     }
 
+    /// A point-in-time introspection snapshot: queue depth, in-flight
+    /// lanes, and rolling QPS / latency percentiles.  Cheap enough to call
+    /// from a status emitter after every batch.
+    pub fn stats(&self) -> ServeStats {
+        let lat = self.metrics.latency_snapshot();
+        ServeStats {
+            queued: self.queue.len(),
+            in_flight: self.in_flight,
+            batches: self.batches,
+            failed_batches: self.metrics.failed_batches,
+            queries: self.metrics.queries,
+            qps: self.metrics.qps(),
+            p50_secs: lat.percentile(50.0),
+            p99_secs: lat.percentile(99.0),
+        }
+    }
+
     /// Drain the admission queue: pack up to `k` queries per batch into
     /// one k-lane run each, until the queue is empty.  Results come back
     /// in admission order within each batch.
     pub fn run_pending(&mut self) -> Result<Vec<QueryResult>> {
+        self.run_pending_with(|_| {})
+    }
+
+    /// Like [`Self::run_pending`], but calls `emit` with a fresh
+    /// [`ServeStats`] snapshot after every drained batch — the serve CLI's
+    /// periodic one-line status emitter hooks in here.
+    pub fn run_pending_with(
+        &mut self,
+        mut emit: impl FnMut(&ServeStats),
+    ) -> Result<Vec<QueryResult>> {
         let mut results = Vec::new();
         while !self.queue.is_empty() {
             let take = self.cfg.lanes.min(self.queue.len());
@@ -263,6 +332,8 @@ impl<'g, 's> QueryServer<'g, 's> {
             }
 
             if !lanes.is_empty() {
+                self.in_flight = lanes.len();
+                self.tr.begin(crate::trace::EventKind::ServeBatch, seq);
                 let preps: Vec<&Prepared> = lanes.iter().map(|(_, p)| p).collect();
                 match run_batch_any(self.graph, &self.cfg, &preps) {
                     Ok((answers, supersteps, wall, job)) => {
@@ -288,7 +359,7 @@ impl<'g, 's> QueryServer<'g, 's> {
                         // the typed cause, the queue keeps draining, and
                         // the server survives for future submissions.
                         let msg = e.to_string();
-                        eprintln!("[graphd::serve] batch {seq} failed: {msg}");
+                        crate::trace::diag("serve", &format!("batch {seq} failed: {msg}"));
                         self.metrics.failed_batches += 1;
                         for (i, _) in &lanes {
                             let p = &batch[*i];
@@ -305,8 +376,17 @@ impl<'g, 's> QueryServer<'g, 's> {
                         }
                     }
                 }
+                self.tr.end(crate::trace::EventKind::ServeBatch, seq);
+                self.in_flight = 0;
             }
             results.extend(slots.into_iter().flatten());
+            emit(&self.stats());
+        }
+        if self.tracer.enabled() {
+            self.tr.finish();
+            // Best-effort: the serve track rewrites with the events of this
+            // drain; query results never fail on an export error.
+            let _ = self.tracer.export_chrome(&self.trace_out);
         }
         Ok(results)
     }

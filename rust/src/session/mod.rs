@@ -397,6 +397,12 @@ impl<'s> LoadedGraph<'s> {
         self.id_map.as_deref()
     }
 
+    /// The session-default job configuration (the serve subsystem reads
+    /// its trace knob and workdir through this).
+    pub(crate) fn session_cfg(&self) -> &JobConfig {
+        &self.session.cfg
+    }
+
     /// The paper's "IO-Recoding" phase (§5): produce the dense-ID store
     /// generation under `<workdir>/m<i>/rec/`.  Idempotent; records
     /// [`Self::recode_secs`] on first run.
@@ -487,6 +493,7 @@ impl<'s> LoadedGraph<'s> {
             resume: None,
             disable_oms: None,
             local_fastpath: None,
+            trace: None,
         }
     }
 }
@@ -514,6 +521,7 @@ pub struct JobBuilder<'g, 's, P: VertexProgram> {
     resume: Option<u64>,
     disable_oms: Option<bool>,
     local_fastpath: Option<bool>,
+    trace: Option<crate::trace::TraceConfig>,
 }
 
 impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
@@ -561,6 +569,15 @@ impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
     /// Local-delivery fast path for this job (default: the session's).
     pub fn local_fastpath(mut self, on: bool) -> Self {
         self.local_fastpath = Some(on);
+        self
+    }
+
+    /// Per-job tracing: Chrome-trace export on success (to
+    /// `TraceConfig.path`, default `<workdir>/trace.json`) and
+    /// flight-recorder dumps (`<workdir>/flightrec_<machine>.log`) on
+    /// failure.  Default: the session's (`-c trace=true` / `trace_path=`).
+    pub fn trace(mut self, t: crate::trace::TraceConfig) -> Self {
+        self.trace = Some(t);
         self
     }
 
@@ -613,6 +630,9 @@ impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
         }
         if let Some(f) = self.local_fastpath {
             cfg.local_fastpath = f;
+        }
+        if let Some(t) = self.trace {
+            cfg.trace = t;
         }
         // A `checkpoint_every` session/`-c` override without an explicit
         // CheckpointCfg checkpoints into the session DFS.

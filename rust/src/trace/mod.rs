@@ -1,0 +1,726 @@
+//! Flight-recorder tracing spine: structured spans, Chrome-trace export,
+//! and crash-time dumps.
+//!
+//! The paper's headline claim is that GraphD *fully overlaps* computation
+//! with communication (§4, Table 4's M-Gene vs M-Send split).  `JobMetrics`
+//! can only report that split post hoc; this module records the actual
+//! timeline — what U_c, U_s, and U_r of every machine were doing, when —
+//! so overlap, barrier stalls, and the seconds before a failure are
+//! *inspectable*, not inferred.
+//!
+//! Zero dependencies per the repo's vendor-everything rule (no `tracing`
+//! crate): the layer is three small pieces —
+//!
+//! * [`TraceBuf`] — a per-thread bounded ring buffer of [`TraceEvent`]s.
+//!   Fixed capacity, overwrite-oldest, **no locks on the hot path**: each
+//!   unit owns its buffer exclusively ([`UnitTracer`]) and only touches a
+//!   `Mutex` when it deposits the drained buffer at unit exit
+//!   ([`UnitTracer::finish`]).
+//! * [`Tracer`] — the per-job collector. Hands out `UnitTracer`s, gathers
+//!   their deposits, and drives the two file consumers:
+//!   [`Tracer::export_chrome`] writes a Chrome trace-event JSON
+//!   (`trace.json`, loadable in Perfetto / `chrome://tracing`, one track
+//!   per machine×unit) and [`Tracer::flight_record`] dumps each unit's
+//!   last N events into `flightrec_<machine>.log` when a job fails.
+//! * [`diag`] / [`recent_diagnostics`] — the structured sink for the
+//!   engine's few human-facing diagnostic lines (batch/unit failures).
+//!   Each line is mirrored to stderr for humans *and* retained in a
+//!   bounded process-global ring so tests and daemons can assert on it.
+//!   This module is the sanctioned print site; the `print-hygiene`
+//!   analyzer rule forbids raw `eprintln!`/`println!` elsewhere in
+//!   `worker/`, `engine/`, `net/`, and `serve/`.
+//!
+//! ### Event ordering argument
+//!
+//! A `TraceBuf` is single-writer: events of one unit are pushed in program
+//! order and stamped with a per-buffer sequence number plus a microsecond
+//! timestamp from the tracer's shared epoch.  Overwrite-oldest means a
+//! buffer always holds a *suffix* of the unit's history (the `dropped`
+//! counter says how long a prefix was lost).  The exporter merges deposits
+//! per (machine, unit) track by sequence number, so within a track,
+//! ordering is exact; across tracks, the shared epoch makes timestamps
+//! comparable (same process — the simulated cluster shares one clock).
+//! Because a suffix can open with an `End` whose `Begin` was overwritten
+//! (or a failed unit can die inside a span), the exporter *sanitizes*
+//! nesting per track: an unmatched `End` is skipped, and any span still
+//! open at the end of a track is closed with a synthetic `End` at the
+//! track's last timestamp — so the exported JSON always has balanced
+//! begin/end pairs.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default per-unit ring capacity (events).
+pub const DEFAULT_CAPACITY: usize = 4096;
+/// Default number of trailing events per unit in a flight-recorder dump.
+pub const DEFAULT_FLIGHT_EVENTS: usize = 64;
+/// Capacity of the process-global [`diag`] ring.
+const DIAG_CAP: usize = 256;
+
+/// Tracing knobs, threaded as `JobConfig::trace` / `JobBuilder::trace`
+/// (and `-c trace=true`, `-c trace_path=…`, `-c trace_capacity=…`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    /// Master switch. Off (the default) makes every tracing call a no-op
+    /// branch on an owned `Option` — no locks, no allocation, no I/O.
+    pub enabled: bool,
+    /// Per-unit ring capacity in events (overwrite-oldest beyond it).
+    pub capacity: usize,
+    /// Trailing events per unit in a flight-recorder dump.
+    pub flight_events: usize,
+    /// Chrome-trace output path; `None` means `<workdir>/trace.json`.
+    pub path: Option<PathBuf>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            capacity: DEFAULT_CAPACITY,
+            flight_events: DEFAULT_FLIGHT_EVENTS,
+            path: None,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Enabled with defaults — `TraceConfig::on()` is the one-liner for
+    /// `JobBuilder::trace`.
+    pub fn on() -> Self {
+        Self {
+            enabled: true,
+            ..Self::default()
+        }
+    }
+
+    /// Enabled, exporting to `path` instead of `<workdir>/trace.json`.
+    pub fn to(path: impl Into<PathBuf>) -> Self {
+        Self {
+            enabled: true,
+            path: Some(path.into()),
+            ..Self::default()
+        }
+    }
+}
+
+/// Is the event opening a span, closing it, or a point marker?
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventPhase {
+    /// Span open (Chrome `"B"`).
+    Begin,
+    /// Span close (Chrome `"E"`).
+    End,
+    /// Point event (Chrome `"i"`).
+    Instant,
+}
+
+/// What the event describes. The `arg` of a [`TraceEvent`] is interpreted
+/// per kind (superstep number, byte count, file index, …) — see each
+/// variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// One unit executing one superstep; `arg` = absolute superstep.
+    Superstep,
+    /// Blocked in a `Rendezvous::exchange` barrier; `arg` = superstep.
+    Barrier,
+    /// Blocked in a `MachineSync` wait (send gating / recv handoff);
+    /// `arg` = superstep.
+    Stall,
+    /// OMS / spill file lifecycle; `arg` = destination machine or file
+    /// count, per site.
+    File,
+    /// Inside `NetSender::send` → `Switch::transmit` (the modeled wire
+    /// window); `arg` = payload bytes.
+    Transmit,
+    /// Pool checkout pressure sample; `arg` = cumulative `BufPool` misses.
+    Pool,
+    /// Graph loading phase (§3.4); `arg` = machine.
+    Load,
+    /// ID-recoding phase (§5); `arg` = protocol phase (1–3).
+    Recode,
+    /// Serve batch admission (`Instant`) or dispatch span; `arg` = batch
+    /// or query sequence number.
+    ServeBatch,
+}
+
+impl EventKind {
+    /// Chrome `"name"` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Superstep => "superstep",
+            EventKind::Barrier => "barrier",
+            EventKind::Stall => "stall",
+            EventKind::File => "file",
+            EventKind::Transmit => "transmit",
+            EventKind::Pool => "pool",
+            EventKind::Load => "load",
+            EventKind::Recode => "recode",
+            EventKind::ServeBatch => "serve-batch",
+        }
+    }
+
+    /// Chrome `"cat"` (category) field — coarse grouping for trace-viewer
+    /// filtering.
+    pub fn category(self) -> &'static str {
+        match self {
+            EventKind::Superstep | EventKind::Load | EventKind::Recode => "phase",
+            EventKind::Barrier | EventKind::Stall => "sync",
+            EventKind::File | EventKind::Pool => "io",
+            EventKind::Transmit => "net",
+            EventKind::ServeBatch => "serve",
+        }
+    }
+
+    /// Dense index used by the exporter's per-kind depth counters.
+    fn idx(self) -> usize {
+        match self {
+            EventKind::Superstep => 0,
+            EventKind::Barrier => 1,
+            EventKind::Stall => 2,
+            EventKind::File => 3,
+            EventKind::Transmit => 4,
+            EventKind::Pool => 5,
+            EventKind::Load => 6,
+            EventKind::Recode => 7,
+            EventKind::ServeBatch => 8,
+        }
+    }
+}
+
+/// Number of [`EventKind`] variants (size of the depth-counter tables).
+const NUM_KINDS: usize = 9;
+
+/// One recorded event. 32 bytes, `Copy` — pushing one is a few stores
+/// into an owned ring, no allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Per-buffer sequence number (program order within the unit).
+    pub seq: u64,
+    /// Microseconds since the tracer's epoch (job start).
+    pub ts_us: u64,
+    /// Begin / End / Instant.
+    pub phase: EventPhase,
+    /// What happened.
+    pub kind: EventKind,
+    /// Kind-specific argument (see [`EventKind`]).
+    pub arg: u64,
+}
+
+/// Fixed-capacity, overwrite-oldest ring buffer of [`TraceEvent`]s.
+///
+/// Single-writer by construction (each [`UnitTracer`] owns one); `push`
+/// is branch + store, `drain` returns events oldest→newest and resets
+/// the ring (sequence numbers keep counting, so multiple drains from the
+/// same buffer merge correctly).
+#[derive(Debug)]
+pub struct TraceBuf {
+    events: Vec<TraceEvent>,
+    cap: usize,
+    /// Overwrite cursor — index of the *oldest* event once full.
+    next: usize,
+    /// Total events ever pushed (also the next sequence number).
+    seq: u64,
+    /// Total events overwritten before they could be drained.
+    dropped: u64,
+}
+
+impl TraceBuf {
+    /// A ring holding at most `cap` events (`cap` is clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            events: Vec::new(),
+            cap: cap.max(1),
+            next: 0,
+            seq: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Record `e`, stamping its sequence number; overwrites the oldest
+    /// retained event when full.
+    pub fn push(&mut self, mut e: TraceEvent) {
+        e.seq = self.seq;
+        self.seq += 1;
+        if self.events.len() < self.cap {
+            self.events.push(e);
+        } else {
+            self.events[self.next] = e;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing is retained.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Total events overwritten (lost) so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take the retained events oldest→newest and reset the ring (the
+    /// sequence counter keeps running).
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.events.len());
+        out.extend_from_slice(&self.events[self.next..]);
+        out.extend_from_slice(&self.events[..self.next]);
+        self.events.clear();
+        self.next = 0;
+        out
+    }
+}
+
+/// One unit's drained history, as deposited into the [`Tracer`].
+#[derive(Debug)]
+pub struct UnitTrace {
+    /// Machine index (Chrome `pid`).
+    pub machine: usize,
+    /// Unit label — `"U_c"`, `"U_s"`, `"U_r"`, `"load"`, `"recode"`,
+    /// `"serve"` (Chrome `tid` via a fixed mapping).
+    pub unit: &'static str,
+    /// Events lost to ring overwrite before this deposit.
+    pub dropped: u64,
+    /// The retained suffix, oldest→newest.
+    pub events: Vec<TraceEvent>,
+}
+
+/// Per-job trace collector: hands out [`UnitTracer`]s, gathers their
+/// deposits, exports Chrome JSON, and writes flight-recorder dumps.
+///
+/// Shared as `Arc<Tracer>`; the only lock is around the deposit vector,
+/// touched once per unit lifetime (plus at export), never per event.
+#[derive(Debug)]
+pub struct Tracer {
+    cfg: TraceConfig,
+    epoch: Instant,
+    sink: Mutex<Vec<UnitTrace>>,
+}
+
+impl Tracer {
+    /// A collector for one job; `cfg.enabled == false` makes every handed
+    /// out [`UnitTracer`] a no-op.
+    pub fn new(cfg: TraceConfig) -> Self {
+        Self {
+            cfg,
+            epoch: Instant::now(),
+            sink: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Is tracing on?
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// The knobs this tracer was built with.
+    pub fn config(&self) -> &TraceConfig {
+        &self.cfg
+    }
+
+    /// A recorder for one unit of one machine. Disabled tracers hand out
+    /// no-op recorders (no ring allocation).
+    pub fn unit(self: &Arc<Self>, machine: usize, unit: &'static str) -> UnitTracer {
+        if self.cfg.enabled {
+            UnitTracer {
+                shared: Some(Arc::clone(self)),
+                machine,
+                unit,
+                buf: TraceBuf::new(self.cfg.capacity),
+                epoch: self.epoch,
+            }
+        } else {
+            UnitTracer::disabled()
+        }
+    }
+
+    fn deposit(&self, t: UnitTrace) {
+        // Not a poisonable wait: a panicked depositor leaves a plain Vec,
+        // safe to keep using for the remaining deposits/export.
+        let mut sink = self.sink.lock().unwrap_or_else(|p| p.into_inner());
+        sink.push(t);
+    }
+
+    /// Deposits grouped into per-(machine, unit) tracks, events merged by
+    /// sequence number.
+    fn tracks(&self) -> Vec<UnitTrace> {
+        let mut sink = self.sink.lock().unwrap_or_else(|p| p.into_inner());
+        let mut taken = std::mem::take(&mut *sink);
+        drop(sink);
+        taken.sort_by_key(|t| (t.machine, t.unit));
+        let mut tracks: Vec<UnitTrace> = Vec::new();
+        for t in taken {
+            match tracks.last_mut() {
+                Some(last) if last.machine == t.machine && last.unit == t.unit => {
+                    last.dropped = last.dropped.max(t.dropped);
+                    last.events.extend(t.events);
+                }
+                _ => tracks.push(t),
+            }
+        }
+        for t in &mut tracks {
+            t.events.sort_by_key(|e| e.seq);
+        }
+        tracks
+    }
+
+    /// Write the collected events as Chrome trace-event JSON to `path`
+    /// (load it in Perfetto or `chrome://tracing`). One track per
+    /// machine×unit (`pid` = machine, `tid` = unit); begin/end pairs are
+    /// balanced per track by construction (see the module docs' ordering
+    /// argument). The deposit sink is consumed.
+    pub fn export_chrome(&self, path: &Path) -> std::io::Result<()> {
+        let tracks = self.tracks();
+        let mut lines: Vec<String> = Vec::new();
+        let mut machines_seen: Vec<usize> = Vec::new();
+        for t in &tracks {
+            let (pid, tid) = (t.machine, tid_of(t.unit));
+            if !machines_seen.contains(&pid) {
+                machines_seen.push(pid);
+                lines.push(format!(
+                    "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+                     \"args\":{{\"name\":\"machine {pid}\"}}}}"
+                ));
+            }
+            lines.push(format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                t.unit
+            ));
+            if t.dropped > 0 {
+                lines.push(format!(
+                    "{{\"name\":\"ring-dropped\",\"cat\":\"meta\",\"ph\":\"i\",\"s\":\"t\",\
+                     \"ts\":{},\"pid\":{pid},\"tid\":{tid},\"args\":{{\"dropped\":{}}}}}",
+                    t.events.first().map_or(0, |e| e.ts_us),
+                    t.dropped
+                ));
+            }
+            // Per-kind span depth: skip unmatched Ends (their Begin was
+            // overwritten), remember opens so the track can be closed out.
+            let mut depth = [0u64; NUM_KINDS];
+            let mut last_ts = 0u64;
+            for e in &t.events {
+                last_ts = last_ts.max(e.ts_us);
+                let ph = match e.phase {
+                    EventPhase::Begin => {
+                        depth[e.kind.idx()] += 1;
+                        "B"
+                    }
+                    EventPhase::End => {
+                        if depth[e.kind.idx()] == 0 {
+                            continue; // opener lost to ring overwrite
+                        }
+                        depth[e.kind.idx()] -= 1;
+                        "E"
+                    }
+                    EventPhase::Instant => "i",
+                };
+                let scope = if e.phase == EventPhase::Instant { ",\"s\":\"t\"" } else { "" };
+                lines.push(format!(
+                    "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{ph}\"{scope},\"ts\":{},\
+                     \"pid\":{pid},\"tid\":{tid},\"args\":{{\"v\":{},\"seq\":{}}}}}",
+                    e.kind.name(),
+                    e.kind.category(),
+                    e.ts_us,
+                    e.arg,
+                    e.seq
+                ));
+            }
+            // Synthetic closes for spans open at track end (unit died or
+            // the End fell outside the retained suffix).
+            for (k, d) in depth.iter().enumerate() {
+                for _ in 0..*d {
+                    let kind = KIND_BY_IDX[k];
+                    lines.push(format!(
+                        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"E\",\"ts\":{last_ts},\
+                         \"pid\":{pid},\"tid\":{tid},\"args\":{{\"synthetic\":1}}}}",
+                        kind.name(),
+                        kind.category()
+                    ));
+                }
+            }
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "{{\"traceEvents\":[")?;
+        for (i, l) in lines.iter().enumerate() {
+            let sep = if i + 1 == lines.len() { "" } else { "," };
+            writeln!(f, "{l}{sep}")?;
+        }
+        writeln!(f, "],\"displayTimeUnit\":\"ms\"}}")?;
+        f.flush()
+    }
+
+    /// Crash-time dump: write each machine's units' last
+    /// `cfg.flight_events` events to `<dir>/flightrec_<machine>.log`,
+    /// headed by `headline` (the `Error::JobFailed` display — machine,
+    /// unit, superstep, cause of the first `AbortCause`). Returns the
+    /// files written. The deposit sink is consumed.
+    pub fn flight_record(&self, dir: &Path, headline: &str) -> std::io::Result<Vec<PathBuf>> {
+        let tracks = self.tracks();
+        let mut files = Vec::new();
+        let mut machines: Vec<usize> = tracks.iter().map(|t| t.machine).collect();
+        machines.sort_unstable();
+        machines.dedup();
+        std::fs::create_dir_all(dir)?;
+        for m in machines {
+            let path = dir.join(format!("flightrec_{m}.log"));
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+            writeln!(f, "== graphd flight recorder — machine {m} ==")?;
+            writeln!(f, "cause: {headline}")?;
+            for t in tracks.iter().filter(|t| t.machine == m) {
+                let tail_from = t.events.len().saturating_sub(self.cfg.flight_events);
+                writeln!(
+                    f,
+                    "-- {} (last {} of {} events, {} lost to ring overwrite) --",
+                    t.unit,
+                    t.events.len() - tail_from,
+                    t.dropped + t.events.len() as u64,
+                    t.dropped
+                )?;
+                for e in &t.events[tail_from..] {
+                    let ph = match e.phase {
+                        EventPhase::Begin => "B",
+                        EventPhase::End => "E",
+                        EventPhase::Instant => "i",
+                    };
+                    writeln!(
+                        f,
+                        "  +{:>10}us {ph} {:<11} arg={}",
+                        e.ts_us,
+                        e.kind.name(),
+                        e.arg
+                    )?;
+                }
+            }
+            f.flush()?;
+            files.push(path);
+        }
+        Ok(files)
+    }
+}
+
+/// All kinds, indexed by [`EventKind::idx`] (for the synthetic-close pass).
+const KIND_BY_IDX: [EventKind; NUM_KINDS] = [
+    EventKind::Superstep,
+    EventKind::Barrier,
+    EventKind::Stall,
+    EventKind::File,
+    EventKind::Transmit,
+    EventKind::Pool,
+    EventKind::Load,
+    EventKind::Recode,
+    EventKind::ServeBatch,
+];
+
+/// Fixed unit → Chrome `tid` mapping (one track per machine×unit).
+fn tid_of(unit: &str) -> usize {
+    match unit {
+        "U_c" => 0,
+        "U_s" => 1,
+        "U_r" => 2,
+        "load" => 3,
+        "recode" => 4,
+        "serve" => 5,
+        _ => 6,
+    }
+}
+
+/// One unit's lock-free event recorder. Created via [`Tracer::unit`]
+/// (or [`UnitTracer::disabled`]); owned by exactly one thread; call
+/// [`UnitTracer::finish`] after the unit body returns — including after a
+/// caught panic — so the flight recorder sees the final events.
+#[derive(Debug)]
+pub struct UnitTracer {
+    shared: Option<Arc<Tracer>>,
+    machine: usize,
+    unit: &'static str,
+    buf: TraceBuf,
+    epoch: Instant,
+}
+
+impl UnitTracer {
+    /// A recorder that records nothing (the `enabled == false` path).
+    pub fn disabled() -> Self {
+        Self {
+            shared: None,
+            machine: 0,
+            unit: "",
+            buf: TraceBuf::new(1),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Is this recorder live? (False for [`UnitTracer::disabled`].)
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    #[inline]
+    fn push(&mut self, phase: EventPhase, kind: EventKind, arg: u64) {
+        if self.shared.is_none() {
+            return;
+        }
+        let ts_us = self.epoch.elapsed().as_micros() as u64;
+        self.buf.push(TraceEvent {
+            seq: 0, // stamped by the ring
+            ts_us,
+            phase,
+            kind,
+            arg,
+        });
+    }
+
+    /// Open a span.
+    #[inline]
+    pub fn begin(&mut self, kind: EventKind, arg: u64) {
+        self.push(EventPhase::Begin, kind, arg);
+    }
+
+    /// Close the innermost open span of `kind`.
+    #[inline]
+    pub fn end(&mut self, kind: EventKind, arg: u64) {
+        self.push(EventPhase::End, kind, arg);
+    }
+
+    /// Record a point event.
+    #[inline]
+    pub fn instant(&mut self, kind: EventKind, arg: u64) {
+        self.push(EventPhase::Instant, kind, arg);
+    }
+
+    /// Deposit the retained events into the shared [`Tracer`]. Call after
+    /// the unit body returns (the sites wrap unit bodies in
+    /// `JobAbort::guard`, which catches panics, so `finish` runs even for
+    /// a dying unit). May be called repeatedly — each call deposits the
+    /// events since the last one.
+    pub fn finish(&mut self) {
+        let Some(shared) = &self.shared else { return };
+        if self.buf.is_empty() && self.buf.dropped() == 0 {
+            return;
+        }
+        let t = UnitTrace {
+            machine: self.machine,
+            unit: self.unit,
+            dropped: self.buf.dropped(),
+            events: self.buf.drain(),
+        };
+        shared.deposit(t);
+    }
+}
+
+/// Process-global bounded ring of structured diagnostic lines (see
+/// [`diag`]).
+static DIAG: Mutex<VecDeque<String>> = Mutex::new(VecDeque::new());
+
+/// Emit a structured diagnostic: mirrored to stderr as
+/// `[graphd::<scope>] <msg>` for humans, and retained (bounded, oldest
+/// dropped) for [`recent_diagnostics`] so tests and daemons can assert on
+/// engine diagnostics instead of scraping stderr.
+///
+/// This is the sanctioned print sink for `worker/`, `engine/`, `net/`,
+/// and `serve/` — the `print-hygiene` analyzer rule points here.
+pub fn diag(scope: &str, msg: &str) {
+    eprintln!("[graphd::{scope}] {msg}");
+    let mut q = DIAG.lock().unwrap_or_else(|p| p.into_inner());
+    if q.len() >= DIAG_CAP {
+        q.pop_front();
+    }
+    q.push_back(format!("[{scope}] {msg}"));
+}
+
+/// The most recent [`diag`] lines (oldest first, at most the ring bound).
+pub fn recent_diagnostics() -> Vec<String> {
+    let q = DIAG.lock().unwrap_or_else(|p| p.into_inner());
+    q.iter().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_sanitizes_unmatched_ends_and_open_spans() {
+        let tracer = Arc::new(Tracer::new(TraceConfig::on()));
+        let mut tr = tracer.unit(0, "U_c");
+        // An End with no Begin (opener "lost"), then a Begin never closed.
+        tr.end(EventKind::Superstep, 0);
+        tr.begin(EventKind::Barrier, 1);
+        tr.finish();
+        let p = std::env::temp_dir().join(format!("graphd_trace_sanitize_{}", std::process::id()));
+        tracer.export_chrome(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        std::fs::remove_file(&p).unwrap();
+        // The unmatched superstep End is gone; the barrier span gained a
+        // synthetic close — B and E counts balance.
+        let b = s.matches("\"ph\":\"B\"").count();
+        let e = s.matches("\"ph\":\"E\"").count();
+        assert_eq!((b, e), (1, 1), "{s}");
+        assert!(s.contains("\"synthetic\":1"), "{s}");
+        assert!(!s.contains("\"name\":\"superstep\",\"cat\":\"phase\",\"ph\":\"E\""), "{s}");
+    }
+
+    #[test]
+    fn disabled_tracer_hands_out_noop_recorders() {
+        let tracer = Arc::new(Tracer::new(TraceConfig::default()));
+        let mut tr = tracer.unit(3, "U_s");
+        assert!(!tr.enabled());
+        tr.begin(EventKind::Superstep, 0);
+        tr.finish();
+        assert!(tracer.tracks().is_empty());
+    }
+
+    #[test]
+    fn tracks_merge_multiple_deposits_in_seq_order() {
+        let tracer = Arc::new(Tracer::new(TraceConfig::on()));
+        let mut tr = tracer.unit(1, "U_r");
+        tr.push(EventPhase::Instant, EventKind::File, 10);
+        tr.finish();
+        tr.push(EventPhase::Instant, EventKind::File, 11);
+        tr.finish();
+        let tracks = tracer.tracks();
+        assert_eq!(tracks.len(), 1);
+        let seqs: Vec<u64> = tracks[0].events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1]);
+        let args: Vec<u64> = tracks[0].events.iter().map(|e| e.arg).collect();
+        assert_eq!(args, vec![10, 11]);
+    }
+
+    #[test]
+    fn flight_record_tails_and_names_units() {
+        let mut cfg = TraceConfig::on();
+        cfg.flight_events = 2;
+        let tracer = Arc::new(Tracer::new(cfg));
+        let mut tr = tracer.unit(2, "U_c");
+        for s in 0..5 {
+            tr.instant(EventKind::Superstep, s);
+        }
+        tr.finish();
+        let dir = std::env::temp_dir().join(format!("graphd_flightrec_{}", std::process::id()));
+        let files = tracer.flight_record(&dir, "U_c of machine 2 failed").unwrap();
+        assert_eq!(files.len(), 1);
+        let s = std::fs::read_to_string(&files[0]).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(s.contains("cause: U_c of machine 2 failed"), "{s}");
+        assert!(s.contains("-- U_c"), "{s}");
+        // Only the 2-event tail appears.
+        assert!(s.contains("arg=3") && s.contains("arg=4"), "{s}");
+        assert!(!s.contains("arg=0\n"), "{s}");
+    }
+
+    #[test]
+    fn diag_mirrors_into_bounded_ring() {
+        diag("test-scope", "hello ring");
+        let got = recent_diagnostics();
+        assert!(got.iter().any(|l| l == "[test-scope] hello ring"), "{got:?}");
+    }
+}

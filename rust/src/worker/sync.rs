@@ -230,7 +230,7 @@ impl JobAbort {
             Ok(v) => Ok(v),
             Err(e @ Error::JobFailed { .. }) => Err(e),
             Err(e) => {
-                eprintln!("[graphd] {unit} of machine {machine} failed: {e}");
+                crate::trace::diag("worker", &format!("{unit} of machine {machine} failed: {e}"));
                 let winner = self.trip(AbortCause {
                     machine,
                     unit,

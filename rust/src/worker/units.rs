@@ -51,6 +51,7 @@ use crate::msg::{encode_msg, msg_rec_size, rec_payload, rec_target, BufPool, Cod
 use crate::net::{NetReceiver, NetSender, Payload};
 use crate::runtime::KernelSet;
 use crate::stream::{merge, SplittableStream, StreamReader, StreamWriter};
+use crate::trace::{EventKind, UnitTracer};
 use crate::util::bitset::BitSet;
 use crate::util::diskio::read_file_into;
 use crate::util::timer::Stopwatch;
@@ -61,6 +62,7 @@ use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 /// Messages of one finished superstep, handed from U_r to U_c.
 pub enum Incoming<M> {
@@ -244,6 +246,10 @@ pub struct JobGlobal<P: VertexProgram> {
     /// "sibling died" scenario from deadlock to a typed
     /// [`Error::JobFailed`].
     pub abort: Arc<JobAbort>,
+    /// The job-wide flight recorder / Chrome-trace collector.  Disabled
+    /// tracers hand out no-op [`UnitTracer`]s, so the hot path pays one
+    /// branch per event when tracing is off.
+    pub tracer: Arc<crate::trace::Tracer>,
 }
 
 /// Per-machine output returned by [`run_machine`].
@@ -364,6 +370,7 @@ pub fn run_machine_resumed<P: VertexProgram>(
             let job_dir = job_dir.clone();
             let disk = disk.clone();
             let beacon = us_step.clone();
+            let mut tr = global.tracer.unit(me, "U_s");
             scope.spawn(move || {
                 let _dg = crate::util::diskio::register(disk);
                 // guard(): catches panics, trips the job abort on any
@@ -371,9 +378,13 @@ pub fn run_machine_resumed<P: VertexProgram>(
                 // propagated JobFailed pass through untouched.  U_c may be
                 // blocked on this machine's sync and every peer at a
                 // barrier or channel — all of them unblock typed.
-                global.abort.guard(me, "U_s", &beacon, || {
-                    sender_unit(global, me, oms, msync, sender, job_dir, sink, &beacon)
-                })
+                let r = global.abort.guard(me, "U_s", &beacon, || {
+                    sender_unit(global, me, oms, msync, sender, job_dir, sink, &beacon, &mut tr)
+                });
+                // Deposit the ring *after* the guard so the flight recorder
+                // sees the events leading up to a panic, not an empty ring.
+                tr.finish();
+                r
             })
         };
         let ur_handle = {
@@ -386,30 +397,36 @@ pub fn run_machine_resumed<P: VertexProgram>(
             let shard = local_shard.clone();
             let spill = local_spill.clone();
             let beacon = ur_step.clone();
+            let mut tr = global.tracer.unit(me, "U_r");
             scope.spawn(move || {
                 let _dg = crate::util::diskio::register(disk);
-                global.abort.guard(me, "U_r", &beacon, || {
+                let r = global.abort.guard(me, "U_r", &beacon, || {
                     receiver_unit(
                         global, me, local, receiver, msync, incoming, shard, spill, job_dir,
-                        sink, &beacon,
+                        sink, &beacon, &mut tr,
                     )
-                })
+                });
+                tr.finish();
+                r
             })
         };
 
         let uc_out = {
             let _dg = crate::util::diskio::register(disk.clone());
+            let mut tr = global.tracer.unit(me, "U_c");
             // Same guard inline: a panic in `program.compute` (or any U_c
             // error) trips the abort before we block joining the siblings
             // below — without it the scope join itself would deadlock on
             // the blocked U_s/U_r threads.
-            global.abort.guard(me, "U_c", &uc_step, || {
+            let r = global.abort.guard(me, "U_c", &uc_step, || {
                 compute_unit(
                     global, store, init_values, init_halted, init_incoming, oms,
                     msync.clone(), incoming, local_shard, local_spill, sender, &sink,
-                    &uc_step,
+                    &uc_step, &mut tr,
                 )
-            })
+            });
+            tr.finish();
+            r
         };
 
         // Join both siblings, then report U_c's error ahead of the
@@ -456,6 +473,7 @@ fn sender_unit<P: VertexProgram>(
     job_dir: PathBuf,
     sink: MetricsSink,
     beacon: &AtomicU64,
+    tr: &mut UnitTracer,
 ) -> Result<()> {
     let n = global.n;
     let rec_size = msg_rec_size::<P::Msg>();
@@ -486,8 +504,16 @@ fn sender_unit<P: VertexProgram>(
     loop {
         // Beacons carry *absolute* supersteps so resumed jobs attribute
         // failures in the same space as the checkpoints they resume from.
-        beacon.store(global.step_base + step, Ordering::Relaxed);
-        msync.wait_send_allowed(step)?;
+        let abs = global.step_base + step;
+        beacon.store(abs, Ordering::Relaxed);
+        tr.begin(EventKind::Superstep, abs);
+        tr.begin(EventKind::Stall, abs);
+        let t0 = Instant::now();
+        let allowed = msync.wait_send_allowed(step);
+        let waited = t0.elapsed().as_secs_f64();
+        tr.end(EventKind::Stall, abs);
+        sink.with_step(step, |m| m.stall_wait_secs += waited);
+        allowed?;
         let mut sw = Stopwatch::new();
         let mut marks: Option<Vec<u64>> = None;
         let mut end_sent = vec![false; n];
@@ -533,7 +559,9 @@ fn sender_unit<P: VertexProgram>(
                         )?
                     };
                     let (nbytes, nmsgs) = (batch.len() as u64, (batch.len() / rec_size) as u64);
+                    tr.begin(EventKind::Transmit, nbytes);
                     sender.send(j, step, Payload::Data(batch))?;
+                    tr.end(EventKind::Transmit, nbytes);
                     sw.stop();
                     sink.with_step(step, |m| {
                         if local {
@@ -560,7 +588,9 @@ fn sender_unit<P: VertexProgram>(
                     let mut data = pool.take();
                     read_file_into(&path, &mut data)?;
                     let (nbytes, nmsgs) = (data.len() as u64, (data.len() / rec_size) as u64);
+                    tr.begin(EventKind::Transmit, nbytes);
                     sender.send(j, step, Payload::Data(data))?;
+                    tr.end(EventKind::Transmit, nbytes);
                     sw.stop();
                     sink.with_step(step, |m| {
                         if local {
@@ -594,7 +624,9 @@ fn sender_unit<P: VertexProgram>(
             }
         }
         sink.with_step(step, |m| m.m_send_secs += sw.secs());
-        if !msync.wait_decided(step)? {
+        let cont = msync.wait_decided(step)?;
+        tr.end(EventKind::Superstep, abs);
+        if !cont {
             return Ok(());
         }
         step += 1;
@@ -763,6 +795,7 @@ fn receiver_unit<P: VertexProgram>(
     job_dir: PathBuf,
     sink: MetricsSink,
     beacon: &AtomicU64,
+    tr: &mut UnitTracer,
 ) -> Result<()> {
     let n = global.n;
     let rec_size = msg_rec_size::<P::Msg>();
@@ -775,7 +808,9 @@ fn receiver_unit<P: VertexProgram>(
     let mut step: u64 = 0;
     loop {
         // Absolute superstep, like the U_s/U_c beacons.
-        beacon.store(global.step_base + step, Ordering::Relaxed);
+        let abs = global.step_base + step;
+        beacon.store(abs, Ordering::Relaxed);
+        tr.begin(EventKind::Superstep, abs);
         let mut ends = 0usize;
         let mut msgs_recv = 0u64;
         let mut spills: Vec<PathBuf> = Vec::new();
@@ -913,10 +948,18 @@ fn receiver_unit<P: VertexProgram>(
 
         // Synchronize with the receiving units of all machines, then allow
         // next-superstep transmission (§4).
-        global.ur_rv.exchange(me, (), |_| ())?;
+        tr.begin(EventKind::Barrier, abs);
+        let t0 = Instant::now();
+        let rv = global.ur_rv.exchange(me, (), |_| ());
+        let waited = t0.elapsed().as_secs_f64();
+        tr.end(EventKind::Barrier, abs);
+        sink.with_step(step, |m| m.barrier_wait_secs += waited);
+        rv?;
         msync.set_send_allowed(step + 1);
 
-        if !msync.wait_decided(step)? {
+        let cont = msync.wait_decided(step)?;
+        tr.end(EventKind::Superstep, abs);
+        if !cont {
             return Ok(());
         }
         step += 1;
@@ -1217,6 +1260,7 @@ fn compute_unit<P: VertexProgram>(
     mut stall_sender: NetSender,
     sink: &MetricsSink,
     beacon: &AtomicU64,
+    tr: &mut UnitTracer,
 ) -> UcResult<P> {
     let n = global.n;
     let me = store.machine;
@@ -1276,7 +1320,9 @@ fn compute_unit<P: VertexProgram>(
     let mut step: u64 = 0;
     let supersteps;
     loop {
-        beacon.store(global.step_base + step, Ordering::Relaxed);
+        let abs_step = global.step_base + step;
+        beacon.store(abs_step, Ordering::Relaxed);
+        tr.begin(EventKind::Superstep, abs_step);
         let inc: Option<Incoming<P::Msg>> = if step == 0 {
             // fresh job: no messages; resumed job: the checkpointed IMS
             init_incoming.take()
@@ -1284,10 +1330,15 @@ fn compute_unit<P: VertexProgram>(
             // (incoming.take can only block if the deposit is missing, and
             // wait_recv_done returning Ok guarantees it was made — so the
             // StepQueue itself needs no poisoning.)
-            msync.wait_recv_done(step - 1)?;
+            tr.begin(EventKind::Stall, abs_step);
+            let t0 = Instant::now();
+            let recv = msync.wait_recv_done(step - 1);
+            let waited = t0.elapsed().as_secs_f64();
+            tr.end(EventKind::Stall, abs_step);
+            sink.with_step(step, |m| m.stall_wait_secs += waited);
+            recv?;
             Some(incoming.take(step - 1))
         };
-        let abs_step = global.step_base + step;
 
         let mut sw = Stopwatch::new();
         sw.start();
@@ -1402,6 +1453,10 @@ fn compute_unit<P: VertexProgram>(
         for d in 0..n {
             marks.push(oms[d].close_current_file()?);
         }
+        // One file/pool pulse per superstep: the max OMS watermark and the
+        // pool's cumulative allocation misses (checkout pressure).
+        tr.instant(EventKind::File, marks.iter().copied().max().unwrap_or(0));
+        tr.instant(EventKind::Pool, global.pool.stats().misses);
         sw.stop();
         let active_after = (local - halted.count_ones()) as u64;
         sink.with_step(step, |m| {
@@ -1417,6 +1472,8 @@ fn compute_unit<P: VertexProgram>(
         let max_steps = cfg.max_supersteps;
         let abs_step2 = abs_step;
         let program2 = global.program.clone();
+        tr.begin(EventKind::Barrier, abs_step);
+        let rv_t0 = Instant::now();
         let decision = global.uc_rv.exchange(
             me,
             UcReport {
@@ -1442,7 +1499,11 @@ fn compute_unit<P: VertexProgram>(
                     agg: Arc::new(agg),
                 }
             },
-        )?;
+        );
+        let rv_waited = rv_t0.elapsed().as_secs_f64();
+        tr.end(EventKind::Barrier, abs_step);
+        sink.with_step(step, |m| m.barrier_wait_secs += rv_waited);
+        let decision = decision?;
         global_agg = decision.agg.clone();
         msync.set_decided(step, decision.continues);
 
@@ -1450,7 +1511,13 @@ fn compute_unit<P: VertexProgram>(
         // values + halted + the incoming messages of step s+1.
         if let Some(ck) = &global.checkpoint {
             if decision.continues && ck.every > 0 && (abs_step + 1) % ck.every == 0 {
-                msync.wait_recv_done(step)?;
+                tr.begin(EventKind::Stall, abs_step);
+                let t0 = Instant::now();
+                let recv = msync.wait_recv_done(step);
+                let waited = t0.elapsed().as_secs_f64();
+                tr.end(EventKind::Stall, abs_step);
+                sink.with_step(step, |m| m.stall_wait_secs += waited);
+                recv?;
                 incoming.peek_with(step, |inc| {
                     crate::ft::write_machine_checkpoint(
                         &ck.dir, abs_step, me, &vals, &halted, inc,
@@ -1461,13 +1528,20 @@ fn compute_unit<P: VertexProgram>(
                 // from a marked checkpoint can then never read a partial
                 // set.  Poisoned = a sibling died before its file landed;
                 // this checkpoint must then never be marked DONE.
-                global.ckpt_rv.exchange(me, (), |_| ())?;
+                tr.begin(EventKind::Barrier, abs_step);
+                let t0 = Instant::now();
+                let rv = global.ckpt_rv.exchange(me, (), |_| ());
+                let waited = t0.elapsed().as_secs_f64();
+                tr.end(EventKind::Barrier, abs_step);
+                sink.with_step(step, |m| m.barrier_wait_secs += waited);
+                rv?;
                 if me == 0 {
                     crate::ft::mark_done(&ck.dir, abs_step)?;
                 }
             }
         }
 
+        tr.end(EventKind::Superstep, abs_step);
         if !decision.continues {
             supersteps = step + 1;
             break;

@@ -66,6 +66,21 @@ fn panic_hygiene_fires_outside_tests_only() {
 }
 
 #[test]
+fn print_hygiene_fires_at_expected_lines() {
+    assert_eq!(
+        findings("worker/prints.rs"),
+        vec![(4, "print-hygiene"), (8, "print-hygiene")]
+    );
+}
+
+#[test]
+fn print_hygiene_is_scoped_to_engine_dirs() {
+    // The same prints outside worker/engine/net/serve are not findings.
+    let rep = analyze_source("util/prints.rs", &fixture("worker/prints.rs"));
+    assert!(rep.diagnostics.is_empty(), "{:?}", rep.diagnostics);
+}
+
+#[test]
 fn pragmas_suppress_and_malformed_pragmas_report() {
     let rep = analyze_source("worker/pragmas.rs", &fixture("worker/pragmas.rs"));
     assert_eq!(rep.suppressed, 2, "{:?}", rep.diagnostics);
@@ -93,7 +108,7 @@ fn fixture_corpus_is_dirty_across_all_rules() {
     let rep = analyze_tree(Path::new("tests/analyze_fixtures")).unwrap();
     // The corpus is exactly the violations asserted file-by-file above —
     // `make analyze` on it must exit nonzero.
-    assert_eq!(rep.diagnostics.len(), 12, "{:#?}", rep.diagnostics);
+    assert_eq!(rep.diagnostics.len(), 14, "{:#?}", rep.diagnostics);
     assert_eq!(rep.suppressed, 2);
     let mut ids: Vec<&str> = rep.diagnostics.iter().map(|d| d.rule.id()).collect();
     ids.sort_unstable();
@@ -106,6 +121,7 @@ fn fixture_corpus_is_dirty_across_all_rules() {
             "panic-hygiene",
             "poison-safety",
             "pool-leak",
+            "print-hygiene",
             "sleep-slicing",
         ]
     );

@@ -1,0 +1,16 @@
+// print-hygiene fixture: raw prints in an engine module fire; tests don't.
+
+fn loud_failure(unit: &str, machine: usize) {
+    eprintln!("[graphd] {unit} of machine {machine} failed");
+}
+
+fn loud_progress(step: u64) {
+    println!("superstep {step} done");
+}
+
+#[cfg(test)]
+mod tests {
+    fn prints_are_fine_in_tests() {
+        println!("assert output freely here");
+    }
+}

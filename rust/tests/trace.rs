@@ -1,0 +1,256 @@
+//! End-to-end tests for the flight-recorder tracing spine: ring-buffer
+//! semantics, the Chrome-trace export of a real multi-machine job (valid
+//! JSON, balanced span pairs, one track per machine×unit), the crash-time
+//! flight-recorder dump of an injected failure, and the serve loop's
+//! live [`ServeStats`] snapshots.
+
+use graphd::api::{Context, Edge, SumF32, VertexProgram};
+use graphd::graph::generator;
+use graphd::serve::ServeConfig;
+use graphd::trace::{self, EventKind, EventPhase, TraceBuf, TraceConfig, TraceEvent};
+use graphd::{Error, GraphD, GraphSource, Query};
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn wd(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "graphd_trace_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn ring_keeps_newest_suffix_in_order() {
+    let mut b = TraceBuf::new(4);
+    for i in 0..10u64 {
+        b.push(TraceEvent {
+            seq: 0, // stamped by the ring
+            ts_us: i,
+            phase: EventPhase::Instant,
+            kind: EventKind::File,
+            arg: i,
+        });
+    }
+    assert_eq!(b.len(), 4);
+    assert_eq!(b.dropped(), 6);
+    let evs = b.drain();
+    let args: Vec<u64> = evs.iter().map(|e| e.arg).collect();
+    assert_eq!(args, vec![6, 7, 8, 9], "retained = newest suffix, oldest first");
+    let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, vec![6, 7, 8, 9], "seq numbers count all pushes, not slots");
+    assert!(b.is_empty(), "drain resets the ring");
+}
+
+/// `"key":<int>` out of one exported trace-event line.
+fn field_u64(line: &str, key: &str) -> Option<u64> {
+    let tag = format!("\"{key}\":");
+    let at = line.find(&tag)? + tag.len();
+    let digits: String = line[at..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+fn ph_of(line: &str) -> Option<char> {
+    let at = line.find("\"ph\":\"")? + 6;
+    line[at..].chars().next()
+}
+
+#[test]
+fn traced_job_exports_balanced_chrome_trace() {
+    let s = GraphD::builder()
+        .machines(2)
+        .workdir(wd("export"))
+        .max_supersteps(4)
+        .build()
+        .unwrap();
+    let g = generator::uniform(120, 700, true, 7);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let path = s.workdir().join("trace_test.json");
+    let res = graph
+        .job(Arc::new(graphd::algos::PageRank::new(3)))
+        .trace(TraceConfig::to(&path))
+        .run()
+        .unwrap();
+
+    // The new StepMetrics wait counters are live: two machines crossing
+    // real rendezvous barriers accumulate nonzero wait.
+    assert!(
+        res.metrics.barrier_wait_secs() > 0.0,
+        "2-machine run must accumulate barrier wait"
+    );
+    assert!(res.metrics.stall_wait_secs() >= 0.0);
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.starts_with("{\"traceEvents\":["), "chrome JSON object format");
+    assert!(text.trim_end().ends_with("],\"displayTimeUnit\":\"ms\"}"));
+
+    // Replay every duration event: B/E must balance per (pid, tid) track
+    // and never go negative — the property Perfetto needs to render.
+    let mut depth: HashMap<(u64, u64), i64> = HashMap::new();
+    let mut tracks: HashSet<(u64, u64)> = HashSet::new();
+    let mut superstep_spans = 0u64;
+    for line in text.lines().filter(|l| l.contains("\"ph\":")) {
+        let (Some(pid), Some(tid)) = (field_u64(line, "pid"), field_u64(line, "tid")) else {
+            panic!("event without pid/tid: {line}");
+        };
+        tracks.insert((pid, tid));
+        match ph_of(line) {
+            Some('B') => {
+                *depth.entry((pid, tid)).or_default() += 1;
+                if line.contains("\"name\":\"superstep\"") {
+                    superstep_spans += 1;
+                }
+            }
+            Some('E') => {
+                let d = depth.entry((pid, tid)).or_default();
+                *d -= 1;
+                assert!(*d >= 0, "E before B on track ({pid},{tid}): {line}");
+            }
+            _ => {} // "i" instants and "M" metadata carry no depth
+        }
+    }
+    assert!(
+        depth.values().all(|&d| d == 0),
+        "unbalanced span tracks: {depth:?}"
+    );
+    // Every machine contributes all three unit tracks (U_c=0, U_s=1,
+    // U_r=2 per the fixed tid mapping).
+    for pid in 0..2u64 {
+        for tid in 0..3u64 {
+            assert!(tracks.contains(&(pid, tid)), "missing track ({pid},{tid})");
+        }
+    }
+    assert!(superstep_spans >= 2 * 3, "a span per machine per superstep");
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+/// PageRank-shaped program that panics computing `victim` at `at_step`
+/// (the same injection hook as `tests/failure.rs`).
+struct PanicAt {
+    victim: u32,
+    at_step: u64,
+}
+
+impl VertexProgram for PanicAt {
+    type Value = f32;
+    type Msg = f32;
+    type Agg = ();
+    type Comb = SumF32;
+
+    fn init_value(&self, _id: u32, _deg: u32, nv: u64) -> f32 {
+        1.0 / nv as f32
+    }
+
+    fn compute(
+        &self,
+        ctx: &mut Context<'_, f32, ()>,
+        id: u32,
+        value: &mut f32,
+        edges: &[Edge],
+        msgs: &[f32],
+    ) {
+        if ctx.superstep == self.at_step && id == self.victim {
+            panic!(
+                "injected unit failure: vertex {id} at superstep {}",
+                ctx.superstep
+            );
+        }
+        if ctx.superstep > 0 {
+            *value = 0.15 / ctx.num_vertices as f32 + 0.85 * msgs.iter().sum::<f32>();
+        }
+        if !edges.is_empty() {
+            let share = *value / edges.len() as f32;
+            for e in edges {
+                ctx.send(e.nbr, share);
+            }
+        }
+    }
+}
+
+#[test]
+fn failed_job_dumps_flight_recorder() {
+    let s = GraphD::builder()
+        .machines(2)
+        .workdir(wd("flightrec"))
+        .max_supersteps(6)
+        .build()
+        .unwrap();
+    let g = generator::uniform(100, 600, true, 5);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let err = graph
+        .job(Arc::new(PanicAt {
+            victim: 9,
+            at_step: 1,
+        }))
+        .trace(TraceConfig::on())
+        .run()
+        .unwrap_err();
+    let headline = err.to_string();
+    assert!(matches!(err, Error::JobFailed { .. }), "{err}");
+
+    // One dump per machine in the session workdir, each headed by the
+    // first AbortCause (failing unit + machine + superstep + cause).
+    for m in 0..2 {
+        let p = s.workdir().join(format!("flightrec_{m}.log"));
+        let dump = std::fs::read_to_string(&p)
+            .unwrap_or_else(|e| panic!("missing {}: {e}", p.display()));
+        assert!(dump.contains("== graphd flight recorder — machine"), "{dump}");
+        assert!(dump.contains(&format!("cause: {headline}")), "{dump}");
+        assert!(dump.contains("injected unit failure"), "{dump}");
+        assert!(dump.contains("-- U_c"), "dump must carry the U_c track:\n{dump}");
+        assert!(dump.contains("superstep"), "{dump}");
+    }
+    // The success-path export did not run.
+    assert!(!s.workdir().join("trace.json").exists());
+    // The structured diag ring retained the unit-failure line (the same
+    // line `worker/sync.rs` used to eprintln raw).
+    let diags = trace::recent_diagnostics();
+    assert!(
+        diags.iter().any(|l| l.contains("failed")),
+        "diag ring missing the failure line: {diags:?}"
+    );
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+#[test]
+fn serve_emits_live_stats_per_batch() {
+    let s = GraphD::builder()
+        .machines(2)
+        .workdir(wd("serve_stats"))
+        .max_supersteps(8)
+        .config("trace", "true")
+        .build()
+        .unwrap();
+    let g = generator::chain(24).with_unit_weights();
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let mut srv = graph.serve(ServeConfig::default().lanes(2)).unwrap();
+    for (source, target) in [(0u32, 3u32), (1, 4), (2, 5)] {
+        srv.submit(Query::Dist { source, target });
+    }
+    assert_eq!(srv.stats().queued, 3);
+    assert_eq!(srv.stats().in_flight, 0);
+
+    let mut snaps = Vec::new();
+    let rs = srv.run_pending_with(|st| snaps.push(st.clone())).unwrap();
+    assert_eq!(rs.len(), 3);
+    assert_eq!(snaps.len(), 2, "3 queries over 2 lanes = 2 batches");
+    assert_eq!(snaps[0].queued, 1, "one query still queued after batch 0");
+    let last = snaps.last().unwrap();
+    assert_eq!(last.queued, 0);
+    assert_eq!(last.in_flight, 0, "in_flight is 0 between batches");
+    assert_eq!(last.batches, 2);
+    assert_eq!(last.failed_batches, 0);
+    assert_eq!(last.queries, 3);
+    assert!(last.qps > 0.0);
+    assert!(last.p99_secs >= last.p50_secs);
+    assert_eq!(last, &srv.stats(), "emitter sees the same snapshot stats() yields");
+
+    // The traced session rewrote the serve track at end of drain.
+    let serve_trace = s.workdir().join("trace_serve.json");
+    let text = std::fs::read_to_string(&serve_trace).unwrap();
+    assert!(text.contains("\"name\":\"serve-batch\""), "{text}");
+    let _ = std::fs::remove_dir_all(s.workdir());
+}

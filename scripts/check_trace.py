@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Validate a graphd Chrome-trace export (`make trace-smoke`).
+
+Checks the file is valid JSON in Chrome trace-event "JSON object format"
+and that every duration span balances: on each (pid, tid) track the B/E
+events nest properly (no E before its B, nothing left open at the end).
+That is exactly the property Perfetto / chrome://tracing needs to render
+the track, so passing here means the export actually loads.
+
+Usage: check_trace.py TRACE.json [TRACE2.json ...]
+"""
+
+import collections
+import json
+import sys
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    evs = doc["traceEvents"]
+    if not evs:
+        print(f"{path}: no trace events", file=sys.stderr)
+        return 1
+    depth: collections.Counter = collections.Counter()
+    last_ts: dict = {}
+    for e in evs:
+        key = (e["pid"], e["tid"])
+        if e["ph"] == "B":
+            depth[key] += 1
+        elif e["ph"] == "E":
+            depth[key] -= 1
+            if depth[key] < 0:
+                print(f"{path}: E before B on track {key}", file=sys.stderr)
+                return 1
+        if "ts" in e:
+            # Monotone timestamps per track (the exporter emits in
+            # ring-buffer order, which is per-thread chronological).
+            if e["ts"] < last_ts.get(key, 0):
+                print(f"{path}: timestamps go backwards on {key}", file=sys.stderr)
+                return 1
+            last_ts[key] = e["ts"]
+    open_tracks = {k: v for k, v in depth.items() if v}
+    if open_tracks:
+        print(f"{path}: unbalanced spans {open_tracks}", file=sys.stderr)
+        return 1
+    print(f"{path}: {len(evs)} events, {len(depth)} tracks balanced")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 2:
+        sys.exit(__doc__)
+    sys.exit(max(check(p) for p in sys.argv[1:]))
