@@ -11,6 +11,10 @@
 #   make ci          everything CI gates on
 #   make trace-smoke end-to-end Chrome-trace export: tiny traced run, then
 #                    validate the JSON parses and every span track balances
+#   make recover-smoke end-to-end self-healing: inject a U_s I/O fault into
+#                    a checkpointed CLI run, assert it auto-resumes (bench
+#                    JSON shows recoveries>=1) and the trace shows the
+#                    fault / recovery / fast-replay spans
 #   make bench-smoke quick perf trajectory (non-gating floors)
 #   make clean       cargo clean + stale bench JSON tmp files
 
@@ -18,12 +22,14 @@ CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 BENCH_JSON ?= BENCH_PR4.json
 TRACE_JSON ?= /tmp/graphd_trace_smoke.json
+RECOVER_TRACE ?= /tmp/graphd_recover_smoke.json
+RECOVER_JSON ?= /tmp/graphd_recover_smoke_bench.json
 # Hang-proofing: the engine is a barrier machine; a failure-propagation
 # regression deadlocks rather than fails.  Bound the test step like CI does
 # (no-op where coreutils `timeout` is unavailable).
 TIMEOUT := $(shell command -v timeout >/dev/null 2>&1 && echo "timeout 600")
 
-.PHONY: build test analyze fmt-check clippy doc check-xla ci trace-smoke bench-smoke artifacts clean
+.PHONY: build test analyze fmt-check clippy doc check-xla ci trace-smoke recover-smoke bench-smoke artifacts clean
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -53,7 +59,7 @@ doc:
 check-xla:
 	$(CARGO) check --all-targets --features xla --manifest-path $(MANIFEST)
 
-ci: build test analyze fmt-check clippy doc check-xla trace-smoke
+ci: build test analyze fmt-check clippy doc check-xla trace-smoke recover-smoke
 
 # End-to-end flight-recorder smoke: run a tiny traced job through the CLI,
 # then check the Chrome-trace export is valid JSON whose B/E span events
@@ -64,6 +70,23 @@ trace-smoke: build
 		--trace $(TRACE_JSON)
 	python3 scripts/check_trace.py $(TRACE_JSON)
 	rm -f $(TRACE_JSON)
+
+# End-to-end self-healing smoke: a checkpointed 2-machine PageRank with a
+# deterministic U_s I/O fault injected at machine 1, superstep 3.  The
+# session's retry loop must auto-resume from the durable checkpoint and
+# (keep_oms_for_recovery) take the fast message-log replay path.  Asserted
+# two ways: the bench JSON records recoveries>=1 and a full superstep
+# count, and the Chrome trace contains fault/recovery/replay spans.
+recover-smoke: build
+	rm -f $(RECOVER_JSON)
+	GRAPHD_BENCH_JSON=$(RECOVER_JSON) $(TIMEOUT) ./rust/target/release/graphd run \
+		--algo pagerank --dataset btc-s --profile test --machines 2 \
+		--scale 0.05 --steps 6 --basic --trace $(RECOVER_TRACE) \
+		-c checkpoint_every=2 -c retry=2 -c keep_oms_for_recovery=true \
+		-c fault=us_io@m1s3
+	python3 scripts/check_trace.py --require fault,recovery,replay $(RECOVER_TRACE)
+	python3 scripts/check_recover.py $(RECOVER_JSON) 6
+	rm -f $(RECOVER_TRACE) $(RECOVER_JSON)
 
 # Quick perf trajectory: spine + serve throughput in smoke mode, numbers
 # emitted to $(BENCH_JSON) (spine writes the file with its "spine" and

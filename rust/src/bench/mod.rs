@@ -207,6 +207,49 @@ pub fn run_graphd_cfg(
     Ok(out)
 }
 
+/// IO-Basic-only variant of [`run_graphd_cfg`]: load + one Basic compute,
+/// no recoding and no Recoded re-run.  Used by `graphd run --basic` —
+/// notably the recovery smoke run, where the back-to-back Recoded job
+/// would overwrite the faulted Basic session's trace export.  The recoded
+/// fields of the returned [`GraphDRuns`] mirror the basic run (timings 0).
+pub fn run_graphd_basic_cfg(
+    tag: &str,
+    g: &Graph,
+    algo: Algo,
+    profile: &ClusterProfile,
+    use_xla: bool,
+    overrides: &[(String, String)],
+) -> Result<GraphDRuns> {
+    let wd = workdir(tag);
+    let _ = std::fs::remove_dir_all(&wd);
+    let mut b = GraphD::builder()
+        .profile(profile.clone())
+        .workdir(&wd)
+        .use_xla(use_xla);
+    if let Algo::PageRank { supersteps } = algo {
+        b = b.max_supersteps(supersteps);
+    }
+    for (k, v) in overrides {
+        b = b.config(k, v);
+    }
+    let session = b.build()?;
+    let graph = session.load(GraphSource::InMemorySparse(g, 4242))?;
+    let basic_load = graph.load_secs;
+    let (basic_compute, basic_out) = run_algo(&graph, Mode::Basic, algo)?;
+    let out = GraphDRuns {
+        basic_load,
+        basic_compute,
+        basic_metrics: basic_out.1.clone(),
+        recoding_compute: 0.0,
+        recoded_load: 0.0,
+        recoded_compute: 0.0,
+        recoded_metrics: basic_out.1,
+        values: basic_out.0,
+    };
+    let _ = std::fs::remove_dir_all(&wd);
+    Ok(out)
+}
+
 type AlgoOut = (AlgoValues, JobMetrics);
 
 fn run_algo(graph: &LoadedGraph<'_>, mode: Mode, algo: Algo) -> Result<(f64, AlgoOut)> {

@@ -8,7 +8,9 @@
 //! (reproducing the "Insufficient Main Memories / Disk Space" entries).
 
 use crate::error::{Error, Result};
+use crate::worker::fault::FaultPlan;
 use std::path::PathBuf;
+use std::time::Duration;
 
 /// Simulated cluster profile.
 #[derive(Clone, Debug)]
@@ -122,6 +124,56 @@ impl std::fmt::Display for Mode {
     }
 }
 
+/// Auto-resume policy for `JobBuilder::run` (§3.4): how many times a
+/// *retryable* failure (I/O error, transient network fault, first panic)
+/// may be retried from the last durable checkpoint, and the base of the
+/// exponential backoff between attempts (`backoff * 2^attempt`).
+///
+/// The default is **zero retries** — failures surface immediately as
+/// typed `Error::JobFailed`, exactly as before the recovery layer existed;
+/// auto-resume is opt-in (`-c retry=N[:backoff_ms]`, `JobBuilder::retry`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Maximum retry attempts after the initial run (0 = never retry).
+    pub max_retries: u32,
+    /// Base backoff before the first retry; doubles per attempt.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 0,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// `max_retries` retries with the default backoff.
+    pub fn retries(max_retries: u32) -> Self {
+        Self {
+            max_retries,
+            ..Self::default()
+        }
+    }
+
+    /// Parse the CLI form `N` or `N:BACKOFF_MS` (e.g. `-c retry=2:10`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let bad = || Error::Config(format!("bad value '{s}' for 'retry' (want N or N:BACKOFF_MS)"));
+        let (n, ms) = match s.split_once(':') {
+            Some((n, ms)) => (n, Some(ms)),
+            None => (s, None),
+        };
+        let max_retries = n.parse().map_err(|_| bad())?;
+        let backoff = match ms {
+            Some(ms) => Duration::from_millis(ms.parse().map_err(|_| bad())?),
+            None => Self::default().backoff,
+        };
+        Ok(Self { max_retries, backoff })
+    }
+}
+
 /// Per-job tunables (paper defaults: b = 64 KB, ℬ = 8 MB, k = 1000).
 #[derive(Clone, Debug)]
 pub struct JobConfig {
@@ -141,9 +193,20 @@ pub struct JobConfig {
     /// (recoded mode only); `false` falls back to scalar Rust.
     pub use_xla: bool,
     /// Keep OMS files until the next checkpoint (fault tolerance, §3.4).
+    /// Besides retaining the raw OMS/`lsp_*` logs, this makes U_r keep a
+    /// manifest of its merged `si_*` incoming files so an auto-resumed
+    /// attempt can *replay* messages from the logs instead of recomputing
+    /// the sending supersteps (fast recovery).  CLI:
+    /// `-c keep_oms_for_recovery=true`.
     pub keep_oms_for_recovery: bool,
     /// Checkpoint every k supersteps (0 = no checkpointing).
     pub checkpoint_every: u64,
+    /// Auto-resume policy (see [`RetryPolicy`]; default: no retries).
+    pub retry: RetryPolicy,
+    /// Deterministic fault injection for recovery testing (`None` = no
+    /// faults).  CLI: `-c fault=us_io@m1s3` — see
+    /// [`crate::worker::fault::FaultPlan`].
+    pub fault: Option<FaultPlan>,
     /// If set, sending stalls computation when the in-memory buffer fills
     /// instead of spilling to OMSs (the "no-OMS" design the paper argues
     /// against; used by `ablation_oms`).
@@ -183,6 +246,8 @@ impl Default for JobConfig {
             use_xla: false,
             keep_oms_for_recovery: false,
             checkpoint_every: 0,
+            retry: RetryPolicy::default(),
+            fault: None,
             disable_oms: false,
             local_fastpath: true,
             artifacts_dir: None,
@@ -220,6 +285,11 @@ impl JobConfig {
             "checkpoint_every" => {
                 self.checkpoint_every = val.parse().map_err(|_| bad(key, val))?
             }
+            "keep_oms_for_recovery" => {
+                self.keep_oms_for_recovery = val.parse().map_err(|_| bad(key, val))?
+            }
+            "retry" => self.retry = RetryPolicy::parse(val)?,
+            "fault" => self.fault = Some(FaultPlan::parse(val)?),
             "trace" => self.trace.enabled = val.parse().map_err(|_| bad(key, val))?,
             "trace_path" => {
                 // A path implies intent to trace.
@@ -266,6 +336,29 @@ mod tests {
         assert!(!c.local_fastpath);
         assert!(c.apply("mode", "weird").is_err());
         assert!(c.apply("nope", "1").is_err());
+    }
+
+    #[test]
+    fn job_config_recovery_keys() {
+        let mut c = JobConfig::default();
+        assert_eq!(c.retry, RetryPolicy::default());
+        assert_eq!(c.retry.max_retries, 0, "auto-resume is opt-in");
+        assert!(c.fault.is_none());
+
+        c.apply("retry", "3").unwrap();
+        assert_eq!(c.retry.max_retries, 3);
+        assert_eq!(c.retry.backoff, Duration::from_millis(50));
+        c.apply("retry", "2:10").unwrap();
+        assert_eq!(c.retry, RetryPolicy { max_retries: 2, backoff: Duration::from_millis(10) });
+        assert!(c.apply("retry", "x").is_err());
+        assert!(c.apply("retry", "2:x").is_err());
+
+        c.apply("keep_oms_for_recovery", "true").unwrap();
+        assert!(c.keep_oms_for_recovery);
+
+        c.apply("fault", "us_io@m1s3;net_send@m0s2").unwrap();
+        assert_eq!(c.fault.as_ref().unwrap().specs().len(), 2);
+        assert!(c.apply("fault", "bogus").is_err());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! termination, gather values + metrics.
 
 use crate::api::VertexProgram;
+use crate::config::Mode;
 use crate::engine::Engine;
 use crate::error::{Error, Result};
 use crate::metrics::JobMetrics;
@@ -9,8 +10,30 @@ use crate::net;
 use crate::util::timer::timed;
 use crate::worker::storage::MachineStore;
 use crate::worker::sync::{AbortCause, JobAbort, Poisonable, Rendezvous};
-use crate::worker::units::{run_machine, JobGlobal, MachineOutput, UcDecision, UcReport};
+use crate::worker::units::{
+    read_replay_manifest, run_machine, JobGlobal, MachineOutput, UcDecision, UcReport,
+};
 use std::sync::Arc;
+
+/// Session-layer hooks into one engine run (auto-resume plumbing).
+///
+/// `JobBuilder::run`'s retry loop re-invokes [`run_job_with_impl`] once per
+/// attempt; these hooks let the attempts share what must be shared (the
+/// trace collector, so one export holds the fault, the recovery, and the
+/// re-run) and rebuild what must be rebuilt (the abort latch — see
+/// [`JobAbort::reset_for_retry`]).  `Default` is the standalone shape: own
+/// latch, own tracer, engine-owned trace export.
+#[derive(Default)]
+pub(crate) struct RunHooks {
+    /// Shared trace collector.  When set, the engine deposits into it but
+    /// does NOT export/flight-record — the owner (the session retry loop)
+    /// drives the consumers once, after the final attempt.
+    pub tracer: Option<Arc<crate::trace::Tracer>>,
+    /// The abort latch to run under.  Must be untripped: a tripped latch
+    /// (and everything registered on it) is single-use, so a retry that
+    /// reused one would fail instantly with the previous attempt's cause.
+    pub abort: Option<Arc<JobAbort>>,
+}
 
 /// Result of one GraphD job.
 pub struct JobResult<P: VertexProgram> {
@@ -57,7 +80,7 @@ pub fn run_job<P: VertexProgram>(
     stores: &[MachineStore],
     program: Arc<P>,
 ) -> Result<JobResult<P>> {
-    run_job_with_impl(eng, stores, program, None, None)
+    run_job_with_impl(eng, stores, program, None, None, RunHooks::default())
 }
 
 /// Run with optional checkpointing and/or recovery.
@@ -75,7 +98,7 @@ pub fn run_job_with<P: VertexProgram>(
     checkpoint: Option<crate::ft::CheckpointCfg>,
     resume: Option<u64>,
 ) -> Result<JobResult<P>> {
-    run_job_with_impl(eng, stores, program, checkpoint, resume)
+    run_job_with_impl(eng, stores, program, checkpoint, resume, RunHooks::default())
 }
 
 /// The actual job driver: spin up `n` machine threads, run the superstep
@@ -89,6 +112,7 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
     program: Arc<P>,
     checkpoint: Option<crate::ft::CheckpointCfg>,
     resume: Option<u64>,
+    hooks: RunHooks,
 ) -> Result<JobResult<P>> {
     let n = eng.profile.machines;
     if stores.len() != n {
@@ -102,6 +126,18 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
     let max_local = stores.iter().map(|s| s.local_vertices()).max().unwrap_or(0);
     let step_base = resume.map_or(0, |s| s + 1);
     let ckpt_dir = checkpoint.as_ref().map(|c| c.dir.clone());
+    // Fast recovery (§3.4): when the previous attempt retained its message
+    // logs, resume can *replay* the already-received S^I files instead of
+    // recomputing the senders.  The window is the largest superstep R such
+    // that every machine has verified, contiguous replay coverage of
+    // [step_base, R].  Digesting mode folds messages into dense arrays and
+    // never materialises S^I, so it always recomputes.
+    let digesting = eng.cfg.mode == Mode::Recoded && P::Comb::ENABLED;
+    let replay_upto = if resume.is_some() && eng.cfg.keep_oms_for_recovery && !digesting {
+        compute_replay_window(stores, step_base)
+    } else {
+        None
+    };
     // Job-wide buffer pool: enough shelf space for every machine's outbox
     // batches plus in-flight wire payloads and stream-writer buffers.
     let pool = crate::msg::BufPool::new(4 * n * n + 4 * n + 16);
@@ -114,7 +150,23 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
     // run_machine), and is polled by the channel/switch waits in `net` —
     // so one dead unit surfaces as Error::JobFailed at every machine
     // instead of wedging the survivors.
-    let abort = JobAbort::new();
+    let abort = match hooks.abort {
+        Some(a) => {
+            if a.aborted() {
+                // A tripped latch has already poisoned everything that will
+                // ever register on it; running under it would fail with the
+                // *previous* attempt's cause.  Retry loops must hand over a
+                // fresh latch (JobAbort::reset_for_retry).
+                return Err(Error::Other(
+                    "engine started with a tripped abort latch; retries must rebuild it \
+                     via JobAbort::reset_for_retry"
+                        .into(),
+                ));
+            }
+            a
+        }
+        None => JobAbort::new(),
+    };
     let uc_rv: Arc<Rendezvous<UcReport<P::Agg>, UcDecision<P::Agg>>> = Rendezvous::new(n);
     let ur_rv: Arc<Rendezvous<(), ()>> = Rendezvous::new(n);
     let ckpt_rv: Arc<Rendezvous<(), ()>> = Rendezvous::new(n);
@@ -123,7 +175,13 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
     abort.register(ckpt_rv.clone() as Arc<dyn Poisonable>);
     // Flight recorder / Chrome-trace collector: disabled configs hand out
     // no-op unit tracers, so the superstep loop pays one branch per event.
-    let tracer = Arc::new(crate::trace::Tracer::new(eng.cfg.trace.clone()));
+    // When the session retry loop supplies a shared tracer, this run only
+    // deposits into it — export/flight-record are the owner's job, so the
+    // final file holds every attempt on one timeline.
+    let owns_trace_outputs = hooks.tracer.is_none();
+    let tracer = hooks
+        .tracer
+        .unwrap_or_else(|| Arc::new(crate::trace::Tracer::new(eng.cfg.trace.clone())));
     let global = JobGlobal {
         program: program.clone(),
         cfg: eng.cfg.clone(),
@@ -139,6 +197,7 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
         digest_pool: digest_pool.clone(),
         abort: abort.clone(),
         tracer: tracer.clone(),
+        replay_upto,
     };
 
     let (endpoints, switch) = net::build(
@@ -183,6 +242,14 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
                             let scratch = store.dir.join("recovery");
                             let rec: crate::ft::Recovered<P::Value, P::Msg> =
                                 crate::ft::read_machine_checkpoint(dir, rs, i, &scratch)?;
+                            // Mark the resume point (and whether a replay
+                            // window is armed) on this machine's timeline.
+                            let mut rtr = global.tracer.unit(i, "recover");
+                            rtr.instant(crate::trace::EventKind::Recovery, rs);
+                            if let Some(r) = global.replay_upto {
+                                rtr.instant(crate::trace::EventKind::Replay, r);
+                            }
+                            rtr.finish();
                             return crate::worker::units::run_machine_resumed(
                                 global,
                                 store,
@@ -232,14 +299,16 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
             // Flight recorder: drain every unit's ring into
             // `flightrec_<machine>.log` before surfacing the typed failure,
             // so post-mortems see what each unit was doing when the first
-            // cause tripped.  Best-effort — the job error wins.
-            if tracer.enabled() {
+            // cause tripped.  Best-effort — the job error wins.  Skipped
+            // under a shared tracer: the retry loop decides whether this
+            // failure is final before draining the rings.
+            if owns_trace_outputs && tracer.enabled() {
                 let _ = tracer.flight_record(&eng.cfg.workdir, &e.to_string());
             }
             return Err(e);
         }
     };
-    if tracer.enabled() {
+    if owns_trace_outputs && tracer.enabled() {
         let path = eng
             .cfg
             .trace
@@ -259,8 +328,44 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
         net_local_bytes: switch.local_bytes(),
         pool: pool.stats(),
         digest_pool: digest_pool.stats(),
+        recoveries: 0,
+        retried_supersteps: 0,
     };
     Ok(JobResult { outputs, metrics })
+}
+
+/// Largest superstep `R` (if any) such that every machine's retained
+/// `job/replay_manifest` gives verified, contiguous S^I coverage of
+/// `[step_base, R]`.
+///
+/// A manifest line is trusted only if the file it names still exists with
+/// the recorded byte size — a torn final append (the writer died mid-line
+/// or mid-merge) fails that check and simply ends the window early, falling
+/// back to recompute for the tail.  Any machine with no usable manifest
+/// disables replay for the whole job: the window must be common, because
+/// suppression of re-sends is a *global* decision (a machine replaying
+/// superstep `s` sends nothing, so every machine must be replaying `s`).
+fn compute_replay_window(stores: &[MachineStore], step_base: u64) -> Option<u64> {
+    let mut window: Option<u64> = None;
+    for store in stores {
+        let job_dir = store.dir.join("job");
+        let entries = read_replay_manifest(&job_dir).ok()?;
+        let mut covered_upto: Option<u64> = None;
+        let mut abs = step_base;
+        while let Some((name, _msgs, bytes)) = entries.get(&abs) {
+            let ok = std::fs::metadata(job_dir.join(name))
+                .map(|m| m.len() == *bytes)
+                .unwrap_or(false);
+            if !ok {
+                break;
+            }
+            covered_upto = Some(abs);
+            abs += 1;
+        }
+        let r = covered_upto?;
+        window = Some(window.map_or(r, |w: u64| w.min(r)));
+    }
+    window
 }
 
 /// Dump job results to the DFS as text part files (the paper's final

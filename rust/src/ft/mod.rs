@@ -10,9 +10,13 @@
 //! already durable on disk), and the incoming messages are seeded from the
 //! checkpoint.
 //!
-//! The message-log fast-recovery of [19] is supported at the retention
-//! level: `JobConfig::keep_oms_for_recovery` keeps sent OMS files on local
-//! disks until the next checkpoint instead of garbage-collecting them.
+//! The message-log fast-recovery of [19]: `JobConfig::keep_oms_for_recovery`
+//! keeps sent OMS files on local disks until the next checkpoint instead of
+//! garbage-collecting them, and U_r additionally manifests its merged
+//! `si_*` incoming files (`replay_manifest`).  An auto-resumed attempt
+//! (see `JobBuilder::run`) replays incoming messages from those logs
+//! instead of recomputing the sending supersteps — see DESIGN.md
+//! "Recovery".
 
 use crate::error::{Error, Result};
 use crate::msg::Codec;
@@ -106,13 +110,50 @@ pub fn write_machine_checkpoint<V: Codec, M: Codec>(
     if let Some(d) = p.parent() {
         std::fs::create_dir_all(d)?;
     }
-    std::fs::write(p, out)?;
+    // fsync the checkpoint file itself: mark_done's DONE marker promises
+    // this data is durable, so the data must hit the platter first.
+    let mut f = std::fs::File::create(p)?;
+    std::io::Write::write_all(&mut f, &out)?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// fsync a directory so renames/creates inside it are durable (a file's
+/// own fsync does not cover its directory entry).  No-op on non-Unix —
+/// opening a directory for sync is a Unix-ism.
+fn sync_dir(dir: &Path) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        std::fs::File::open(dir)?.sync_all()?;
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+    }
     Ok(())
 }
 
 /// Mark a checkpoint complete once all machines wrote theirs.
+///
+/// Durability order (the whole point of the marker): the per-machine
+/// files were fsynced by [`write_machine_checkpoint`]; this fsyncs the
+/// checkpoint *directory* (making those file entries durable), then
+/// publishes DONE via write-temp + fsync + rename — atomic on POSIX — and
+/// fsyncs the directory again so the rename itself is durable.  A crash
+/// at any point leaves either no DONE (checkpoint ignored by
+/// [`latest_checkpoint`], which is correct for a torn set) or a DONE that
+/// provably covers complete, durable machine files — never a
+/// resumable-but-corrupt superstep.
 pub fn mark_done(dir: &Path, step: u64) -> Result<()> {
-    std::fs::write(done_marker(dir, step), b"ok")?;
+    let done = done_marker(dir, step);
+    let ckpt_dir = done.parent().expect("marker has a parent").to_path_buf();
+    sync_dir(&ckpt_dir)?;
+    let tmp = ckpt_dir.join("DONE.tmp");
+    let mut f = std::fs::File::create(&tmp)?;
+    std::io::Write::write_all(&mut f, b"ok")?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, &done)?;
+    sync_dir(&ckpt_dir)?;
     Ok(())
 }
 
@@ -279,6 +320,23 @@ mod tests {
             }
             _ => panic!(),
         }
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn mark_done_publishes_atomically() {
+        let d = tmp("done");
+        let halted = BitSet::new(1);
+        let bits = BitSet::new(1);
+        let inc: Incoming<f32> = Incoming::Digested { ar: vec![0.0], bits };
+        write_machine_checkpoint(&d, 2, 0, &[0f32], &halted, &inc).unwrap();
+        // Torn checkpoint (no DONE yet): invisible to resume.
+        assert_eq!(latest_checkpoint(&d, None), None);
+        mark_done(&d, 2).unwrap();
+        assert_eq!(latest_checkpoint(&d, None), Some(2));
+        let ckpt = d.join("ckpt_000002");
+        assert_eq!(std::fs::read(ckpt.join("DONE")).unwrap(), b"ok");
+        assert!(!ckpt.join("DONE.tmp").exists(), "temp marker renamed away");
         let _ = std::fs::remove_dir_all(&d);
     }
 

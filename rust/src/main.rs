@@ -4,7 +4,7 @@
 //! graphd gen   --dataset webuk-s [--scale 1.0] [--out PATH]
 //! graphd run   --algo pagerank|hashmin|sssp --dataset NAME
 //!              [--profile wpc|whigh|test] [--steps 10] [--machines N]
-//!              [--scale F] [--trace [PATH]] [-c key=val ...]
+//!              [--scale F] [--basic] [--trace [PATH]] [-c key=val ...]
 //! graphd serve --dataset NAME [--queries FILE|-] [--gen Q] [--seed S]
 //!              [--lanes 8] [--basic] [--profile NAME] [--machines N]
 //!              [--scale F] [--trace] [-c key=val ...]
@@ -158,17 +158,20 @@ fn cmd_run(
         eprintln!("tracing supersteps to {path} (load https://ui.perfetto.dev)");
     }
 
-    let gd = bench::run_graphd_cfg(
-        "cli",
-        &g,
-        algo,
-        &profile,
-        bench::use_xla_from_env(),
-        &cfgs,
-    )?;
+    // `--basic`: IO-Basic only — no recoding, no Recoded re-run.  The
+    // recovery smoke run uses this so the trace export left behind is the
+    // faulted Basic session's, not a clean follow-up job's.
+    let basic_only = flags.contains_key("basic");
+    let gd = if basic_only {
+        bench::run_graphd_basic_cfg("cli", &g, algo, &profile, bench::use_xla_from_env(), &cfgs)?
+    } else {
+        bench::run_graphd_cfg("cli", &g, algo, &profile, bench::use_xla_from_env(), &cfgs)?
+    };
     if let Some(json) = bench::bench_json_path() {
         bench::bench_json_merge(&json, "cli_run_basic", &gd.basic_metrics.to_json())?;
-        bench::bench_json_merge(&json, "cli_run_recoded", &gd.recoded_metrics.to_json())?;
+        if !basic_only {
+            bench::bench_json_merge(&json, "cli_run_recoded", &gd.recoded_metrics.to_json())?;
+        }
     }
     let mut t = Table::new(
         &format!("{} / {} on {}", ds.name(), algo.name(), profile.name),
@@ -182,22 +185,24 @@ fn cmd_run(
             Cell::Secs(gd.basic_compute),
         ],
     );
-    t.row(
-        "IO-Recoding",
-        vec![
-            Cell::NA,
-            Cell::Secs(gd.basic_load),
-            Cell::Secs(gd.recoding_compute),
-        ],
-    );
-    t.row(
-        "IO-Recoded",
-        vec![
-            Cell::Text("ID-Recoding".into()),
-            Cell::Secs(gd.recoded_load),
-            Cell::Secs(gd.recoded_compute),
-        ],
-    );
+    if !basic_only {
+        t.row(
+            "IO-Recoding",
+            vec![
+                Cell::NA,
+                Cell::Secs(gd.basic_load),
+                Cell::Secs(gd.recoding_compute),
+            ],
+        );
+        t.row(
+            "IO-Recoded",
+            vec![
+                Cell::Text("ID-Recoding".into()),
+                Cell::Secs(gd.recoded_load),
+                Cell::Secs(gd.recoded_compute),
+            ],
+        );
+    }
     println!("{}", t.render());
     Ok(())
 }

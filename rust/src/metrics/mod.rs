@@ -111,6 +111,14 @@ pub struct JobMetrics {
     /// multi-superstep digesting run means the O(|V|/n) arrays recycled
     /// instead of reallocating.
     pub digest_pool: crate::msg::PoolStats,
+    /// Auto-resume attempts that led to this result (0 on a fault-free
+    /// run): how many times `JobBuilder::run` reloaded the last durable
+    /// checkpoint and re-ran after a retryable failure (§3.4).
+    pub recoveries: u64,
+    /// Supersteps re-run across all recoveries — the failure superstep
+    /// minus the resumed-from checkpoint, summed per retry.  The paper's
+    /// recovery cost; fast-replay makes these cheaper, not fewer.
+    pub retried_supersteps: u64,
 }
 
 impl JobMetrics {
@@ -156,7 +164,8 @@ impl JobMetrics {
     ///  "m_gene_secs": f, "m_send_secs": f,
     ///  "barrier_wait_secs": f, "stall_wait_secs": f,
     ///  "pool_hits": n, "pool_misses": n,
-    ///  "digest_pool_hits": n, "digest_pool_misses": n}
+    ///  "digest_pool_hits": n, "digest_pool_misses": n,
+    ///  "recoveries": n, "retried_supersteps": n}
     /// ```
     ///
     /// `m_gene_secs`/`m_send_secs` are the machine-0 Table-4 totals
@@ -171,7 +180,8 @@ impl JobMetrics {
              \"m_gene_secs\": {}, \"m_send_secs\": {}, \
              \"barrier_wait_secs\": {}, \"stall_wait_secs\": {}, \
              \"pool_hits\": {}, \"pool_misses\": {}, \
-             \"digest_pool_hits\": {}, \"digest_pool_misses\": {}}}",
+             \"digest_pool_hits\": {}, \"digest_pool_misses\": {}, \
+             \"recoveries\": {}, \"retried_supersteps\": {}}}",
             json_f64(self.load_secs),
             json_f64(self.compute_secs),
             json_f64(self.preprocess_secs),
@@ -189,6 +199,8 @@ impl JobMetrics {
             self.pool.misses,
             self.digest_pool.hits,
             self.digest_pool.misses,
+            self.recoveries,
+            self.retried_supersteps,
         )
     }
 }
@@ -216,6 +228,10 @@ pub struct ServeMetrics {
     /// Batches whose job died (`Answer::Failed` queries): the failure is
     /// isolated to the batch, the server keeps serving.
     pub failed_batches: u64,
+    /// Batches whose first run failed with a *retryable* cause but whose
+    /// one in-place retry succeeded — the queries got answers, not
+    /// `Answer::Failed`, and `failed_batches` was not bumped.
+    pub recovered_batches: u64,
     /// Total serving wall time across batches (seconds).
     pub wall_secs: f64,
     /// Supersteps summed over batches.
@@ -281,6 +297,7 @@ impl ServeMetrics {
              queries answered   {}\n\
              batches            {}\n\
              failed batches     {}\n\
+             recovered batches  {}\n\
              supersteps         {}\n\
              edge items read    {}\n\
              wire bytes         {}\n\
@@ -293,6 +310,7 @@ impl ServeMetrics {
             self.queries,
             self.batches,
             self.failed_batches,
+            self.recovered_batches,
             self.supersteps,
             self.edge_items_read,
             self.wire_bytes,
@@ -310,7 +328,8 @@ impl ServeMetrics {
     /// (all numbers):
     ///
     /// ```json
-    /// {"queries": n, "batches": n, "failed_batches": n, "supersteps": n,
+    /// {"queries": n, "batches": n, "failed_batches": n,
+    ///  "recovered_batches": n, "supersteps": n,
     ///  "edge_items_read": n, "wire_bytes": n, "local_bytes": n,
     ///  "wall_secs": f, "qps": f,
     ///  "p50_secs": f, "p95_secs": f, "p99_secs": f}
@@ -319,6 +338,7 @@ impl ServeMetrics {
         let lat = self.latency_snapshot();
         format!(
             "{{\"queries\": {}, \"batches\": {}, \"failed_batches\": {}, \
+             \"recovered_batches\": {}, \
              \"supersteps\": {}, \"edge_items_read\": {}, \
              \"wire_bytes\": {}, \"local_bytes\": {}, \
              \"wall_secs\": {}, \"qps\": {}, \
@@ -326,6 +346,7 @@ impl ServeMetrics {
             self.queries,
             self.batches,
             self.failed_batches,
+            self.recovered_batches,
             self.supersteps,
             self.edge_items_read,
             self.wire_bytes,
@@ -512,6 +533,8 @@ mod tests {
         let jm = JobMetrics {
             supersteps: 3,
             net_wire_bytes: 64,
+            recoveries: 1,
+            retried_supersteps: 2,
             ..Default::default()
         };
         let j = jm.to_json();
@@ -519,14 +542,18 @@ mod tests {
         assert!(j.contains("\"supersteps\": 3"), "{j}");
         assert!(j.contains("\"net_wire_bytes\": 64"), "{j}");
         assert!(j.contains("\"barrier_wait_secs\": 0"), "{j}");
+        assert!(j.contains("\"recoveries\": 1"), "{j}");
+        assert!(j.contains("\"retried_supersteps\": 2"), "{j}");
         let sm = ServeMetrics {
             queries: 5,
             wall_secs: 2.5,
+            recovered_batches: 1,
             latencies_secs: vec![0.5, 1.0],
             ..Default::default()
         };
         let s = sm.to_json();
         assert!(s.contains("\"queries\": 5"), "{s}");
+        assert!(s.contains("\"recovered_batches\": 1"), "{s}");
         assert!(s.contains("\"qps\": 2"), "{s}");
         assert!(s.contains("\"p99_secs\": 1"), "{s}");
     }

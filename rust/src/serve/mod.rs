@@ -335,7 +335,28 @@ impl<'g, 's> QueryServer<'g, 's> {
                 self.in_flight = lanes.len();
                 self.tr.begin(crate::trace::EventKind::ServeBatch, seq);
                 let preps: Vec<&Prepared> = lanes.iter().map(|(_, p)| p).collect();
-                match run_batch_any(self.graph, &self.cfg, &preps) {
+                // Batch-level self-healing: a batch that dies of a
+                // *retryable* cause (I/O error, transient network fault)
+                // is re-run once before its queries are failed — serve
+                // batches are stateless traversals over immutable store
+                // files, so a clean re-run is always safe.  Deterministic
+                // failures (bad program, config) fail straight through.
+                let outcome = run_batch_any(self.graph, &self.cfg, &preps).or_else(|e| {
+                    if crate::worker::fault::retryable_cause(&e.to_string()) {
+                        crate::trace::diag(
+                            "serve",
+                            &format!("batch {seq} retrying after transient failure: {e}"),
+                        );
+                        let second = run_batch_any(self.graph, &self.cfg, &preps);
+                        if second.is_ok() {
+                            self.metrics.recovered_batches += 1;
+                        }
+                        second
+                    } else {
+                        Err(e)
+                    }
+                });
+                match outcome {
                     Ok((answers, supersteps, wall, job)) => {
                         self.metrics.record_batch(lanes.len() as u64, wall, &job);
                         for ((i, _), answer) in lanes.iter().zip(answers) {

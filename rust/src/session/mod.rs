@@ -494,6 +494,8 @@ impl<'s> LoadedGraph<'s> {
             disable_oms: None,
             local_fastpath: None,
             trace: None,
+            retry: None,
+            faults: None,
         }
     }
 }
@@ -522,6 +524,8 @@ pub struct JobBuilder<'g, 's, P: VertexProgram> {
     disable_oms: Option<bool>,
     local_fastpath: Option<bool>,
     trace: Option<crate::trace::TraceConfig>,
+    retry: Option<crate::config::RetryPolicy>,
+    faults: Option<crate::worker::fault::FaultPlan>,
 }
 
 impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
@@ -581,6 +585,26 @@ impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
         self
     }
 
+    /// Auto-resume policy: on a retryable failure (injected or real I/O
+    /// error, transient network fault, first panic at a superstep) with a
+    /// durable checkpoint available, [`Self::run`] tears the job down,
+    /// reloads the checkpoint, and re-runs — up to `max_retries` times
+    /// with exponential backoff.  Default: no retries (fail fast).
+    pub fn retry(mut self, p: crate::config::RetryPolicy) -> Self {
+        self.retry = Some(p);
+        self
+    }
+
+    /// Deterministic fault injection (testing/chaos): each spec in `plan`
+    /// fires exactly once when the chosen unit reaches the chosen machine +
+    /// superstep, surfacing as the corresponding typed error.  Combine
+    /// with [`Self::retry`] + [`Self::checkpoint`] to exercise the
+    /// recovery path end to end.
+    pub fn inject_faults(mut self, plan: crate::worker::fault::FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Resolve `Auto` mode and the XLA policy without running the job.
     pub fn plan(&self) -> JobPlan {
         let has_combiner = self.program.combiner().is_some();
@@ -634,6 +658,12 @@ impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
         if let Some(t) = self.trace {
             cfg.trace = t;
         }
+        if let Some(p) = self.retry {
+            cfg.retry = p;
+        }
+        if let Some(fp) = self.faults {
+            cfg.fault = Some(fp);
+        }
         // A `checkpoint_every` session/`-c` override without an explicit
         // CheckpointCfg checkpoints into the session DFS.
         let checkpoint = match (self.checkpoint, cfg.checkpoint_every) {
@@ -648,37 +678,132 @@ impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
             (None, _) => None,
         };
         let eng = Engine::new(self.graph.engine.profile.clone(), cfg)?;
-        let run =
-            engine_run::run_job_with_impl(&eng, stores, self.program, checkpoint.clone(), self.resume);
-        let mut res = match run {
-            // Failed checkpointed job: report the last durable superstep so
-            // the caller can recover with `.checkpoint(..).resume(s)` —
-            // the paper's §3.4 restart, now reachable from a typed error.
-            Err(Error::JobFailed {
-                machine,
-                unit,
-                superstep,
-                cause,
-            }) => {
-                let cause = match checkpoint
-                    .as_ref()
-                    .and_then(|ck| crate::ft::resume_hint(&ck.dir))
-                {
-                    Some(s) => format!(
-                        "{cause}; last durable checkpoint: superstep {s} \
-                         (recover with .checkpoint(..).resume({s}))"
-                    ),
-                    None => cause,
-                };
-                return Err(Error::JobFailed {
+        let policy = eng.cfg.retry;
+
+        // One trace collector for the whole run, shared across attempts:
+        // the exported timeline then shows the injected/real fault, the
+        // recovery marks, and the replayed supersteps of every retry side
+        // by side instead of the final attempt only.
+        let tracer = Arc::new(crate::trace::Tracer::new(eng.cfg.trace.clone()));
+
+        // Auto-resume loop (§3.4): each attempt runs under a *fresh* abort
+        // latch (a tripped latch and everything registered on it is
+        // single-use — see `JobAbort::reset_for_retry`), resuming from the
+        // last durable checkpoint of the previous attempt.
+        let mut abort = crate::worker::sync::JobAbort::new();
+        let mut resume = self.resume;
+        let mut recoveries: u64 = 0;
+        let mut retried_supersteps: u64 = 0;
+        let mut last_panic_step: Option<u64> = None;
+        // Open Recovery span over the in-flight retry attempt, closed when
+        // that attempt returns (successfully or not).
+        let mut recover_span: Option<(crate::trace::UnitTracer, u64)> = None;
+        let mut res = loop {
+            let hooks = engine_run::RunHooks {
+                tracer: Some(tracer.clone()),
+                abort: Some(abort.clone()),
+            };
+            let run = engine_run::run_job_with_impl(
+                &eng,
+                stores,
+                self.program.clone(),
+                checkpoint.clone(),
+                resume,
+                hooks,
+            );
+            if let Some((mut rtr, s)) = recover_span.take() {
+                rtr.end(crate::trace::EventKind::Recovery, s);
+                rtr.finish();
+            }
+            match run {
+                Ok(res) => break res,
+                // Failed checkpointed job: auto-resume if the policy and
+                // the failure class allow it; otherwise report the last
+                // durable superstep so the caller can recover manually
+                // with `.checkpoint(..).resume(s)` — the paper's §3.4
+                // restart, reachable from a typed error.
+                Err(Error::JobFailed {
                     machine,
                     unit,
                     superstep,
                     cause,
-                });
+                }) => {
+                    let hint = checkpoint
+                        .as_ref()
+                        .and_then(|ck| crate::ft::resume_hint(&ck.dir));
+                    // Retryable: I/O errors and transient network faults
+                    // always; a panic only until it repeats at the same
+                    // superstep (then it is deterministic program
+                    // behaviour, and re-running cannot help).
+                    let is_panic = cause.contains("panic");
+                    let retryable = crate::worker::fault::retryable_cause(&cause)
+                        || (is_panic && last_panic_step != Some(superstep));
+                    if is_panic {
+                        last_panic_step = Some(superstep);
+                    }
+                    if retryable && recoveries < u64::from(policy.max_retries) {
+                        if let Some(s) = hint {
+                            // Exponential backoff: transient causes (a
+                            // flaky switch, a briefly-full disk) need time
+                            // to clear before the next attempt.
+                            let backoff =
+                                policy.backoff.saturating_mul(1 << recoveries.min(16) as u32);
+                            // analyze:allow(sleep-slicing): inter-attempt backoff — no units are live between attempts, so there is no abort latch left to observe
+                            std::thread::sleep(backoff);
+                            abort = abort.reset_for_retry();
+                            recoveries += 1;
+                            retried_supersteps += superstep.saturating_sub(s);
+                            let mut rtr = tracer.unit(0, "recover");
+                            rtr.begin(crate::trace::EventKind::Recovery, s);
+                            recover_span = Some((rtr, s));
+                            resume = Some(s);
+                            continue;
+                        }
+                    }
+                    let cause = match hint {
+                        Some(s) => format!(
+                            "{cause}; last durable checkpoint: superstep {s} \
+                             (recover with .checkpoint(..).resume({s}))"
+                        ),
+                        None => cause,
+                    };
+                    let cause = if recoveries > 0 {
+                        format!("{cause}; retries exhausted after {recoveries} recovery attempt(s)")
+                    } else {
+                        cause
+                    };
+                    // Flight recorder: the session owns the shared tracer,
+                    // so the final failure drains the rings here (the
+                    // engine skips it under session hooks).
+                    if tracer.enabled() {
+                        let _ = tracer.flight_record(&eng.cfg.workdir, &cause);
+                    }
+                    return Err(Error::JobFailed {
+                        machine,
+                        unit,
+                        superstep,
+                        cause,
+                    });
+                }
+                Err(e) => {
+                    if tracer.enabled() {
+                        let _ = tracer.flight_record(&eng.cfg.workdir, &e.to_string());
+                    }
+                    return Err(e);
+                }
             }
-            r => r?,
         };
+        if tracer.enabled() {
+            let path = eng
+                .cfg
+                .trace
+                .path
+                .clone()
+                .unwrap_or_else(|| eng.cfg.workdir.join("trace.json"));
+            tracer.export_chrome(&path)?;
+        }
+        res.metrics.recoveries = recoveries;
+        res.metrics.retried_supersteps = retried_supersteps;
         res.metrics.load_secs = self.graph.load_secs;
         if plan.mode == Mode::Recoded {
             res.metrics.preprocess_secs = self.graph.recode_secs.unwrap_or(0.0);

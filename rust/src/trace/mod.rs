@@ -37,9 +37,12 @@
 //! timestamp from the tracer's shared epoch.  Overwrite-oldest means a
 //! buffer always holds a *suffix* of the unit's history (the `dropped`
 //! counter says how long a prefix was lost).  The exporter merges deposits
-//! per (machine, unit) track by sequence number, so within a track,
-//! ordering is exact; across tracks, the shared epoch makes timestamps
-//! comparable (same process — the simulated cluster shares one clock).
+//! per (machine, unit) track by shared-epoch timestamp (sequence number as
+//! tie-break — within one buffer the two orders agree, and timestamps stay
+//! comparable across the fresh `UnitTracer`s a retry attempt creates), so
+//! within a track, ordering is exact; across tracks, the shared epoch makes
+//! timestamps comparable (same process — the simulated cluster shares one
+//! clock).
 //! Because a suffix can open with an `End` whose `Begin` was overwritten
 //! (or a failed unit can die inside a span), the exporter *sanitizes*
 //! nesting per track: an unmatched `End` is skipped, and any span still
@@ -144,6 +147,18 @@ pub enum EventKind {
     /// Serve batch admission (`Instant`) or dispatch span; `arg` = batch
     /// or query sequence number.
     ServeBatch,
+    /// An injected fault fired (`Instant`, from the fault-injection
+    /// harness); `arg` = absolute superstep.
+    Fault,
+    /// One auto-resume attempt: session-level span around the re-run
+    /// (`Begin`/`End`, on the `recover` track) or a per-machine `Instant`
+    /// when a machine reloads its checkpoint; `arg` = the superstep
+    /// resumed from.
+    Recovery,
+    /// A superstep took the fast-replay path — incoming messages served
+    /// from the retained message logs instead of recomputed senders
+    /// (`Instant`); `arg` = absolute superstep.
+    Replay,
 }
 
 impl EventKind {
@@ -159,6 +174,9 @@ impl EventKind {
             EventKind::Load => "load",
             EventKind::Recode => "recode",
             EventKind::ServeBatch => "serve-batch",
+            EventKind::Fault => "fault",
+            EventKind::Recovery => "recovery",
+            EventKind::Replay => "replay",
         }
     }
 
@@ -171,6 +189,8 @@ impl EventKind {
             EventKind::File | EventKind::Pool => "io",
             EventKind::Transmit => "net",
             EventKind::ServeBatch => "serve",
+            EventKind::Fault => "fault",
+            EventKind::Recovery | EventKind::Replay => "recovery",
         }
     }
 
@@ -186,12 +206,15 @@ impl EventKind {
             EventKind::Load => 6,
             EventKind::Recode => 7,
             EventKind::ServeBatch => 8,
+            EventKind::Fault => 9,
+            EventKind::Recovery => 10,
+            EventKind::Replay => 11,
         }
     }
 }
 
 /// Number of [`EventKind`] variants (size of the depth-counter tables).
-const NUM_KINDS: usize = 9;
+const NUM_KINDS: usize = 12;
 
 /// One recorded event. 32 bytes, `Copy` — pushing one is a few stores
 /// into an owned ring, no allocation.
@@ -351,7 +374,11 @@ impl Tracer {
     }
 
     /// Deposits grouped into per-(machine, unit) tracks, events merged by
-    /// sequence number.
+    /// shared-epoch timestamp (sequence number as tie-break).  Timestamps,
+    /// not raw sequence numbers, order the merge because a tracer can
+    /// outlive one run: auto-resume re-runs a job into the *same* tracer,
+    /// and the retry attempt's `UnitTracer`s restart their sequence
+    /// numbers at zero while the shared epoch keeps advancing.
     fn tracks(&self) -> Vec<UnitTrace> {
         let mut sink = self.sink.lock().unwrap_or_else(|p| p.into_inner());
         let mut taken = std::mem::take(&mut *sink);
@@ -368,7 +395,7 @@ impl Tracer {
             }
         }
         for t in &mut tracks {
-            t.events.sort_by_key(|e| e.seq);
+            t.events.sort_by_key(|e| (e.ts_us, e.seq));
         }
         tracks
     }
@@ -519,6 +546,9 @@ const KIND_BY_IDX: [EventKind; NUM_KINDS] = [
     EventKind::Load,
     EventKind::Recode,
     EventKind::ServeBatch,
+    EventKind::Fault,
+    EventKind::Recovery,
+    EventKind::Replay,
 ];
 
 /// Fixed unit → Chrome `tid` mapping (one track per machine×unit).
@@ -530,7 +560,8 @@ fn tid_of(unit: &str) -> usize {
         "load" => 3,
         "recode" => 4,
         "serve" => 5,
-        _ => 6,
+        "recover" => 6,
+        _ => 7,
     }
 }
 

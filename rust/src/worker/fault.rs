@@ -1,0 +1,245 @@
+//! Deterministic fault injection for the recovery layer (§3.4).
+//!
+//! A [`FaultPlan`] is a small set of typed faults, each pinned to a
+//! (kind, machine, superstep) coordinate.  The units consult the plan at
+//! fixed, deterministic points of every superstep (see [`FaultKind`] for
+//! where each kind fires) and surface the injected failure as the same
+//! typed error a real one would produce — an `Error::Io` for the disk
+//! faults, a transient send failure for the network fault — so the whole
+//! propagation path (abort latch → poisoned barriers → typed
+//! `Error::JobFailed` → auto-resume) is exercised end to end, not mocked.
+//!
+//! Each fault in a plan fires **once per plan**, not once per attempt:
+//! the fired flags are shared across clones (`Arc<AtomicBool>`), so the
+//! plan threaded through `JobConfig` keeps its state when the session
+//! layer re-runs the job from a checkpoint.  Without that, a retry would
+//! re-inject the same fault at the same superstep and the job could never
+//! complete — the plan is a fault *budget*, spent exactly once.
+//!
+//! CLI: `-c fault=us_io@m1s3` (multiple faults `;`-separated); API:
+//! `JobBuilder::inject_faults(FaultPlan::one(..))`.
+
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// What kind of failure to inject, and (implicitly) where it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// U_s I/O error: fires when the sender starts processing the
+    /// superstep's OMS files (config name `us_io`).
+    UsIo,
+    /// U_r I/O error: fires when the receiver starts the superstep's
+    /// receive loop (config name `ur_io`).
+    UrIo,
+    /// Transient `net::Switch` send failure: fires at the same sender
+    /// point as `UsIo` but surfaces as a transient network error, not an
+    /// I/O error (config name `net_send`).
+    NetSend,
+    /// Checkpoint-write failure: fires inside U_c's checkpoint block,
+    /// before the state is serialized (config name `ckpt_write`).
+    CkptWrite,
+}
+
+impl FaultKind {
+    /// The config-string name (`-c fault=<name>@m<machine>s<superstep>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::UsIo => "us_io",
+            FaultKind::UrIo => "ur_io",
+            FaultKind::NetSend => "net_send",
+            FaultKind::CkptWrite => "ckpt_write",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "us_io" => FaultKind::UsIo,
+            "ur_io" => FaultKind::UrIo,
+            "net_send" => FaultKind::NetSend,
+            "ckpt_write" => FaultKind::CkptWrite,
+            _ => return None,
+        })
+    }
+}
+
+/// One planned fault: fire `kind` on `machine` at absolute superstep
+/// `superstep`, once.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// What to inject (also determines which unit consults the spec).
+    pub kind: FaultKind,
+    /// Machine the fault fires on.
+    pub machine: usize,
+    /// Absolute superstep (`step_base + step`), so a fault pinned to step
+    /// 3 means the same thing in a fresh run and a resumed one.
+    pub superstep: u64,
+    /// Shared across clones: the fault fires once per *plan*, not once
+    /// per attempt (see the module docs).
+    fired: Arc<AtomicBool>,
+}
+
+impl FaultSpec {
+    fn new(kind: FaultKind, machine: usize, superstep: u64) -> Self {
+        Self {
+            kind,
+            machine,
+            superstep,
+            fired: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Has this fault already fired?
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::Acquire)
+    }
+}
+
+/// A deterministic set of one-shot faults (see the module docs).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// A plan with a single fault.
+    pub fn one(kind: FaultKind, machine: usize, superstep: u64) -> Self {
+        Self {
+            specs: vec![FaultSpec::new(kind, machine, superstep)],
+        }
+    }
+
+    /// Add another fault to the plan (builder-style).
+    pub fn and(mut self, kind: FaultKind, machine: usize, superstep: u64) -> Self {
+        self.specs.push(FaultSpec::new(kind, machine, superstep));
+        self
+    }
+
+    /// Parse the CLI form: `kind@m<machine>s<superstep>`, multiple faults
+    /// separated by `;` — e.g. `-c fault=us_io@m1s3;net_send@m0s2`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let bad = || Error::Config(format!(
+            "bad fault spec '{s}' (want kind@m<machine>s<superstep>, kinds: \
+             us_io | ur_io | net_send | ckpt_write)"
+        ));
+        let mut plan = FaultPlan::default();
+        for part in s.split(';').filter(|p| !p.trim().is_empty()) {
+            let (kind, at) = part.trim().split_once('@').ok_or_else(bad)?;
+            let kind = FaultKind::parse(kind).ok_or_else(bad)?;
+            let at = at.strip_prefix('m').ok_or_else(bad)?;
+            let (machine, superstep) = at.split_once('s').ok_or_else(bad)?;
+            let machine = machine.parse().map_err(|_| bad())?;
+            let superstep = superstep.parse().map_err(|_| bad())?;
+            plan.specs.push(FaultSpec::new(kind, machine, superstep));
+        }
+        if plan.specs.is_empty() {
+            return Err(bad());
+        }
+        Ok(plan)
+    }
+
+    /// The planned faults (fired or not).
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    /// Does a fault of `kind` fire now, at (machine, superstep)?  The
+    /// first matching unfired spec is atomically marked fired; later calls
+    /// (and later attempts) see `false`.
+    pub fn fire(&self, kind: FaultKind, machine: usize, superstep: u64) -> bool {
+        self.specs.iter().any(|f| {
+            f.kind == kind
+                && f.machine == machine
+                && f.superstep == superstep
+                && f.fired
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+        })
+    }
+
+    /// The typed error an injected fault surfaces — shaped like the real
+    /// failure it simulates, with an "injected fault" marker in the text.
+    pub fn error(kind: FaultKind, machine: usize, superstep: u64) -> Error {
+        let io = |what: &str| {
+            Error::Io(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!("injected fault: {what} (machine {machine}, superstep {superstep})"),
+            ))
+        };
+        match kind {
+            FaultKind::UsIo => io("U_s I/O error"),
+            FaultKind::UrIo => io("U_r I/O error"),
+            FaultKind::CkptWrite => io("checkpoint write error"),
+            FaultKind::NetSend => Error::Other(format!(
+                "injected fault: transient network send failure \
+                 (machine {machine}, superstep {superstep})"
+            )),
+        }
+    }
+}
+
+/// Is a rendered `JobFailed` cause *retryable* — worth re-running from the
+/// last durable checkpoint?  I/O errors and transient network failures
+/// are (the machine/disk/switch may be healthy again); everything else —
+/// config errors, corrupt streams — is deterministic and fatal.  Panics
+/// are classified separately by the session retry loop (retryable once,
+/// fatal when the program panics at the same superstep twice).
+pub fn retryable_cause(cause: &str) -> bool {
+    cause.contains("I/O error") || cause.contains("transient")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        let p = FaultPlan::parse("us_io@m1s3").unwrap();
+        assert_eq!(p.specs().len(), 1);
+        assert_eq!(p.specs()[0].kind, FaultKind::UsIo);
+        assert_eq!(p.specs()[0].machine, 1);
+        assert_eq!(p.specs()[0].superstep, 3);
+
+        let p = FaultPlan::parse("net_send@m0s2;ckpt_write@m2s5").unwrap();
+        assert_eq!(p.specs().len(), 2);
+        assert_eq!(p.specs()[1].kind, FaultKind::CkptWrite);
+
+        for bad in ["", "weird@m0s1", "us_io@x0s1", "us_io@m0", "us_io@m0sx"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fires_once_even_across_clones() {
+        let p = FaultPlan::one(FaultKind::UsIo, 1, 3);
+        let p2 = p.clone(); // the retry attempt's view
+        assert!(!p.fire(FaultKind::UsIo, 0, 3), "wrong machine");
+        assert!(!p.fire(FaultKind::UsIo, 1, 2), "wrong superstep");
+        assert!(!p.fire(FaultKind::NetSend, 1, 3), "wrong kind");
+        assert!(p.fire(FaultKind::UsIo, 1, 3), "first hit fires");
+        assert!(!p.fire(FaultKind::UsIo, 1, 3), "one-shot");
+        assert!(!p2.fire(FaultKind::UsIo, 1, 3), "clones share the budget");
+        assert!(p2.specs()[0].fired());
+    }
+
+    #[test]
+    fn errors_are_typed_and_marked() {
+        let e = FaultPlan::error(FaultKind::UsIo, 1, 3);
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("injected fault"));
+        assert!(retryable_cause(&e.to_string()), "{e}");
+
+        let e = FaultPlan::error(FaultKind::NetSend, 0, 2);
+        assert!(matches!(e, Error::Other(_)));
+        assert!(retryable_cause(&e.to_string()), "{e}");
+    }
+
+    #[test]
+    fn retryable_classification() {
+        assert!(retryable_cause("I/O error: disk on fire"));
+        assert!(retryable_cause("transient network send failure"));
+        assert!(!retryable_cause("bad value 'x' for 'mode'"));
+        assert!(!retryable_cause("corrupt stream: short read"));
+        assert!(!retryable_cause("U_c panicked: boom"), "panics classified by the loop");
+    }
+}

@@ -7,7 +7,9 @@
 //! * [`sync`] — the condition-variable plumbing between units and the
 //!   global barriers between machines.
 //! * [`units`] — the unit bodies and the per-machine job driver.
+//! * [`fault`] — deterministic fault injection for recovery testing.
 
+pub mod fault;
 pub mod storage;
 pub mod sync;
 pub mod units;

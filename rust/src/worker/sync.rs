@@ -241,6 +241,27 @@ impl JobAbort {
             }
         }
     }
+
+    /// The abort seam for auto-resume: a **fresh, untripped latch** for the
+    /// retry attempt.
+    ///
+    /// A tripped `JobAbort` — and everything registered on it — is
+    /// single-use by design: `trip` is first-cause-wins and `poison` is
+    /// sticky, so reusing the latch (or any `Rendezvous`/`MachineSync`
+    /// registered on it) would make every wait of the retry fail instantly
+    /// with the *previous* attempt's cause.  The retry must rebuild its
+    /// barriers and syncs from scratch and register them on the latch this
+    /// returns; the engine enforces the seam by refusing a caller-supplied
+    /// latch that has already tripped.  (The `barrier-registration`
+    /// analyzer rule's single-job pairing argument stays intact: each
+    /// attempt is a whole new latch + listener set, never a reused one.)
+    pub fn reset_for_retry(&self) -> Arc<JobAbort> {
+        debug_assert!(
+            self.aborted(),
+            "reset_for_retry is for replacing a tripped latch between attempts"
+        );
+        JobAbort::new()
+    }
 }
 
 fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
@@ -570,6 +591,30 @@ mod tests {
         assert!(ms.wait_decided(0).unwrap());
         ms.set_decided(1, false);
         assert!(!ms.wait_decided(1).unwrap());
+    }
+
+    #[test]
+    fn reset_for_retry_hands_out_fresh_untripped_latch() {
+        let abort = JobAbort::new();
+        let ms = Arc::new(MachineSync::new(1));
+        abort.register(ms.clone());
+        abort.trip(AbortCause {
+            machine: 0,
+            unit: "U_s",
+            superstep: 3,
+            cause: "I/O error: injected".into(),
+        });
+        assert!(abort.aborted());
+        // The old latch's listeners are poisoned for good…
+        assert!(ms.wait_send_allowed(0).is_err());
+        // …but the retry latch starts clean, with no listeners or cause.
+        let retry = abort.reset_for_retry();
+        assert!(!retry.aborted());
+        assert!(retry.cause().is_none());
+        let ms2 = Arc::new(MachineSync::new(1));
+        retry.register(ms2.clone());
+        ms2.set_send_allowed(0);
+        assert!(ms2.wait_send_allowed(0).is_ok());
     }
 
     #[test]

@@ -55,6 +55,7 @@ use crate::trace::{EventKind, UnitTracer};
 use crate::util::bitset::BitSet;
 use crate::util::diskio::read_file_into;
 use crate::util::timer::Stopwatch;
+use crate::worker::fault::{FaultKind, FaultPlan};
 use crate::worker::storage::{EdgeStreamCursor, MachineStore};
 use crate::worker::sync::{lock_clean, wait_clean, JobAbort, MachineSync, Rendezvous};
 use crate::worker::Partitioning;
@@ -250,6 +251,16 @@ pub struct JobGlobal<P: VertexProgram> {
     /// tracers hand out no-op [`UnitTracer`]s, so the hot path pays one
     /// branch per event when tracing is off.
     pub tracer: Arc<crate::trace::Tracer>,
+    /// Fast-recovery replay window (§3.4): `Some(R)` means every machine
+    /// has the previous attempt's merged S^I files for absolute supersteps
+    /// `[step_base, R]` (verified against `replay_manifest` by the engine).
+    /// U_c then *replays* those incoming files instead of recomputing their
+    /// senders: sends for `abs ≤ R` are discarded (counted but not
+    /// materialised — every machine suppresses identically, so the
+    /// continue/halt decisions replay exactly), and checkpoints inside the
+    /// window are skipped (the original attempt already made them durable,
+    /// or deliberately didn't).  `None` = plain recompute resume.
+    pub replay_upto: Option<u64>,
 }
 
 /// Per-machine output returned by [`run_machine`].
@@ -297,6 +308,56 @@ impl MetricsSink {
     }
 }
 
+/// Name of the per-machine fast-recovery manifest inside a job dir.
+const REPLAY_MANIFEST: &str = "replay_manifest";
+
+/// Append one superstep's merged S^I to `<job_dir>/replay_manifest` as a
+/// line `"<abs-superstep> <file-name> <msgs> <bytes>"`.  The byte size lets
+/// a later resume verify the file survived intact; a line torn by a crash
+/// mid-append fails parsing and just ends the replay window early.
+fn append_replay_manifest(
+    job_dir: &std::path::Path,
+    abs: u64,
+    si: &std::path::Path,
+    msgs: u64,
+) -> Result<()> {
+    use std::io::Write;
+    let bytes = std::fs::metadata(si)?.len();
+    let name = si
+        .file_name()
+        .and_then(|s| s.to_str())
+        .ok_or_else(|| Error::CorruptStream("non-utf8 S^I file name".into()))?;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(job_dir.join(REPLAY_MANIFEST))?;
+    writeln!(f, "{abs} {name} {msgs} {bytes}")?;
+    Ok(())
+}
+
+/// Parse `<dir>/replay_manifest` into `abs superstep → (S^I file name,
+/// message count, byte size)`.  Malformed lines (torn final append) are
+/// skipped, not errors — the engine's contiguity walk treats the missing
+/// entry as the end of the replay window.
+pub(crate) fn read_replay_manifest(
+    dir: &std::path::Path,
+) -> Result<std::collections::HashMap<u64, (String, u64, u64)>> {
+    let text = std::fs::read_to_string(dir.join(REPLAY_MANIFEST))?;
+    let mut map = std::collections::HashMap::new();
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        let (Some(a), Some(name), Some(m), Some(b)) = (it.next(), it.next(), it.next(), it.next())
+        else {
+            continue;
+        };
+        let (Ok(a), Ok(m), Ok(b)) = (a.parse::<u64>(), m.parse::<u64>(), b.parse::<u64>()) else {
+            continue;
+        };
+        map.insert(a, (name.to_string(), m, b));
+    }
+    Ok(map)
+}
+
 /// Run one machine's full job: spawns U_s and U_r, runs U_c inline, joins.
 pub fn run_machine<P: VertexProgram>(
     global: &JobGlobal<P>,
@@ -341,7 +402,17 @@ pub fn run_machine_resumed<P: VertexProgram>(
     // One OMS per destination machine, living for the whole job; file
     // write buffers recycle through the job pool.
     let job_dir = store.dir.join("job");
-    let _ = std::fs::remove_dir_all(&job_dir);
+    let replay_dir = store.dir.join("replay");
+    let _ = std::fs::remove_dir_all(&replay_dir);
+    if global.replay_upto.is_some() {
+        // Fast recovery: the engine verified the previous attempt's merged
+        // S^I files against its replay_manifest, so park that job dir aside
+        // instead of wiping it — U_c replays incoming from `replay/` while
+        // this attempt's fresh `job/` fills with new OMS/S^I files.
+        std::fs::rename(&job_dir, &replay_dir)?;
+    } else {
+        let _ = std::fs::remove_dir_all(&job_dir);
+    }
     std::fs::create_dir_all(&job_dir)?;
     let mut oms = Vec::with_capacity(n);
     for d in 0..n {
@@ -514,6 +585,17 @@ fn sender_unit<P: VertexProgram>(
         tr.end(EventKind::Stall, abs);
         sink.with_step(step, |m| m.stall_wait_secs += waited);
         allowed?;
+        // Fault injection (deterministic): fire at step entry, before any
+        // file is taken from an OMS, so the failed attempt leaves every
+        // retained log intact for fast replay.
+        if let Some(fp) = &global.cfg.fault {
+            for kind in [FaultKind::UsIo, FaultKind::NetSend] {
+                if fp.fire(kind, me, abs) {
+                    tr.instant(EventKind::Fault, abs);
+                    return Err(FaultPlan::error(kind, me, abs));
+                }
+            }
+        }
         let mut sw = Stopwatch::new();
         let mut marks: Option<Vec<u64>> = None;
         let mut end_sent = vec![false; n];
@@ -811,6 +893,14 @@ fn receiver_unit<P: VertexProgram>(
         let abs = global.step_base + step;
         beacon.store(abs, Ordering::Relaxed);
         tr.begin(EventKind::Superstep, abs);
+        // Fault injection (deterministic): fire at step entry, before any
+        // batch is received or spilled.
+        if let Some(fp) = &global.cfg.fault {
+            if fp.fire(FaultKind::UrIo, me, abs) {
+                tr.instant(EventKind::Fault, abs);
+                return Err(FaultPlan::error(FaultKind::UrIo, me, abs));
+            }
+        }
         let mut ends = 0usize;
         let mut msgs_recv = 0u64;
         let mut spills: Vec<PathBuf> = Vec::new();
@@ -928,10 +1018,17 @@ fn receiver_unit<P: VertexProgram>(
             for sp in &spills {
                 let _ = std::fs::remove_file(sp);
             }
-            // Parity with kept OMS files: retained for observation when
-            // `keep_oms_for_recovery` is set (like the OMS retention, the
-            // next job's job-dir wipe reclaims them — no reader exists in
-            // ft/ yet); otherwise gc them too.
+            // Retained for fast recovery when `keep_oms_for_recovery` is
+            // set: record this superstep's merged S^I in the replay
+            // manifest so a resumed attempt can replay it instead of
+            // recomputing the senders (§3.4).  Skipped while this attempt
+            // is itself replaying (`abs ≤ R`): its S^I files for those
+            // steps are empty placeholders, not real message logs.
+            if global.cfg.keep_oms_for_recovery
+                && global.replay_upto.map_or(true, |r| abs > r)
+            {
+                append_replay_manifest(&job_dir, abs, &si, msgs_recv)?;
+            }
             if !global.cfg.keep_oms_for_recovery {
                 for sp in &local_paths {
                     let _ = std::fs::remove_file(sp);
@@ -1070,6 +1167,11 @@ struct Outbox<'a, M: Codec, C: Combiner<M>> {
     /// end of superstep.  Once set, further stall records are dropped —
     /// the superstep is already doomed.
     net_err: Option<Error>,
+    /// Fast-recovery replay (§3.4): this superstep's messages were already
+    /// received by every machine in a previous attempt, so sends are
+    /// *counted* (the continue/halt decision must replay exactly) but not
+    /// materialised — no OMS append, no local lane, no wire traffic.
+    discard: bool,
     pool: &'a BufPool,
 }
 
@@ -1117,6 +1219,9 @@ impl<'a, M: Codec, C: Combiner<M>> Outbox<'a, M, C> {
     #[inline]
     fn send(&mut self, target: u32, m: M) {
         self.msgs_sent += 1;
+        if self.discard {
+            return;
+        }
         let dst = self.part.machine_of(target, self.n);
         if dst == self.me {
             if let Some(ld) = &mut self.local {
@@ -1316,6 +1421,16 @@ fn compute_unit<P: VertexProgram>(
             0
         };
 
+    // Fast recovery (§3.4): the failed attempt's merged S^I files, keyed by
+    // the absolute superstep that generated them, parked in `replay/` by
+    // [`run_machine_resumed`].  The engine verified contiguous coverage of
+    // [step_base, R] on every machine before arming the window.
+    let replay_dir = store.dir.join("replay");
+    let replay_manifest = match global.replay_upto {
+        Some(_) => Some(read_replay_manifest(&replay_dir)?),
+        None => None,
+    };
+
     let mut global_agg: Arc<P::Agg> = Arc::new(P::Agg::default());
     let mut step: u64 = 0;
     let supersteps;
@@ -1323,9 +1438,33 @@ fn compute_unit<P: VertexProgram>(
         let abs_step = global.step_base + step;
         beacon.store(abs_step, Ordering::Relaxed);
         tr.begin(EventKind::Superstep, abs_step);
+        // Replaying = this superstep's *incoming* (generated at abs_step-1)
+        // comes from the retained logs; suppressed = this superstep's
+        // *outgoing* (generated at abs_step) is already in those logs, so
+        // sends are counted but discarded.  The last replayed superstep
+        // (abs_step = R+1) consumes logged incoming while generating fresh
+        // outgoing — the seam between replay and normal execution.
+        let replaying =
+            matches!(global.replay_upto, Some(r) if step > 0 && abs_step - 1 <= r);
+        let suppress = matches!(global.replay_upto, Some(r) if abs_step <= r);
         let inc: Option<Incoming<P::Msg>> = if step == 0 {
             // fresh job: no messages; resumed job: the checkpointed IMS
             init_incoming.take()
+        } else if replaying {
+            // Fast replay: skip the recv wait entirely — the messages were
+            // received and merged by the failed attempt.  U_r still runs
+            // (its deposit for this step is an unused empty placeholder),
+            // so the barrier structure is unchanged.
+            let (name, msgs, _bytes) = replay_manifest
+                .as_ref()
+                .and_then(|m| m.get(&(abs_step - 1)))
+                .expect("replay window verified by the engine")
+                .clone();
+            tr.instant(EventKind::Replay, abs_step);
+            Some(Incoming::Sorted {
+                path: replay_dir.join(name),
+                msgs,
+            })
         } else {
             // (incoming.take can only block if the deposit is missing, and
             // wait_recv_done returning Ok guarantees it was made — so the
@@ -1368,6 +1507,7 @@ fn compute_unit<P: VertexProgram>(
             },
             msgs_sent: 0,
             net_err: None,
+            discard: suppress,
             comb: P::Comb::default(),
             local: fast_digest.then(|| LocalDigest {
                 ar: global.digest_pool.take(local, comb.identity()),
@@ -1510,7 +1650,17 @@ fn compute_unit<P: VertexProgram>(
         // Synchronous checkpoint (§3.4): after deciding step s, persist
         // values + halted + the incoming messages of step s+1.
         if let Some(ck) = &global.checkpoint {
-            if decision.continues && ck.every > 0 && (abs_step + 1) % ck.every == 0 {
+            // Skipped while replaying (abs_step ≤ R): the incoming deposit
+            // for step s+1 is an empty placeholder, not the real IMS — and
+            // every durable checkpoint inside the window was already made
+            // by the original attempt.  All machines share one window, so
+            // the ckpt barrier is skipped consistently.
+            let in_replay_window = global.replay_upto.map_or(false, |r| abs_step <= r);
+            if decision.continues
+                && ck.every > 0
+                && (abs_step + 1) % ck.every == 0
+                && !in_replay_window
+            {
                 tr.begin(EventKind::Stall, abs_step);
                 let t0 = Instant::now();
                 let recv = msync.wait_recv_done(step);
@@ -1518,6 +1668,15 @@ fn compute_unit<P: VertexProgram>(
                 tr.end(EventKind::Stall, abs_step);
                 sink.with_step(step, |m| m.stall_wait_secs += waited);
                 recv?;
+                // Fault injection: a checkpoint-write failure, fired before
+                // any byte lands — the previous DONE checkpoint stays the
+                // durable resume point.
+                if let Some(fp) = &global.cfg.fault {
+                    if fp.fire(FaultKind::CkptWrite, me, abs_step) {
+                        tr.instant(EventKind::Fault, abs_step);
+                        return Err(FaultPlan::error(FaultKind::CkptWrite, me, abs_step));
+                    }
+                }
                 incoming.peek_with(step, |inc| {
                     crate::ft::write_machine_checkpoint(
                         &ck.dir, abs_step, me, &vals, &halted, inc,

@@ -220,6 +220,199 @@ fn checkpointed_failure_reports_last_durable_superstep() {
     let _ = std::fs::remove_dir_all(s.workdir());
 }
 
+// ------------------------------------------------------- self-healing (§3.4)
+
+use graphd::algos::PageRank;
+use graphd::config::RetryPolicy;
+use graphd::worker::fault::{FaultKind, FaultPlan};
+
+/// Fault-free reference values for the 6-step PageRank used by the
+/// recovery tests below.
+fn clean_ranks(graph: &graphd::LoadedGraph<'_>) -> Vec<(u32, f32)> {
+    graph
+        .job(Arc::new(PageRank::new(6)))
+        .run()
+        .unwrap()
+        .values_by_id()
+}
+
+fn assert_same_ranks(clean: &[(u32, f32)], rec: &[(u32, f32)]) {
+    assert_eq!(clean.len(), rec.len());
+    for ((ia, va), (ib, vb)) in clean.iter().zip(rec.iter()) {
+        assert_eq!(ia, ib);
+        assert!((va - vb).abs() < 1e-6, "{ia}: {va} vs {vb}");
+    }
+}
+
+#[test]
+fn injected_us_io_fault_auto_resumes_with_identical_values() {
+    // The acceptance scenario: a U_s I/O error on a checkpointed 2-machine
+    // PageRank auto-resumes from the last durable checkpoint and finishes
+    // with the same values as a fault-free run.
+    let s = session("usio_resume", 2);
+    let g = generator::uniform(140, 800, true, 13);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let clean = clean_ranks(&graph);
+
+    let ckdir = s.workdir().join("dfs").join("usio_ck");
+    let t = Instant::now();
+    let rec = graph
+        .job(Arc::new(PageRank::new(6)))
+        .checkpoint(CheckpointCfg::every(&ckdir, 2))
+        .retry(RetryPolicy::retries(2))
+        .inject_faults(FaultPlan::one(FaultKind::UsIo, 1, 3))
+        .run()
+        .expect("retryable I/O fault must auto-resume, not surface");
+    assert!(t.elapsed() < FAIL_WITHIN);
+    assert!(rec.metrics.recoveries >= 1, "no recovery recorded");
+    // Failed at superstep 3, durable checkpoint after superstep 1.
+    assert!(rec.metrics.retried_supersteps >= 1);
+    assert_same_ranks(&clean, &rec.values_by_id());
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+#[test]
+fn ur_io_then_ckpt_write_faults_auto_resume_in_sequence() {
+    // Two independent faults across two different units: attempt 1 dies of
+    // a U_r I/O error, the resumed attempt 2 dies writing a checkpoint,
+    // attempt 3 completes.  Each spec fires exactly once.
+    let s = session("urio_ckptw", 2);
+    let g = generator::uniform(120, 700, true, 17);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let clean = clean_ranks(&graph);
+
+    let ckdir = s.workdir().join("dfs").join("urio_ck");
+    let t = Instant::now();
+    let rec = graph
+        .job(Arc::new(PageRank::new(6)))
+        .checkpoint(CheckpointCfg::every(&ckdir, 2))
+        .retry(RetryPolicy::retries(2))
+        .inject_faults(
+            FaultPlan::one(FaultKind::UrIo, 0, 2).and(FaultKind::CkptWrite, 1, 3),
+        )
+        .run()
+        .expect("both faults are retryable within the budget");
+    assert!(t.elapsed() < FAIL_WITHIN);
+    assert_eq!(rec.metrics.recoveries, 2, "one recovery per fault");
+    assert_same_ranks(&clean, &rec.values_by_id());
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+#[test]
+fn transient_net_send_fault_auto_resumes() {
+    let s = session("netsend", 2);
+    let g = generator::uniform(110, 600, true, 19);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let clean = clean_ranks(&graph);
+
+    let ckdir = s.workdir().join("dfs").join("net_ck");
+    let t = Instant::now();
+    let rec = graph
+        .job(Arc::new(PageRank::new(6)))
+        .checkpoint(CheckpointCfg::every(&ckdir, 2))
+        .retry(RetryPolicy::retries(1))
+        .inject_faults(FaultPlan::one(FaultKind::NetSend, 0, 2))
+        .run()
+        .expect("transient network fault must auto-resume");
+    assert!(t.elapsed() < FAIL_WITHIN);
+    assert_eq!(rec.metrics.recoveries, 1);
+    assert_same_ranks(&clean, &rec.values_by_id());
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+#[test]
+fn retry_exhaustion_surfaces_typed_error() {
+    // More faults than retry budget: the second failure must surface as
+    // the typed JobFailed (with the exhaustion noted), not retry forever.
+    let s = session("exhaust", 2);
+    let g = generator::uniform(100, 500, true, 23);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let ckdir = s.workdir().join("dfs").join("exhaust_ck");
+    let t = Instant::now();
+    let err = graph
+        .job(Arc::new(PageRank::new(6)))
+        .checkpoint(CheckpointCfg::every(&ckdir, 2))
+        .retry(RetryPolicy::retries(1))
+        .inject_faults(
+            FaultPlan::one(FaultKind::UsIo, 1, 2).and(FaultKind::UsIo, 1, 3),
+        )
+        .run()
+        .unwrap_err();
+    assert!(t.elapsed() < FAIL_WITHIN);
+    match err {
+        Error::JobFailed { ref cause, .. } => {
+            assert!(cause.contains("injected fault"), "{cause}");
+            assert!(
+                cause.contains("retries exhausted after 1 recovery attempt"),
+                "exhaustion not reported: {cause}"
+            );
+        }
+        other => panic!("expected JobFailed, got {other}"),
+    }
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+#[test]
+fn deterministic_panic_is_fatal_on_second_hit() {
+    // A program panic is retried once (it could be a flaky machine), but a
+    // repeat at the same superstep is deterministic program behaviour —
+    // fatal even with retry budget left.
+    let s = session("panic_fatal", 2);
+    let g = generator::uniform(100, 500, true, 29);
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let ckdir = s.workdir().join("dfs").join("panic_ck");
+    let t = Instant::now();
+    let err = graph
+        .job(Arc::new(PanicAt {
+            victim: 9,
+            at_step: 3,
+        }))
+        .checkpoint(CheckpointCfg::every(&ckdir, 1))
+        .retry(RetryPolicy::retries(5))
+        .run()
+        .unwrap_err();
+    assert!(t.elapsed() < FAIL_WITHIN);
+    match err {
+        Error::JobFailed { ref cause, .. } => {
+            assert!(cause.contains("injected unit failure"), "{cause}");
+        }
+        other => panic!("expected JobFailed, got {other}"),
+    }
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
+#[test]
+fn serve_transient_batch_failure_recovers_once() {
+    // A serve batch that dies of a transient fault is re-run once and
+    // answers normally; the retry is isolated to the batch (no failed
+    // queries, recovered_batches counts it).
+    let s = GraphD::builder()
+        .machines(2)
+        .workdir(wd("serve_recover"))
+        .oms_file_cap(16 * 1024)
+        .config("fault", "net_send@m0s1")
+        .build()
+        .unwrap();
+    let g = generator::chain(20).with_unit_weights();
+    let graph = s.load(GraphSource::InMemory(&g)).unwrap();
+    let mut srv = graph.serve(ServeConfig::default().lanes(2)).unwrap();
+    srv.submit(Query::Dist { source: 0, target: 5 });
+    srv.submit(Query::Dist { source: 1, target: 6 });
+    let rs = srv.run_pending().unwrap();
+    assert_eq!(rs.len(), 2);
+    for r in &rs {
+        assert!(
+            r.error.is_none(),
+            "query failed despite batch retry: {:?}",
+            r.error
+        );
+        assert_ne!(r.answer, Answer::Failed);
+    }
+    assert_eq!(srv.metrics().recovered_batches, 1, "batch retry not counted");
+    assert_eq!(srv.metrics().failed_batches, 0);
+    let _ = std::fs::remove_dir_all(s.workdir());
+}
+
 #[test]
 fn serve_failed_batch_fails_queries_not_the_server() {
     let s = session("serve", 2);

@@ -120,6 +120,95 @@ fn recovery_is_exact_recoded_mode_sssp() {
 }
 
 #[test]
+fn fast_replay_recovery_matches_fault_free_values() {
+    // Acceptance: a faulted, checkpointed run with keep_oms_for_recovery
+    // auto-resumes through the fast-replay path (replaying the retained
+    // S^I message logs instead of recomputing senders) and produces the
+    // same values as a fault-free run.  The replay path is asserted via
+    // the trace: Fault, Recovery and Replay events must all appear.
+    let d = wd("replay");
+    let trace_path = d.join("replay_trace.json");
+    let g = generator::uniform(150, 900, true, 31);
+    let session = GraphD::builder()
+        .machines(2)
+        .workdir(&d)
+        .max_supersteps(6)
+        .keep_oms_for_recovery(true)
+        .config("trace", "true")
+        .config("trace_path", trace_path.to_str().unwrap())
+        .config("checkpoint_every", "2")
+        .config("retry", "2")
+        .config("fault", "us_io@m1s3")
+        .build()
+        .unwrap();
+    let graph = session.load(GraphSource::InMemorySparse(&g, 3)).unwrap();
+    let rec = graph.run(Arc::new(PageRank::new(6))).unwrap();
+    assert!(rec.metrics.recoveries >= 1, "fault did not trigger recovery");
+
+    // Fault-free reference in a separate session.
+    let d2 = wd("replay_ref");
+    let s2 = GraphD::builder()
+        .machines(2)
+        .workdir(&d2)
+        .max_supersteps(6)
+        .build()
+        .unwrap();
+    let g2 = s2.load(GraphSource::InMemorySparse(&g, 3)).unwrap();
+    let clean = g2.run(Arc::new(PageRank::new(6))).unwrap();
+    for ((ia, va), (ib, vb)) in clean.values_by_id().iter().zip(rec.values_by_id().iter()) {
+        assert_eq!(ia, ib);
+        assert!((va - vb).abs() < 1e-6, "{ia}: {va} vs {vb}");
+    }
+
+    let text = std::fs::read_to_string(&trace_path).expect("trace export");
+    for name in ["\"fault\"", "\"recovery\"", "\"replay\""] {
+        assert!(text.contains(name), "trace missing {name} events");
+    }
+    let _ = std::fs::remove_dir_all(&d);
+    let _ = std::fs::remove_dir_all(&d2);
+}
+
+#[test]
+fn replay_manifest_written_and_verifiable() {
+    // keep_oms runs append one replay_manifest line per superstep per
+    // machine, each naming an S^I file that exists with the recorded size
+    // — the substrate the engine's replay-window scan verifies.
+    let d = wd("manifest");
+    let g = generator::uniform(120, 600, true, 37);
+    let session = GraphD::builder()
+        .machines(2)
+        .workdir(&d)
+        .max_supersteps(3)
+        .keep_oms_for_recovery(true)
+        .build()
+        .unwrap();
+    session
+        .run(GraphSource::InMemory(&g), Arc::new(PageRank::new(3)))
+        .unwrap();
+
+    for m in 0..2 {
+        let job = d.join(format!("m{m}/basic/job"));
+        let text = std::fs::read_to_string(job.join("replay_manifest"))
+            .expect("manifest written under keep_oms_for_recovery");
+        let mut steps = 0;
+        for line in text.lines() {
+            let f: Vec<&str> = line.split_whitespace().collect();
+            assert_eq!(f.len(), 4, "bad manifest line: {line}");
+            let bytes: u64 = f[3].parse().unwrap();
+            let si = job.join(f[1]);
+            assert_eq!(
+                std::fs::metadata(&si).map(|md| md.len()).ok(),
+                Some(bytes),
+                "manifest size mismatch for {line}"
+            );
+            steps += 1;
+        }
+        assert_eq!(steps, 3, "one manifest line per superstep");
+    }
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+#[test]
 fn message_logs_retained_for_fast_recovery() {
     // keep_oms_for_recovery: sent OMS files survive on local disk (the
     // [19]-style message-log fast recovery substrate).

@@ -1,0 +1,49 @@
+#!/usr/bin/env python3
+"""Validate the self-healing smoke run (`make recover-smoke`).
+
+The smoke run injects a deterministic U_s I/O fault into a checkpointed
+CLI PageRank job and relies on the session retry loop to auto-resume it.
+The CLI merges the job's metrics into the bench JSON under
+"cli_run_basic"; this script asserts the run actually recovered:
+
+  * recoveries >= 1          (the retry loop fired at least once)
+  * retried_supersteps >= 1  (the resume re-ran work past the checkpoint)
+  * supersteps matches --steps if given (the job still ran to completion)
+
+Usage: check_recover.py BENCH.json [expected_supersteps]
+"""
+
+import json
+import sys
+
+
+def main(argv: list) -> int:
+    if not argv or len(argv) > 2:
+        sys.exit(__doc__)
+    path = argv[0]
+    with open(path) as f:
+        doc = json.load(f)
+    m = doc.get("cli_run_basic")
+    if m is None:
+        print(f"{path}: no cli_run_basic section (was GRAPHD_BENCH_JSON set?)", file=sys.stderr)
+        return 1
+    recoveries = m.get("recoveries", 0)
+    retried = m.get("retried_supersteps", 0)
+    if recoveries < 1:
+        print(f"{path}: recoveries={recoveries}, expected >= 1 — the injected fault did not trigger auto-resume", file=sys.stderr)
+        return 1
+    if retried < 1:
+        print(f"{path}: retried_supersteps={retried}, expected >= 1", file=sys.stderr)
+        return 1
+    if len(argv) == 2:
+        want = int(argv[1])
+        got = m.get("supersteps")
+        if got != want:
+            print(f"{path}: supersteps={got}, expected {want} — recovered run did not complete", file=sys.stderr)
+            return 1
+    print(f"{path}: recovered ok (recoveries={recoveries}, retried_supersteps={retried}, supersteps={m.get('supersteps')})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

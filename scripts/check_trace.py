@@ -7,7 +7,12 @@ events nest properly (no E before its B, nothing left open at the end).
 That is exactly the property Perfetto / chrome://tracing needs to render
 the track, so passing here means the export actually loads.
 
-Usage: check_trace.py TRACE.json [TRACE2.json ...]
+With `--require name1,name2` the trace must additionally contain at least
+one event of each named kind (e.g. `--require fault,recovery,replay` for
+`make recover-smoke`: the faulted session's export must show the injected
+fault, the auto-resume, and the fast-replay path).
+
+Usage: check_trace.py [--require NAMES] TRACE.json [TRACE2.json ...]
 """
 
 import collections
@@ -15,7 +20,7 @@ import json
 import sys
 
 
-def check(path: str) -> int:
+def check(path: str, require: list) -> int:
     with open(path) as f:
         doc = json.load(f)
     evs = doc["traceEvents"]
@@ -24,8 +29,10 @@ def check(path: str) -> int:
         return 1
     depth: collections.Counter = collections.Counter()
     last_ts: dict = {}
+    names = set()
     for e in evs:
         key = (e["pid"], e["tid"])
+        names.add(e.get("name", ""))
         if e["ph"] == "B":
             depth[key] += 1
         elif e["ph"] == "E":
@@ -44,11 +51,23 @@ def check(path: str) -> int:
     if open_tracks:
         print(f"{path}: unbalanced spans {open_tracks}", file=sys.stderr)
         return 1
-    print(f"{path}: {len(evs)} events, {len(depth)} tracks balanced")
+    missing = [r for r in require if r not in names]
+    if missing:
+        print(f"{path}: required event kinds missing: {missing}", file=sys.stderr)
+        return 1
+    extra = f", required kinds present: {require}" if require else ""
+    print(f"{path}: {len(evs)} events, {len(depth)} tracks balanced{extra}")
     return 0
 
 
 if __name__ == "__main__":
-    if len(sys.argv) < 2:
+    args = sys.argv[1:]
+    require: list = []
+    if args and args[0] == "--require":
+        if len(args) < 2:
+            sys.exit(__doc__)
+        require = [r for r in args[1].split(",") if r]
+        args = args[2:]
+    if not args:
         sys.exit(__doc__)
-    sys.exit(max(check(p) for p in sys.argv[1:]))
+    sys.exit(max(check(p, require) for p in args))
