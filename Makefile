@@ -15,6 +15,10 @@
 #                    a checkpointed CLI run, assert it auto-resumes (bench
 #                    JSON shows recoveries>=1) and the trace shows the
 #                    fault / recovery / fast-replay spans
+#   make net-smoke   end-to-end TCP transport: run the same PageRank job as
+#                    a real 2-process loopback cluster and as the 1-process
+#                    sim reference, assert the final vertex values are
+#                    bit-identical (Codec wire encoding compared as hex)
 #   make bench-smoke quick perf trajectory (non-gating floors)
 #   make clean       cargo clean + stale bench JSON tmp files
 
@@ -24,12 +28,13 @@ BENCH_JSON ?= BENCH_PR4.json
 TRACE_JSON ?= /tmp/graphd_trace_smoke.json
 RECOVER_TRACE ?= /tmp/graphd_recover_smoke.json
 RECOVER_JSON ?= /tmp/graphd_recover_smoke_bench.json
+NET_SMOKE_DIR ?= /tmp/graphd_net_smoke
 # Hang-proofing: the engine is a barrier machine; a failure-propagation
 # regression deadlocks rather than fails.  Bound the test step like CI does
 # (no-op where coreutils `timeout` is unavailable).
 TIMEOUT := $(shell command -v timeout >/dev/null 2>&1 && echo "timeout 600")
 
-.PHONY: build test analyze fmt-check clippy doc check-xla ci trace-smoke recover-smoke bench-smoke artifacts clean
+.PHONY: build test analyze fmt-check clippy doc check-xla ci trace-smoke recover-smoke net-smoke bench-smoke artifacts clean
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -59,7 +64,7 @@ doc:
 check-xla:
 	$(CARGO) check --all-targets --features xla --manifest-path $(MANIFEST)
 
-ci: build test analyze fmt-check clippy doc check-xla trace-smoke recover-smoke
+ci: build test analyze fmt-check clippy doc check-xla trace-smoke recover-smoke net-smoke
 
 # End-to-end flight-recorder smoke: run a tiny traced job through the CLI,
 # then check the Chrome-trace export is valid JSON whose B/E span events
@@ -87,6 +92,26 @@ recover-smoke: build
 	python3 scripts/check_trace.py --require fault,recovery,replay $(RECOVER_TRACE)
 	python3 scripts/check_recover.py $(RECOVER_JSON) 6
 	rm -f $(RECOVER_TRACE) $(RECOVER_JSON)
+
+# End-to-end TCP transport smoke: the same PageRank job as a 1-process sim
+# reference and as a real 2-process loopback cluster (rank 0 binds an
+# ephemeral port and forks rank 1 via --spawn-peers; each process
+# preprocesses the deterministic dataset in its own private workdir and
+# runs one machine).  check_transport.py merges the per-machine parts and
+# asserts every vertex value is bit-identical to the sim run.
+net-smoke: build
+	rm -rf $(NET_SMOKE_DIR)
+	mkdir -p $(NET_SMOKE_DIR)
+	$(TIMEOUT) ./rust/target/release/graphd worker --sim --machines 2 \
+		--algo pagerank --dataset btc-s --steps 6 --scale 0.05 \
+		--workdir $(NET_SMOKE_DIR)/sim --out $(NET_SMOKE_DIR)/ref.tsv
+	$(TIMEOUT) ./rust/target/release/graphd worker --rank 0 --machines 2 \
+		--listen 127.0.0.1:0 --spawn-peers \
+		--algo pagerank --dataset btc-s --steps 6 --scale 0.05 \
+		--workdir $(NET_SMOKE_DIR)/w0 --out $(NET_SMOKE_DIR)/tcp.tsv
+	python3 scripts/check_transport.py $(NET_SMOKE_DIR)/ref.tsv \
+		$(NET_SMOKE_DIR)/tcp.tsv $(NET_SMOKE_DIR)/tcp.tsv.1
+	rm -rf $(NET_SMOKE_DIR)
 
 # Quick perf trajectory: spine + serve throughput in smoke mode, numbers
 # emitted to $(BENCH_JSON) (spine writes the file with its "spine" and

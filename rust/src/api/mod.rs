@@ -276,6 +276,20 @@ pub trait VertexProgram: Send + Sync + 'static {
     /// Merge another machine's aggregate into `a`.
     fn merge_agg(&self, _a: &mut Self::Agg, _b: &Self::Agg) {}
 
+    /// Wire-encode an aggregate for the distributed (TCP-transport)
+    /// control barrier.  The default writes nothing, which round-trips
+    /// correctly for `Agg = ()` — programs with a real aggregator must
+    /// override both this and [`Self::decode_agg`] to run under
+    /// `transport=tcp` (under the sim transport aggregates never leave
+    /// the process and these hooks are unused).
+    fn encode_agg(&self, _agg: &Self::Agg, _out: &mut Vec<u8>) {}
+
+    /// Inverse of [`Self::encode_agg`]; the default yields
+    /// `Agg::default()`.
+    fn decode_agg(&self, _bytes: &[u8]) -> Self::Agg {
+        Self::Agg::default()
+    }
+
     /// Vectorized whole-block update (recoded mode).  Return `true` if the
     /// block was handled (the engine then fans out `out_base` along the
     /// edge stream via [`Self::emit`]); `false` falls back to per-vertex

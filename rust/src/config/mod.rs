@@ -232,6 +232,17 @@ pub struct JobConfig {
     /// dumps `flightrec_<machine>.log` files beside it.  CLI:
     /// `-c trace=true`, `-c trace_path=…`, `-c trace_capacity=…`.
     pub trace: crate::trace::TraceConfig,
+    /// Transport backend (see [`crate::net::TransportKind`]): `sim` (the
+    /// default in-process simulator) or `tcp` (this process runs *one*
+    /// machine, `transport_rank`, and exchanges framed batches with its
+    /// peer processes over real sockets).  CLI: `-c transport=sim|tcp`.
+    pub transport: crate::net::TransportKind,
+    /// Coordinator (rank 0) control-plane address for `transport=tcp`
+    /// (`host:port`); empty under `sim`.  CLI: `-c transport_addr=…`.
+    pub transport_addr: String,
+    /// Which machine this process runs under `transport=tcp`.  CLI:
+    /// `-c transport_rank=R`.
+    pub transport_rank: usize,
 }
 
 impl Default for JobConfig {
@@ -252,6 +263,9 @@ impl Default for JobConfig {
             local_fastpath: true,
             artifacts_dir: None,
             trace: crate::trace::TraceConfig::default(),
+            transport: crate::net::TransportKind::Sim,
+            transport_addr: String::new(),
+            transport_rank: 0,
         }
     }
 }
@@ -298,6 +312,11 @@ impl JobConfig {
             }
             "trace_capacity" => {
                 self.trace.capacity = val.parse().map_err(|_| bad(key, val))?
+            }
+            "transport" => self.transport = crate::net::TransportKind::parse(val)?,
+            "transport_addr" => self.transport_addr = val.to_string(),
+            "transport_rank" => {
+                self.transport_rank = val.parse().map_err(|_| bad(key, val))?
             }
             _ => return Err(Error::Config(format!("unknown config key '{key}'"))),
         }
@@ -374,6 +393,23 @@ mod tests {
         assert!(c2.trace.enabled, "trace_path implies enabled");
         assert_eq!(c2.trace.path.as_deref(), Some(std::path::Path::new("/tmp/t.json")));
         assert!(c.apply("trace", "weird").is_err());
+    }
+
+    #[test]
+    fn job_config_transport_keys() {
+        use crate::net::TransportKind;
+        let mut c = JobConfig::default();
+        assert_eq!(c.transport, TransportKind::Sim, "sim is the default");
+        assert!(c.transport_addr.is_empty());
+        assert_eq!(c.transport_rank, 0);
+        c.apply("transport", "tcp").unwrap();
+        assert_eq!(c.transport, TransportKind::Tcp);
+        c.apply("transport_addr", "127.0.0.1:7700").unwrap();
+        assert_eq!(c.transport_addr, "127.0.0.1:7700");
+        c.apply("transport_rank", "2").unwrap();
+        assert_eq!(c.transport_rank, 2);
+        assert!(c.apply("transport", "udp").is_err());
+        assert!(c.apply("transport_rank", "x").is_err());
     }
 
     #[test]

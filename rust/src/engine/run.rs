@@ -9,8 +9,9 @@ use crate::metrics::JobMetrics;
 use crate::net;
 use crate::util::timer::timed;
 use crate::worker::storage::MachineStore;
-use crate::worker::sync::{AbortCause, JobAbort, Poisonable, Rendezvous};
+use crate::worker::sync::{AbortCause, BarrierLink, JobAbort, Poisonable, Rendezvous, RvCodec};
 use crate::worker::units::{
+    decode_uc_decision, decode_uc_report, encode_uc_decision, encode_uc_report,
     read_replay_manifest, run_machine, JobGlobal, MachineOutput, UcDecision, UcReport,
 };
 use std::sync::Arc;
@@ -198,6 +199,7 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
         abort: abort.clone(),
         tracer: tracer.clone(),
         replay_upto,
+        distributed: false,
     };
 
     let (endpoints, switch) = net::build(
@@ -332,6 +334,228 @@ pub(crate) fn run_job_with_impl<P: VertexProgram>(
         retried_supersteps: 0,
     };
     Ok(JobResult { outputs, metrics })
+}
+
+/// The TCP-transport job driver: this process runs exactly **one** machine
+/// (`cfg.transport_rank`); its `n−1` siblings are other OS processes
+/// reached through a [`crate::net::tcp::TcpCluster`].  The superstep loop
+/// itself is untouched — the same [`run_machine`] body runs over a real
+/// socket mesh instead of the modeled switch, and the three inter-machine
+/// barriers are built with [`Rendezvous::remote`] so their rounds travel
+/// the cluster's control plane.
+///
+/// `resume` is this process's **local** resume proposal (its latest
+/// durable checkpoint); the handshake agrees cluster-wide on the minimum,
+/// so the step actually resumed may be earlier (or a fresh start, if any
+/// sibling has no usable checkpoint).  `attempt` is the auto-resume retry
+/// ordinal — it fences handshake rounds so sockets from a previous
+/// attempt cannot corrupt the roster.
+pub(crate) fn run_job_distributed<P: VertexProgram>(
+    eng: &Engine,
+    stores: &[MachineStore],
+    program: Arc<P>,
+    checkpoint: Option<crate::ft::CheckpointCfg>,
+    resume: Option<u64>,
+    hooks: RunHooks,
+    attempt: u64,
+) -> Result<JobResult<P>> {
+    let n = eng.profile.machines;
+    let rank = eng.cfg.transport_rank;
+    if stores.len() != n {
+        return Err(Error::Config(format!(
+            "{} stores for {} machines",
+            stores.len(),
+            n
+        )));
+    }
+    if rank >= n {
+        return Err(Error::Config(format!(
+            "transport_rank {rank} out of range for {n} machines"
+        )));
+    }
+    if eng.cfg.transport_addr.is_empty() {
+        return Err(Error::Config(
+            "transport=tcp requires transport_addr (the coordinator's host:port)".into(),
+        ));
+    }
+    let total_vertices = stores[0].total_vertices;
+    let max_local = stores.iter().map(|s| s.local_vertices()).max().unwrap_or(0);
+    let ckpt_dir = checkpoint.as_ref().map(|c| c.dir.clone());
+    let abort = match hooks.abort {
+        Some(a) => {
+            if a.aborted() {
+                return Err(Error::Other(
+                    "engine started with a tripped abort latch; retries must rebuild it \
+                     via JobAbort::reset_for_retry"
+                        .into(),
+                ));
+            }
+            a
+        }
+        None => JobAbort::new(),
+    };
+    let owns_trace_outputs = hooks.tracer.is_none();
+    let tracer = hooks
+        .tracer
+        .unwrap_or_else(|| Arc::new(crate::trace::Tracer::new(eng.cfg.trace.clone())));
+    // One machine's share of buffer shelf space (cf. the 4n²+4n+16 the
+    // in-process driver provisions for all n machines): this process's
+    // outbox batches plus in-flight wire payloads in both directions.
+    let pool = crate::msg::BufPool::new(4 * n + 16);
+    let digest_pool = crate::msg::DigestPool::new(3);
+
+    // Connect before building any step-dependent state: the handshake's
+    // resume agreement decides step_base for the whole cluster.
+    let mut opts = net::tcp::TcpOpts::new(n, rank, eng.cfg.transport_addr.clone());
+    opts.resume = resume;
+    opts.attempt = attempt;
+    opts.local_fast = eng.cfg.local_fastpath;
+    let net::Transport {
+        endpoints,
+        switch,
+        cluster,
+    } = net::Transport::tcp(opts, pool.clone(), abort.clone(), &tracer)?;
+    let cluster = cluster.ok_or_else(|| Error::Other("tcp transport returned no cluster".into()))?;
+    let (sender, receiver) = endpoints
+        .into_iter()
+        .next()
+        .ok_or_else(|| Error::Other("tcp transport returned no endpoint".into()))?;
+    // The cluster must observe trips (to broadcast the Abort frame and
+    // force blocked socket reads out) like any other poisonable.
+    abort.register(cluster.clone() as Arc<dyn Poisonable>);
+
+    let agreed = cluster.agreed_resume();
+    let step_base = agreed.map_or(0, |s| s + 1);
+
+    // The three inter-machine barriers, spanning processes: U_c's rounds
+    // carry report/decision payloads through the program's aggregate codec
+    // hooks; U_r and checkpoint are pure synchronization.
+    let link: Arc<dyn BarrierLink> = cluster.clone();
+    let (enc_t, dec_t, enc_r, dec_r) = (
+        program.clone(),
+        program.clone(),
+        program.clone(),
+        program.clone(),
+    );
+    let uc_codec = RvCodec::<UcReport<P::Agg>, UcDecision<P::Agg>> {
+        enc_t: Box::new(move |t| encode_uc_report(&*enc_t, t)),
+        dec_t: Box::new(move |b| decode_uc_report(&*dec_t, b)),
+        enc_r: Box::new(move |r| encode_uc_decision(&*enc_r, r)),
+        dec_r: Box::new(move |b| decode_uc_decision(&*dec_r, b)),
+    };
+    let uc_rv = Rendezvous::remote(n, rank, net::tcp::BARRIER_UC, link.clone(), uc_codec);
+    let ur_rv: Arc<Rendezvous<(), ()>> =
+        Rendezvous::remote(n, rank, net::tcp::BARRIER_UR, link.clone(), RvCodec::unit());
+    let ckpt_rv: Arc<Rendezvous<(), ()>> =
+        Rendezvous::remote(n, rank, net::tcp::BARRIER_CKPT, link, RvCodec::unit());
+    abort.register(uc_rv.clone() as Arc<dyn Poisonable>);
+    abort.register(ur_rv.clone() as Arc<dyn Poisonable>);
+    abort.register(ckpt_rv.clone() as Arc<dyn Poisonable>);
+
+    let global = JobGlobal {
+        program: program.clone(),
+        cfg: eng.cfg.clone(),
+        n,
+        total_vertices,
+        max_local,
+        checkpoint,
+        step_base,
+        uc_rv,
+        ur_rv,
+        ckpt_rv,
+        pool: pool.clone(),
+        digest_pool: digest_pool.clone(),
+        abort: abort.clone(),
+        tracer: tracer.clone(),
+        // Fast replay needs a verified *common* window across every
+        // machine's replay manifest; with one private workdir per process
+        // there is no way to check the siblings', so distributed resume
+        // always recomputes from the checkpoint.
+        replay_upto: None,
+        distributed: true,
+    };
+
+    let store = stores[rank].clone();
+    let disk = eng
+        .profile
+        .disk_bytes_per_sec
+        .map(crate::util::diskio::DiskBw::new);
+    let (compute_secs, output) = timed(|| -> Result<MachineOutput<P>> {
+        let beacon = std::sync::atomic::AtomicU64::new(step_base);
+        global.abort.guard(rank, "U_c", &beacon, || {
+            if let Some(rs) = agreed {
+                let dir = ckpt_dir
+                    .as_ref()
+                    .ok_or_else(|| Error::Config("resume without checkpoint dir".into()))?;
+                let scratch = store.dir.join("recovery");
+                let rec: crate::ft::Recovered<P::Value, P::Msg> =
+                    crate::ft::read_machine_checkpoint(dir, rs, rank, &scratch)?;
+                let mut rtr = global.tracer.unit(rank, "recover");
+                rtr.instant(crate::trace::EventKind::Recovery, rs);
+                rtr.finish();
+                return crate::worker::units::run_machine_resumed(
+                    &global,
+                    store,
+                    rec.vals,
+                    Some(rec.halted),
+                    Some(rec.incoming),
+                    sender,
+                    receiver,
+                    disk,
+                );
+            }
+            let init: Vec<P::Value> = (0..store.local_vertices())
+                .map(|pos| {
+                    program.init_value(store.id_at(pos), store.degs[pos], store.total_vertices)
+                })
+                .collect();
+            run_machine(&global, store, init, sender, receiver, disk)
+        })
+    });
+    // Tear the cluster down on every path: joins the socket threads and
+    // closes the mesh (idempotent; the failure cause — ours or a remote
+    // one — has already crossed the control plane via the poison hook).
+    let output = match output {
+        Ok(o) => {
+            cluster.shutdown();
+            o
+        }
+        Err(e) => {
+            let e = abort.first_cause_or(e);
+            cluster.shutdown();
+            if owns_trace_outputs && tracer.enabled() {
+                let _ = tracer.flight_record(&eng.cfg.workdir, &e.to_string());
+            }
+            return Err(e);
+        }
+    };
+    if owns_trace_outputs && tracer.enabled() {
+        let path = eng
+            .cfg
+            .trace
+            .path
+            .clone()
+            .unwrap_or_else(|| eng.cfg.workdir.join("trace.json"));
+        tracer.export_chrome(&path)?;
+    }
+
+    let metrics = JobMetrics {
+        load_secs: 0.0,
+        compute_secs,
+        preprocess_secs: 0.0,
+        supersteps: step_base + output.supersteps,
+        machines: vec![output.metrics.clone()],
+        net_wire_bytes: switch.total_bytes(),
+        net_local_bytes: switch.local_bytes(),
+        pool: pool.stats(),
+        digest_pool: digest_pool.stats(),
+        recoveries: 0,
+        retried_supersteps: 0,
+    };
+    Ok(JobResult {
+        outputs: vec![output],
+        metrics,
+    })
 }
 
 /// Largest superstep `R` (if any) such that every machine's retained

@@ -9,8 +9,22 @@
 //!              [--lanes 8] [--basic] [--profile NAME] [--machines N]
 //!              [--scale F] [--trace] [-c key=val ...]
 //! graphd table --id 2|3|5|6|7|8 [--scale F]
+//! graphd worker --rank R --machines N (--listen ADDR | --join ADDR | --sim)
+//!               [--spawn-peers] [--algo pagerank|sssp|hashmin] [--dataset NAME]
+//!               [--steps S] [--scale F] [--recode] [--out PATH]
+//!               [--workdir PATH] [-c key=val ...]
 //! graphd info
 //! ```
+//!
+//! `worker` is one machine process of a TCP-transport job: rank 0 binds the
+//! coordinator address (`--listen`, `host:0` picks a port) and prints
+//! `listening on <addr>`; followers `--join` that address.  Every process
+//! generates and preprocesses the same deterministic dataset locally, runs
+//! only its own machine's superstep loop, and writes its partition's final
+//! values as `id<TAB><hex>` lines (`--out`).  `--sim` instead runs the whole
+//! job in this one process on the simulator fabric and writes *all*
+//! machines' values — the bit-exact reference the transport tests diff
+//! against.  `--spawn-peers` makes rank 0 fork ranks `1..N` itself.
 //!
 //! (Hand-rolled argument parsing: the offline crate registry has no clap.)
 
@@ -77,13 +91,14 @@ fn main() {
         "run" => cmd_run(&flags, &cfgs, scale),
         "serve" => cmd_serve(&flags, &cfgs, scale),
         "table" => cmd_table(&flags, scale),
+        "worker" => cmd_worker(&flags, &cfgs, scale),
         "info" => {
             cmd_info();
             Ok(())
         }
         _ => {
             eprintln!(
-                "usage: graphd <gen|run|serve|table|info> [flags]\n  \
+                "usage: graphd <gen|run|serve|table|worker|info> [flags]\n  \
                  see module docs of rust/src/main.rs"
             );
             Ok(())
@@ -384,6 +399,178 @@ fn cmd_table(flags: &HashMap<String, String>, scale: f64) -> graphd::Result<()> 
     };
     let out = bench::render_table(title, &combos, &profile, scale)?;
     println!("{out}");
+    Ok(())
+}
+
+/// Run one job on a loaded graph and render the final vertex values as
+/// `(id, hex-of-Codec-bytes)` rows — the wire encoding is the comparison
+/// unit of the transport equivalence tests, so "bit-identical" means
+/// exactly that (no float formatting in the loop).
+fn worker_job<P: graphd::api::VertexProgram>(
+    graph: &graphd::LoadedGraph<'_>,
+    program: P,
+) -> graphd::Result<Vec<(u32, String)>> {
+    use graphd::msg::Codec;
+    let res = graph.job(std::sync::Arc::new(program)).run()?;
+    let mut rows = Vec::new();
+    for (id, v) in res.values_by_id() {
+        let mut buf = vec![0u8; <P::Value as Codec>::SIZE];
+        v.encode(&mut buf);
+        let hex: String = buf.iter().map(|b| format!("{b:02x}")).collect();
+        rows.push((id, hex));
+    }
+    Ok(rows)
+}
+
+/// `graphd worker`: one machine process of a TCP-transport job (or, with
+/// `--sim`, the whole job in-process as the equivalence reference).
+fn cmd_worker(
+    flags: &HashMap<String, String>,
+    cfgs: &[(String, String)],
+    scale: f64,
+) -> graphd::Result<()> {
+    let sim = flags.contains_key("sim");
+    let n: usize = flags
+        .get("machines")
+        .and_then(|m| m.parse().ok())
+        .unwrap_or(2);
+    let rank: usize = flags.get("rank").and_then(|r| r.parse().ok()).unwrap_or(0);
+    if !sim && rank >= n {
+        return Err(graphd::Error::Config(format!(
+            "--rank {rank} out of range for --machines {n}"
+        )));
+    }
+    let ds = dataset_by_name(flags.get("dataset").map(String::as_str).unwrap_or("btc-s"))
+        .ok_or_else(|| graphd::Error::Config("unknown dataset".into()))?;
+    let steps: u64 = flags.get("steps").and_then(|s| s.parse().ok()).unwrap_or(10);
+    let mut g = ds.generate_scaled(scale);
+    let algo = flags.get("algo").map(String::as_str).unwrap_or("pagerank");
+    if algo == "sssp" {
+        g = g.with_unit_weights();
+    }
+
+    // Rank 0 binds the coordinator address first and announces the actual
+    // one (--listen host:0 picks a free port), so launchers can parse it
+    // and hand it to the followers before the handshake window closes.
+    let addr = if sim {
+        String::new()
+    } else if rank == 0 {
+        let listen = flags
+            .get("listen")
+            .filter(|a| !a.is_empty())
+            .cloned()
+            .unwrap_or_else(|| "127.0.0.1:0".to_string());
+        let actual = graphd::net::tcp::leader_bind(&listen)?;
+        println!("listening on {actual}");
+        use std::io::Write;
+        let _ = std::io::stdout().flush();
+        actual
+    } else {
+        flags
+            .get("join")
+            .filter(|a| !a.is_empty())
+            .cloned()
+            .ok_or_else(|| graphd::Error::Config("worker rank > 0 needs --join ADDR".into()))?
+    };
+
+    // --spawn-peers: rank 0 forks ranks 1..n of the same job.  Children
+    // write their own parts; this process fails if any child does.
+    let mut children = Vec::new();
+    if !sim && rank == 0 && flags.contains_key("spawn-peers") {
+        let exe = std::env::current_exe()?;
+        for peer in 1..n {
+            let mut c = std::process::Command::new(&exe);
+            c.arg("worker")
+                .arg("--rank")
+                .arg(peer.to_string())
+                .arg("--machines")
+                .arg(n.to_string())
+                .arg("--join")
+                .arg(&addr)
+                .arg("--algo")
+                .arg(algo)
+                .arg("--dataset")
+                .arg(ds.name())
+                .arg("--steps")
+                .arg(steps.to_string())
+                .arg("--scale")
+                .arg(scale.to_string());
+            if flags.contains_key("recode") {
+                c.arg("--recode");
+            }
+            if let Some(out) = flags.get("out") {
+                c.arg("--out").arg(format!("{out}.{peer}"));
+            }
+            for (k, v) in cfgs {
+                c.arg("-c").arg(format!("{k}={v}"));
+            }
+            children.push(c.spawn()?);
+        }
+    }
+
+    // Private workdir per process: distributed machines must not share
+    // scratch or checkpoint directories.
+    let (workdir, ephemeral) = match flags.get("workdir") {
+        Some(w) => (std::path::PathBuf::from(w), false),
+        None => (
+            std::env::temp_dir().join(format!(
+                "graphd_worker_{}_{rank}",
+                std::process::id()
+            )),
+            true,
+        ),
+    };
+    let profile = ClusterProfile::by_name("test", Some(n))?;
+    let mut b = GraphD::builder().profile(profile).workdir(&workdir);
+    if !sim {
+        b = b
+            .config("transport", "tcp")
+            .config("transport_addr", &addr)
+            .config("transport_rank", &rank.to_string());
+    }
+    for (k, v) in cfgs {
+        b = b.config(k, v);
+    }
+    let session = b.build()?;
+    let mut graph = session.load(GraphSource::InMemory(&g))?;
+    if flags.contains_key("recode") {
+        graph.recode()?;
+    }
+    let rows = match algo {
+        "pagerank" => worker_job(&graph, graphd::algos::PageRank::new(steps))?,
+        "sssp" => worker_job(&graph, graphd::algos::Sssp::new(bench::sssp_source(&g)))?,
+        "hashmin" => worker_job(&graph, graphd::algos::HashMin)?,
+        other => return Err(graphd::Error::Config(format!("unknown algo {other}"))),
+    };
+
+    let mut text = String::new();
+    for (id, hex) in &rows {
+        text.push_str(&format!("{id}\t{hex}\n"));
+    }
+    match flags.get("out") {
+        Some(out) => std::fs::write(out, text)?,
+        None => print!("{text}"),
+    }
+    eprintln!(
+        "worker {}: {} vertices done",
+        if sim { "sim".to_string() } else { rank.to_string() },
+        rows.len()
+    );
+
+    let mut failed = Vec::new();
+    for (i, mut c) in children.into_iter().enumerate() {
+        if !c.wait()?.success() {
+            failed.push(i + 1);
+        }
+    }
+    if ephemeral {
+        let _ = std::fs::remove_dir_all(&workdir);
+    }
+    if !failed.is_empty() {
+        return Err(graphd::Error::Other(format!(
+            "worker peer process(es) {failed:?} exited with failure"
+        )));
+    }
     Ok(())
 }
 

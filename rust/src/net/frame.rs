@@ -1,0 +1,467 @@
+//! Length-prefixed wire framing for the TCP transport backend.
+//!
+//! Every byte that crosses a real socket — data-plane batches, the
+//! handshake, the control plane's barrier and abort traffic — travels as
+//! one [`FrameKind`]-tagged frame with a fixed 24-byte header:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  (0x47444631, "GDF1" — catches desynced streams)
+//!      4     1  kind   (FrameKind discriminant)
+//!      5     3  reserved (zero on encode, ignored on decode)
+//!      8     4  src    (sending machine rank, u32 LE)
+//!     12     8  step   (superstep / barrier sequence / attempt, u64 LE)
+//!     20     4  len    (payload byte length, u32 LE, ≤ MAX_FRAME_LEN)
+//! ```
+//!
+//! The codec is total: truncated, corrupted, or oversized input decodes to
+//! a typed [`Error::Io`]-family error, never a panic — a malformed peer
+//! must surface as a job failure with a cause, not take the process down.
+//! The pure [`encode_frame`]/[`decode_frame`] pair is what the property
+//! tests round-trip; [`write_frame`]/[`read_frame_into`] are the streaming
+//! forms the per-peer socket threads use (reads land in `msg::BufPool`
+//! blocks so received payloads recycle like every other spine buffer).
+
+use crate::error::{Error, Result};
+use std::io::{Read, Write};
+
+/// Frame-header magic ("GDF1"): the first sanity check on every read.
+pub const MAGIC: u32 = 0x4744_4631;
+
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 24;
+
+/// Upper bound on a single frame's payload.  Generously above the spine's
+/// buffer caps (`msg::DEFAULT_MAX_BUF_BYTES` is 16 MB); a length field past
+/// this is a corrupted or hostile stream, not a big batch.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// What a frame carries — the data plane mirrors [`super::Payload`], the
+/// rest is handshake and control traffic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Message records for superstep `step` ([`super::Payload::Data`]).
+    Data = 1,
+    /// End tag: sender exhausted its OMS towards us for `step`.
+    End = 2,
+    /// Vertex records during graph loading ([`super::Payload::Load`]).
+    Load = 3,
+    /// End of the loading phase from this sender.
+    LoadEnd = 4,
+    /// Handshake: `src` = rank, `step` = attempt; payload carries the
+    /// sender's data-plane address and its local resume proposal.
+    Hello = 5,
+    /// Handshake reply (leader → follower): the full rank → data-address
+    /// roster plus the cluster-agreed resume superstep.
+    Roster = 6,
+    /// Control plane, follower → leader: a serialized barrier deposit
+    /// (`step` = barrier sequence; payload starts with the barrier id).
+    BarrierReport = 7,
+    /// Control plane, leader → followers: the serialized leader result for
+    /// a barrier round.
+    BarrierDecision = 8,
+    /// Control plane: a serialized [`crate::worker::sync::AbortCause`] —
+    /// the `JobAbort` latch's remote trip path.
+    Abort = 9,
+    /// Clean shutdown notice: subsequent EOF from this peer is expected,
+    /// not a death.
+    Goodbye = 10,
+}
+
+impl FrameKind {
+    fn from_u8(b: u8) -> Option<Self> {
+        Some(match b {
+            1 => FrameKind::Data,
+            2 => FrameKind::End,
+            3 => FrameKind::Load,
+            4 => FrameKind::LoadEnd,
+            5 => FrameKind::Hello,
+            6 => FrameKind::Roster,
+            7 => FrameKind::BarrierReport,
+            8 => FrameKind::BarrierDecision,
+            9 => FrameKind::Abort,
+            10 => FrameKind::Goodbye,
+            _ => return None,
+        })
+    }
+}
+
+/// A decoded frame header: `(kind, src, step, payload_len)`.
+pub type Header = (FrameKind, u32, u64, usize);
+
+fn bad(what: impl Into<String>) -> Error {
+    Error::Io(std::io::Error::new(
+        std::io::ErrorKind::InvalidData,
+        what.into(),
+    ))
+}
+
+fn short(what: impl Into<String>) -> Error {
+    Error::Io(std::io::Error::new(
+        std::io::ErrorKind::UnexpectedEof,
+        what.into(),
+    ))
+}
+
+/// Encode a frame header into its fixed 24-byte form.
+pub fn encode_header(kind: FrameKind, src: u32, step: u64, len: usize) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    h[4] = kind as u8;
+    // h[5..8] reserved, zero
+    h[8..12].copy_from_slice(&src.to_le_bytes());
+    h[12..20].copy_from_slice(&step.to_le_bytes());
+    h[20..24].copy_from_slice(&(len as u32).to_le_bytes());
+    h
+}
+
+/// Decode a 24-byte frame header.  Typed errors, never panics: a wrong
+/// magic, unknown kind, or oversized length is an
+/// [`std::io::ErrorKind::InvalidData`] wrapped in [`Error::Io`].
+pub fn decode_header(h: &[u8; HEADER_LEN]) -> Result<Header> {
+    let magic = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
+    if magic != MAGIC {
+        return Err(bad(format!(
+            "bad frame magic {magic:#010x} (want {MAGIC:#010x}): peer stream desynced or corrupt"
+        )));
+    }
+    let kind = FrameKind::from_u8(h[4])
+        .ok_or_else(|| bad(format!("unknown frame kind {}", h[4])))?;
+    let src = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    let step = u64::from_le_bytes([
+        h[12], h[13], h[14], h[15], h[16], h[17], h[18], h[19],
+    ]);
+    let len = u32::from_le_bytes([h[20], h[21], h[22], h[23]]) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(bad(format!(
+            "frame length {len} exceeds MAX_FRAME_LEN ({MAX_FRAME_LEN}): corrupt length prefix"
+        )));
+    }
+    Ok((kind, src, step, len))
+}
+
+/// Pure whole-frame encode: header + payload as one buffer (the property
+/// tests' round-trip subject; the socket paths use [`write_frame`]).
+pub fn encode_frame(kind: FrameKind, src: u32, step: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&encode_header(kind, src, step, payload.len()));
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Pure whole-frame decode: parse one frame off the front of `buf`,
+/// returning the header and the payload slice.  Truncation (buffer shorter
+/// than the header, or than the advertised payload) is a typed
+/// [`std::io::ErrorKind::UnexpectedEof`] error.
+pub fn decode_frame(buf: &[u8]) -> Result<(Header, &[u8])> {
+    if buf.len() < HEADER_LEN {
+        return Err(short(format!(
+            "truncated frame header: {} of {HEADER_LEN} bytes",
+            buf.len()
+        )));
+    }
+    let mut h = [0u8; HEADER_LEN];
+    h.copy_from_slice(&buf[..HEADER_LEN]);
+    let (kind, src, step, len) = decode_header(&h)?;
+    let rest = &buf[HEADER_LEN..];
+    if rest.len() < len {
+        return Err(short(format!(
+            "truncated frame payload: {} of {len} bytes",
+            rest.len()
+        )));
+    }
+    Ok(((kind, src, step, len), &rest[..len]))
+}
+
+/// Write one frame (header + payload) to `w`.  One `write_all` for the
+/// header and one for the payload: the payload buffer goes onto the wire
+/// as-is, so a checked-out `BufPool` block is transmitted without a copy.
+pub fn write_frame(w: &mut impl Write, kind: FrameKind, src: u32, step: u64, payload: &[u8]) -> Result<()> {
+    w.write_all(&encode_header(kind, src, step, payload.len()))?;
+    if !payload.is_empty() {
+        w.write_all(payload)?;
+    }
+    Ok(())
+}
+
+/// Read one frame from `r`, depositing the payload into `payload` (cleared
+/// and resized — pass a recycled `BufPool` block to keep received payloads
+/// on the pool economy).  Returns `Ok(None)` on EOF *at a frame boundary*
+/// (the clean-close case); EOF mid-header or mid-payload is a typed
+/// [`std::io::ErrorKind::UnexpectedEof`] error — the peer died mid-frame.
+pub fn read_frame_into(
+    r: &mut impl Read,
+    payload: &mut Vec<u8>,
+) -> Result<Option<(FrameKind, u32, u64)>> {
+    let mut h = [0u8; HEADER_LEN];
+    // Hand-rolled first read so "no more frames" and "died mid-frame" are
+    // distinguishable: read_exact collapses both into UnexpectedEof.
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut h[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(short(format!(
+                    "peer closed mid-header: {got} of {HEADER_LEN} bytes"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    let (kind, src, step, len) = decode_header(&h)?;
+    payload.clear();
+    payload.resize(len, 0);
+    if len > 0 {
+        r.read_exact(&mut payload[..]).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                short(format!("peer closed mid-payload: wanted {len} bytes"))
+            } else {
+                Error::Io(e)
+            }
+        })?;
+    }
+    Ok(Some((kind, src, step)))
+}
+
+/// Serialize an abort cause for the control plane's [`FrameKind::Abort`]
+/// frame: `machine u32 | superstep u64 | unit_len u8 | unit | cause`.
+pub fn encode_cause(machine: u32, unit: &str, superstep: u64, cause: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(13 + unit.len() + cause.len());
+    out.extend_from_slice(&machine.to_le_bytes());
+    out.extend_from_slice(&superstep.to_le_bytes());
+    out.push(unit.len().min(255) as u8);
+    out.extend_from_slice(&unit.as_bytes()[..unit.len().min(255)]);
+    out.extend_from_slice(cause.as_bytes());
+    out
+}
+
+/// Decode an abort-cause payload back into `(machine, unit, superstep,
+/// cause)`.  The unit name is interned to the engine's `&'static` set —
+/// [`crate::worker::sync::AbortCause::unit`] is `&'static str`, so an
+/// unknown name (version skew across processes) lands on `"net"`.
+pub fn decode_cause(b: &[u8]) -> Result<(u32, &'static str, u64, String)> {
+    if b.len() < 13 {
+        return Err(short("truncated abort-cause payload"));
+    }
+    let machine = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    let superstep = u64::from_le_bytes([b[4], b[5], b[6], b[7], b[8], b[9], b[10], b[11]]);
+    let ulen = b[12] as usize;
+    if b.len() < 13 + ulen {
+        return Err(short("truncated abort-cause unit name"));
+    }
+    let unit = intern_unit(std::str::from_utf8(&b[13..13 + ulen]).unwrap_or("net"));
+    let cause = String::from_utf8_lossy(&b[13 + ulen..]).into_owned();
+    Ok((machine, unit, superstep, cause))
+}
+
+/// Map a wire unit name onto the engine's `&'static` unit-name set.
+pub fn intern_unit(s: &str) -> &'static str {
+    match s {
+        "U_c" => "U_c",
+        "U_s" => "U_s",
+        "U_r" => "U_r",
+        "load" => "load",
+        "recode" => "recode",
+        _ => "net",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite;
+
+    #[test]
+    fn header_roundtrip_all_kinds() {
+        for kind in [
+            FrameKind::Data,
+            FrameKind::End,
+            FrameKind::Load,
+            FrameKind::LoadEnd,
+            FrameKind::Hello,
+            FrameKind::Roster,
+            FrameKind::BarrierReport,
+            FrameKind::BarrierDecision,
+            FrameKind::Abort,
+            FrameKind::Goodbye,
+        ] {
+            let h = encode_header(kind, 3, 7, 99);
+            let (k, src, step, len) = decode_header(&h).unwrap();
+            assert_eq!((k, src, step, len), (kind, 3, 7, 99));
+        }
+    }
+
+    #[test]
+    fn bad_magic_unknown_kind_oversized_len_are_typed_errors() {
+        let mut h = encode_header(FrameKind::Data, 0, 0, 0);
+        h[0] ^= 0xFF;
+        assert!(matches!(decode_header(&h), Err(Error::Io(_))));
+
+        let mut h = encode_header(FrameKind::Data, 0, 0, 0);
+        h[4] = 200;
+        assert!(matches!(decode_header(&h), Err(Error::Io(_))));
+
+        let mut h = encode_header(FrameKind::Data, 0, 0, 0);
+        h[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_header(&h).unwrap_err();
+        assert!(err.to_string().contains("MAX_FRAME_LEN"), "{err}");
+    }
+
+    #[test]
+    fn decode_frame_truncation_is_unexpected_eof() {
+        let f = encode_frame(FrameKind::Data, 1, 2, &[1, 2, 3, 4]);
+        for cut in 0..f.len() {
+            let err = decode_frame(&f[..cut]).unwrap_err();
+            match err {
+                Error::Io(e) => {
+                    assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof, "cut={cut}")
+                }
+                other => panic!("cut={cut}: want Error::Io, got {other}"),
+            }
+        }
+        let ((k, src, step, len), body) = decode_frame(&f).unwrap();
+        assert_eq!((k, src, step, len), (FrameKind::Data, 1, 2, 4));
+        assert_eq!(body, &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn stream_roundtrip_reuses_payload_buffer() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Data, 2, 9, &[7; 10]).unwrap();
+        write_frame(&mut wire, FrameKind::End, 2, 9, &[]).unwrap();
+        write_frame(&mut wire, FrameKind::Goodbye, 2, 0, &[]).unwrap();
+        let mut r = &wire[..];
+        let mut buf = vec![0xAAu8; 64]; // dirty recycled block
+        assert_eq!(
+            read_frame_into(&mut r, &mut buf).unwrap(),
+            Some((FrameKind::Data, 2, 9))
+        );
+        assert_eq!(buf, vec![7u8; 10]);
+        assert_eq!(
+            read_frame_into(&mut r, &mut buf).unwrap(),
+            Some((FrameKind::End, 2, 9))
+        );
+        assert!(buf.is_empty());
+        assert_eq!(
+            read_frame_into(&mut r, &mut buf).unwrap(),
+            Some((FrameKind::Goodbye, 2, 0))
+        );
+        assert_eq!(read_frame_into(&mut r, &mut buf).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn stream_eof_mid_frame_is_typed_error() {
+        let f = encode_frame(FrameKind::Data, 0, 0, &[1, 2, 3]);
+        // Mid-header.
+        let mut r = &f[..10];
+        let mut buf = Vec::new();
+        assert!(matches!(
+            read_frame_into(&mut r, &mut buf),
+            Err(Error::Io(_))
+        ));
+        // Mid-payload.
+        let mut r = &f[..HEADER_LEN + 1];
+        assert!(matches!(
+            read_frame_into(&mut r, &mut buf),
+            Err(Error::Io(_))
+        ));
+    }
+
+    #[test]
+    fn cause_roundtrip_interns_units() {
+        let b = encode_cause(3, "U_s", 12, "injected fault: transient network send failure");
+        let (m, u, s, c) = decode_cause(&b).unwrap();
+        assert_eq!((m, u, s), (3, "U_s", 12));
+        assert!(c.contains("transient"));
+        // Unknown unit names land on "net", never a dangling reference.
+        let b = encode_cause(0, "U_x", 0, "x");
+        assert_eq!(decode_cause(&b).unwrap().1, "net");
+    }
+
+    #[test]
+    fn prop_frame_roundtrip_arbitrary_payloads() {
+        proptest_lite::run(200, |g| {
+            let kind = match g.usize_in(0, 10) {
+                0 => FrameKind::Data,
+                1 => FrameKind::End,
+                2 => FrameKind::Load,
+                3 => FrameKind::LoadEnd,
+                4 => FrameKind::Hello,
+                5 => FrameKind::Roster,
+                6 => FrameKind::BarrierReport,
+                7 => FrameKind::BarrierDecision,
+                8 => FrameKind::Abort,
+                _ => FrameKind::Goodbye,
+            };
+            let src = g.u32_below(1 << 16);
+            let step = g.u64();
+            let payload: Vec<u8> = g
+                .vec_u32(0, 2048, 256)
+                .into_iter()
+                .map(|v| v as u8)
+                .collect();
+            let wire = encode_frame(kind, src, step, &payload);
+            prop_assert!(
+                g,
+                wire.len() == HEADER_LEN + payload.len(),
+                "wire len {} != header + {}",
+                wire.len(),
+                payload.len()
+            );
+            let ((k, s2, st, len), body) = match decode_frame(&wire) {
+                Ok(v) => v,
+                Err(e) => {
+                    g.fail(format!("decode failed on valid frame: {e}"));
+                    return;
+                }
+            };
+            prop_assert!(g, k == kind, "kind {k:?} != {kind:?}");
+            prop_assert!(g, s2 == src && st == step, "src/step mismatch");
+            prop_assert!(g, len == payload.len() && body == &payload[..], "payload mismatch");
+        });
+    }
+
+    #[test]
+    fn prop_corrupted_frames_never_panic() {
+        proptest_lite::run(300, |g| {
+            let payload: Vec<u8> = g
+                .vec_u32(0, 256, 256)
+                .into_iter()
+                .map(|v| v as u8)
+                .collect();
+            let mut wire = encode_frame(FrameKind::Data, g.u32_below(8), g.u64(), &payload);
+            // Corrupt one byte, truncate, or both — decode must return
+            // Ok or a typed error, never panic.
+            if g.bool(0.7) && !wire.is_empty() {
+                let at = g.usize_in(0, wire.len());
+                wire[at] ^= 1 + (g.u32_below(255) as u8);
+            }
+            if g.bool(0.5) {
+                let keep = g.usize_in(0, wire.len() + 1);
+                wire.truncate(keep);
+            }
+            match decode_frame(&wire) {
+                Ok(((k, _, _, len), body)) => {
+                    // A surviving decode must at least be self-consistent.
+                    prop_assert!(g, body.len() == len, "inconsistent len after decode");
+                    prop_assert!(g, FrameKind::from_u8(k as u8) == Some(k), "bad kind survived");
+                }
+                Err(Error::Io(_)) => {}
+                Err(other) => {
+                    g.fail(format!("non-Io error from frame decode: {other}"));
+                }
+            }
+            // Streaming form on the same bytes: same contract.
+            let mut r = &wire[..];
+            let mut buf = Vec::new();
+            match read_frame_into(&mut r, &mut buf) {
+                Ok(_) | Err(Error::Io(_)) => {}
+                Err(other) => {
+                    g.fail(format!("non-Io error from read_frame_into: {other}"));
+                }
+            }
+        });
+    }
+}

@@ -1,131 +1,138 @@
-//! Simulated cluster network.
+//! Cluster network: a pluggable transport with two backends.
 //!
-//! The paper's insight (§3.3.1) is that on a commodity Gigabit cluster the
-//! *shared switch* is the bottleneck: all `n·(n−1)` pairs contend for it,
-//! so per-pair throughput is far below disk streaming bandwidth.  We model
-//! exactly that: a [`Switch`] serializes transmissions through a shared
-//! medium at `net_bytes_per_sec` (plus a per-batch latency), and machines
-//! exchange batches over per-destination FIFO channels (std `mpsc`
-//! preserves per-sender order, giving the FIFO property §4 relies on).
+//! The engine talks to the network through one pair of endpoint types —
+//! [`NetSender`] / [`NetReceiver`] — built by whichever backend a
+//! [`Transport`] was connected with (`-c transport=sim|tcp`, see
+//! [`TransportKind`]):
 //!
-//! Sending a batch *blocks for the simulated transmission time* — that is
-//! what makes "hide disk I/O inside communication" measurable in this
-//! reproduction.
-
+//! * **[`sim`]** (default, the seed backend): all `n` machines are threads
+//!   in this process; batches cross per-destination std `mpsc` channels and
+//!   a shared [`Switch`] models the paper's contended Gigabit medium
+//!   (§3.3.1) by blocking senders for the simulated wire time.  Every
+//!   existing test and bench runs here.
+//! * **[`tcp`]**: each machine is its own OS process; batches are framed
+//!   ([`frame`]) over `std::net::TcpStream` by per-peer writer/reader
+//!   threads that put checked-out `msg::BufPool` blocks straight onto the
+//!   wire and recycle received blocks back into the pool.  A control
+//!   channel beside the data sockets carries the distributed barrier
+//!   rounds and the `JobAbort` latch's remote trips, so
+//!   [`crate::error::Error::JobFailed`] keeps its machine/unit/superstep
+//!   attribution across process boundaries.
+//!
+//! The endpoint types are backend-agnostic on purpose: under tcp the
+//! per-peer writer threads drain the same `mpsc` queues a sim receiver
+//! would, and the reader threads feed decoded frames into the same
+//! receiver queue — so `worker/units.rs` is bit-for-bit the same code on
+//! both backends, and equivalence is a test (`tests/transport.rs`), not a
+//! hope.
+//!
 //! **Failure observation.**  When a [`crate::worker::sync::JobAbort`] is
-//! attached at [`build`] time, every potentially-unbounded wait in this
-//! module observes it: [`NetReceiver::recv`] polls the abort flag while
-//! blocked (a dead sender can never deliver the end tags it owes us),
+//! attached at build time, every potentially-unbounded wait in this module
+//! observes it: [`NetReceiver::recv`] polls the abort flag while blocked (a
+//! dead sender can never deliver the end tags it owes us),
 //! [`NetSender::send`] surfaces the abort cause instead of panicking when
 //! the peer hung up, and [`Switch::transmit`] breaks out of long simulated
 //! transmissions once the job is dead — so no unit can outlive a poisoned
 //! job inside the network layer.
 
 use crate::error::{Error, Result};
-use crate::worker::sync::{lock_clean, JobAbort};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use crate::worker::sync::JobAbort;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub mod frame;
+pub mod sim;
+pub mod tcp;
+
+pub use sim::{build, Switch};
 
 /// How often blocked channel/switch waits re-check the abort flag.
-const ABORT_POLL: Duration = Duration::from_millis(10);
+pub(crate) const ABORT_POLL: Duration = Duration::from_millis(10);
 
-/// The shared medium's reservation state.  Slot reservation and byte
-/// accounting live in **one** critical section so `total_bytes` can never
-/// be observed torn against the reserved slots (a reader either sees a
-/// transmission's slot *and* its bytes, or neither).
-struct Medium {
-    next_free: Instant,
-    wire_bytes: u64,
+/// Which transport backend a job runs on (`-c transport=sim|tcp`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process simulator: machines are threads, the [`Switch`] models
+    /// wire time.  The default, and the only backend benches/tables use.
+    #[default]
+    Sim,
+    /// Multi-process TCP: this process runs *one* machine and exchanges
+    /// framed batches with its peers over real sockets (see [`tcp`]).
+    Tcp,
 }
 
-/// Shared-medium bandwidth model: transmissions reserve back-to-back slots.
-pub struct Switch {
-    rate: f64,
-    latency: Duration,
-    medium: Mutex<Medium>,
-    /// Bytes delivered machine-locally (the fast path): they never reserve
-    /// a slot and never sleep — counted separately from wire traffic.
-    local_bytes: AtomicU64,
-    /// Job-abort latch: long simulated transmissions break out early once
-    /// the job is dead (`None` = no abort observation, seed behaviour).
-    abort: Option<Arc<JobAbort>>,
-}
-
-impl Switch {
-    /// A shared medium transmitting at `bytes_per_sec` with a fixed
-    /// per-batch latency.
-    pub fn new(bytes_per_sec: f64, latency_us: u64) -> Arc<Self> {
-        Self::with_abort(bytes_per_sec, latency_us, None)
-    }
-
-    /// Like [`Switch::new`], with an abort latch the simulated
-    /// transmission sleeps observe.
-    pub fn with_abort(
-        bytes_per_sec: f64,
-        latency_us: u64,
-        abort: Option<Arc<JobAbort>>,
-    ) -> Arc<Self> {
-        Arc::new(Self {
-            rate: bytes_per_sec.max(1.0),
-            latency: Duration::from_micros(latency_us),
-            medium: Mutex::new(Medium {
-                next_free: Instant::now(),
-                wire_bytes: 0,
-            }),
-            local_bytes: AtomicU64::new(0),
-            abort,
-        })
-    }
-
-    /// Block for the simulated transmission time of `bytes` through the
-    /// shared medium (serialized with all other transmissions).  The sleep
-    /// is always sliced into ≤[`ABORT_POLL`] naps so a poisoned job stops
-    /// paying simulated wire time promptly (the byte accounting stays —
-    /// the bytes were already committed to the medium); without an abort
-    /// latch the slicing just re-checks the clock.
-    ///
-    /// This window is exactly what a U_s track's `transmit` span measures
-    /// in the Chrome-trace export ([`crate::trace`]): [`NetSender::send`]
-    /// blocks here synchronously, so span length = queueing + wire time.
-    pub fn transmit(&self, bytes: usize) {
-        let dur = Duration::from_secs_f64(bytes as f64 / self.rate) + self.latency;
-        let until = {
-            let mut m = lock_clean(&self.medium);
-            let start = m.next_free.max(Instant::now());
-            m.next_free = start + dur;
-            m.wire_bytes += bytes as u64;
-            m.next_free
-        };
-        loop {
-            let now = Instant::now();
-            if until <= now {
-                return;
-            }
-            if self.abort.as_ref().is_some_and(|a| a.aborted()) {
-                return;
-            }
-            // analyze:allow(sleep-slicing): this loop IS the sliced-wait
-            // helper — each nap is bounded by ABORT_POLL and the abort
-            // latch is re-checked before every slice.
-            std::thread::sleep((until - now).min(ABORT_POLL));
+impl TransportKind {
+    /// Parse the config-string form (`sim` | `tcp`).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sim" => Ok(TransportKind::Sim),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(Error::Config(format!(
+                "bad value '{other}' for 'transport' (want sim | tcp)"
+            ))),
         }
     }
 
-    /// Account a locally-delivered batch: zero simulated wire time.
-    pub fn account_local(&self, bytes: usize) {
-        self.local_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    /// The config-string name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Sim => "sim",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// A connected transport: the endpoint pairs this process owns plus the
+/// backend's shared byte ledger.  Under [`TransportKind::Sim`] that is all
+/// `n` machines (threads) and the modeled switch; under
+/// [`TransportKind::Tcp`] it is exactly one machine (this process's rank)
+/// and a ledger-mode switch, plus the live [`tcp::TcpCluster`].
+pub struct Transport {
+    /// One `(sender, receiver)` pair per machine this process runs, in
+    /// machine order.
+    pub endpoints: Vec<(NetSender, NetReceiver)>,
+    /// The backend's byte ledger (wire vs local split for metrics).
+    pub switch: Arc<Switch>,
+    /// The TCP cluster handle (handshake results, control plane, clean
+    /// shutdown); `None` under sim.
+    pub cluster: Option<Arc<tcp::TcpCluster>>,
+}
+
+impl Transport {
+    /// Connect the simulator backend: `n` in-process machines over the
+    /// modeled switch (identical to [`build`], boxed for symmetry).
+    pub fn sim(
+        n: usize,
+        bytes_per_sec: f64,
+        latency_us: u64,
+        local_fast: bool,
+        abort: Option<Arc<JobAbort>>,
+    ) -> Transport {
+        let (endpoints, switch) = build(n, bytes_per_sec, latency_us, local_fast, abort);
+        Transport {
+            endpoints,
+            switch,
+            cluster: None,
+        }
     }
 
-    /// Total bytes pushed through the switch (wire traffic only).
-    pub fn total_bytes(&self) -> u64 {
-        lock_clean(&self.medium).wire_bytes
-    }
-
-    /// Total bytes delivered machine-locally, bypassing the switch.
-    pub fn local_bytes(&self) -> u64 {
-        self.local_bytes.load(Ordering::Relaxed)
+    /// Connect the TCP backend: handshake with the coordinator, establish
+    /// the full data mesh, and return this rank's single endpoint pair.
+    /// Blocks until every peer is connected (bounded by the handshake
+    /// timeout) — see [`tcp::TcpCluster::connect`].
+    pub fn tcp(
+        opts: tcp::TcpOpts,
+        pool: Arc<crate::msg::BufPool>,
+        abort: Arc<JobAbort>,
+        tracer: &Arc<crate::trace::Tracer>,
+    ) -> Result<Transport> {
+        let (endpoint, switch, cluster) = tcp::TcpCluster::connect(opts, pool, abort, tracer)?;
+        Ok(Transport {
+            endpoints: vec![endpoint],
+            switch,
+            cluster: Some(cluster),
+        })
     }
 }
 
@@ -155,6 +162,9 @@ pub struct Batch {
 
 impl Batch {
     /// Bytes the batch occupies on the wire: a 16-byte frame + the data.
+    /// (The TCP backend's physical frame header is 24 bytes — see
+    /// [`frame`] — but the *metric* stays this backend-independent value
+    /// so sim and tcp runs report comparable byte counts.)
     pub fn wire_bytes(&self) -> usize {
         16 + match &self.payload {
             Payload::Data(d) | Payload::Load(d) => d.len(),
@@ -187,7 +197,10 @@ pub struct NetSender {
 impl NetSender {
     /// Simulate transmission through the shared switch, then deliver —
     /// except batches to `self` with the fast path on, which skip the
-    /// switch entirely and are only *counted* (as local bytes).
+    /// switch entirely and are only *counted* (as local bytes).  Under the
+    /// TCP backend the switch is a pure ledger (no sleep) and "deliver"
+    /// enqueues to the destination's per-peer writer thread, which frames
+    /// the buffer onto the socket.
     /// Errors if the destination has hung up: with the job's abort latch
     /// tripped this surfaces the original failure cause (typed
     /// [`Error::JobFailed`]); without one, a hung-up peer is a corrupt
@@ -280,55 +293,45 @@ impl NetReceiver {
         }
     }
 
-    /// Receive with timeout (used by failure detection in ft tests).
-    pub fn recv_timeout(&self, d: Duration) -> Option<Batch> {
-        self.rx.recv_timeout(d).ok()
+    /// Receive with a timeout.  `Ok(Some(batch))` on delivery, `Ok(None)`
+    /// when `d` elapsed with nothing arriving, and `Err` with the same
+    /// typed causes as [`NetReceiver::recv`] when the job aborted or every
+    /// sender hung up — so callers can tell "nothing yet" from "nothing
+    /// ever again", instead of the old bare `Option` that silently
+    /// swallowed the abort cause.
+    pub fn recv_timeout(&self, d: Duration) -> Result<Option<Batch>> {
+        let deadline = std::time::Instant::now() + d;
+        loop {
+            if let Some(a) = &self.abort {
+                if a.aborted() {
+                    if let Some(c) = a.cause() {
+                        return Err(c.to_error());
+                    }
+                }
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let slice = (deadline - now).min(ABORT_POLL);
+            match self.rx.recv_timeout(slice) {
+                Ok(b) => return Ok(Some(b)),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(match self.abort.as_ref().and_then(|a| a.cause()) {
+                        Some(c) => c.to_error(),
+                        None => Error::CorruptStream("all senders hung up".into()),
+                    })
+                }
+            }
+        }
     }
-}
-
-/// Build a fully-connected simulated network of `n` machines.
-/// `local_fast` enables the local-delivery fast path (`dst == me` batches
-/// bypass the switch).  `abort` attaches the job's abort latch so channel
-/// and switch waits observe a dead sibling (pass `None` for abort-free
-/// micro-benchmarks/tests).  Also returns the shared [`Switch`] so callers
-/// can read the wire-vs-local byte split after a run.
-pub fn build(
-    n: usize,
-    bytes_per_sec: f64,
-    latency_us: u64,
-    local_fast: bool,
-    abort: Option<Arc<JobAbort>>,
-) -> (Vec<(NetSender, NetReceiver)>, Arc<Switch>) {
-    let switch = Switch::with_abort(bytes_per_sec, latency_us, abort.clone());
-    let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| channel::<Batch>()).unzip();
-    let endpoints = rxs
-        .into_iter()
-        .enumerate()
-        .map(|(me, rx)| {
-            (
-                NetSender {
-                    me,
-                    switch: switch.clone(),
-                    txs: txs.clone(),
-                    sent_bytes: 0,
-                    local_bytes: 0,
-                    local_fast,
-                    abort: abort.clone(),
-                },
-                NetReceiver {
-                    me,
-                    rx,
-                    abort: abort.clone(),
-                },
-            )
-        })
-        .collect();
-    (endpoints, switch)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Instant;
 
     #[test]
     fn fifo_per_pair() {
@@ -383,6 +386,15 @@ mod tests {
             }
         });
         assert!(t.elapsed() >= Duration::from_millis(85), "{:?}", t.elapsed());
+    }
+
+    #[test]
+    fn ledger_switch_accounts_without_sleeping() {
+        let sw = Switch::ledger(None);
+        let t = Instant::now();
+        sw.transmit(64 << 20);
+        assert!(t.elapsed() < Duration::from_millis(50), "{:?}", t.elapsed());
+        assert_eq!(sw.total_bytes(), 64 << 20);
     }
 
     #[test]
@@ -449,6 +461,38 @@ mod tests {
     }
 
     #[test]
+    fn recv_timeout_distinguishes_timeout_from_abort() {
+        use crate::worker::sync::AbortCause;
+        let abort = JobAbort::new();
+        let (mut eps, _) = build(2, 1e12, 0, false, Some(abort.clone()));
+        let (_, rx1) = eps.pop().unwrap();
+        let (mut tx0, _rx0) = eps.pop().unwrap();
+        // Nothing sent yet: a short wait is a timeout, not an error.
+        assert!(matches!(
+            rx1.recv_timeout(Duration::from_millis(20)),
+            Ok(None)
+        ));
+        // A delivered batch arrives as Ok(Some(..)).
+        tx0.send(1, 5, Payload::End).unwrap();
+        let got = rx1.recv_timeout(Duration::from_millis(200)).unwrap();
+        assert_eq!(got.map(|b| b.step), Some(5));
+        // After the abort trips, the cause surfaces as the typed error —
+        // the old bare-Option form returned None here, indistinguishable
+        // from an innocent timeout.
+        abort.trip(AbortCause {
+            machine: 0,
+            unit: "U_s",
+            superstep: 7,
+            cause: "boom".into(),
+        });
+        let err = rx1.recv_timeout(Duration::from_millis(200)).unwrap_err();
+        assert!(matches!(
+            err,
+            Error::JobFailed { machine: 0, superstep: 7, .. }
+        ));
+    }
+
+    #[test]
     fn wire_bytes_includes_frame() {
         let b = Batch {
             src: 0,
@@ -462,5 +506,13 @@ mod tests {
             payload: Payload::End,
         };
         assert_eq!(e.wire_bytes(), 16);
+    }
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("sim").unwrap(), TransportKind::Sim);
+        assert_eq!(TransportKind::parse("tcp").unwrap(), TransportKind::Tcp);
+        assert!(TransportKind::parse("udp").is_err());
+        assert_eq!(TransportKind::default().name(), "sim");
     }
 }

@@ -1,0 +1,172 @@
+//! The simulator backend: an in-process shared [`Switch`] with modeled
+//! wire time, and per-destination std `mpsc` channels as the fabric.
+//!
+//! This is the seed transport every test/bench runs on (and the default
+//! `-c transport=sim`): the paper's insight (§3.3.1) is that on a
+//! commodity Gigabit cluster the *shared switch* is the bottleneck — all
+//! `n·(n−1)` pairs contend for it, so per-pair throughput is far below
+//! disk streaming bandwidth.  We model exactly that: the [`Switch`]
+//! serializes transmissions through a shared medium at `net_bytes_per_sec`
+//! (plus a per-batch latency), and machines exchange batches over
+//! per-destination FIFO channels (std `mpsc` preserves per-sender order,
+//! giving the FIFO property §4 relies on).
+//!
+//! Sending a batch *blocks for the simulated transmission time* — that is
+//! what makes "hide disk I/O inside communication" measurable in this
+//! reproduction.  The TCP backend ([`super::tcp`]) reuses the [`Switch`]
+//! as a pure byte ledger (infinite rate, zero latency): real sockets do
+//! their own pacing, but the wire-vs-local byte split the metrics report
+//! stays one code path across backends.
+
+use super::{Batch, NetReceiver, NetSender, ABORT_POLL};
+use crate::worker::sync::{lock_clean, JobAbort};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// The shared medium's reservation state.  Slot reservation and byte
+/// accounting live in **one** critical section so `total_bytes` can never
+/// be observed torn against the reserved slots (a reader either sees a
+/// transmission's slot *and* its bytes, or neither).
+struct Medium {
+    next_free: Instant,
+    wire_bytes: u64,
+}
+
+/// Shared-medium bandwidth model: transmissions reserve back-to-back slots.
+pub struct Switch {
+    rate: f64,
+    latency: Duration,
+    medium: Mutex<Medium>,
+    /// Bytes delivered machine-locally (the fast path): they never reserve
+    /// a slot and never sleep — counted separately from wire traffic.
+    local_bytes: AtomicU64,
+    /// Job-abort latch: long simulated transmissions break out early once
+    /// the job is dead (`None` = no abort observation, seed behaviour).
+    abort: Option<Arc<JobAbort>>,
+}
+
+impl Switch {
+    /// A shared medium transmitting at `bytes_per_sec` with a fixed
+    /// per-batch latency.
+    pub fn new(bytes_per_sec: f64, latency_us: u64) -> Arc<Self> {
+        Self::with_abort(bytes_per_sec, latency_us, None)
+    }
+
+    /// Like [`Switch::new`], with an abort latch the simulated
+    /// transmission sleeps observe.
+    pub fn with_abort(
+        bytes_per_sec: f64,
+        latency_us: u64,
+        abort: Option<Arc<JobAbort>>,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            rate: bytes_per_sec.max(1.0),
+            latency: Duration::from_micros(latency_us),
+            medium: Mutex::new(Medium {
+                next_free: Instant::now(),
+                wire_bytes: 0,
+            }),
+            local_bytes: AtomicU64::new(0),
+            abort,
+        })
+    }
+
+    /// A pure byte ledger: infinite rate and zero latency, so
+    /// [`Switch::transmit`] accounts and returns without sleeping.  The
+    /// TCP backend uses this — the real kernel does the pacing there, but
+    /// metrics still read one `Switch` regardless of backend.
+    pub fn ledger(abort: Option<Arc<JobAbort>>) -> Arc<Self> {
+        Self::with_abort(f64::INFINITY, 0, abort)
+    }
+
+    /// Block for the simulated transmission time of `bytes` through the
+    /// shared medium (serialized with all other transmissions).  The sleep
+    /// is always sliced into ≤[`ABORT_POLL`] naps so a poisoned job stops
+    /// paying simulated wire time promptly (the byte accounting stays —
+    /// the bytes were already committed to the medium); without an abort
+    /// latch the slicing just re-checks the clock.
+    ///
+    /// This window is exactly what a U_s track's `transmit` span measures
+    /// in the Chrome-trace export ([`crate::trace`]): [`NetSender::send`]
+    /// blocks here synchronously, so span length = queueing + wire time.
+    pub fn transmit(&self, bytes: usize) {
+        let dur = Duration::from_secs_f64(bytes as f64 / self.rate) + self.latency;
+        let until = {
+            let mut m = lock_clean(&self.medium);
+            let start = m.next_free.max(Instant::now());
+            m.next_free = start + dur;
+            m.wire_bytes += bytes as u64;
+            m.next_free
+        };
+        loop {
+            let now = Instant::now();
+            if until <= now {
+                return;
+            }
+            if self.abort.as_ref().is_some_and(|a| a.aborted()) {
+                return;
+            }
+            // analyze:allow(sleep-slicing): this loop IS the sliced-wait
+            // helper — each nap is bounded by ABORT_POLL and the abort
+            // latch is re-checked before every slice.
+            std::thread::sleep((until - now).min(ABORT_POLL));
+        }
+    }
+
+    /// Account a locally-delivered batch: zero simulated wire time.
+    pub fn account_local(&self, bytes: usize) {
+        self.local_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Total bytes pushed through the switch (wire traffic only).
+    pub fn total_bytes(&self) -> u64 {
+        lock_clean(&self.medium).wire_bytes
+    }
+
+    /// Total bytes delivered machine-locally, bypassing the switch.
+    pub fn local_bytes(&self) -> u64 {
+        self.local_bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// Build a fully-connected simulated network of `n` machines.
+/// `local_fast` enables the local-delivery fast path (`dst == me` batches
+/// bypass the switch).  `abort` attaches the job's abort latch so channel
+/// and switch waits observe a dead sibling (pass `None` for abort-free
+/// micro-benchmarks/tests).  Also returns the shared [`Switch`] so callers
+/// can read the wire-vs-local byte split after a run.
+pub fn build(
+    n: usize,
+    bytes_per_sec: f64,
+    latency_us: u64,
+    local_fast: bool,
+    abort: Option<Arc<JobAbort>>,
+) -> (Vec<(NetSender, NetReceiver)>, Arc<Switch>) {
+    let switch = Switch::with_abort(bytes_per_sec, latency_us, abort.clone());
+    let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| channel::<Batch>()).unzip();
+    let endpoints = rxs
+        .into_iter()
+        .enumerate()
+        .map(|(me, rx)| {
+            (
+                NetSender {
+                    me,
+                    switch: switch.clone(),
+                    txs: txs.clone(),
+                    sent_bytes: 0,
+                    local_bytes: 0,
+                    local_fast,
+                    abort: abort.clone(),
+                },
+                NetReceiver {
+                    me,
+                    rx,
+                    abort: abort.clone(),
+                },
+            )
+        })
+        .collect();
+    (endpoints, switch)
+}

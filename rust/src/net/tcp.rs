@@ -1,0 +1,1140 @@
+//! The multi-process TCP backend: one machine per OS process, framed
+//! sockets instead of in-process channels.
+//!
+//! ### Topology
+//!
+//! * **Control plane, hub-and-spoke**: rank 0 (the coordinator) listens on
+//!   `transport_addr`; every follower keeps one control socket to it.  The
+//!   handshake, the distributed barrier rounds
+//!   ([`crate::worker::sync::BarrierLink`]), and the `JobAbort` latch's
+//!   remote trips all travel here.
+//! * **Data plane, full mesh**: every rank binds an ephemeral listener and
+//!   advertises it through the handshake; rank *i* initiates to every rank
+//!   *j < i* and accepts from every *j > i*, giving exactly one full-duplex
+//!   socket per machine pair.  Each side runs a writer thread (drains the
+//!   same `mpsc` queue a sim receiver would, frames each
+//!   [`super::Batch`] onto the wire, recycles the sent `BufPool` block)
+//!   and a reader thread (reads frames into recycled pool blocks and
+//!   feeds the machine's [`super::NetReceiver`] queue) — so
+//!   `worker/units.rs` runs bit-for-bit the same code as under sim.
+//!
+//! ### Handshake
+//!
+//! Followers connect and send [`FrameKind::Hello`] (`src` = rank, `step` =
+//! attempt number, payload = local resume proposal + data address).  The
+//! leader collects `n−1` distinct ranks (frames from other attempts are
+//! dropped — retry lockstep), computes the **agreed resume point** (the
+//! minimum of all proposals, or none if any machine has no usable
+//! checkpoint — min is safe because earlier checkpoints are retained), and
+//! replies [`FrameKind::Roster`] with the agreement plus every rank's data
+//! address.  The whole handshake is bounded by
+//! [`TcpOpts::handshake_timeout`]; an absent peer surfaces as a typed
+//! [`Error::Io`], not a hang.
+//!
+//! ### Failure observation (the PR 5 poison flow, across processes)
+//!
+//! A local trip of the [`JobAbort`] latch reaches this cluster through its
+//! [`Poisonable`] registration: the poison hook broadcasts the serialized
+//! [`AbortCause`] as a [`FrameKind::Abort`] control frame (followers send
+//! to the leader, the leader relays to everyone) and force-closes the data
+//! sockets so blocked reads return.  A control reader receiving an Abort
+//! frame marks it *remote-origin* **before** tripping the local latch, so
+//! the cause crosses each hop once and echo storms are impossible (trips
+//! are first-cause-wins and idempotent anyway).  Because the frame carries
+//! machine/unit/superstep/cause, every process reports the **originating**
+//! failure — `Error::JobFailed` survives the jump from threads to
+//! machines, and PR 8's retryable-cause classification stays in lockstep
+//! across processes.
+//!
+//! A peer that dies without tripping anything (SIGKILL) is observed by the
+//! OS closing its sockets: EOF *without* a preceding
+//! [`FrameKind::Goodbye`] is a death, and the observer trips the latch
+//! with a `connection to machine R lost` cause after a short grace period
+//! (the grace lets an in-flight Abort frame with the true origin win the
+//! first-cause race).  The lost-connection cause deliberately avoids the
+//! `"I/O error"` / `"transient"` retryable markers: a vanished peer will
+//! not rejoin a retry handshake, so survivors should fail fast rather
+//! than burn the retry budget on doomed handshakes.
+//!
+//! Clean shutdown is the mirror image: senders drain, writers append
+//! `Goodbye` and half-close, readers treat post-Goodbye EOF as expected.
+
+use super::frame::{self, FrameKind};
+use super::sim::Switch;
+use super::{Batch, NetReceiver, NetSender, Payload, ABORT_POLL};
+use crate::error::{Error, Result};
+use crate::msg::BufPool;
+use crate::trace::EventKind;
+use crate::worker::sync::{
+    lock_clean, wait_timeout_clean, AbortCause, BarrierLink, JobAbort, Poisonable,
+};
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Barrier id of the U_c aggregator/control rendezvous on the wire.
+pub const BARRIER_UC: u8 = 1;
+/// Barrier id of the U_r transmission-completion rendezvous.
+pub const BARRIER_UR: u8 = 2;
+/// Barrier id of the checkpoint-durability rendezvous.
+pub const BARRIER_CKPT: u8 = 3;
+
+/// Wire sentinel for "no local checkpoint to resume from".
+const NO_RESUME: u64 = u64::MAX;
+
+/// How long an EOF-observing reader waits for the *originating* abort
+/// cause to arrive on the control plane before synthesizing its own
+/// `connection lost` cause.
+const LOST_PEER_GRACE: Duration = Duration::from_millis(300);
+
+/// Connection parameters for [`TcpCluster::connect`].
+#[derive(Clone, Debug)]
+pub struct TcpOpts {
+    /// Cluster size (total machine processes).
+    pub n: usize,
+    /// This process's machine id, `0..n`; rank 0 is the coordinator.
+    pub rank: usize,
+    /// The coordinator's control-plane address (`host:port`).  Rank 0
+    /// binds it (or reuses a listener prebound via [`leader_bind`]);
+    /// followers connect to it.
+    pub addr: String,
+    /// This process's local resume proposal (latest durable checkpoint in
+    /// its private checkpoint dir); the handshake agrees on the cluster
+    /// minimum.
+    pub resume: Option<u64>,
+    /// Attempt number (0 = first run, +1 per auto-resume retry).  Tagged
+    /// on every handshake frame so stale sockets from a previous attempt
+    /// are dropped instead of corrupting the roster.
+    pub attempt: u64,
+    /// Local-delivery fast path knob, mirroring the sim backend's
+    /// (`JobConfig::local_fastpath`).
+    pub local_fast: bool,
+    /// Bound on the whole handshake (connect + hello + roster + data
+    /// mesh).  A peer that never shows up yields a typed [`Error::Io`].
+    pub handshake_timeout: Duration,
+}
+
+impl TcpOpts {
+    /// Options with the default 30 s handshake timeout.
+    pub fn new(n: usize, rank: usize, addr: impl Into<String>) -> Self {
+        Self {
+            n,
+            rank,
+            addr: addr.into(),
+            resume: None,
+            attempt: 0,
+            local_fast: true,
+            handshake_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Process-global registry of leader control listeners, keyed by address.
+/// The listener must outlive one attempt: auto-resume retries re-handshake
+/// on the *same* address, and rebinding between attempts would race the
+/// followers' reconnects (and lose an ephemeral `:0` port entirely).
+static LISTENERS: OnceLock<Mutex<HashMap<String, Arc<TcpListener>>>> = OnceLock::new();
+
+fn listener_registry() -> &'static Mutex<HashMap<String, Arc<TcpListener>>> {
+    LISTENERS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Bind the coordinator control listener for `addr` (may be `host:0` for
+/// an ephemeral port) and park it in the process-global registry; returns
+/// the *actual* bound address, which is what followers must be given and
+/// what [`TcpOpts::addr`] should carry.  Idempotent per returned address.
+pub fn leader_bind(addr: &str) -> Result<String> {
+    let mut reg = lock_clean(listener_registry());
+    if reg.contains_key(addr) {
+        return Ok(addr.to_string());
+    }
+    let l = TcpListener::bind(addr)?;
+    let actual = l.local_addr()?.to_string();
+    reg.insert(actual.clone(), Arc::new(l));
+    Ok(actual)
+}
+
+fn timeout_err(what: &str) -> Error {
+    Error::Io(std::io::Error::new(std::io::ErrorKind::TimedOut, what.to_string()))
+}
+
+/// Render an error for a lost-connection abort cause.  Uses the *inner*
+/// I/O message so the cause does not contain the `"I/O error"` retryable
+/// marker — see the module docs on why vanished peers must not be
+/// retried.
+fn io_msg(e: &Error) -> String {
+    match e {
+        Error::Io(io) => io.to_string(),
+        other => format!("{other}"),
+    }
+}
+
+/// Barrier-round routing state fed by the control reader threads and
+/// drained by the [`BarrierLink`] waits.
+#[derive(Default)]
+struct BarrierMaps {
+    /// Leader only: per `(bid, seq)` round, follower deposits by rank
+    /// (index = rank − 1).
+    reports: HashMap<(u8, u64), Vec<Option<Vec<u8>>>>,
+    /// Followers only: per `(bid, seq)` round, the leader's decision.
+    decisions: HashMap<(u8, u64), Vec<u8>>,
+}
+
+/// State shared between the cluster handle and its socket threads.
+struct Shared {
+    n: usize,
+    rank: usize,
+    abort: Arc<JobAbort>,
+    /// Set once by [`TcpCluster::shutdown`]: subsequent socket errors and
+    /// EOFs are expected, not peer deaths.
+    closing: AtomicBool,
+    /// Set by a control reader *before* it trips a remotely-received
+    /// abort, so the poison hook does not echo the cause back across the
+    /// hop it arrived on.
+    remote_origin: AtomicBool,
+    barrier: Mutex<BarrierMaps>,
+    cond: Condvar,
+    /// Control-socket write halves by peer rank (leader: one per
+    /// follower; follower: index 0 only; own slot `None`).
+    ctrl: Vec<Option<Mutex<TcpStream>>>,
+}
+
+impl Shared {
+    fn closing(&self) -> bool {
+        self.closing.load(Ordering::SeqCst)
+    }
+
+    /// Trip the job abort with a transport-level cause unless the job is
+    /// already dead or shutting down.
+    fn trip_if_live(&self, superstep: u64, cause: String) {
+        if self.closing() || self.abort.aborted() {
+            return;
+        }
+        self.abort.trip(AbortCause {
+            machine: self.rank,
+            unit: "net",
+            superstep,
+            cause,
+        });
+    }
+
+    /// A reader observed the connection to `peer` die.  Wait briefly for
+    /// the originating cause to arrive on the control plane (first cause
+    /// wins job-wide, and the true origin beats our synthesized one), then
+    /// trip with a `connection lost` cause if the job is still live.
+    fn trip_lost_peer(&self, peer: usize, superstep: u64, err: Option<Error>) {
+        let deadline = Instant::now() + LOST_PEER_GRACE;
+        while Instant::now() < deadline {
+            if self.closing() || self.abort.aborted() {
+                return;
+            }
+            // analyze:allow(sleep-slicing): bounded grace poll — each nap
+            // is ABORT_POLL and the abort latch is re-checked first.
+            std::thread::sleep(ABORT_POLL);
+        }
+        let detail = match err {
+            Some(e) => io_msg(&e),
+            None => "peer closed without goodbye".to_string(),
+        };
+        self.trip_if_live(
+            superstep,
+            format!("connection to machine {peer} lost: {detail}"),
+        );
+    }
+
+    /// Write one frame on the control socket towards `peer`.  `Ok` means
+    /// the kernel accepted the bytes; errors are returned raw (callers
+    /// decide whether they are trip-worthy).
+    fn ctrl_write_raw(&self, peer: usize, kind: FrameKind, step: u64, body: &[u8]) -> Result<()> {
+        let slot = self.ctrl.get(peer).and_then(|s| s.as_ref()).ok_or_else(|| {
+            Error::CorruptStream(format!("no control socket towards machine {peer}"))
+        })?;
+        let mut sock = lock_clean(slot);
+        frame::write_frame(&mut *sock, kind, self.rank as u32, step, body)
+    }
+
+    /// Barrier-path control write: a failure here means the round can
+    /// never complete, so trip the latch and surface the first cause.
+    fn ctrl_write(&self, peer: usize, kind: FrameKind, step: u64, body: &[u8]) -> Result<()> {
+        match self.ctrl_write_raw(peer, kind, step, body) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.trip_if_live(
+                    step,
+                    format!("connection to machine {peer} lost: {}", io_msg(&e)),
+                );
+                Err(self.abort.first_cause_or(e))
+            }
+        }
+    }
+
+    /// Block until `f` yields, polling the abort latch: the typed abort
+    /// error surfaces instead of a wedge when the job dies mid-round.
+    fn wait_barrier<O>(&self, f: impl Fn(&mut BarrierMaps) -> Option<O>) -> Result<O> {
+        let mut st = lock_clean(&self.barrier);
+        loop {
+            if let Some(o) = f(&mut st) {
+                return Ok(o);
+            }
+            if let Some(c) = self.abort.cause() {
+                return Err(c.to_error());
+            }
+            st = wait_timeout_clean(&self.cond, st, ABORT_POLL);
+        }
+    }
+}
+
+/// A connected TCP cluster: this process's view of the `n`-process job.
+/// Returned by [`TcpCluster::connect`]; implements [`BarrierLink`] (the
+/// distributed `Rendezvous` carrier) and [`Poisonable`] (the `JobAbort`
+/// latch's remote trip path).  [`TcpCluster::shutdown`] is idempotent and
+/// also runs on drop, so threads and sockets never outlive the job.
+pub struct TcpCluster {
+    shared: Arc<Shared>,
+    /// The handshake's cluster-wide resume agreement (min of all local
+    /// proposals; `None` if any machine had no usable checkpoint).
+    agreed_resume: Option<u64>,
+    /// Extra clones of the data sockets, for forced teardown.
+    data_socks: Vec<Option<TcpStream>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl TcpCluster {
+    /// Handshake with the coordinator, establish the full data mesh, spawn
+    /// the per-peer socket threads, and return this rank's endpoint pair
+    /// plus the ledger [`Switch`] (real sockets pace themselves; the
+    /// switch only accounts the wire-vs-local byte split) and the cluster
+    /// handle.  Blocks for at most [`TcpOpts::handshake_timeout`].
+    pub fn connect(
+        opts: TcpOpts,
+        pool: Arc<BufPool>,
+        abort: Arc<JobAbort>,
+        tracer: &Arc<crate::trace::Tracer>,
+    ) -> Result<((NetSender, NetReceiver), Arc<Switch>, Arc<TcpCluster>)> {
+        if opts.rank >= opts.n {
+            return Err(Error::Config(format!(
+                "transport_rank {} out of range for {} machines",
+                opts.rank, opts.n
+            )));
+        }
+        let deadline = Instant::now() + opts.handshake_timeout;
+        let mut tr = tracer.unit(opts.rank, "net");
+        let hs = if opts.rank == 0 {
+            handshake_leader(&opts, deadline, &abort, &mut tr)?
+        } else {
+            handshake_follower(&opts, deadline, &mut tr)?
+        };
+        let mesh = data_mesh(&opts, &hs, deadline, &mut tr)?;
+
+        let shared = Arc::new(Shared {
+            n: opts.n,
+            rank: opts.rank,
+            abort: abort.clone(),
+            closing: AtomicBool::new(false),
+            remote_origin: AtomicBool::new(false),
+            barrier: Mutex::new(BarrierMaps::default()),
+            cond: Condvar::new(),
+            ctrl: hs.ctrl_write,
+        });
+
+        // Endpoint wiring: identical shapes to the sim backend.  txs[j]
+        // feeds peer j's writer thread; txs[rank] is the loopback into our
+        // own receiver queue; reader threads feed the same queue.
+        let (rx_tx, rx) = channel::<Batch>();
+        let switch = Switch::ledger(Some(abort.clone()));
+        let mut threads: Vec<JoinHandle<()>> = Vec::new();
+        let mut data_socks: Vec<Option<TcpStream>> = (0..opts.n).map(|_| None).collect();
+        let mut txs: Vec<Option<Sender<Batch>>> = (0..opts.n).map(|_| None).collect();
+        txs[opts.rank] = Some(rx_tx.clone());
+        for (j, sock) in mesh.into_iter().enumerate() {
+            let Some(sock) = sock else { continue };
+            let wsock = sock.try_clone()?;
+            let rsock = sock.try_clone()?;
+            data_socks[j] = Some(sock);
+            let (tx, out_rx) = channel::<Batch>();
+            txs[j] = Some(tx);
+            let (sh, pl) = (shared.clone(), pool.clone());
+            threads.push(std::thread::spawn(move || writer_loop(&sh, j, wsock, out_rx, &pl)));
+            let (sh, pl, fwd) = (shared.clone(), pool.clone(), rx_tx.clone());
+            threads.push(std::thread::spawn(move || reader_loop(&sh, j, rsock, fwd, &pl)));
+        }
+        // Control reader threads: the leader watches every follower's
+        // socket, a follower watches the leader's.
+        for (peer, sock) in hs.ctrl_read.into_iter().enumerate() {
+            let Some(sock) = sock else { continue };
+            let sh = shared.clone();
+            threads.push(std::thread::spawn(move || control_loop(&sh, peer, sock)));
+        }
+        tr.finish();
+
+        let sender = NetSender {
+            me: opts.rank,
+            switch: switch.clone(),
+            txs: txs.into_iter().map(|t| t.expect("tx built per rank")).collect(),
+            sent_bytes: 0,
+            local_bytes: 0,
+            local_fast: opts.local_fast,
+            abort: Some(abort.clone()),
+        };
+        let receiver = NetReceiver {
+            me: opts.rank,
+            rx,
+            abort: Some(abort),
+        };
+        let cluster = Arc::new(TcpCluster {
+            shared,
+            agreed_resume: hs.agreed_resume,
+            data_socks,
+            threads: Mutex::new(threads),
+        });
+        Ok(((sender, receiver), switch, cluster))
+    }
+
+    /// The handshake's cluster-wide resume agreement.
+    pub fn agreed_resume(&self) -> Option<u64> {
+        self.agreed_resume
+    }
+
+    /// Number of machine processes in the cluster.
+    pub fn peers(&self) -> usize {
+        self.shared.n
+    }
+
+    /// This process's rank.
+    pub fn rank(&self) -> usize {
+        self.shared.rank
+    }
+
+    /// Tear the cluster down: mark closing, send `Goodbye` on the control
+    /// plane, force every socket shut so blocked reads return, and join
+    /// all socket threads.  Idempotent; also runs on drop.  Call after
+    /// the machine thread has finished (success or failure) — the data
+    /// writers have drained and half-closed by then.
+    pub fn shutdown(&self) {
+        let sh = &self.shared;
+        if sh.closing.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for peer in 0..sh.n {
+            if peer != sh.rank && sh.ctrl[peer].is_some() {
+                let _ = sh.ctrl_write_raw(peer, FrameKind::Goodbye, 0, &[]);
+            }
+        }
+        for s in self.data_socks.iter().flatten() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for slot in sh.ctrl.iter().flatten() {
+            let _ = lock_clean(slot).shutdown(Shutdown::Both);
+        }
+        sh.cond.notify_all();
+        let handles = std::mem::take(&mut *lock_clean(&self.threads));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpCluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl BarrierLink for TcpCluster {
+    fn send_report(&self, bid: u8, seq: u64, payload: Vec<u8>) -> Result<()> {
+        debug_assert_ne!(self.shared.rank, 0, "leader deposits locally");
+        let mut body = Vec::with_capacity(1 + payload.len());
+        body.push(bid);
+        body.extend_from_slice(&payload);
+        self.shared.ctrl_write(0, FrameKind::BarrierReport, seq, &body)
+    }
+
+    fn recv_reports(&self, bid: u8, seq: u64) -> Result<Vec<Vec<u8>>> {
+        self.shared.wait_barrier(|maps| {
+            let full = maps
+                .reports
+                .get(&(bid, seq))
+                .is_some_and(|v| v.iter().all(Option::is_some));
+            if !full {
+                return None;
+            }
+            let v = maps.reports.remove(&(bid, seq)).unwrap();
+            Some(v.into_iter().map(|p| p.unwrap()).collect())
+        })
+    }
+
+    fn send_decision(&self, bid: u8, seq: u64, payload: Vec<u8>) -> Result<()> {
+        let mut body = Vec::with_capacity(1 + payload.len());
+        body.push(bid);
+        body.extend_from_slice(&payload);
+        for peer in 1..self.shared.n {
+            self.shared
+                .ctrl_write(peer, FrameKind::BarrierDecision, seq, &body)?;
+        }
+        Ok(())
+    }
+
+    fn recv_decision(&self, bid: u8, seq: u64) -> Result<Vec<u8>> {
+        self.shared
+            .wait_barrier(|maps| maps.decisions.remove(&(bid, seq)))
+    }
+}
+
+impl Poisonable for TcpCluster {
+    /// The remote trip path: broadcast the cause as an Abort control frame
+    /// (leader → all followers; follower → leader, unless the cause itself
+    /// arrived remotely) and force the data sockets shut so blocked reads
+    /// observe the trip.  Send failures are ignored — the peer that cannot
+    /// be reached is dead or closing, and either way already knows.
+    fn poison(&self, cause: Arc<AbortCause>) {
+        let sh = &self.shared;
+        if !sh.closing() {
+            let body = frame::encode_cause(
+                cause.machine as u32,
+                cause.unit,
+                cause.superstep,
+                &cause.cause,
+            );
+            if sh.rank == 0 {
+                for peer in 1..sh.n {
+                    let _ = sh.ctrl_write_raw(peer, FrameKind::Abort, cause.superstep, &body);
+                }
+            } else if !sh.remote_origin.load(Ordering::SeqCst) {
+                let _ = sh.ctrl_write_raw(0, FrameKind::Abort, cause.superstep, &body);
+            }
+        }
+        for s in self.data_socks.iter().flatten() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        sh.cond.notify_all();
+    }
+}
+
+/// Handshake result: the roster plus the split control sockets.
+struct Handshake {
+    agreed_resume: Option<u64>,
+    /// Every rank's data-plane address (index = rank; own entry unused).
+    data_addrs: Vec<String>,
+    /// This rank's bound data listener.
+    data_listener: TcpListener,
+    /// Control write halves by peer rank (wrapped later by [`Shared`]).
+    ctrl_write: Vec<Option<Mutex<TcpStream>>>,
+    /// Control read halves by peer rank.
+    ctrl_read: Vec<Option<TcpStream>>,
+}
+
+/// Encode a Hello payload: resume proposal + data address.
+fn encode_hello(resume: Option<u64>, data_addr: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + data_addr.len());
+    out.extend_from_slice(&resume.unwrap_or(NO_RESUME).to_le_bytes());
+    out.extend_from_slice(data_addr.as_bytes());
+    out
+}
+
+fn decode_hello(b: &[u8]) -> Result<(Option<u64>, String)> {
+    if b.len() < 8 {
+        return Err(Error::CorruptStream("truncated hello payload".into()));
+    }
+    let r = u64::from_le_bytes(b[..8].try_into().unwrap());
+    let resume = (r != NO_RESUME).then_some(r);
+    let addr = std::str::from_utf8(&b[8..])
+        .map_err(|_| Error::CorruptStream("non-utf8 data address in hello".into()))?
+        .to_string();
+    Ok((resume, addr))
+}
+
+/// Encode a Roster payload: agreed resume + every rank's data address.
+fn encode_roster(agreed: Option<u64>, addrs: &[String]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&agreed.unwrap_or(NO_RESUME).to_le_bytes());
+    for a in addrs {
+        out.extend_from_slice(&(a.len() as u16).to_le_bytes());
+        out.extend_from_slice(a.as_bytes());
+    }
+    out
+}
+
+fn decode_roster(b: &[u8], n: usize) -> Result<(Option<u64>, Vec<String>)> {
+    let bad = || Error::CorruptStream("truncated roster payload".into());
+    if b.len() < 8 {
+        return Err(bad());
+    }
+    let r = u64::from_le_bytes(b[..8].try_into().unwrap());
+    let agreed = (r != NO_RESUME).then_some(r);
+    let mut addrs = Vec::with_capacity(n);
+    let mut at = 8usize;
+    for _ in 0..n {
+        if b.len() < at + 2 {
+            return Err(bad());
+        }
+        let len = u16::from_le_bytes([b[at], b[at + 1]]) as usize;
+        at += 2;
+        if b.len() < at + len {
+            return Err(bad());
+        }
+        let a = std::str::from_utf8(&b[at..at + len])
+            .map_err(|_| Error::CorruptStream("non-utf8 data address in roster".into()))?;
+        addrs.push(a.to_string());
+        at += len;
+    }
+    Ok((agreed, addrs))
+}
+
+/// Combine local resume proposals into the cluster agreement: resume is
+/// only possible from a step *every* machine has durable (min); one
+/// machine without a checkpoint forces a fresh start.
+fn agree_resume(proposals: &[Option<u64>]) -> Option<u64> {
+    proposals
+        .iter()
+        .copied()
+        .reduce(|a, b| Some(a?.min(b?)))
+        .flatten()
+}
+
+/// Bind this rank's ephemeral data-plane listener on the same interface
+/// as its control-plane anchor.
+fn bind_data_listener(anchor: SocketAddr) -> Result<(TcpListener, String)> {
+    let l = TcpListener::bind(SocketAddr::new(anchor.ip(), 0))?;
+    let addr = l.local_addr()?.to_string();
+    Ok((l, addr))
+}
+
+/// Read exactly one frame off `sock` with the handshake deadline as a
+/// read timeout (handshake sockets are dropped wholesale on error, so a
+/// timeout cannot desync anything — unlike post-handshake reads, which
+/// must stay blocking).
+fn read_handshake_frame(
+    sock: &mut TcpStream,
+    deadline: Instant,
+    buf: &mut Vec<u8>,
+) -> Result<(FrameKind, u32, u64)> {
+    let left = deadline
+        .checked_duration_since(Instant::now())
+        .ok_or_else(|| timeout_err("transport handshake timed out"))?;
+    sock.set_read_timeout(Some(left))?;
+    let got = frame::read_frame_into(sock, buf)?;
+    got.ok_or_else(|| Error::CorruptStream("peer closed during handshake".into()))
+}
+
+/// Rank 0's side of the handshake: collect `n−1` Hellos, agree the resume
+/// point, broadcast the Roster.
+fn handshake_leader(
+    opts: &TcpOpts,
+    deadline: Instant,
+    abort: &Arc<JobAbort>,
+    tr: &mut crate::trace::UnitTracer,
+) -> Result<Handshake> {
+    let listener = {
+        let mut reg = lock_clean(listener_registry());
+        match reg.get(&opts.addr) {
+            Some(l) => l.clone(),
+            None => {
+                let l = Arc::new(TcpListener::bind(&opts.addr)?);
+                reg.insert(opts.addr.clone(), l.clone());
+                l
+            }
+        }
+    };
+    let (data_listener, data_addr) = bind_data_listener(listener.local_addr()?)?;
+    // Followers by rank: (control socket, resume proposal, data address).
+    let mut peers: HashMap<usize, (TcpStream, Option<u64>, String)> = HashMap::new();
+    listener.set_nonblocking(true)?;
+    let mut buf = Vec::new();
+    while peers.len() < opts.n - 1 {
+        if let Some(c) = abort.cause() {
+            return Err(c.to_error());
+        }
+        match listener.accept() {
+            Ok((mut sock, _)) => {
+                sock.set_nonblocking(false)?;
+                // A malformed or stale connector is dropped, not fatal:
+                // the expected peer may still be on its way.
+                let hello = sock
+                    .set_nodelay(true)
+                    .map_err(Error::Io)
+                    .and_then(|_| read_handshake_frame(&mut sock, deadline, &mut buf));
+                if let Ok((FrameKind::Hello, src, step)) = hello {
+                    if step == opts.attempt && (1..opts.n).contains(&(src as usize)) {
+                        if let Ok((resume, addr)) = decode_hello(&buf) {
+                            tr.instant(EventKind::Control, FrameKind::Hello as u64);
+                            peers.insert(src as usize, (sock, resume, addr));
+                        }
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(timeout_err(&format!(
+                        "transport handshake timed out: {} of {} peers joined",
+                        peers.len(),
+                        opts.n - 1
+                    )));
+                }
+                // analyze:allow(sleep-slicing): bounded handshake poll —
+                // abort latch and deadline re-checked every slice.
+                std::thread::sleep(ABORT_POLL);
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    listener.set_nonblocking(false)?;
+
+    let mut proposals: Vec<Option<u64>> = vec![opts.resume];
+    let mut data_addrs: Vec<String> = vec![data_addr];
+    for rank in 1..opts.n {
+        let (_, resume, addr) = &peers[&rank];
+        proposals.push(*resume);
+        data_addrs.push(addr.clone());
+    }
+    let agreed = agree_resume(&proposals);
+    let roster = encode_roster(agreed, &data_addrs);
+    let mut ctrl_write: Vec<Option<Mutex<TcpStream>>> = (0..opts.n).map(|_| None).collect();
+    let mut ctrl_read: Vec<Option<TcpStream>> = (0..opts.n).map(|_| None).collect();
+    for (rank, (mut sock, _, _)) in peers {
+        sock.set_read_timeout(None)?;
+        frame::write_frame(&mut sock, FrameKind::Roster, 0, opts.attempt, &roster)?;
+        tr.instant(EventKind::Control, FrameKind::Roster as u64);
+        ctrl_read[rank] = Some(sock.try_clone()?);
+        ctrl_write[rank] = Some(Mutex::new(sock));
+    }
+    Ok(Handshake {
+        agreed_resume: agreed,
+        data_addrs,
+        data_listener,
+        ctrl_write,
+        ctrl_read,
+    })
+}
+
+/// A follower's side of the handshake: connect, Hello, await the Roster.
+fn handshake_follower(
+    opts: &TcpOpts,
+    deadline: Instant,
+    tr: &mut crate::trace::UnitTracer,
+) -> Result<Handshake> {
+    let mut sock = loop {
+        match TcpStream::connect(&opts.addr) {
+            Ok(s) => break s,
+            Err(_) if Instant::now() < deadline => {
+                // analyze:allow(sleep-slicing): bounded connect retry; the
+                // coordinator may simply not have bound yet.
+                std::thread::sleep(ABORT_POLL);
+            }
+            Err(e) => {
+                return Err(Error::Io(std::io::Error::new(
+                    e.kind(),
+                    format!("transport handshake timed out connecting to coordinator {}: {e}", opts.addr),
+                )))
+            }
+        }
+    };
+    sock.set_nodelay(true)?;
+    let (data_listener, data_addr) = bind_data_listener(sock.local_addr()?)?;
+    frame::write_frame(
+        &mut sock,
+        FrameKind::Hello,
+        opts.rank as u32,
+        opts.attempt,
+        &encode_hello(opts.resume, &data_addr),
+    )?;
+    tr.instant(EventKind::Control, FrameKind::Hello as u64);
+    let mut buf = Vec::new();
+    let (kind, _, step) = read_handshake_frame(&mut sock, deadline, &mut buf)?;
+    if kind != FrameKind::Roster || step != opts.attempt {
+        return Err(Error::CorruptStream(format!(
+            "expected roster for attempt {}, got {kind:?} (attempt {step})",
+            opts.attempt
+        )));
+    }
+    let (agreed, data_addrs) = decode_roster(&buf, opts.n)?;
+    tr.instant(EventKind::Control, FrameKind::Roster as u64);
+    sock.set_read_timeout(None)?;
+    let mut ctrl_write: Vec<Option<Mutex<TcpStream>>> = (0..opts.n).map(|_| None).collect();
+    let mut ctrl_read: Vec<Option<TcpStream>> = (0..opts.n).map(|_| None).collect();
+    ctrl_read[0] = Some(sock.try_clone()?);
+    ctrl_write[0] = Some(Mutex::new(sock));
+    Ok(Handshake {
+        agreed_resume: agreed,
+        data_addrs,
+        data_listener,
+        ctrl_write,
+        ctrl_read,
+    })
+}
+
+/// Establish the full data mesh: initiate to every lower rank, accept from
+/// every higher one; exactly one socket per pair, identified by a Hello
+/// frame from the initiator.  Returns sockets by peer rank.
+fn data_mesh(
+    opts: &TcpOpts,
+    hs: &Handshake,
+    deadline: Instant,
+    tr: &mut crate::trace::UnitTracer,
+) -> Result<Vec<Option<TcpStream>>> {
+    let mut socks: Vec<Option<TcpStream>> = (0..opts.n).map(|_| None).collect();
+    for (peer, addr) in hs.data_addrs.iter().enumerate().take(opts.rank) {
+        let mut sock = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(_) if Instant::now() < deadline => {
+                    // analyze:allow(sleep-slicing): bounded connect retry
+                    // against a peer listener bound before its Hello.
+                    std::thread::sleep(ABORT_POLL);
+                }
+                Err(e) => {
+                    return Err(Error::Io(std::io::Error::new(
+                        e.kind(),
+                        format!("data-plane connect to machine {peer} ({addr}) failed: {e}"),
+                    )))
+                }
+            }
+        };
+        sock.set_nodelay(true)?;
+        frame::write_frame(&mut sock, FrameKind::Hello, opts.rank as u32, opts.attempt, &[])?;
+        tr.instant(EventKind::Connect, peer as u64);
+        socks[peer] = Some(sock);
+    }
+    let mut buf = Vec::new();
+    hs.data_listener.set_nonblocking(true)?;
+    while socks
+        .iter()
+        .enumerate()
+        .any(|(j, s)| j != opts.rank && s.is_none())
+    {
+        match hs.data_listener.accept() {
+            Ok((mut sock, _)) => {
+                sock.set_nonblocking(false)?;
+                let hello = sock
+                    .set_nodelay(true)
+                    .map_err(Error::Io)
+                    .and_then(|_| read_handshake_frame(&mut sock, deadline, &mut buf));
+                if let Ok((FrameKind::Hello, src, step)) = hello {
+                    let src = src as usize;
+                    if step == opts.attempt && src > opts.rank && src < opts.n {
+                        sock.set_read_timeout(None)?;
+                        tr.instant(EventKind::Connect, src as u64);
+                        socks[src] = Some(sock);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    let missing: Vec<usize> = socks
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, s)| *j != opts.rank && s.is_none())
+                        .map(|(j, _)| j)
+                        .collect();
+                    return Err(timeout_err(&format!(
+                        "data-plane handshake timed out waiting for machines {missing:?}"
+                    )));
+                }
+                // analyze:allow(sleep-slicing): bounded accept poll.
+                std::thread::sleep(ABORT_POLL);
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    for s in socks.iter().flatten() {
+        s.set_read_timeout(None)?;
+    }
+    Ok(socks)
+}
+
+/// Per-peer data-plane writer: drain the machine's outgoing queue for one
+/// peer, frame each batch onto the socket, recycle the sent buffer.  On
+/// clean disconnect (every `NetSender` clone dropped with the job alive)
+/// it appends a `Goodbye` and half-closes, so the peer's reader can tell
+/// shutdown from death.
+fn writer_loop(sh: &Shared, peer: usize, mut sock: TcpStream, out: Receiver<Batch>, pool: &BufPool) {
+    loop {
+        match out.recv_timeout(ABORT_POLL) {
+            Ok(b) => {
+                let (kind, data) = match b.payload {
+                    Payload::Data(d) => (FrameKind::Data, Some(d)),
+                    Payload::End => (FrameKind::End, None),
+                    Payload::Load(d) => (FrameKind::Load, Some(d)),
+                    Payload::LoadEnd => (FrameKind::LoadEnd, None),
+                };
+                let res = frame::write_frame(
+                    &mut sock,
+                    kind,
+                    b.src as u32,
+                    b.step,
+                    data.as_deref().unwrap_or(&[]),
+                );
+                if let Some(d) = data {
+                    pool.put(d);
+                }
+                if let Err(e) = res {
+                    sh.trip_if_live(
+                        b.step,
+                        format!("connection to machine {peer} lost while sending: {}", io_msg(&e)),
+                    );
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if sh.abort.aborted() {
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if !sh.abort.aborted() {
+                    let _ = frame::write_frame(&mut sock, FrameKind::Goodbye, sh.rank as u32, 0, &[]);
+                }
+                break;
+            }
+        }
+    }
+    let _ = sock.shutdown(Shutdown::Write);
+}
+
+/// Per-peer data-plane reader: read frames into recycled pool blocks and
+/// feed them to the machine's receiver queue.  EOF without a preceding
+/// `Goodbye` (and any read error outside shutdown) is a peer death.
+fn reader_loop(sh: &Shared, peer: usize, mut sock: TcpStream, fwd: Sender<Batch>, pool: &BufPool) {
+    let mut goodbye = false;
+    let mut last_step = 0u64;
+    loop {
+        let mut payload = pool.take();
+        match frame::read_frame_into(&mut sock, &mut payload) {
+            Ok(Some((kind, src, step))) => {
+                last_step = step;
+                let p = match kind {
+                    FrameKind::Data => Payload::Data(payload),
+                    FrameKind::Load => Payload::Load(payload),
+                    FrameKind::End => {
+                        pool.put(payload);
+                        Payload::End
+                    }
+                    FrameKind::LoadEnd => {
+                        pool.put(payload);
+                        Payload::LoadEnd
+                    }
+                    FrameKind::Goodbye => {
+                        pool.put(payload);
+                        goodbye = true;
+                        continue;
+                    }
+                    other => {
+                        pool.put(payload);
+                        sh.trip_if_live(
+                            step,
+                            format!("unexpected {other:?} frame on data socket from machine {peer}"),
+                        );
+                        break;
+                    }
+                };
+                if fwd
+                    .send(Batch {
+                        src: src as usize,
+                        step,
+                        payload: p,
+                    })
+                    .is_err()
+                {
+                    // Receiver gone: the local machine already finished.
+                    break;
+                }
+            }
+            Ok(None) => {
+                pool.put(payload);
+                if !goodbye {
+                    sh.trip_lost_peer(peer, last_step, None);
+                }
+                break;
+            }
+            Err(e) => {
+                pool.put(payload);
+                sh.trip_lost_peer(peer, last_step, Some(e));
+                break;
+            }
+        }
+    }
+}
+
+/// Control-plane reader: route barrier rounds, apply remote aborts, and
+/// watch the peer's liveness.  Runs per follower socket on the leader,
+/// and once (towards the leader) on a follower.
+fn control_loop(sh: &Arc<Shared>, peer: usize, mut sock: TcpStream) {
+    let mut goodbye = false;
+    let mut buf = Vec::new();
+    loop {
+        match frame::read_frame_into(&mut sock, &mut buf) {
+            Ok(Some((kind, src, step))) => match kind {
+                FrameKind::BarrierReport if sh.rank == 0 && !buf.is_empty() => {
+                    let bid = buf[0];
+                    let idx = (src as usize).wrapping_sub(1);
+                    {
+                        let mut maps = lock_clean(&sh.barrier);
+                        let slot = maps
+                            .reports
+                            .entry((bid, step))
+                            .or_insert_with(|| vec![None; sh.n - 1]);
+                        if idx < slot.len() {
+                            slot[idx] = Some(buf[1..].to_vec());
+                        }
+                    }
+                    sh.cond.notify_all();
+                }
+                FrameKind::BarrierDecision if sh.rank != 0 && !buf.is_empty() => {
+                    let bid = buf[0];
+                    {
+                        let mut maps = lock_clean(&sh.barrier);
+                        maps.decisions.insert((bid, step), buf[1..].to_vec());
+                    }
+                    sh.cond.notify_all();
+                }
+                FrameKind::Abort => {
+                    // Remote-origin first: the poison hook must not echo
+                    // this cause back across the hop it arrived on.
+                    sh.remote_origin.store(true, Ordering::SeqCst);
+                    let cause = match frame::decode_cause(&buf) {
+                        Ok((m, u, s, c)) => AbortCause {
+                            machine: m as usize,
+                            unit: u,
+                            superstep: s,
+                            cause: c,
+                        },
+                        Err(_) => AbortCause {
+                            machine: src as usize,
+                            unit: "net",
+                            superstep: step,
+                            cause: "remote abort with garbled cause".into(),
+                        },
+                    };
+                    sh.abort.trip(cause);
+                    sh.cond.notify_all();
+                }
+                FrameKind::Goodbye => goodbye = true,
+                other => {
+                    sh.trip_if_live(
+                        step,
+                        format!("unexpected {other:?} frame on control socket from machine {peer}"),
+                    );
+                    break;
+                }
+            },
+            Ok(None) => {
+                if !goodbye {
+                    sh.trip_lost_peer(peer, 0, None);
+                }
+                break;
+            }
+            Err(e) => {
+                sh.trip_lost_peer(peer, 0, Some(e));
+                break;
+            }
+        }
+    }
+    sh.cond.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_and_roster_roundtrip() {
+        let h = encode_hello(Some(12), "127.0.0.1:4000");
+        assert_eq!(decode_hello(&h).unwrap(), (Some(12), "127.0.0.1:4000".into()));
+        let h = encode_hello(None, "x:1");
+        assert_eq!(decode_hello(&h).unwrap(), (None, "x:1".into()));
+        assert!(decode_hello(&[1, 2]).is_err());
+
+        let addrs: Vec<String> = vec!["a:1".into(), "bb:22".into(), "ccc:333".into()];
+        let r = encode_roster(Some(7), &addrs);
+        assert_eq!(decode_roster(&r, 3).unwrap(), (Some(7), addrs.clone()));
+        let r = encode_roster(None, &addrs);
+        assert_eq!(decode_roster(&r, 3).unwrap().0, None);
+        assert!(decode_roster(&r[..r.len() - 1], 3).is_err());
+    }
+
+    #[test]
+    fn resume_agreement_is_min_and_requires_all() {
+        assert_eq!(agree_resume(&[Some(5), Some(3), Some(9)]), Some(3));
+        assert_eq!(agree_resume(&[Some(5), None, Some(9)]), None);
+        assert_eq!(agree_resume(&[None]), None);
+        assert_eq!(agree_resume(&[Some(2)]), Some(2));
+    }
+
+    /// Two in-process "ranks" handshake and exchange data + barrier + abort
+    /// traffic over real loopback sockets: the full cluster lifecycle in
+    /// one test, without worker processes.
+    #[test]
+    fn two_rank_loopback_cluster_end_to_end() {
+        let addr = leader_bind("127.0.0.1:0").unwrap();
+        let mk = |rank: usize, resume: Option<u64>| {
+            let mut o = TcpOpts::new(2, rank, addr.clone());
+            o.resume = resume;
+            o.handshake_timeout = Duration::from_secs(10);
+            o
+        };
+        let pool = BufPool::new(16);
+        let tracer = Arc::new(crate::trace::Tracer::new(crate::trace::TraceConfig::default()));
+        let a0 = JobAbort::new();
+        let a1 = JobAbort::new();
+        let (p0, t0) = (pool.clone(), tracer.clone());
+        let (o0, o1) = (mk(0, Some(4)), mk(1, Some(2)));
+        let h = std::thread::spawn(move || TcpCluster::connect(o0, p0, a0, &t0));
+        let ((mut s1, r1), _, c1) = TcpCluster::connect(o1, pool, a1, &tracer).unwrap();
+        let ((mut s0, r0), sw0, c0) = h.join().unwrap().unwrap();
+
+        // Resume agreement: min(4, 2) = 2 on both sides.
+        assert_eq!(c0.agreed_resume(), Some(2));
+        assert_eq!(c1.agreed_resume(), Some(2));
+
+        // Data plane: both directions, plus loopback-to-self.
+        s0.send(1, 3, Payload::Data(vec![9, 9])).unwrap();
+        s0.send(0, 3, Payload::End).unwrap();
+        s1.send(0, 3, Payload::Data(vec![7])).unwrap();
+        let b = r1.recv().unwrap();
+        assert_eq!((b.src, b.step), (0, 3));
+        assert!(matches!(b.payload, Payload::Data(ref d) if d == &vec![9, 9]));
+        let mut got = vec![r0.recv().unwrap(), r0.recv().unwrap()];
+        got.sort_by_key(|b| b.src);
+        assert!(matches!(got[0].payload, Payload::End));
+        assert!(matches!(got[1].payload, Payload::Data(ref d) if d == &vec![7]));
+        // The ledger accounted wire bytes without sleeping.
+        assert!(sw0.total_bytes() > 0);
+
+        // Barrier round over the control plane (leader = rank 0).
+        let c0b = c0.clone();
+        let lead = std::thread::spawn(move || {
+            let reports = c0b.recv_reports(BARRIER_UC, 0).unwrap();
+            assert_eq!(reports, vec![vec![42u8]]);
+            c0b.send_decision(BARRIER_UC, 0, vec![1, 2, 3]).unwrap();
+        });
+        c1.send_report(BARRIER_UC, 0, vec![42]).unwrap();
+        assert_eq!(c1.recv_decision(BARRIER_UC, 0).unwrap(), vec![1, 2, 3]);
+        lead.join().unwrap();
+
+        // Remote abort propagation: rank 1 trips locally; rank 0 observes
+        // the originating cause (via its registered cluster poison hook it
+        // would also relay — registration is the engine's job, so here we
+        // watch the latch directly).
+        c0.shared.abort.register(c0.clone() as Arc<dyn Poisonable>);
+        c1.shared.abort.register(c1.clone() as Arc<dyn Poisonable>);
+        c1.shared.abort.trip(AbortCause {
+            machine: 1,
+            unit: "U_s",
+            superstep: 8,
+            cause: "injected fault: transient network send failure".into(),
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !c0.shared.abort.aborted() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let cause = c0.shared.abort.cause().expect("abort crossed processes");
+        assert_eq!((cause.machine, cause.unit, cause.superstep), (1, "U_s", 8));
+        assert!(cause.cause.contains("transient"));
+
+        c1.shutdown();
+        c0.shutdown();
+    }
+}

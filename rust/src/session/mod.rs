@@ -703,14 +703,30 @@ impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
                 tracer: Some(tracer.clone()),
                 abort: Some(abort.clone()),
             };
-            let run = engine_run::run_job_with_impl(
-                &eng,
-                stores,
-                self.program.clone(),
-                checkpoint.clone(),
-                resume,
-                hooks,
-            );
+            // Transport dispatch: under sim every machine is a thread of
+            // this process; under tcp this process runs one machine and
+            // the attempt ordinal fences the cluster re-handshake (all
+            // processes classify the propagated cause identically, so they
+            // retry — and re-join — in lockstep).
+            let run = match eng.cfg.transport {
+                crate::net::TransportKind::Sim => engine_run::run_job_with_impl(
+                    &eng,
+                    stores,
+                    self.program.clone(),
+                    checkpoint.clone(),
+                    resume,
+                    hooks,
+                ),
+                crate::net::TransportKind::Tcp => engine_run::run_job_distributed(
+                    &eng,
+                    stores,
+                    self.program.clone(),
+                    checkpoint.clone(),
+                    resume,
+                    hooks,
+                    recoveries,
+                ),
+            };
             if let Some((mut rtr, s)) = recover_span.take() {
                 rtr.end(crate::trace::EventKind::Recovery, s);
                 rtr.finish();

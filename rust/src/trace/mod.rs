@@ -159,6 +159,14 @@ pub enum EventKind {
     /// from the retained message logs instead of recomputed senders
     /// (`Instant`); `arg` = absolute superstep.
     Replay,
+    /// A transport-level peer connection was established (`Instant`, TCP
+    /// backend only — the sim backend has no connections); `arg` = the
+    /// peer's machine id.
+    Connect,
+    /// A control-plane frame was sent or received (`Instant`, TCP backend
+    /// only: handshake, barrier report/decision, abort, goodbye); `arg` =
+    /// the frame kind's wire byte ([`crate::net::frame::FrameKind`]).
+    Control,
 }
 
 impl EventKind {
@@ -177,6 +185,8 @@ impl EventKind {
             EventKind::Fault => "fault",
             EventKind::Recovery => "recovery",
             EventKind::Replay => "replay",
+            EventKind::Connect => "connect",
+            EventKind::Control => "control",
         }
     }
 
@@ -187,7 +197,7 @@ impl EventKind {
             EventKind::Superstep | EventKind::Load | EventKind::Recode => "phase",
             EventKind::Barrier | EventKind::Stall => "sync",
             EventKind::File | EventKind::Pool => "io",
-            EventKind::Transmit => "net",
+            EventKind::Transmit | EventKind::Connect | EventKind::Control => "net",
             EventKind::ServeBatch => "serve",
             EventKind::Fault => "fault",
             EventKind::Recovery | EventKind::Replay => "recovery",
@@ -209,12 +219,14 @@ impl EventKind {
             EventKind::Fault => 9,
             EventKind::Recovery => 10,
             EventKind::Replay => 11,
+            EventKind::Connect => 12,
+            EventKind::Control => 13,
         }
     }
 }
 
 /// Number of [`EventKind`] variants (size of the depth-counter tables).
-const NUM_KINDS: usize = 12;
+const NUM_KINDS: usize = 14;
 
 /// One recorded event. 32 bytes, `Copy` — pushing one is a few stores
 /// into an owned ring, no allocation.

@@ -446,6 +446,68 @@ impl Poisonable for MachineSync {
     }
 }
 
+/// The cross-process side of a distributed [`Rendezvous`]: a control-plane
+/// carrier for barrier rounds, implemented by
+/// [`crate::net::tcp::TcpCluster`].  Rounds are keyed by `(bid, seq)` —
+/// the barrier's fixed id plus its per-round sequence number — so reports
+/// from different barriers (or late frames from a previous round) can
+/// never be confused.
+///
+/// Followers call `send_report`/`recv_decision`; the leader (rank 0) calls
+/// `recv_reports`/`send_decision`.  Every receive blocks until the round
+/// completes, observing the job's abort latch, and returns the typed abort
+/// error once it trips — an implementation must never wedge on a dead
+/// peer.
+pub trait BarrierLink: Send + Sync {
+    /// Follower → leader: deposit this rank's encoded value for the round.
+    fn send_report(&self, bid: u8, seq: u64, payload: Vec<u8>) -> Result<()>;
+    /// Leader: block until all `n−1` follower reports for the round have
+    /// arrived; returns them ordered by rank (index 0 = rank 1).
+    fn recv_reports(&self, bid: u8, seq: u64) -> Result<Vec<Vec<u8>>>;
+    /// Leader → all followers: broadcast the encoded leader result.
+    fn send_decision(&self, bid: u8, seq: u64, payload: Vec<u8>) -> Result<()>;
+    /// Follower: block until the round's decision arrives.
+    fn recv_decision(&self, bid: u8, seq: u64) -> Result<Vec<u8>>;
+}
+
+/// Wire codec for one distributed [`Rendezvous`]: how to encode/decode the
+/// deposit type `T` and the leader-result type `R`.  Boxed closures rather
+/// than a trait so `units.rs` can capture the vertex program's aggregator
+/// codec hooks ([`crate::api::VertexProgram::encode_agg`]) without new
+/// generic plumbing.
+pub struct RvCodec<T, R> {
+    /// Encode a deposit.
+    pub enc_t: Box<dyn Fn(&T) -> Vec<u8> + Send + Sync>,
+    /// Decode a deposit.
+    pub dec_t: Box<dyn Fn(&[u8]) -> T + Send + Sync>,
+    /// Encode a leader result.
+    pub enc_r: Box<dyn Fn(&R) -> Vec<u8> + Send + Sync>,
+    /// Decode a leader result.
+    pub dec_r: Box<dyn Fn(&[u8]) -> R + Send + Sync>,
+}
+
+impl RvCodec<(), ()> {
+    /// The codec for pure-synchronization barriers (`T = R = ()`), whose
+    /// payloads are empty.
+    pub fn unit() -> Self {
+        RvCodec {
+            enc_t: Box::new(|_| Vec::new()),
+            dec_t: Box::new(|_| ()),
+            enc_r: Box::new(|_| Vec::new()),
+            dec_r: Box::new(|_| ()),
+        }
+    }
+}
+
+/// The distributed half of a [`Rendezvous`]: which rank this process is,
+/// the barrier's wire id, the control-plane carrier, and the codec.
+struct RemoteEdge<T, R> {
+    rank: usize,
+    bid: u8,
+    link: Arc<dyn BarrierLink>,
+    codec: RvCodec<T, R>,
+}
+
 /// Reusable N-party barrier with a leader section: all parties deposit,
 /// one (the last to arrive) runs `leader` over the deposits, then everyone
 /// observes the result.  (std's Barrier has no deposit/result phase.)
@@ -455,10 +517,18 @@ impl Poisonable for MachineSync {
 /// [`Rendezvous::exchange`] returns `Err(Poisoned)` with the cause — this
 /// is what converts "a sibling machine died mid-superstep" from a
 /// permanent wedge into a typed error at every surviving machine.
+///
+/// A barrier built with [`Rendezvous::remote`] spans *processes*: exactly
+/// one party is local (this process's rank) and the other `n−1` deposits
+/// travel a [`BarrierLink`].  The exchange contract is identical — same
+/// leader-section semantics (the leader closure runs on rank 0, over
+/// deposits ordered by rank), same poisoned-error path — which is what
+/// lets `worker/units.rs` run unmodified on both transports.
 pub struct Rendezvous<T, R> {
     n: usize,
     state: Mutex<RvState<T, R>>,
     cond: Condvar,
+    remote: Option<RemoteEdge<T, R>>,
 }
 
 struct RvState<T, R> {
@@ -470,8 +540,37 @@ struct RvState<T, R> {
 }
 
 impl<T, R: Clone> Rendezvous<T, R> {
-    /// An `n`-party barrier.
+    /// An `n`-party barrier (all parties are threads in this process).
     pub fn new(n: usize) -> Arc<Self> {
+        Self::build(n, None)
+    }
+
+    /// An `n`-party barrier spanning processes: this process deposits as
+    /// party `rank`, the other `n−1` deposits travel `link` as rounds of
+    /// barrier `bid` (encoded via `codec`).  The leader closure runs on
+    /// rank 0 over all `n` deposits ordered by rank.  Register the result
+    /// on the job's [`JobAbort`] like any local barrier — poison makes the
+    /// *local* party's future exchanges fail fast, while in-flight link
+    /// waits observe the latch through the link itself.
+    pub fn remote(
+        n: usize,
+        rank: usize,
+        bid: u8,
+        link: Arc<dyn BarrierLink>,
+        codec: RvCodec<T, R>,
+    ) -> Arc<Self> {
+        Self::build(
+            n,
+            Some(RemoteEdge {
+                rank,
+                bid,
+                link,
+                codec,
+            }),
+        )
+    }
+
+    fn build(n: usize, remote: Option<RemoteEdge<T, R>>) -> Arc<Self> {
         Arc::new(Self {
             n,
             state: Mutex::new(RvState {
@@ -482,6 +581,7 @@ impl<T, R: Clone> Rendezvous<T, R> {
                 poisoned: None,
             }),
             cond: Condvar::new(),
+            remote,
         })
     }
 
@@ -505,6 +605,9 @@ impl<T, R: Clone> Rendezvous<T, R> {
         value: T,
         leader: impl FnOnce(Vec<T>) -> R,
     ) -> std::result::Result<R, Poisoned> {
+        if self.remote.is_some() {
+            return self.exchange_remote(value, leader);
+        }
         let mut st = lock_clean(&self.state);
         // Wait for the previous round's stragglers to pick up their result.
         loop {
@@ -543,6 +646,69 @@ impl<T, R: Clone> Rendezvous<T, R> {
                 }
                 return Ok(r);
             }
+        }
+    }
+
+    /// The distributed exchange path: one local party, `n−1` remote ones
+    /// over the [`BarrierLink`].  `state.round` still advances per
+    /// exchange — it is the round's wire sequence number, so both sides of
+    /// every link wait agree on which round a frame belongs to.
+    fn exchange_remote(
+        &self,
+        value: T,
+        leader: impl FnOnce(Vec<T>) -> R,
+    ) -> std::result::Result<R, Poisoned> {
+        let edge = self.remote.as_ref().unwrap();
+        let seq = {
+            let mut st = lock_clean(&self.state);
+            if let Some(c) = &st.poisoned {
+                return Err(Poisoned(c.clone()));
+            }
+            let s = st.round;
+            st.round += 1;
+            s
+        };
+        // A link error means the cluster already tripped the job abort (a
+        // BarrierLink must not wedge); reconstruct the broadcast cause so
+        // exchange's error contract matches the local path.
+        let fail = |e: Error| match e {
+            Error::JobFailed {
+                machine,
+                unit,
+                superstep,
+                cause,
+            } => Poisoned(Arc::new(AbortCause {
+                machine,
+                unit,
+                superstep,
+                cause,
+            })),
+            other => Poisoned(Arc::new(AbortCause {
+                machine: edge.rank,
+                unit: "net",
+                superstep: seq,
+                cause: other.to_string(),
+            })),
+        };
+        if edge.rank == 0 {
+            let reports = edge.link.recv_reports(edge.bid, seq).map_err(fail)?;
+            debug_assert_eq!(reports.len(), self.n - 1, "short barrier round");
+            let mut vals = Vec::with_capacity(self.n);
+            vals.push(value);
+            for r in &reports {
+                vals.push((edge.codec.dec_t)(r));
+            }
+            let out = leader(vals);
+            edge.link
+                .send_decision(edge.bid, seq, (edge.codec.enc_r)(&out))
+                .map_err(fail)?;
+            Ok(out)
+        } else {
+            edge.link
+                .send_report(edge.bid, seq, (edge.codec.enc_t)(&value))
+                .map_err(fail)?;
+            let d = edge.link.recv_decision(edge.bid, seq).map_err(fail)?;
+            Ok((edge.codec.dec_r)(&d))
         }
     }
 }
@@ -654,6 +820,117 @@ mod tests {
                 });
             }
         });
+    }
+
+    /// In-process [`BarrierLink`] stub: one shared hub, one handle per
+    /// rank — the trait-level contract (ordering by rank, keying by
+    /// `(bid, seq)`) exercised without sockets.
+    struct Hub {
+        n: usize,
+        state: Mutex<HubState>,
+        cond: Condvar,
+    }
+    #[derive(Default)]
+    struct HubState {
+        reports: std::collections::HashMap<(u8, u64), Vec<Option<Vec<u8>>>>,
+        decisions: std::collections::HashMap<(u8, u64), Vec<u8>>,
+    }
+    struct HubLink {
+        rank: usize,
+        hub: Arc<Hub>,
+    }
+    impl BarrierLink for HubLink {
+        fn send_report(&self, bid: u8, seq: u64, payload: Vec<u8>) -> Result<()> {
+            let mut st = lock_clean(&self.hub.state);
+            let slot = st
+                .reports
+                .entry((bid, seq))
+                .or_insert_with(|| vec![None; self.hub.n - 1]);
+            slot[self.rank - 1] = Some(payload);
+            self.hub.cond.notify_all();
+            Ok(())
+        }
+        fn recv_reports(&self, bid: u8, seq: u64) -> Result<Vec<Vec<u8>>> {
+            let mut st = lock_clean(&self.hub.state);
+            loop {
+                let full = st
+                    .reports
+                    .get(&(bid, seq))
+                    .is_some_and(|v| v.iter().all(|p| p.is_some()));
+                if full {
+                    let v = st.reports.remove(&(bid, seq)).unwrap();
+                    return Ok(v.into_iter().map(|p| p.unwrap()).collect());
+                }
+                st = wait_clean(&self.hub.cond, st);
+            }
+        }
+        fn send_decision(&self, bid: u8, seq: u64, payload: Vec<u8>) -> Result<()> {
+            let mut st = lock_clean(&self.hub.state);
+            st.decisions.insert((bid, seq), payload);
+            self.hub.cond.notify_all();
+            Ok(())
+        }
+        fn recv_decision(&self, bid: u8, seq: u64) -> Result<Vec<u8>> {
+            let mut st = lock_clean(&self.hub.state);
+            loop {
+                if let Some(d) = st.decisions.get(&(bid, seq)) {
+                    return Ok(d.clone());
+                }
+                st = wait_clean(&self.hub.cond, st);
+            }
+        }
+    }
+
+    #[test]
+    fn remote_rendezvous_matches_local_contract() {
+        let n = 3;
+        let hub = Arc::new(Hub {
+            n,
+            state: Mutex::new(HubState::default()),
+            cond: Condvar::new(),
+        });
+        let codec = || RvCodec::<u64, u64> {
+            enc_t: Box::new(|v| v.to_le_bytes().to_vec()),
+            dec_t: Box::new(|b| u64::from_le_bytes(b.try_into().unwrap())),
+            enc_r: Box::new(|v| v.to_le_bytes().to_vec()),
+            dec_r: Box::new(|b| u64::from_le_bytes(b.try_into().unwrap())),
+        };
+        std::thread::scope(|s| {
+            for rank in 0..n {
+                let link = Arc::new(HubLink {
+                    rank,
+                    hub: hub.clone(),
+                });
+                let rv = Rendezvous::remote(n, rank, 1, link, codec());
+                s.spawn(move || {
+                    for round in 0..20u64 {
+                        let r = rv
+                            .exchange(rank, round * 10 + rank as u64, |vs| {
+                                // Leader section runs on rank 0 only, over
+                                // deposits ordered by rank.
+                                assert_eq!(vs, vec![round * 10, round * 10 + 1, round * 10 + 2]);
+                                vs.iter().sum::<u64>()
+                            })
+                            .unwrap();
+                        assert_eq!(r, round * 30 + 3);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn remote_rendezvous_poison_fails_fast() {
+        let hub = Arc::new(Hub {
+            n: 2,
+            state: Mutex::new(HubState::default()),
+            cond: Condvar::new(),
+        });
+        let link = Arc::new(HubLink { rank: 1, hub });
+        let rv: Arc<Rendezvous<(), ()>> = Rendezvous::remote(2, 1, 2, link, RvCodec::unit());
+        rv.poison(cause("remote dead"));
+        let err = rv.exchange(1, (), |_| ()).unwrap_err();
+        assert_eq!(err.0.cause, "remote dead");
     }
 
     fn cause(tag: &str) -> Arc<AbortCause> {

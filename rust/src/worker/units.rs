@@ -208,6 +208,54 @@ pub struct UcDecision<A> {
     pub agg: Arc<A>,
 }
 
+/// Wire-encode a [`UcReport`] for the distributed U_c barrier:
+/// `msgs_sent` + `active` as u64 LE, then the program's aggregate encoding
+/// ([`VertexProgram::encode_agg`]).
+pub fn encode_uc_report<P: VertexProgram>(p: &P, r: &UcReport<P::Agg>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    out.extend_from_slice(&r.msgs_sent.to_le_bytes());
+    out.extend_from_slice(&r.active.to_le_bytes());
+    p.encode_agg(&r.agg, &mut out);
+    out
+}
+
+/// Inverse of [`encode_uc_report`].  Tolerant of short input (zero-fills):
+/// barrier payloads only arrive through the framed control plane, so a
+/// short buffer means a program whose `encode_agg`/`decode_agg` disagree —
+/// degrade to defaults rather than panic inside a barrier.
+pub fn decode_uc_report<P: VertexProgram>(p: &P, b: &[u8]) -> UcReport<P::Agg> {
+    let word = |at: usize| {
+        let mut w = [0u8; 8];
+        let end = (at + 8).min(b.len());
+        if at < end {
+            w[..end - at].copy_from_slice(&b[at..end]);
+        }
+        u64::from_le_bytes(w)
+    };
+    UcReport {
+        msgs_sent: word(0),
+        active: word(8),
+        agg: p.decode_agg(b.get(16..).unwrap_or(&[])),
+    }
+}
+
+/// Wire-encode a [`UcDecision`]: `continues` as one byte, then the
+/// program's aggregate encoding.
+pub fn encode_uc_decision<P: VertexProgram>(p: &P, d: &UcDecision<P::Agg>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1);
+    out.push(d.continues as u8);
+    p.encode_agg(&d.agg, &mut out);
+    out
+}
+
+/// Inverse of [`encode_uc_decision`]; tolerant like [`decode_uc_report`].
+pub fn decode_uc_decision<P: VertexProgram>(p: &P, b: &[u8]) -> UcDecision<P::Agg> {
+    UcDecision {
+        continues: b.first().copied().unwrap_or(0) != 0,
+        agg: Arc::new(p.decode_agg(b.get(1..).unwrap_or(&[]))),
+    }
+}
+
 /// Everything shared across the machines of one job.
 pub struct JobGlobal<P: VertexProgram> {
     /// The vertex program.
@@ -261,6 +309,12 @@ pub struct JobGlobal<P: VertexProgram> {
     /// window are skipped (the original attempt already made them durable,
     /// or deliberately didn't).  `None` = plain recompute resume.
     pub replay_upto: Option<u64>,
+    /// True under the TCP transport, where this process runs exactly one
+    /// machine and its siblings live in other processes.  Changes only
+    /// cross-machine bookkeeping conventions (e.g. every process owns its
+    /// private checkpoint dir and writes its own DONE marker, instead of
+    /// machine 0 marking for the whole cluster).
+    pub distributed: bool,
 }
 
 /// Per-machine output returned by [`run_machine`].
@@ -1694,7 +1748,10 @@ fn compute_unit<P: VertexProgram>(
                 tr.end(EventKind::Barrier, abs_step);
                 sink.with_step(step, |m| m.barrier_wait_secs += waited);
                 rv?;
-                if me == 0 {
+                // Distributed: checkpoint dirs are per-process, so every
+                // machine marks its own (the barrier above still guarantees
+                // cluster-wide durability before any DONE appears).
+                if me == 0 || global.distributed {
                     crate::ft::mark_done(&ck.dir, abs_step)?;
                 }
             }

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Validate the TCP-transport smoke run (`make net-smoke`).
+
+The smoke run executes the same job twice: once in one process on the
+simulator fabric (`graphd worker --sim`, the reference), and once as a
+real multi-process loopback TCP cluster (`graphd worker --listen ...
+--spawn-peers`).  Each run dumps final vertex values as `id<TAB><hex>`
+lines, where <hex> is the value's Codec wire encoding — so equality below
+means *bit-identical* values, not equal float formatting.
+
+This script merges the TCP cluster's per-machine part files, sorts by
+vertex id, and asserts the result is exactly the reference:
+
+  * same vertex id set (no row lost or duplicated crossing the wire)
+  * byte-identical encoded value per id
+
+Usage: check_transport.py REFERENCE.tsv PART.tsv [PART.tsv ...]
+"""
+
+import sys
+
+
+def read_rows(path: str) -> dict:
+    rows = {}
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.rstrip("\n")
+            if not line:
+                continue
+            try:
+                vid, hexval = line.split("\t")
+                vid = int(vid)
+            except ValueError:
+                print(f"{path}:{ln}: malformed row {line!r}", file=sys.stderr)
+                sys.exit(1)
+            if vid in rows:
+                print(f"{path}:{ln}: duplicate vertex id {vid}", file=sys.stderr)
+                sys.exit(1)
+            rows[vid] = hexval
+    return rows
+
+
+def main(argv: list) -> int:
+    if len(argv) < 2:
+        sys.exit(__doc__)
+    reference = read_rows(argv[0])
+    merged = {}
+    for part in argv[1:]:
+        for vid, hexval in read_rows(part).items():
+            if vid in merged:
+                print(f"{part}: vertex {vid} appears in two machine parts", file=sys.stderr)
+                return 1
+            merged[vid] = hexval
+    if not reference:
+        print(f"{argv[0]}: reference is empty", file=sys.stderr)
+        return 1
+    missing = sorted(set(reference) - set(merged))
+    extra = sorted(set(merged) - set(reference))
+    if missing or extra:
+        print(
+            f"vertex set mismatch: {len(missing)} missing (e.g. {missing[:5]}), "
+            f"{len(extra)} unexpected (e.g. {extra[:5]})",
+            file=sys.stderr,
+        )
+        return 1
+    diverged = [vid for vid in reference if reference[vid] != merged[vid]]
+    if diverged:
+        vid = diverged[0]
+        print(
+            f"{len(diverged)} of {len(reference)} values diverge from sim; "
+            f"first: id {vid} sim={reference[vid]} tcp={merged[vid]}",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"transport ok: {len(reference)} vertex values bit-identical across "
+          f"{len(argv) - 1} tcp part(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
