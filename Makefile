@@ -20,7 +20,11 @@
 #                    sim reference, assert the final vertex values are
 #                    bit-identical (Codec wire encoding compared as hex)
 #   make bench-smoke quick perf trajectory (non-gating floors)
-#   make clean       cargo clean + stale bench JSON tmp files
+#   make doc-sync    docs stay contractual: README documents every parsed
+#                    -c key, docs/FORMATS.md magic/version constants match
+#                    the source (scripts/check_docs.py)
+#   make clean       cargo clean + stale bench JSON tmp files + orphaned
+#                    CSR materialization partials (*.csr.tmp)
 
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
@@ -34,7 +38,7 @@ NET_SMOKE_DIR ?= /tmp/graphd_net_smoke
 # (no-op where coreutils `timeout` is unavailable).
 TIMEOUT := $(shell command -v timeout >/dev/null 2>&1 && echo "timeout 600")
 
-.PHONY: build test analyze fmt-check clippy doc check-xla ci trace-smoke recover-smoke net-smoke bench-smoke artifacts clean
+.PHONY: build test analyze fmt-check clippy doc doc-sync check-xla ci trace-smoke recover-smoke net-smoke bench-smoke artifacts clean
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -64,7 +68,14 @@ doc:
 check-xla:
 	$(CARGO) check --all-targets --features xla --manifest-path $(MANIFEST)
 
-ci: build test analyze fmt-check clippy doc check-xla trace-smoke recover-smoke net-smoke
+ci: build test analyze fmt-check clippy doc doc-sync check-xla trace-smoke recover-smoke net-smoke
+
+# Docs-vs-source sync gate: every `-c` key JobConfig::apply parses is
+# documented in README (and its table has no phantom rows), every `-c`
+# reference in README/DESIGN.md names a real key, and the magic/version
+# constants docs/FORMATS.md declares normative match the source.
+doc-sync:
+	python3 scripts/check_docs.py
 
 # End-to-end flight-recorder smoke: run a tiny traced job through the CLI,
 # then check the Chrome-trace export is valid JSON whose B/E span events
@@ -132,7 +143,10 @@ artifacts:
 
 # `cargo clean` drops all build artifacts (including the analyze bin and
 # anything cached for the fixture-driven tests); also sweep stale bench
-# JSON scratch files that bench-smoke runs leave at the repo root.
+# JSON scratch files that bench-smoke runs leave at the repo root, and
+# any orphaned CSR materialization partials (`<name>.csr.tmp` is renamed
+# into place on success, so a survivor is always a crashed write).
 clean:
 	$(CARGO) clean --manifest-path $(MANIFEST)
 	rm -f BENCH_*.json.tmp BENCH_*.json.partial
+	find . -name '*.csr.tmp' -type f -delete 2>/dev/null || true

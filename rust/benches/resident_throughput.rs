@@ -1,0 +1,141 @@
+//! Resident-store throughput — `-c resident=stream` vs `-c resident=mmap`
+//! over the same workload, in both IO-Basic and IO-Recoded modes.
+//!
+//! The streaming path re-reads `se.bin` through `EdgeStreamCursor` (a
+//! buffered sequential scan charged against the simulated disk) every
+//! superstep; the resident path decodes the same adjacency items as O(1)
+//! slices of the mmap'd CSR pair (`csr_offsets` / `csr_edges`, see
+//! docs/FORMATS.md).  Both paths decode byte-identical edge payloads, so
+//! the run asserts:
+//!
+//! 1. **Bit-identical values** stream vs mmap, for PageRank and SSSP
+//!    (on top of the basic-vs-recoded cross-check `run_graphd_cfg`
+//!    already performs per run).
+//! 2. **Residency accounting**: the mmap runs decode every adjacency item
+//!    from the mapping (`edge_items_mapped == edge_items_read`, > 0); the
+//!    stream runs report `edge_items_mapped == 0`.
+//! 3. **n = 1 wire silence unchanged**: `net_wire_bytes == 0` with the
+//!    local fast path on, exactly as in stream mode — residency must not
+//!    perturb message routing.
+//!
+//! Env: `GRAPHD_SMOKE=1` shrinks the workload; `GRAPHD_XLA=0` forces the
+//! scalar kernels; `GRAPHD_BENCH_JSON=path` writes the numbers as the
+//! `"resident"` section of the bench JSON.
+
+use graphd::baselines::Algo;
+use graphd::bench::{self, check_equivalent, GraphDRuns};
+use graphd::config::ClusterProfile;
+use graphd::graph::generator;
+use graphd::metrics::JobMetrics;
+
+/// Adjacency items decoded from the mmap'd CSR across all machines/steps.
+fn mapped_items(m: &JobMetrics) -> u64 {
+    m.machines
+        .iter()
+        .flat_map(|mm| mm.steps.iter())
+        .map(|s| s.edge_items_mapped)
+        .sum()
+}
+
+/// Adjacency items decoded in total (stream + mapped), for the ratio line.
+fn read_items(m: &JobMetrics) -> u64 {
+    m.machines
+        .iter()
+        .flat_map(|mm| mm.steps.iter())
+        .map(|s| s.edge_items_read)
+        .sum()
+}
+
+fn report(label: &str, r: &GraphDRuns) {
+    println!(
+        "{label:<14} basic {:>7.3}s  recoded {:>7.3}s  mapped {:>9}/{:<9} items  wire {:>6} B",
+        r.basic_compute,
+        r.recoded_compute,
+        mapped_items(&r.recoded_metrics),
+        read_items(&r.recoded_metrics),
+        r.recoded_metrics.net_wire_bytes,
+    );
+}
+
+fn main() {
+    let smoke = bench::smoke_from_env();
+    println!(
+        "== Resident store: stream vs mmap'd CSR =={}",
+        if smoke { "  (smoke)" } else { "" }
+    );
+
+    let (nv, ne) = if smoke { (4_000, 24_000) } else { (40_000, 240_000) };
+    let g = generator::uniform(nv, ne, true, 17);
+    let profile = ClusterProfile::test(1);
+    let use_xla = bench::use_xla_from_env();
+    let mmap_cfg: Vec<(String, String)> = vec![("resident".into(), "mmap".into())];
+
+    let mut failed = false;
+    let mut sections = Vec::new();
+    let combos = [
+        ("pagerank", Algo::PageRank { supersteps: 5 }),
+        ("sssp", Algo::Sssp { source: bench::sssp_source(&g) }),
+    ];
+    for (name, algo) in combos {
+        let stream = bench::run_graphd_cfg(&format!("res_stream_{name}"), &g, algo, &profile, use_xla, &[])
+            .expect("stream run");
+        let mmap = bench::run_graphd_cfg(&format!("res_mmap_{name}"), &g, algo, &profile, use_xla, &mmap_cfg)
+            .expect("mmap run");
+
+        println!("-- {name}, n=1, uniform graph ({nv} vertices, {ne} edges) --");
+        report("stream", &stream);
+        report("mmap", &mmap);
+        let speedup = stream.recoded_compute / mmap.recoded_compute.max(1e-9);
+        println!("{:<14} recoded compute {speedup:>6.2}x", "speedup");
+
+        if let Err(e) = check_equivalent(&stream.values, &mmap.values, algo) {
+            eprintln!("FAIL: {name} stream vs mmap values diverge: {e}");
+            failed = true;
+        }
+        for (mode, m) in [("basic", &mmap.basic_metrics), ("recoded", &mmap.recoded_metrics)] {
+            let mapped = mapped_items(m);
+            let read = read_items(m);
+            if mapped == 0 || mapped != read {
+                eprintln!(
+                    "FAIL: {name} {mode} mmap run must decode all {read} adjacency items \
+                     from the mapping (got {mapped})"
+                );
+                failed = true;
+            }
+        }
+        if mapped_items(&stream.recoded_metrics) != 0 {
+            eprintln!("FAIL: {name} stream run reported mapped items");
+            failed = true;
+        }
+        if mmap.recoded_metrics.net_wire_bytes != 0 || mmap.basic_metrics.net_wire_bytes != 0 {
+            eprintln!(
+                "FAIL: {name} n=1 mmap run must keep the switch silent (basic {} B, recoded {} B)",
+                mmap.basic_metrics.net_wire_bytes, mmap.recoded_metrics.net_wire_bytes
+            );
+            failed = true;
+        }
+
+        sections.push(format!(
+            "\"{name}_stream_basic_secs\": {:.4}, \
+             \"{name}_stream_recoded_secs\": {:.4}, \
+             \"{name}_mmap_basic_secs\": {:.4}, \
+             \"{name}_mmap_recoded_secs\": {:.4}, \
+             \"{name}_recoded_speedup\": {speedup:.3}, \
+             \"{name}_mapped_items\": {}",
+            stream.basic_compute,
+            stream.recoded_compute,
+            mmap.basic_compute,
+            mmap.recoded_compute,
+            mapped_items(&mmap.recoded_metrics),
+        ));
+    }
+
+    if let Some(path) = bench::bench_json_path() {
+        let body = format!("{{{}}}", sections.join(", "));
+        bench::bench_json_merge(&path, "resident", &body).expect("bench json");
+        eprintln!("wrote {path} (section: resident)");
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -124,6 +124,41 @@ impl std::fmt::Display for Mode {
     }
 }
 
+/// Adjacency residency mode (`-c resident=`, `JobBuilder::resident`): how
+/// U_c reads the edge stream `S^E`.
+///
+/// `Stream` is the paper's §3 design (buffered sequential re-read each
+/// superstep, O(|V|/n) heap).  `Mmap` is the semi-external-memory mode:
+/// the store is materialized as flat CSR files (`csr_offsets`/`csr_edges`,
+/// see `docs/FORMATS.md`) and mapped read-only, so adjacency is an O(1)
+/// zero-copy slice and the OS page cache does the streaming — still
+/// O(|V|/n) *heap*, because a read-only file mapping is page cache, not
+/// heap.  `Auto` picks `Mmap` when the CSR pair fits
+/// [`JobConfig::resident_budget`], else falls back to `Stream`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resident {
+    /// §3 streaming: re-read `se.bin` through the buffered
+    /// [`EdgeStreamCursor`](crate::worker::storage::EdgeStreamCursor)
+    /// every superstep (the default).
+    Stream,
+    /// Semi-external: mmap the materialized CSR files.  Strict — missing
+    /// files are materialized, corrupt ones are a typed error.
+    Mmap,
+    /// `Mmap` when the CSR pair fits the budget (and is valid or
+    /// materializable), else `Stream`.
+    Auto,
+}
+
+impl std::fmt::Display for Resident {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Resident::Stream => write!(f, "stream"),
+            Resident::Mmap => write!(f, "mmap"),
+            Resident::Auto => write!(f, "auto"),
+        }
+    }
+}
+
 /// Auto-resume policy for `JobBuilder::run` (§3.4): how many times a
 /// *retryable* failure (I/O error, transient network fault, first panic)
 /// may be retried from the last durable checkpoint, and the base of the
@@ -243,6 +278,13 @@ pub struct JobConfig {
     /// Which machine this process runs under `transport=tcp`.  CLI:
     /// `-c transport_rank=R`.
     pub transport_rank: usize,
+    /// Adjacency residency (see [`Resident`]): `stream` (default), `mmap`,
+    /// or `auto`.  CLI: `-c resident=stream|mmap|auto`.
+    pub resident: Resident,
+    /// Byte budget `resident=auto` compares the CSR pair against before
+    /// choosing the mapped path (default 1 GiB).  CLI:
+    /// `-c resident_budget=BYTES`.
+    pub resident_budget: u64,
 }
 
 impl Default for JobConfig {
@@ -266,6 +308,8 @@ impl Default for JobConfig {
             transport: crate::net::TransportKind::Sim,
             transport_addr: String::new(),
             transport_rank: 0,
+            resident: Resident::Stream,
+            resident_budget: 1 << 30,
         }
     }
 }
@@ -317,6 +361,17 @@ impl JobConfig {
             "transport_addr" => self.transport_addr = val.to_string(),
             "transport_rank" => {
                 self.transport_rank = val.parse().map_err(|_| bad(key, val))?
+            }
+            "resident" => {
+                self.resident = match val {
+                    "stream" => Resident::Stream,
+                    "mmap" => Resident::Mmap,
+                    "auto" => Resident::Auto,
+                    _ => return Err(bad(key, val)),
+                }
+            }
+            "resident_budget" => {
+                self.resident_budget = val.parse().map_err(|_| bad(key, val))?
             }
             _ => return Err(Error::Config(format!("unknown config key '{key}'"))),
         }
@@ -410,6 +465,24 @@ mod tests {
         assert_eq!(c.transport_rank, 2);
         assert!(c.apply("transport", "udp").is_err());
         assert!(c.apply("transport_rank", "x").is_err());
+    }
+
+    #[test]
+    fn job_config_resident_keys() {
+        let mut c = JobConfig::default();
+        assert_eq!(c.resident, Resident::Stream, "streaming is the default");
+        assert_eq!(c.resident_budget, 1 << 30);
+        c.apply("resident", "mmap").unwrap();
+        assert_eq!(c.resident, Resident::Mmap);
+        c.apply("resident", "auto").unwrap();
+        assert_eq!(c.resident, Resident::Auto);
+        c.apply("resident", "stream").unwrap();
+        assert_eq!(c.resident, Resident::Stream);
+        c.apply("resident_budget", "65536").unwrap();
+        assert_eq!(c.resident_budget, 65536);
+        assert!(c.apply("resident", "disk").is_err());
+        assert!(c.apply("resident_budget", "big").is_err());
+        assert_eq!(Resident::Mmap.to_string(), "mmap");
     }
 
     #[test]

@@ -256,6 +256,11 @@ pub(crate) fn load_text_impl(
     for s in &mut stores {
         s.total_vertices = total;
         s.save()?;
+        // Resident store (`-c resident=`): materialize the mmap-able CSR
+        // pair beside se.bin at load time, so the first superstep maps
+        // instead of paying a materialization stall.  `auto` only writes
+        // when the pair fits the budget; reuse is checksum-keyed.
+        crate::worker::csr::prepare(s, eng.cfg.resident, eng.cfg.resident_budget)?;
     }
     Ok(stores)
 }

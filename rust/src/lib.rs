@@ -29,9 +29,11 @@
 //!
 //! See the top-level `README.md` for the quickstart and the experiment
 //! index (tables are reproduced by `rust/benches/` and `graphd table`),
-//! and `DESIGN.md` for the paper-to-code architecture guide — which paper
+//! `DESIGN.md` for the paper-to-code architecture guide — which paper
 //! section maps to which module, and where the message spine's pools and
-//! fast paths sit.
+//! fast paths sit — and `docs/FORMATS.md` for the normative specification
+//! of every on-disk artifact (recoded stores, CSR resident files,
+//! checkpoints + the DONE protocol, replay manifests, wire frames).
 
 // CI runs `cargo clippy -- -D warnings`.  The engine's idiom is explicit
 // position loops over parallel arrays (A, degs, lanes, …) where the index
@@ -77,7 +79,7 @@ pub mod util;
 #[warn(missing_docs)]
 pub mod worker;
 
-pub use config::Mode;
+pub use config::{Mode, Resident};
 pub use error::{Error, Result};
 pub use serve::{Answer, Query, QueryResult, QueryServer, ServeConfig, ServeStats};
 pub use session::{GraphD, GraphSource, JobBuilder, JobPlan, LoadedGraph, Session, Xla};

@@ -26,6 +26,15 @@
 //! machines' values — the bit-exact reference the transport tests diff
 //! against.  `--spawn-peers` makes rank 0 fork ranks `1..N` itself.
 //!
+//! Every subcommand forwards `-c key=val` pairs to
+//! `graphd::config::JobConfig::apply`; README's "Config keys" table lists
+//! them all.  The
+//! headline knob for `run`/`serve` is `-c resident=stream|mmap|auto`: it
+//! switches U_c from re-streaming `se.bin` every superstep to reading
+//! adjacency from the mmap'd CSR resident store (semi-external-memory
+//! mode — `graphd run --algo pagerank --dataset btc-s -c resident=mmap`),
+//! with `-c resident_budget=BYTES` bounding what `auto` will map.
+//!
 //! (Hand-rolled argument parsing: the offline crate registry has no clap.)
 
 use graphd::baselines::Algo;

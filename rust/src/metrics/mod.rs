@@ -36,7 +36,12 @@ pub struct StepMetrics {
     pub edge_items_read: u64,
     /// Adjacency items skipped via skip().
     pub edge_items_skipped: u64,
-    /// Random seeks incurred by skip().
+    /// Adjacency items decoded from the mmap'd resident store
+    /// (`-c resident=mmap|auto`): equals [`Self::edge_items_read`] when
+    /// the superstep ran mapped, 0 when it streamed `se.bin` — so the
+    /// counter doubles as a per-step residency flag.
+    pub edge_items_mapped: u64,
+    /// Random seeks incurred by skip() (always 0 on a mapped superstep).
     pub seeks: u64,
     /// OMS files closed this superstep.
     pub oms_files: u64,

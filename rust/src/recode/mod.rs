@@ -182,6 +182,8 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
             let rec_dir = eng.store_dir(i, "rec");
             let stream_buf = eng.cfg.stream_buf;
             let merge_k = eng.cfg.merge_k;
+            let resident = eng.cfg.resident;
+            let resident_budget = eng.cfg.resident_budget;
             let pool = pool.clone();
             let abort = abort.clone();
             let tracer = tracer.clone();
@@ -385,6 +387,10 @@ pub fn recode(eng: &Engine, stores: &[MachineStore], directed: bool) -> Result<V
                         degs: store.degs.clone(),
                     };
                     rec_store.save()?;
+                    // Resident store: materialize the recoded CSR pair
+                    // while the recode pass is still warm (checksum-keyed;
+                    // `auto` skips it when over budget).
+                    crate::worker::csr::prepare(&rec_store, resident, resident_budget)?;
                     tr.end(crate::trace::EventKind::Recode, 3);
                     Ok(rec_store)
                 });

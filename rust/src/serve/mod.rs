@@ -22,6 +22,16 @@
 //! let results = server.run_pending()?;
 //! println!("{}", server.metrics().report());
 //! ```
+//!
+//! **Warm restarts (`-c resident=mmap|auto`).**  Serve batches are
+//! ordinary jobs, so they inherit the session's adjacency-residency knob:
+//! with the resident store on, the first batch materializes the CSR pair
+//! once (checksum-keyed, see `docs/FORMATS.md`) and *every* subsequent
+//! batch — including a server rebuilt over the same workdir after a
+//! restart — maps the existing files instead of re-reading `se.bin`
+//! through the buffered cursor.  Map, don't reload: restart cost becomes
+//! two `mmap` calls per machine, and the topology's page-cache residency
+//! survives the process that died.
 
 use crate::algos::multisource::{MultiSssp, NO_VERTEX};
 use crate::config::Mode;

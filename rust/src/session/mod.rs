@@ -171,6 +171,16 @@ impl GraphDBuilder {
         self
     }
 
+    /// Session-default adjacency residency (see [`crate::config::Resident`]):
+    /// `Stream` re-reads `se.bin` every superstep (§3, the default), `Mmap`
+    /// maps the materialized CSR files (semi-external-memory mode), `Auto`
+    /// maps when they fit `-c resident_budget`.  Per-job override:
+    /// [`JobBuilder::resident`].
+    pub fn resident(mut self, r: crate::config::Resident) -> Self {
+        self.cfg.resident = r;
+        self
+    }
+
     /// XLA policy: `true` ⇒ [`Xla::Auto`], `false` ⇒ [`Xla::Off`].
     pub fn use_xla(mut self, on: bool) -> Self {
         self.xla = if on { Xla::Auto } else { Xla::Off };
@@ -496,6 +506,7 @@ impl<'s> LoadedGraph<'s> {
             trace: None,
             retry: None,
             faults: None,
+            resident: None,
         }
     }
 }
@@ -526,6 +537,7 @@ pub struct JobBuilder<'g, 's, P: VertexProgram> {
     trace: Option<crate::trace::TraceConfig>,
     retry: Option<crate::config::RetryPolicy>,
     faults: Option<crate::worker::fault::FaultPlan>,
+    resident: Option<crate::config::Resident>,
 }
 
 impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
@@ -605,6 +617,18 @@ impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
         self
     }
 
+    /// Adjacency residency for this job (default: the session's, see
+    /// [`GraphDBuilder::resident`] / `-c resident=`).  `Resident::Mmap`
+    /// makes U_c read adjacency from the mmap'd CSR pair materialized
+    /// beside the store — an O(1) zero-copy slice per vertex, page cache
+    /// instead of buffered re-reads, still O(|V|/n) *heap*.  Values are
+    /// bit-identical to streaming in every mode: the mapped payload is
+    /// byte-identical to `se.bin` by construction.
+    pub fn resident(mut self, r: crate::config::Resident) -> Self {
+        self.resident = Some(r);
+        self
+    }
+
     /// Resolve `Auto` mode and the XLA policy without running the job.
     pub fn plan(&self) -> JobPlan {
         let has_combiner = self.program.combiner().is_some();
@@ -663,6 +687,9 @@ impl<'g, 's, P: VertexProgram> JobBuilder<'g, 's, P> {
         }
         if let Some(fp) = self.faults {
             cfg.fault = Some(fp);
+        }
+        if let Some(r) = self.resident {
+            cfg.resident = r;
         }
         // A `checkpoint_every` session/`-c` override without an explicit
         // CheckpointCfg checkpoints into the session DFS.

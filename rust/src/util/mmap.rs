@@ -1,0 +1,290 @@
+//! Hand-rolled read-only memory mapping (vendor-everything rule: no
+//! `memmap2`).
+//!
+//! The resident adjacency store ([`crate::worker::csr`]) maps its flat CSR
+//! files so U_c reads adjacency as an O(1) zero-copy slice and the OS page
+//! cache does the streaming.  Crucially for the paper's O(|V|/n) claim,
+//! a `MAP_SHARED`/`PROT_READ` file mapping is **not heap**: the pages are
+//! clean page-cache pages the kernel can drop under pressure, so the
+//! per-machine state-array budget is unchanged.
+//!
+//! On unix this is a direct `extern "C"` binding to `mmap`/`munmap`/
+//! `madvise` (the only three calls we need).  On non-unix targets the
+//! fallback reads the file into a heap `Vec<u8>` — correctness is
+//! preserved but the page-cache property (and the "not heap" argument)
+//! is lost; `Mmap::is_real_mapping` reports which one you got.
+
+use std::fs::File;
+use std::io;
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_SHARED: c_int = 1;
+    /// `mmap` error return: `(void *)-1`, not null.
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+    pub const MADV_SEQUENTIAL: c_int = 2;
+    pub const MADV_WILLNEED: c_int = 3;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+}
+
+/// Access-pattern hint forwarded to `madvise` (no-op where unsupported).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Advice {
+    /// Expect sequential reads: aggressive read-ahead, early drop-behind.
+    Sequential,
+    /// Expect access soon: start faulting pages in now.
+    WillNeed,
+}
+
+/// A read-only mapping of one whole file.
+///
+/// Unix: a `PROT_READ`/`MAP_SHARED` mapping, unmapped on drop.  Non-unix:
+/// the file's bytes in a heap buffer (see module docs).  Zero-length files
+/// are represented without any `mmap` call (mapping 0 bytes is EINVAL).
+pub struct Mmap {
+    #[cfg(unix)]
+    ptr: *mut std::os::raw::c_void,
+    #[cfg(unix)]
+    len: usize,
+    #[cfg(not(unix))]
+    buf: Vec<u8>,
+}
+
+// SAFETY: the mapping is read-only (PROT_READ) and file-backed; no &mut
+// access is ever handed out, so sharing across threads is sound.
+#[cfg(unix)]
+unsafe impl Send for Mmap {}
+#[cfg(unix)]
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only in its entirety.
+    pub fn map_file(path: &Path) -> io::Result<Mmap> {
+        let f = File::open(path)?;
+        let len = f.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "file too large to map on this target",
+            ));
+        }
+        Self::map_open(&f, len as usize)
+    }
+
+    #[cfg(unix)]
+    fn map_open(f: &File, len: usize) -> io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return Ok(Mmap {
+                ptr: std::ptr::null_mut(),
+                len: 0,
+            });
+        }
+        // SAFETY: fd is a valid open file of at least `len` bytes; a
+        // PROT_READ/MAP_SHARED mapping of it has no aliasing hazards.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_SHARED,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::MAP_FAILED {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr, len })
+    }
+
+    #[cfg(not(unix))]
+    fn map_open(f: &File, len: usize) -> io::Result<Mmap> {
+        use std::io::Read;
+        let mut buf = Vec::with_capacity(len);
+        let mut f = f;
+        f.read_to_end(&mut buf)?;
+        Ok(Mmap { buf })
+    }
+
+    /// The mapped bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        #[cfg(unix)]
+        {
+            if self.len == 0 {
+                return &[];
+            }
+            // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+            // self; the slice's lifetime is tied to &self, and munmap only
+            // runs in Drop.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+        #[cfg(not(unix))]
+        {
+            &self.buf
+        }
+    }
+
+    /// Mapping length in bytes.
+    pub fn len(&self) -> usize {
+        #[cfg(unix)]
+        {
+            self.len
+        }
+        #[cfg(not(unix))]
+        {
+            self.buf.len()
+        }
+    }
+
+    /// True when nothing is mapped (zero-length file).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when this is a real `mmap` (page-cache-backed), false on the
+    /// non-unix heap-buffer fallback.
+    pub fn is_real_mapping(&self) -> bool {
+        cfg!(unix) && !self.is_empty()
+    }
+
+    /// Forward an access-pattern hint to the kernel.  Returns whether the
+    /// hint was actually issued (false on the fallback, empty mappings,
+    /// or an `madvise` error — hints are best-effort by contract).
+    pub fn advise(&self, advice: Advice) -> bool {
+        #[cfg(unix)]
+        {
+            if self.len == 0 {
+                return false;
+            }
+            let adv = match advice {
+                Advice::Sequential => sys::MADV_SEQUENTIAL,
+                Advice::WillNeed => sys::MADV_WILLNEED,
+            };
+            // SAFETY: ptr/len describe a live mapping owned by self.
+            unsafe { sys::madvise(self.ptr, self.len, adv) == 0 }
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = advice;
+            false
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: ptr/len came from a successful mmap and are unmapped
+            // exactly once.
+            unsafe {
+                sys::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap")
+            .field("len", &self.len())
+            .field("real", &self.is_real_mapping())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "graphd_mmap_{name}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    #[test]
+    fn maps_whole_file() {
+        let p = tmp("whole");
+        let data: Vec<u8> = (0..=255u8).cycle().take(5000).collect();
+        std::fs::write(&p, &data).unwrap();
+        let m = Mmap::map_file(&p).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(m.as_slice(), &data[..]);
+        assert!(!m.is_empty());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn zero_length_file_maps_empty() {
+        let p = tmp("empty");
+        std::fs::write(&p, b"").unwrap();
+        let m = Mmap::map_file(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_slice(), &[] as &[u8]);
+        assert!(!m.is_real_mapping());
+        assert!(!m.advise(Advice::Sequential));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let p = tmp("missing_never_written");
+        assert!(Mmap::map_file(&p).is_err());
+    }
+
+    #[test]
+    fn advise_is_best_effort_ok() {
+        let p = tmp("advise");
+        std::fs::write(&p, vec![7u8; 4096]).unwrap();
+        let m = Mmap::map_file(&p).unwrap();
+        // On unix both hints should succeed on a live mapping; on the
+        // fallback they report false.  Either way: no panic, no UB.
+        let a = m.advise(Advice::Sequential);
+        let b = m.advise(Advice::WillNeed);
+        assert_eq!(a, m.is_real_mapping());
+        assert_eq!(b, m.is_real_mapping());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn slices_survive_shared_reads() {
+        let p = tmp("shared");
+        let data: Vec<u8> = (0u32..1024).flat_map(|x| x.to_le_bytes()).collect();
+        std::fs::write(&p, &data).unwrap();
+        let m = std::sync::Arc::new(Mmap::map_file(&p).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                let s = m.as_slice();
+                let i = (t as usize * 100) * 4;
+                u32::from_le_bytes(s[i..i + 4].try_into().unwrap())
+            }));
+        }
+        for (t, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), t as u32 * 100);
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+}

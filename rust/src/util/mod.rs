@@ -1,8 +1,10 @@
 //! Small shared utilities: deterministic PRNG, timers, size formatting,
-//! bitsets, and an in-repo property-testing helper (`proptest_lite`).
+//! bitsets, a hand-rolled read-only `mmap` binding, and an in-repo
+//! property-testing helper (`proptest_lite`).
 
 pub mod bitset;
 pub mod diskio;
+pub mod mmap;
 pub mod proptest_lite;
 pub mod rng;
 pub mod timer;

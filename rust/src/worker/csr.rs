@@ -1,0 +1,791 @@
+//! Resident adjacency store: the recoded/basic graph materialized as flat
+//! mmap-able CSR files (semi-external-memory mode, `-c resident=`).
+//!
+//! GraphD's §3 streaming design re-reads `se.bin` every superstep to keep
+//! O(|V|/n) heap.  GraphMP's semi-external design (PAPERS.md) instead keeps
+//! topology memory-mapped: adjacency becomes an O(1) zero-copy slice and
+//! the OS page cache does the streaming.  This module materializes a
+//! store's edge stream as two flat files next to it —
+//!
+//! * `csr_offsets` — header + `(local+1)` LE u64 *item*-offset prefix sums
+//!   of the degree array (byte offset = item offset × item size);
+//! * `csr_edges`   — header + a payload **byte-identical to `se.bin`**
+//!   (LE u32 neighbor, + LE f32 weight when weighted),
+//!
+//! each headed by the 64-byte versioned header specified normatively in
+//! `docs/FORMATS.md` (magic [`CSR_MAGIC`], version, role, counts, and an
+//! FNV-1a-64 header checksum that doubles as the cache key).  Because the
+//! edges payload is byte-identical to `se.bin`, the mapped decode path is
+//! bit-identical to [`EdgeStreamCursor`] by construction.
+//!
+//! The heap story: a `PROT_READ`/`MAP_SHARED` mapping is page cache, not
+//! heap ([`crate::util::mmap`]), so `resident=mmap` preserves the paper's
+//! O(|V|/n) bound while letting hot edges live in memory.  Mapped reads
+//! deliberately bypass `util::diskio::charge` — the whole point of the
+//! mode is that steady-state reads are page-cache hits, so the simulated
+//! streaming-disk model does not apply to them.
+//!
+//! Materialization is atomic (PR 8 idiom): write `<name>.csr.tmp`, fsync
+//! the file, rename into place, fsync the directory — a torn
+//! materialization is never mapped, and `make clean` sweeps stale
+//! `*.csr.tmp` partials.
+
+use crate::api::Edge;
+use crate::config::{JobConfig, Resident};
+use crate::error::{Error, Result};
+use crate::util::mmap::{Advice, Mmap};
+use crate::worker::storage::{item_size, EdgeStreamCursor, MachineStore};
+use std::io::Write;
+use std::path::Path;
+
+/// CSR file magic: `"GDC1"` as LE u32 (mirrors the frame magic `GDF1`).
+pub const CSR_MAGIC: u32 = 0x4744_4331;
+/// Current CSR header version.  Readers reject other versions; format
+/// evolution rules live in `docs/FORMATS.md`.
+pub const CSR_VERSION: u16 = 1;
+/// Fixed header length in bytes (payload starts at this offset).
+pub const CSR_HEADER_LEN: usize = 64;
+/// File name of the offsets array within a store directory.
+pub const CSR_OFFSETS: &str = "csr_offsets";
+/// File name of the edges payload within a store directory.
+pub const CSR_EDGES: &str = "csr_edges";
+
+/// `role` byte: this file is the offsets array.
+const ROLE_OFFSETS: u8 = 0;
+/// `role` byte: this file is the edges payload.
+const ROLE_EDGES: u8 = 1;
+/// `flags` bit 0: items carry a weight (8 bytes/item instead of 4).
+const FLAG_WEIGHTED: u8 = 1;
+
+/// FNV-1a-64 over `bytes` (offset basis 0xcbf29ce484222325, prime
+/// 0x100000001b3) — the header checksum / cache-key hash.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Decoded 64-byte CSR file header (layout: `docs/FORMATS.md`).
+///
+/// The on-disk checksum is FNV-1a-64 over header bytes 0..48 with the
+/// checksum field zeroed; it both detects header corruption and keys
+/// cache-dir reuse (same counts/flags/partition → same checksum).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CsrHeader {
+    /// `ROLE_OFFSETS` (0) or `ROLE_EDGES` (1).
+    pub role: u8,
+    /// Items carry weights (8 bytes/item).
+    pub weighted: bool,
+    /// Vertices on this machine, |V(W)|.
+    pub local_vertices: u64,
+    /// Adjacency items on this machine (Σ degs).
+    pub items: u64,
+    /// Total vertices across the cluster.
+    pub total_vertices: u64,
+    /// This machine's index.
+    pub machine: u32,
+    /// Cluster size n.
+    pub num_machines: u32,
+    /// Payload bytes following the header.
+    pub payload_len: u64,
+}
+
+impl CsrHeader {
+    /// Encode as the 64-byte on-disk header, checksum filled in.
+    pub fn encode(&self) -> [u8; CSR_HEADER_LEN] {
+        let mut h = [0u8; CSR_HEADER_LEN];
+        h[0..4].copy_from_slice(&CSR_MAGIC.to_le_bytes());
+        h[4..6].copy_from_slice(&CSR_VERSION.to_le_bytes());
+        h[6] = self.role;
+        h[7] = if self.weighted { FLAG_WEIGHTED } else { 0 };
+        h[8..16].copy_from_slice(&self.local_vertices.to_le_bytes());
+        h[16..24].copy_from_slice(&self.items.to_le_bytes());
+        h[24..32].copy_from_slice(&self.total_vertices.to_le_bytes());
+        h[32..36].copy_from_slice(&self.machine.to_le_bytes());
+        h[36..40].copy_from_slice(&self.num_machines.to_le_bytes());
+        h[40..48].copy_from_slice(&self.payload_len.to_le_bytes());
+        let sum = fnv1a64(&h[0..48]);
+        h[48..56].copy_from_slice(&sum.to_le_bytes());
+        // 56..64 reserved, zero.
+        h
+    }
+
+    /// The header checksum (also the cache key for reuse decisions).
+    pub fn checksum(&self) -> u64 {
+        let h = self.encode();
+        u64::from_le_bytes(h[48..56].try_into().unwrap())
+    }
+
+    /// Decode and validate a 64-byte header read from `what` (used in
+    /// error messages).  Bad magic, unknown version, unknown role, a
+    /// checksum mismatch, or non-zero reserved bytes are all typed
+    /// [`Error::CorruptStream`] — never UB, never a panic.
+    pub fn decode(h: &[u8], what: &str) -> Result<CsrHeader> {
+        let corrupt = |msg: String| Error::CorruptStream(format!("{what}: {msg}"));
+        if h.len() < CSR_HEADER_LEN {
+            return Err(corrupt(format!(
+                "truncated header ({} < {CSR_HEADER_LEN} bytes)",
+                h.len()
+            )));
+        }
+        let magic = u32::from_le_bytes(h[0..4].try_into().unwrap());
+        if magic != CSR_MAGIC {
+            return Err(corrupt(format!("bad magic {magic:#010x} (want {CSR_MAGIC:#010x})")));
+        }
+        let version = u16::from_le_bytes(h[4..6].try_into().unwrap());
+        if version != CSR_VERSION {
+            return Err(corrupt(format!("unsupported version {version} (have {CSR_VERSION})")));
+        }
+        let role = h[6];
+        if role != ROLE_OFFSETS && role != ROLE_EDGES {
+            return Err(corrupt(format!("unknown role byte {role}")));
+        }
+        let flags = h[7];
+        if flags & !FLAG_WEIGHTED != 0 {
+            return Err(corrupt(format!("unknown flag bits {flags:#04x}")));
+        }
+        let stored = u64::from_le_bytes(h[48..56].try_into().unwrap());
+        let computed = fnv1a64(&h[0..48]);
+        if stored != computed {
+            return Err(corrupt(format!(
+                "header checksum mismatch (stored {stored:#018x}, computed {computed:#018x})"
+            )));
+        }
+        if h[56..64] != [0u8; 8] {
+            return Err(corrupt("reserved header bytes not zero".into()));
+        }
+        Ok(CsrHeader {
+            role,
+            weighted: flags & FLAG_WEIGHTED != 0,
+            local_vertices: u64::from_le_bytes(h[8..16].try_into().unwrap()),
+            items: u64::from_le_bytes(h[16..24].try_into().unwrap()),
+            total_vertices: u64::from_le_bytes(h[24..32].try_into().unwrap()),
+            machine: u32::from_le_bytes(h[32..36].try_into().unwrap()),
+            num_machines: u32::from_le_bytes(h[36..40].try_into().unwrap()),
+            payload_len: u64::from_le_bytes(h[40..48].try_into().unwrap()),
+        })
+    }
+}
+
+/// The pair of headers a store's CSR files must carry (offsets, edges),
+/// derived from the store's in-memory meta.
+fn expected_headers(store: &MachineStore) -> (CsrHeader, CsrHeader) {
+    let items: u64 = store.degs.iter().map(|&d| d as u64).sum();
+    let local = store.local_vertices() as u64;
+    let base = CsrHeader {
+        role: ROLE_OFFSETS,
+        weighted: store.weighted,
+        local_vertices: local,
+        items,
+        total_vertices: store.total_vertices,
+        machine: store.machine as u32,
+        num_machines: store.num_machines as u32,
+        payload_len: (local + 1) * 8,
+    };
+    let edges = CsrHeader {
+        role: ROLE_EDGES,
+        payload_len: items * item_size(store.weighted) as u64,
+        ..base
+    };
+    (base, edges)
+}
+
+/// Total on-disk bytes of a store's CSR pair (headers + payloads) — the
+/// quantity `resident=auto` compares against `resident_budget` *before*
+/// materializing anything.
+pub fn expected_bytes(store: &MachineStore) -> u64 {
+    let (o, e) = expected_headers(store);
+    2 * CSR_HEADER_LEN as u64 + o.payload_len + e.payload_len
+}
+
+/// fsync a directory so a preceding rename is durable (no-op off unix,
+/// same idiom as the checkpoint DONE protocol).
+fn sync_dir(dir: &Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        std::fs::File::open(dir)?.sync_all()?;
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+    }
+    Ok(())
+}
+
+/// Atomically publish `header + payload` as `dir/name`: write
+/// `name.csr.tmp`, fsync, rename over `name`, fsync the directory.
+fn write_csr_file(dir: &Path, name: &str, header: &CsrHeader, payload: &[u8]) -> Result<()> {
+    let tmp = dir.join(format!("{name}.csr.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&header.encode())?;
+        f.write_all(payload)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, dir.join(name))?;
+    sync_dir(dir)
+}
+
+/// Does `dir/name` already hold a valid CSR file with exactly `want`'s
+/// header (checksum-keyed reuse)?  Any read error, decode error, header
+/// mismatch, or payload-length-vs-file-size mismatch → false.
+fn file_is_current(dir: &Path, name: &str, want: &CsrHeader) -> bool {
+    let path = dir.join(name);
+    let Ok(meta) = std::fs::metadata(&path) else {
+        return false;
+    };
+    if meta.len() != CSR_HEADER_LEN as u64 + want.payload_len {
+        return false;
+    }
+    let mut head = [0u8; CSR_HEADER_LEN];
+    let ok = std::fs::File::open(&path)
+        .and_then(|mut f| std::io::Read::read_exact(&mut f, &mut head))
+        .is_ok();
+    if !ok {
+        return false;
+    }
+    matches!(CsrHeader::decode(&head, name), Ok(h) if h == *want)
+}
+
+/// Materialize the store's CSR pair (`csr_offsets` + `csr_edges`) next to
+/// `se.bin`, reusing existing files whose headers already match
+/// (checksum-keyed cache).  Returns `true` when files were (re)written,
+/// `false` when both were reused.  Idempotent; safe to call from load,
+/// recode, and compute.
+pub fn ensure_csr(store: &MachineStore) -> Result<bool> {
+    let (want_off, want_edg) = expected_headers(store);
+    if file_is_current(&store.dir, CSR_OFFSETS, &want_off)
+        && file_is_current(&store.dir, CSR_EDGES, &want_edg)
+    {
+        return Ok(false);
+    }
+
+    // Offsets payload: (local+1) LE u64 item-offset prefix sums of degs.
+    let mut offsets = Vec::with_capacity((store.local_vertices() + 1) * 8);
+    let mut run: u64 = 0;
+    offsets.extend_from_slice(&run.to_le_bytes());
+    for &d in &store.degs {
+        run += d as u64;
+        offsets.extend_from_slice(&run.to_le_bytes());
+    }
+
+    // Edges payload: byte-identical to se.bin (that identity is what makes
+    // the mapped decode bit-identical to the streaming cursor).
+    let edges = std::fs::read(store.se_path())?;
+    if edges.len() as u64 != want_edg.payload_len {
+        return Err(Error::CorruptStream(format!(
+            "se.bin length {} != expected {} (Σdeg × item size)",
+            edges.len(),
+            want_edg.payload_len
+        )));
+    }
+
+    write_csr_file(&store.dir, CSR_OFFSETS, &want_off, &offsets)?;
+    write_csr_file(&store.dir, CSR_EDGES, &want_edg, &edges)?;
+    Ok(true)
+}
+
+/// A validated, mapped CSR pair for one store: offsets + edges files each
+/// mapped read-only, headers checked against the store's meta on open.
+pub struct CsrMap {
+    offsets: Mmap,
+    edges: Mmap,
+    header: CsrHeader,
+    isz: usize,
+}
+
+impl CsrMap {
+    /// Map and validate the store's CSR pair.  Corrupt or stale files are
+    /// a typed [`Error::CorruptStream`]; the caller decides whether that
+    /// is fatal (`resident=mmap`) or a fallback to streaming (`auto`).
+    /// Issues `MADV_SEQUENTIAL`/`MADV_WILLNEED` on the edges mapping.
+    pub fn open(store: &MachineStore) -> Result<CsrMap> {
+        let (want_off, want_edg) = expected_headers(store);
+        let offsets = Self::open_one(&store.dir, CSR_OFFSETS, &want_off)?;
+        let edges = Self::open_one(&store.dir, CSR_EDGES, &want_edg)?;
+        edges.advise(Advice::Sequential);
+        edges.advise(Advice::WillNeed);
+        offsets.advise(Advice::WillNeed);
+        Ok(CsrMap {
+            offsets,
+            edges,
+            header: want_edg,
+            isz: item_size(store.weighted),
+        })
+    }
+
+    fn open_one(dir: &Path, name: &str, want: &CsrHeader) -> Result<Mmap> {
+        let map = Mmap::map_file(&dir.join(name))?;
+        let got = CsrHeader::decode(map.as_slice(), name)?;
+        if got != *want {
+            return Err(Error::CorruptStream(format!(
+                "{name}: header does not match store meta (stale cache? key {:#018x} vs {:#018x})",
+                got.checksum(),
+                want.checksum()
+            )));
+        }
+        let have = map.len() as u64;
+        let need = CSR_HEADER_LEN as u64 + want.payload_len;
+        if have != need {
+            return Err(Error::CorruptStream(format!(
+                "{name}: file is {have} bytes, header promises {need}"
+            )));
+        }
+        Ok(map)
+    }
+
+    /// The edges-file header (counts, flags, checksum/cache key).
+    pub fn header(&self) -> &CsrHeader {
+        &self.header
+    }
+
+    /// Total mapped bytes across both files (the `auto` budget quantity).
+    pub fn total_bytes(&self) -> u64 {
+        (self.offsets.len() + self.edges.len()) as u64
+    }
+
+    /// True when backed by real mappings (false only on the non-unix
+    /// heap-buffer fallback of [`crate::util::mmap`]).
+    pub fn is_real_mapping(&self) -> bool {
+        self.edges.is_real_mapping()
+    }
+
+    /// Item-offset bounds `[start, end)` of the adjacency list at `pos`,
+    /// from the offsets array (O(1) random access).
+    pub fn item_bounds(&self, pos: usize) -> Result<(u64, u64)> {
+        let payload = &self.offsets.as_slice()[CSR_HEADER_LEN..];
+        let need = (pos + 2) * 8;
+        if need > payload.len() {
+            return Err(Error::CorruptStream(format!(
+                "csr_offsets: vertex pos {pos} out of range"
+            )));
+        }
+        let at = |i: usize| u64::from_le_bytes(payload[i * 8..i * 8 + 8].try_into().unwrap());
+        Ok((at(pos), at(pos + 1)))
+    }
+
+    /// Zero-copy byte slice of `n` adjacency items starting at item
+    /// `start` — the mapped replacement for a buffered `read_exact`.
+    pub fn item_slice(&self, start: u64, n: u64) -> Result<&[u8]> {
+        let payload = &self.edges.as_slice()[CSR_HEADER_LEN..];
+        let a = start as usize * self.isz;
+        let b = (start + n) as usize * self.isz;
+        payload.get(a..b).ok_or_else(|| {
+            Error::CorruptStream(format!(
+                "csr_edges: items {start}..{} out of range ({} items total)",
+                start + n,
+                self.header.items
+            ))
+        })
+    }
+
+    /// Sequential cursor over the mapped edges, [`EdgeStreamCursor`]
+    /// semantics (one pass in A order, lazy skips).
+    pub fn cursor(&self) -> CsrCursor<'_> {
+        CsrCursor {
+            map: self,
+            pos: 0,
+            pending_skip: 0,
+            items_read: 0,
+            items_skipped: 0,
+        }
+    }
+}
+
+impl std::fmt::Debug for CsrMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CsrMap")
+            .field("items", &self.header.items)
+            .field("bytes", &self.total_bytes())
+            .field("key", &format_args!("{:#018x}", self.header.checksum()))
+            .finish()
+    }
+}
+
+/// Sequential cursor over a [`CsrMap`]: drop-in for [`EdgeStreamCursor`]
+/// (`defer_skip` / `read_adjacency` / `io_stats`), but a skip is a pointer
+/// bump and a read is a zero-copy slice decode — no buffered I/O, no
+/// seeks.
+pub struct CsrCursor<'a> {
+    map: &'a CsrMap,
+    /// Current item position in the edges payload.
+    pos: u64,
+    pending_skip: u64,
+    items_read: u64,
+    items_skipped: u64,
+}
+
+impl CsrCursor<'_> {
+    /// Note that the next `deg` items belong to a vertex that will not
+    /// compute (lazy, same contract as the streaming cursor).
+    #[inline]
+    pub fn defer_skip(&mut self, deg: u32) {
+        self.pending_skip += deg as u64;
+    }
+
+    /// Decode the next `deg` items into `out` (cleared first) straight
+    /// from the mapping.
+    pub fn read_adjacency(&mut self, deg: u32, out: &mut Vec<Edge>) -> Result<()> {
+        if self.pending_skip > 0 {
+            self.pos += self.pending_skip;
+            self.items_skipped += self.pending_skip;
+            self.pending_skip = 0;
+        }
+        let bytes = self.map.item_slice(self.pos, deg as u64)?;
+        out.clear();
+        out.reserve(deg as usize);
+        if self.map.header.weighted {
+            for item in bytes.chunks_exact(8) {
+                out.push(Edge {
+                    nbr: u32::from_le_bytes(item[..4].try_into().unwrap()),
+                    weight: f32::from_le_bytes(item[4..8].try_into().unwrap()),
+                });
+            }
+        } else {
+            for item in bytes.chunks_exact(4) {
+                out.push(Edge {
+                    nbr: u32::from_le_bytes(item.try_into().unwrap()),
+                    weight: 1.0,
+                });
+            }
+        }
+        self.pos += deg as u64;
+        self.items_read += deg as u64;
+        Ok(())
+    }
+
+    /// `(items_read, items_skipped)` — mapped reads never seek.
+    pub fn io_stats(&self) -> (u64, u64) {
+        (self.items_read, self.items_skipped)
+    }
+}
+
+/// Adjacency I/O statistics of one pass, mode-agnostic:
+/// `read`/`skipped` count items in both modes, `seeks` is only non-zero
+/// when streaming, `mapped` is only non-zero when resident (and then
+/// equals `read`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdjStats {
+    /// Adjacency items decoded.
+    pub read: u64,
+    /// Adjacency items skipped over.
+    pub skipped: u64,
+    /// Seeks issued by the streaming reader (0 when mapped).
+    pub seeks: u64,
+    /// Items decoded from a mapping (0 when streaming).
+    pub mapped: u64,
+}
+
+/// One superstep's adjacency source: the §3 streaming cursor or a cursor
+/// over the resident mapping — same `defer_skip`/`read_adjacency` calls,
+/// so the per-vertex pass bodies are mode-blind.
+pub enum Adjacency<'a> {
+    /// Buffered sequential reads of `se.bin` (charges the simulated disk).
+    Stream(EdgeStreamCursor),
+    /// Zero-copy decode from the mapped `csr_edges` payload.
+    Mapped(CsrCursor<'a>),
+}
+
+impl<'a> Adjacency<'a> {
+    /// Open the pass's adjacency source: a cursor over `csr` when the
+    /// resident map is present, else the streaming cursor.
+    pub fn open(store: &MachineStore, csr: Option<&'a CsrMap>, stream_buf: usize) -> Result<Self> {
+        Ok(match csr {
+            Some(m) => Adjacency::Mapped(m.cursor()),
+            None => Adjacency::Stream(EdgeStreamCursor::open(store, stream_buf)?),
+        })
+    }
+
+    /// See [`EdgeStreamCursor::defer_skip`].
+    #[inline]
+    pub fn defer_skip(&mut self, deg: u32) {
+        match self {
+            Adjacency::Stream(c) => c.defer_skip(deg),
+            Adjacency::Mapped(c) => c.defer_skip(deg),
+        }
+    }
+
+    /// See [`EdgeStreamCursor::read_adjacency`].
+    #[inline]
+    pub fn read_adjacency(&mut self, deg: u32, out: &mut Vec<Edge>) -> Result<()> {
+        match self {
+            Adjacency::Stream(c) => c.read_adjacency(deg, out),
+            Adjacency::Mapped(c) => c.read_adjacency(deg, out),
+        }
+    }
+
+    /// This pass's I/O counters.
+    pub fn io_stats(&self) -> AdjStats {
+        match self {
+            Adjacency::Stream(c) => {
+                let (read, skipped, seeks) = c.io_stats();
+                AdjStats { read, skipped, seeks, mapped: 0 }
+            }
+            Adjacency::Mapped(c) => {
+                let (read, skipped) = c.io_stats();
+                AdjStats { read, skipped, seeks: 0, mapped: read }
+            }
+        }
+    }
+}
+
+/// Materialize the CSR pair for `store` if `resident` calls for it:
+/// `stream` → never; `mmap` → always (errors are fatal); `auto` → only
+/// when [`expected_bytes`] fits `budget` (else stay streaming).  Returns
+/// whether files were (re)written.
+pub fn prepare(store: &MachineStore, resident: Resident, budget: u64) -> Result<bool> {
+    match resident {
+        Resident::Stream => Ok(false),
+        Resident::Mmap => ensure_csr(store),
+        Resident::Auto => {
+            if expected_bytes(store) <= budget {
+                ensure_csr(store)
+            } else {
+                Ok(false)
+            }
+        }
+    }
+}
+
+/// Resolve the job's residency for one store, called once per U_c before
+/// the superstep loop: `None` = stream, `Some(map)` = read adjacency from
+/// the mapping.  `mmap` is strict (missing files are materialized, corrupt
+/// ones are a typed error); `auto` falls back to streaming on oversized,
+/// missing-with-oversized, or invalid CSR files.
+pub fn open_resident(store: &MachineStore, cfg: &JobConfig) -> Result<Option<CsrMap>> {
+    match cfg.resident {
+        Resident::Stream => Ok(None),
+        Resident::Mmap => {
+            ensure_csr(store)?;
+            Ok(Some(CsrMap::open(store)?))
+        }
+        Resident::Auto => {
+            if expected_bytes(store) > cfg.resident_budget {
+                return Ok(None);
+            }
+            match ensure_csr(store).and_then(|_| CsrMap::open(store)) {
+                Ok(m) => Ok(Some(m)),
+                Err(_) => Ok(None),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::worker::storage::EdgeStreamWriter;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "graphd_csr_{name}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_store(dir: &Path, weighted: bool) -> MachineStore {
+        let store = MachineStore {
+            dir: dir.to_path_buf(),
+            machine: 1,
+            num_machines: 4,
+            total_vertices: 12,
+            weighted,
+            recoded: false,
+            ids: vec![2, 22, 32],
+            degs: vec![2, 3, 1],
+        };
+        store.save().unwrap();
+        let mut w = EdgeStreamWriter::create(dir, weighted, 64).unwrap();
+        for (i, nbr) in [(0u32, 5u32), (1, 6), (2, 7), (3, 8), (4, 9), (5, 10)] {
+            w.push(nbr, i as f32 + 0.5).unwrap();
+        }
+        w.finish().unwrap();
+        store
+    }
+
+    #[test]
+    fn header_roundtrip_and_checksum() {
+        let (off, edg) = {
+            let d = tmp("hdr");
+            let s = sample_store(&d, true);
+            let pair = expected_headers(&s);
+            let _ = std::fs::remove_dir_all(&d);
+            pair
+        };
+        for h in [off, edg] {
+            let bytes = h.encode();
+            let back = CsrHeader::decode(&bytes, "t").unwrap();
+            assert_eq!(back, h);
+        }
+        assert_ne!(off.checksum(), edg.checksum(), "role is part of the key");
+    }
+
+    #[test]
+    fn materialize_map_and_decode_matches_stream() {
+        for weighted in [false, true] {
+            let d = tmp(if weighted { "mat_w" } else { "mat_u" });
+            let s = sample_store(&d, weighted);
+            assert!(ensure_csr(&s).unwrap(), "first call materializes");
+            assert!(!ensure_csr(&s).unwrap(), "second call reuses");
+            let m = CsrMap::open(&s).unwrap();
+            assert_eq!(m.header().items, 6);
+            assert_eq!(m.item_bounds(0).unwrap(), (0, 2));
+            assert_eq!(m.item_bounds(2).unwrap(), (5, 6));
+
+            // Same read/skip schedule through both cursors → same edges.
+            let mut se = EdgeStreamCursor::open(&s, 8).unwrap();
+            let mut cc = m.cursor();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            se.read_adjacency(2, &mut a).unwrap();
+            cc.read_adjacency(2, &mut b).unwrap();
+            assert_eq!(a, b);
+            se.defer_skip(3);
+            cc.defer_skip(3);
+            se.read_adjacency(1, &mut a).unwrap();
+            cc.read_adjacency(1, &mut b).unwrap();
+            assert_eq!(a, b);
+            let (read, skipped) = cc.io_stats();
+            assert_eq!((read, skipped), (3, 3));
+            let _ = std::fs::remove_dir_all(&d);
+        }
+    }
+
+    #[test]
+    fn stale_cache_rematerializes() {
+        let d = tmp("stale");
+        let mut s = sample_store(&d, false);
+        assert!(ensure_csr(&s).unwrap());
+        // Same dir, different partition meta → stale key → rewrite.
+        s.total_vertices = 99;
+        assert!(ensure_csr(&s).unwrap(), "stale header must not be reused");
+        assert!(!ensure_csr(&s).unwrap());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected_typed() {
+        let d = tmp("magic");
+        let s = sample_store(&d, false);
+        ensure_csr(&s).unwrap();
+        let p = d.join(CSR_EDGES);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[0] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        match CsrMap::open(&s) {
+            Err(Error::CorruptStream(msg)) => assert!(msg.contains("magic"), "{msg}"),
+            other => panic!("want CorruptStream, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn flipped_count_fails_checksum() {
+        let d = tmp("sum");
+        let s = sample_store(&d, false);
+        ensure_csr(&s).unwrap();
+        let p = d.join(CSR_OFFSETS);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[8] ^= 0x01; // local_vertices LSB
+        std::fs::write(&p, &bytes).unwrap();
+        match CsrMap::open(&s) {
+            Err(Error::CorruptStream(msg)) => assert!(msg.contains("checksum"), "{msg}"),
+            other => panic!("want CorruptStream, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn truncated_payload_rejected_typed() {
+        let d = tmp("trunc");
+        let s = sample_store(&d, false);
+        ensure_csr(&s).unwrap();
+        let p = d.join(CSR_EDGES);
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(matches!(CsrMap::open(&s), Err(Error::CorruptStream(_))));
+        // And ensure_csr treats it as stale, repairing in place.
+        assert!(ensure_csr(&s).unwrap());
+        assert!(CsrMap::open(&s).is_ok());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn truncated_header_rejected_typed() {
+        let d = tmp("thdr");
+        let s = sample_store(&d, false);
+        ensure_csr(&s).unwrap();
+        let p = d.join(CSR_OFFSETS);
+        std::fs::write(&p, &std::fs::read(&p).unwrap()[..CSR_HEADER_LEN - 10]).unwrap();
+        assert!(matches!(CsrMap::open(&s), Err(Error::CorruptStream(_))));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn auto_respects_budget() {
+        let d = tmp("auto");
+        let s = sample_store(&d, false);
+        let mut cfg = JobConfig {
+            resident: Resident::Auto,
+            resident_budget: 16, // far below two headers
+            ..JobConfig::default()
+        };
+        assert!(open_resident(&s, &cfg).unwrap().is_none());
+        assert!(!d.join(CSR_EDGES).exists(), "over budget: nothing materialized");
+        cfg.resident_budget = 1 << 30;
+        assert!(open_resident(&s, &cfg).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn strict_mmap_surfaces_corruption_auto_falls_back() {
+        let d = tmp("strict");
+        let s = sample_store(&d, false);
+        ensure_csr(&s).unwrap();
+        // Corrupt the offsets header checksum bytes directly.
+        let p = d.join(CSR_OFFSETS);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[50] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+
+        let mut cfg = JobConfig {
+            resident: Resident::Auto,
+            ..JobConfig::default()
+        };
+        // Auto repairs (ensure_csr sees a stale file and rewrites) — it
+        // only falls back when the repair itself fails.
+        assert!(open_resident(&s, &cfg).unwrap().is_some());
+
+        // Now remove se.bin so repair *can't* succeed, and re-corrupt.
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[50] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        std::fs::remove_file(s.se_path()).unwrap();
+        cfg.resident = Resident::Mmap;
+        assert!(open_resident(&s, &cfg).is_err(), "mmap mode is strict");
+        cfg.resident = Resident::Auto;
+        assert!(open_resident(&s, &cfg).unwrap().is_none(), "auto falls back");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn no_tmp_partials_left_behind() {
+        let d = tmp("tmpclean");
+        let s = sample_store(&d, false);
+        ensure_csr(&s).unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".csr.tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -8,7 +8,10 @@
 //!   global barriers between machines.
 //! * [`units`] — the unit bodies and the per-machine job driver.
 //! * [`fault`] — deterministic fault injection for recovery testing.
+//! * [`csr`] — the resident adjacency store: the graph materialized as
+//!   mmap-able CSR files (`-c resident=`, semi-external-memory mode).
 
+pub mod csr;
 pub mod fault;
 pub mod storage;
 pub mod sync;

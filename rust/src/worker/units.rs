@@ -55,8 +55,9 @@ use crate::trace::{EventKind, UnitTracer};
 use crate::util::bitset::BitSet;
 use crate::util::diskio::read_file_into;
 use crate::util::timer::Stopwatch;
+use crate::worker::csr::{Adjacency, CsrMap};
 use crate::worker::fault::{FaultKind, FaultPlan};
-use crate::worker::storage::{EdgeStreamCursor, MachineStore};
+use crate::worker::storage::MachineStore;
 use crate::worker::sync::{lock_clean, wait_clean, JobAbort, MachineSync, Rendezvous};
 use crate::worker::Partitioning;
 use std::collections::VecDeque;
@@ -1485,6 +1486,20 @@ fn compute_unit<P: VertexProgram>(
         None => None,
     };
 
+    // Resident adjacency (semi-external-memory mode, `-c resident=`):
+    // resolved once before the superstep loop — `mmap` materializes the
+    // CSR pair if missing and maps it strictly, `auto` maps only when the
+    // pair fits the budget, `stream` keeps the §3 cursor.  The mapping
+    // lives for the whole job, so every superstep reuses the same
+    // page-cache-backed pages (and emits zero seeks).
+    let csr: Option<CsrMap> = crate::worker::csr::open_resident(&store, cfg)?;
+    if let Some(m) = &csr {
+        // Two File instants: the mapped byte count (map event) and the
+        // madvise hints already issued by CsrMap::open (advise event).
+        tr.instant(EventKind::File, m.total_bytes());
+        tr.instant(EventKind::File, m.header().checksum());
+    }
+
     let mut global_agg: Arc<P::Agg> = Arc::new(P::Agg::default());
     let mut step: u64 = 0;
     let supersteps;
@@ -1589,9 +1604,9 @@ fn compute_unit<P: VertexProgram>(
                 }
             };
             recoded_pass::<P>(
-                program, &kern, &store, cfg, abs_step, global.total_vertices, &global_agg,
-                &mut local_agg, &mut vals, &mut halted, &sums, bits, &mut out, &mut computed,
-                sink,
+                program, &kern, &store, csr.as_ref(), cfg, abs_step, global.total_vertices,
+                &global_agg, &mut local_agg, &mut vals, &mut halted, &sums, bits, &mut out,
+                &mut computed, sink,
             )?;
             // A_r consumed: ping-pong it back for a later superstep.
             global.digest_pool.put(sums);
@@ -1604,9 +1619,9 @@ fn compute_unit<P: VertexProgram>(
                 }
             };
             per_vertex_pass::<P>(
-                program, &store, cfg, abs_step, global.total_vertices, &global_agg,
-                &mut local_agg, &mut vals, &mut halted, &mut cursor, &mut out, &mut computed,
-                sink,
+                program, &store, csr.as_ref(), cfg, abs_step, global.total_vertices,
+                &global_agg, &mut local_agg, &mut vals, &mut halted, &mut cursor, &mut out,
+                &mut computed, sink,
             )?;
         }
 
@@ -1776,6 +1791,7 @@ fn compute_unit<P: VertexProgram>(
 fn per_vertex_pass<P: VertexProgram>(
     program: &P,
     store: &MachineStore,
+    csr: Option<&CsrMap>,
     cfg: &JobConfig,
     step: u64,
     nv: u64,
@@ -1789,7 +1805,7 @@ fn per_vertex_pass<P: VertexProgram>(
     sink: &MetricsSink,
 ) -> Result<()> {
     let local = store.local_vertices();
-    let mut se = EdgeStreamCursor::open(store, cfg.stream_buf)?;
+    let mut se = Adjacency::open(store, csr, cfg.stream_buf)?;
     let mut edges: Vec<Edge> = Vec::new();
     let mut msgs: Vec<P::Msg> = Vec::new();
 
@@ -1828,11 +1844,12 @@ fn per_vertex_pass<P: VertexProgram>(
             halted.set(pos, true);
         }
     }
-    let (read, skipped, seeks) = se.io_stats();
+    let st = se.io_stats();
     sink.with_step(step, |m| {
-        m.edge_items_read += read;
-        m.edge_items_skipped += skipped;
-        m.seeks += seeks;
+        m.edge_items_read += st.read;
+        m.edge_items_skipped += st.skipped;
+        m.edge_items_mapped += st.mapped;
+        m.seeks += st.seeks;
     });
     Ok(())
 }
@@ -1846,6 +1863,7 @@ fn recoded_pass<P: VertexProgram>(
     program: &P,
     kern: &KernelSet,
     store: &MachineStore,
+    csr: Option<&CsrMap>,
     cfg: &JobConfig,
     step: u64,
     nv: u64,
@@ -1876,7 +1894,7 @@ fn recoded_pass<P: VertexProgram>(
         program.block_update(kern, &mut bctx)?
     };
 
-    let mut se = EdgeStreamCursor::open(store, cfg.stream_buf)?;
+    let mut se = Adjacency::open(store, csr, cfg.stream_buf)?;
     let mut edges: Vec<Edge> = Vec::new();
     if handled {
         // Fan message bases out along S^E, skipping silent vertices.
@@ -1929,11 +1947,12 @@ fn recoded_pass<P: VertexProgram>(
             }
         }
     }
-    let (read, skipped, seeks) = se.io_stats();
+    let st = se.io_stats();
     sink.with_step(step, |m| {
-        m.edge_items_read += read;
-        m.edge_items_skipped += skipped;
-        m.seeks += seeks;
+        m.edge_items_read += st.read;
+        m.edge_items_skipped += st.skipped;
+        m.edge_items_mapped += st.mapped;
+        m.seeks += st.seeks;
     });
     Ok(())
 }

@@ -1,0 +1,304 @@
+//! Integration tests for the resident adjacency store
+//! (`-c resident=stream|mmap|auto`, DESIGN.md "Resident store"): stream
+//! vs mmap bit-identical values in basic and recoded modes at n = 1 and
+//! n = 2, residency accounting, the `auto` budget rule, typed rejection
+//! of corrupt/truncated CSR files (docs/FORMATS.md §2), cache reuse
+//! without re-materialization, and serve warm restarts.
+
+use graphd::algos::{PageRank, Sssp};
+use graphd::config::Mode;
+use graphd::error::Error;
+use graphd::graph::generator;
+use graphd::metrics::JobMetrics;
+use graphd::worker::csr::{self, CsrMap};
+use graphd::worker::storage::MachineStore;
+use graphd::{GraphD, GraphSource, Query, Resident, ServeConfig};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn wd(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "graphd_resident_{name}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn mapped_items(m: &JobMetrics) -> u64 {
+    m.machines
+        .iter()
+        .flat_map(|mm| mm.steps.iter())
+        .map(|s| s.edge_items_mapped)
+        .sum()
+}
+
+/// Bit-exact view of f32 results: NaN-safe, no tolerance.
+fn bits(vals: &[(u32, f32)]) -> Vec<(u32, u32)> {
+    vals.iter().map(|&(id, v)| (id, v.to_bits())).collect()
+}
+
+/// The tentpole guarantee: `csr_edges` is byte-identical to `se.bin`, so
+/// a mapped run must produce **bit-identical** values to a streamed run —
+/// PageRank (order-sensitive float sums) and SSSP, basic and recoded
+/// modes, single- and multi-machine.
+#[test]
+fn stream_vs_mmap_bit_identical_basic_and_recoded() {
+    for n in [1usize, 2] {
+        let g = generator::uniform(220, 1400, true, 19).with_unit_weights();
+        let run = |resident: Resident, name: &str| {
+            let d = wd(&format!("ident_{name}_{n}"));
+            let session = GraphD::builder()
+                .machines(n)
+                .workdir(&d)
+                .max_supersteps(5)
+                .resident(resident)
+                .build()
+                .unwrap();
+            let mut graph = session.load(GraphSource::InMemory(&g)).unwrap();
+            let basic_pr = graph.run(Arc::new(PageRank::new(5))).unwrap();
+            let basic_sp = graph.run(Arc::new(Sssp::new(0))).unwrap();
+            graph.recode().unwrap();
+            let src = graph.current_id_of(0);
+            let rec_pr = graph
+                .job(Arc::new(PageRank::new(5)))
+                .mode(Mode::Recoded)
+                .run()
+                .unwrap();
+            let rec_sp = graph
+                .job(Arc::new(Sssp::new(src)))
+                .mode(Mode::Recoded)
+                .run()
+                .unwrap();
+            let out = (
+                bits(&basic_pr.values_by_id()),
+                bits(&basic_sp.values_by_id()),
+                bits(&rec_pr.values_by_id()),
+                bits(&rec_sp.values_by_id()),
+                [
+                    basic_pr.metrics.clone(),
+                    basic_sp.metrics.clone(),
+                    rec_pr.metrics.clone(),
+                    rec_sp.metrics.clone(),
+                ],
+            );
+            let _ = std::fs::remove_dir_all(&d);
+            out
+        };
+
+        let stream = run(Resident::Stream, "stream");
+        let mmap = run(Resident::Mmap, "mmap");
+        assert_eq!(stream.0, mmap.0, "n={n}: basic PageRank diverged");
+        assert_eq!(stream.1, mmap.1, "n={n}: basic SSSP diverged");
+        assert_eq!(stream.2, mmap.2, "n={n}: recoded PageRank diverged");
+        assert_eq!(stream.3, mmap.3, "n={n}: recoded SSSP diverged");
+
+        for m in &stream.4 {
+            assert_eq!(mapped_items(m), 0, "stream run must not map");
+        }
+        for m in &mmap.4 {
+            let mapped = mapped_items(m);
+            assert!(mapped > 0, "n={n}: mmap run decoded nothing mapped");
+            if n == 1 {
+                assert_eq!(
+                    m.net_wire_bytes, 0,
+                    "n=1 residency must not perturb the switch bypass"
+                );
+            }
+        }
+    }
+}
+
+/// `auto` maps only when the CSR pair fits the budget, and behaves as
+/// pure streaming (still correct) when it does not.
+#[test]
+fn auto_maps_within_budget_and_streams_over_it() {
+    let g = generator::uniform(180, 1100, true, 29).with_unit_weights();
+    let run = |budget: &str, name: &str| {
+        let d = wd(&format!("auto_{name}"));
+        let session = GraphD::builder()
+            .machines(2)
+            .workdir(&d)
+            .max_supersteps(4)
+            .config("resident", "auto")
+            .config("resident_budget", budget)
+            .build()
+            .unwrap();
+        let mut graph = session.load(GraphSource::InMemory(&g)).unwrap();
+        graph.recode().unwrap();
+        let res = graph
+            .job(Arc::new(PageRank::new(4)))
+            .mode(Mode::Recoded)
+            .run()
+            .unwrap();
+        let out = (bits(&res.values_by_id()), mapped_items(&res.metrics));
+        let _ = std::fs::remove_dir_all(&d);
+        out
+    };
+    let (vals_big, mapped_big) = run("1073741824", "big");
+    let (vals_tiny, mapped_tiny) = run("64", "tiny");
+    assert!(mapped_big > 0, "a 1 GiB budget must map this tiny graph");
+    assert_eq!(mapped_tiny, 0, "a 64-byte budget must fall back to streaming");
+    assert_eq!(vals_big, vals_tiny, "auto fallback changed the answer");
+}
+
+/// docs/FORMATS.md §2: a corrupt or truncated CSR file is rejected with a
+/// typed `Error::CorruptStream` — never UB, never silently wrong
+/// adjacency — and strict `mmap` re-materializes it on the next run.
+#[test]
+fn corrupt_or_truncated_csr_rejected_typed_then_repaired() {
+    let d = wd("corrupt");
+    let g = generator::uniform(120, 700, true, 37).with_unit_weights();
+    let session = GraphD::builder()
+        .machines(1)
+        .workdir(&d)
+        .max_supersteps(3)
+        .resident(Resident::Mmap)
+        .build()
+        .unwrap();
+    let mut graph = session.load(GraphSource::InMemory(&g)).unwrap();
+    graph.recode().unwrap();
+    let reference = bits(
+        &graph
+            .job(Arc::new(PageRank::new(3)))
+            .mode(Mode::Recoded)
+            .run()
+            .unwrap()
+            .values_by_id(),
+    );
+
+    let store_dir = d.join("m0").join("rec");
+    let store = MachineStore::load(&store_dir).unwrap();
+
+    // Flip a byte inside the csr_edges header: open() must reject, typed.
+    let edges = store_dir.join(csr::CSR_EDGES);
+    let pristine = std::fs::read(&edges).unwrap();
+    let mut bad = pristine.clone();
+    bad[2] ^= 0xFF; // inside the magic
+    std::fs::write(&edges, &bad).unwrap();
+    match CsrMap::open(&store) {
+        Err(Error::CorruptStream(msg)) => {
+            assert!(msg.contains("magic"), "unexpected cause: {msg}")
+        }
+        other => panic!("corrupt magic must be CorruptStream, got {other:?}"),
+    }
+
+    // Truncate csr_offsets below the header: same typed rejection.
+    std::fs::write(&edges, &pristine).unwrap();
+    let offsets = store_dir.join(csr::CSR_OFFSETS);
+    let full = std::fs::read(&offsets).unwrap();
+    std::fs::write(&offsets, &full[..10]).unwrap();
+    assert!(
+        matches!(CsrMap::open(&store), Err(Error::CorruptStream(_))),
+        "truncated header must be CorruptStream"
+    );
+
+    // Strict mmap repairs the damage on the next run and still matches.
+    let repaired = bits(
+        &graph
+            .job(Arc::new(PageRank::new(3)))
+            .mode(Mode::Recoded)
+            .resident(Resident::Mmap)
+            .run()
+            .unwrap()
+            .values_by_id(),
+    );
+    assert_eq!(repaired, reference);
+    assert_eq!(std::fs::read(&offsets).unwrap(), full, "rewrite is exact");
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+/// Materialization is idempotent and keyed by the header checksum: after
+/// a recoded store's CSR pair lands, reloading the stores from local
+/// disks and running again maps the **existing** files — `ensure_csr`
+/// reports reuse, the bytes on disk are untouched.
+#[test]
+fn cache_reuse_after_reload_maps_without_rematerializing() {
+    let d = wd("reuse");
+    let g = generator::uniform(150, 900, true, 43).with_unit_weights();
+    let session = GraphD::builder()
+        .machines(2)
+        .workdir(&d)
+        .max_supersteps(3)
+        .resident(Resident::Mmap)
+        .build()
+        .unwrap();
+    let mut graph = session.load(GraphSource::InMemory(&g)).unwrap();
+    graph.recode().unwrap();
+    let first = graph
+        .job(Arc::new(PageRank::new(3)))
+        .mode(Mode::Recoded)
+        .run()
+        .unwrap();
+    assert!(mapped_items(&first.metrics) > 0);
+
+    // A second "session" over the same disks: reload stores, re-resolve.
+    graph.reload_recoded().unwrap();
+    for store in graph.recoded_stores().unwrap() {
+        assert!(
+            !csr::ensure_csr(store).unwrap(),
+            "m{}: current CSR pair must be reused, not rewritten",
+            store.machine
+        );
+        let map = CsrMap::open(store).unwrap();
+        assert_eq!(map.header().local_vertices, store.local_vertices() as u64);
+    }
+    let second = graph
+        .job(Arc::new(PageRank::new(3)))
+        .mode(Mode::Recoded)
+        .run()
+        .unwrap();
+    assert!(mapped_items(&second.metrics) > 0, "reloaded run still maps");
+    assert_eq!(
+        bits(&first.values_by_id()),
+        bits(&second.values_by_id())
+    );
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+/// Warm restart for serving: a second `QueryServer` over the same session
+/// graph answers identically to the first — and because the CSR pair is
+/// already current, it maps instead of re-materializing (map, don't
+/// reload).
+#[test]
+fn serve_warm_restart_matches_cold_load() {
+    let d = wd("serve");
+    let g = generator::uniform(160, 1000, true, 47).with_unit_weights();
+    let session = GraphD::builder()
+        .machines(2)
+        .workdir(&d)
+        .resident(Resident::Mmap)
+        .build()
+        .unwrap();
+    let mut graph = session.load(GraphSource::InMemory(&g)).unwrap();
+    graph.recode().unwrap();
+
+    let queries = [
+        Query::Dist { source: 0, target: 90 },
+        Query::Reach { source: 3, target: 140 },
+        Query::ReachCount { source: 7 },
+    ];
+    let answers = |graph: &graphd::session::LoadedGraph<'_>| {
+        let mut server = graph.serve(ServeConfig::default()).unwrap();
+        for q in &queries {
+            server.submit(*q);
+        }
+        server
+            .run_pending()
+            .unwrap()
+            .iter()
+            .map(|r| format!("{:?}", r.answer))
+            .collect::<Vec<_>>()
+    };
+    let cold = answers(&graph);
+
+    // The cold batches materialized/used the CSR; a rebuilt server finds
+    // it current and reuses it.
+    for store in graph.recoded_stores().unwrap() {
+        assert!(!csr::ensure_csr(store).unwrap(), "warm server must reuse");
+    }
+    let warm = answers(&graph);
+    assert_eq!(cold, warm, "warm restart changed serve answers");
+    let _ = std::fs::remove_dir_all(&d);
+}

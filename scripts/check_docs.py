@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Keep the docs contractual (`make doc-sync`).
+
+Three families of assertions, all against the working tree:
+
+  1. Config-key sync: every `-c key=val` the parser accepts
+     (`JobConfig::apply` in rust/src/config/mod.rs) appears in README.md,
+     and README's "Config keys" table lists exactly the parsed set — no
+     phantom rows, no undocumented knobs.
+  2. Knob honesty: every `-c key` reference anywhere in README.md or
+     DESIGN.md (including the modes-matrix feature rows) names a key the
+     parser actually accepts.
+  3. Format constants: the magic numbers, versions, and header sizes that
+     docs/FORMATS.md declares normative are byte-for-byte the constants
+     in rust/src/worker/csr.rs and rust/src/net/frame.rs.
+
+Usage: check_docs.py [repo_root]
+"""
+
+import re
+import sys
+
+
+def read(root: str, rel: str) -> str:
+    with open(f"{root}/{rel}") as f:
+        return f.read()
+
+
+def parsed_config_keys(config_src: str) -> set:
+    """Keys matched by JobConfig::apply — the arms at match-arm depth
+    (12 spaces) inside the apply() body; deeper arms are value parses."""
+    start = config_src.index("pub fn apply")
+    body = config_src[start:]
+    end = body.index("\n    }")  # apply() closes at fn-body indent
+    return set(re.findall(r'^            "([a-z_]+)" =>', body[:end], re.M))
+
+
+def table_keys(readme: str) -> set:
+    """Keys listed in README's "### Config keys" table."""
+    m = re.search(r"### Config keys.*?(?=\n### |\n## )", readme, re.S)
+    if not m:
+        return set()
+    return set(re.findall(r"^\| `([a-z_]+)` \|", m.group(0), re.M))
+
+
+def check_constant(errors: list, formats: str, src: str, src_rel: str, pattern: str, doc_needle: str, what: str) -> None:
+    m = re.search(pattern, src)
+    if not m:
+        errors.append(f"{src_rel}: cannot find {what} (pattern {pattern!r}) — update check_docs.py if it moved")
+        return
+    if doc_needle.format(m.group(1)) not in formats:
+        errors.append(f"docs/FORMATS.md: {what} drifted — source says {m.group(1)}, doc lacks {doc_needle.format(m.group(1))!r}")
+
+
+def main(argv: list) -> int:
+    if len(argv) > 1:
+        sys.exit(__doc__)
+    root = argv[0] if argv else "."
+    config = read(root, "rust/src/config/mod.rs")
+    readme = read(root, "README.md")
+    design = read(root, "DESIGN.md")
+    formats = read(root, "docs/FORMATS.md")
+    csr = read(root, "rust/src/worker/csr.rs")
+    frame = read(root, "rust/src/net/frame.rs")
+    errors = []
+
+    keys = parsed_config_keys(config)
+    if not keys:
+        errors.append("rust/src/config/mod.rs: extracted zero config keys — update check_docs.py")
+    for k in sorted(keys):
+        if f"`{k}`" not in readme:
+            errors.append(f"README.md: parsed config key `{k}` is undocumented")
+    listed = table_keys(readme)
+    if not listed:
+        errors.append("README.md: no '### Config keys' table found")
+    for k in sorted(listed - keys):
+        errors.append(f"README.md: config-key table row `{k}` names a key the parser does not accept")
+    for k in sorted(keys - listed):
+        errors.append(f"README.md: config-key table is missing parsed key `{k}`")
+
+    for doc_rel, doc in [("README.md", readme), ("DESIGN.md", design)]:
+        for k in set(re.findall(r"-c ([a-z_]+)=", doc)) - {"key"}:  # `-c key=val` placeholder
+            if k not in keys:
+                errors.append(f"{doc_rel}: references `-c {k}=`, which the parser does not accept")
+
+    check_constant(errors, formats, csr, "rust/src/worker/csr.rs",
+                   r"pub const CSR_MAGIC: u32 = (0x[0-9a-fA-F_]+);", "`{}`", "CSR magic")
+    check_constant(errors, formats, csr, "rust/src/worker/csr.rs",
+                   r"pub const CSR_VERSION: u16 = (\d+);", "`u16` = `{}` (`CSR_VERSION`)", "CSR version")
+    check_constant(errors, formats, csr, "rust/src/worker/csr.rs",
+                   r"pub const CSR_HEADER_LEN: usize = (\d+);", "**{}-byte header** (`CSR_HEADER_LEN`)", "CSR header size")
+    check_constant(errors, formats, frame, "rust/src/net/frame.rs",
+                   r"pub const MAGIC: u32 = (0x[0-9a-fA-F_]+);", "`{}`", "frame magic")
+    check_constant(errors, formats, frame, "rust/src/net/frame.rs",
+                   r"pub const HEADER_LEN: usize = (\d+);", "**{}-byte header** (`HEADER_LEN`)", "frame header size")
+    if "64 << 20" not in frame or "64 MiB" not in formats:
+        errors.append("docs/FORMATS.md / net/frame.rs: MAX_FRAME_LEN (64 MiB) drifted")
+
+    if errors:
+        for e in errors:
+            print(e, file=sys.stderr)
+        return 1
+    print(f"doc-sync ok: {len(keys)} config keys documented, format constants match")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
